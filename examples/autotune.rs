@@ -1,0 +1,73 @@
+//! Autotune: watch the automatic analyzer adapt the parallel strategy as
+//! the cluster changes (§IV-C1: "when cluster bandwidth or node count
+//! changes, MixServe re-evaluates the cost model and picks the best
+//! feasible tuple").
+//!
+//! Sweeps inter-node bandwidth and node count for DeepSeek-R1 and prints
+//! the winning strategy per point.
+//!
+//! Run: `cargo run --release --example autotune`
+
+use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::search::{Analyzer, Objective};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+
+fn main() {
+    let model = MoEModelConfig::deepseek_r1();
+    let serving = ServingConfig::paper_eval(4.0);
+    let wl = Workload::sharegpt(4.0);
+
+    println!("=== sweep 1: inter-node bandwidth (4×8 Ascend-class cluster) ===");
+    println!(
+        "{:>12} {:<36} {:>10} {:>10}",
+        "inter BW", "winning strategy", "TTFT(ms)", "tok/s"
+    );
+    for gbps in [25.0, 50.0, 100.0, 200.0, 400.0, 900.0] {
+        let mut cluster = ClusterConfig::ascend910b();
+        cluster.inter_bw = gbps / 8.0 * 1e9;
+        let analyzer = Analyzer::new(&model, &cluster, &serving);
+        if let Some(best) = analyzer.best(&wl, Objective::MaxThroughput) {
+            println!(
+                "{:>9} Gb {:<36} {:>10.1} {:>10.1}",
+                gbps,
+                best.strategy.to_string(),
+                best.indicators.ttft * 1e3,
+                best.indicators.throughput
+            );
+        }
+    }
+
+    println!("\n=== sweep 2: node count (8 devices per node) ===");
+    println!(
+        "{:>12} {:<36} {:>10} {:>10}",
+        "nodes", "winning strategy", "TTFT(ms)", "tok/s"
+    );
+    for nodes in [2usize, 4, 8] {
+        let mut cluster = ClusterConfig::ascend910b();
+        cluster.n_nodes = nodes;
+        cluster.name = format!("Ascend-{nodes}x8");
+        let analyzer = Analyzer::new(&model, &cluster, &serving);
+        if let Some(best) = analyzer.best(&wl, Objective::MaxThroughput) {
+            println!(
+                "{:>12} {:<36} {:>10.1} {:>10.1}",
+                nodes,
+                best.strategy.to_string(),
+                best.indicators.ttft * 1e3,
+                best.indicators.throughput
+            );
+        }
+    }
+
+    println!("\n=== sweep 3: objective matters ===");
+    let cluster = ClusterConfig::h20();
+    let analyzer = Analyzer::new(&model, &cluster, &serving);
+    for (name, obj) in [
+        ("min TTFT", Objective::MinTtft),
+        ("min ITL", Objective::MinItl),
+        ("max throughput", Objective::MaxThroughput),
+    ] {
+        if let Some(best) = analyzer.best(&wl, obj) {
+            println!("  {name:<16} -> {}", best.strategy);
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Quickstart: the MixServe offline stage in ~30 lines.
+//!
+//! Feed the analyzer a model + cluster description and get back the
+//! optimal parallel strategy with predicted TTFT / ITL / throughput —
+//! §III-A's offline stage, no GPUs required.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::search::{Analyzer, Objective};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+
+fn main() {
+    let model = MoEModelConfig::deepseek_r1();
+    let cluster = ClusterConfig::ascend910b();
+    let serving = ServingConfig::paper_eval(4.0);
+    let workload = Workload::sharegpt(4.0);
+
+    println!(
+        "MixServe quickstart — {} ({:.0}B params, {:.0}B active) on {}",
+        model.name,
+        model.total_params() as f64 / 1e9,
+        model.active_params() as f64 / 1e9,
+        cluster.name
+    );
+
+    let analyzer = Analyzer::new(&model, &cluster, &serving);
+    let ranked = analyzer.rank(&workload, Objective::MaxThroughput);
+    println!("\ntop 5 of {} feasible strategies:", ranked.len());
+    for r in ranked.iter().take(5) {
+        println!(
+            "  {:<36} TTFT {:>7.1}ms  ITL {:>6.2}ms  {:>7.1} tok/s",
+            r.strategy.to_string(),
+            r.indicators.ttft * 1e3,
+            r.indicators.itl * 1e3,
+            r.indicators.throughput
+        );
+    }
+    let best = ranked.first().expect("a feasible strategy");
+    println!("\noptimal: {}", best.strategy);
+    println!(
+        "memory per device: {:.1} GB of {:.1} GB usable",
+        best.memory.total() as f64 / 1e9,
+        best.memory.limit_bytes as f64 / 1e9
+    );
+}

@@ -1,0 +1,215 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) -> HLO text artifacts.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs under --out (default ../artifacts):
+  *.hlo.txt                 one compiled-once executable per model variant
+  manifest.json             artifact -> input/output shapes; model config;
+                            ordered parameter names
+  weights/<cfg>/<name>.bin  little-endian f32 parameter dumps
+  weights/<cfg>/manifest.json
+
+Python runs ONCE at `make artifacts`; Rust never imports it.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shaped(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, in_specs, in_names=None):
+        """Lower fn at in_specs, write HLO text, record manifest entry."""
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *in_specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        in_names = in_names or [f"arg{i}" for i in range(len(in_specs))]
+        self.manifest[name] = {
+            "file": fname,
+            "inputs": [_shaped(n, s) for n, s in zip(in_names, in_specs)],
+            "outputs": [_shaped(f"out{i}", s) for i, s in enumerate(outs)],
+        }
+        print(f"  {name}: {len(text)} chars, "
+              f"{len(in_specs)} inputs -> {len(outs)} outputs")
+
+
+def export_weights(cfg, cfg_name, out_dir, seed=0):
+    wdir = os.path.join(out_dir, "weights", cfg_name)
+    os.makedirs(wdir, exist_ok=True)
+    weights = M.init_weights(cfg, seed)
+    man = {}
+    for name in cfg.param_names():
+        arr = weights[name]
+        fname = name.replace(".", "_") + ".bin"
+        arr.astype("<f4").tofile(os.path.join(wdir, fname))
+        man[name] = {"file": fname, "shape": list(arr.shape)}
+    with open(os.path.join(wdir, "manifest.json"), "w") as f:
+        json.dump({"params": man, "order": cfg.param_names(),
+                   "seed": seed}, f, indent=1)
+    return weights
+
+
+# Shape buckets compiled for the serving path: the Rust engine pads a
+# batch to the nearest bucket (vLLM-style multi-executable serving).
+PREFILL_BUCKETS = [(1, 16), (1, 32), (1, 64), (2, 32), (4, 16), (4, 32),
+                   (8, 16), (8, 32)]
+DECODE_BATCHES = [1, 2, 4, 8]
+
+
+def build(cfg: M.TinyMoEConfig, cfg_name: str, out_dir: str):
+    em = Emitter(out_dir)
+    weights = export_weights(cfg, cfg_name, out_dir)
+    del weights
+
+    pshapes = [cfg.param_shapes()[n] for n in cfg.param_names()]
+    pspecs = [spec(s) for s in pshapes]
+    pnames = cfg.param_names()
+    c = cfg
+    cache_shape = (0, c.max_seq, c.n_layers, c.n_heads, c.head_dim)
+
+    print(f"[aot] building '{cfg_name}' "
+          f"({cfg.n_params()/1e6:.1f}M params) -> {out_dir}")
+
+    # --- serving-path executables -------------------------------------
+    for b, s in PREFILL_BUCKETS:
+        if s > cfg.max_seq:
+            continue
+        em.emit(
+            f"{cfg_name}_prefill_b{b}_s{s}",
+            lambda toks, *p: M.prefill_fwd(c, toks, *p),
+            [spec((b, s), jnp.int32)] + pspecs,
+            ["tokens"] + pnames)
+
+    for b in DECODE_BATCHES:
+        kv = spec((b,) + cache_shape[1:])
+        em.emit(
+            f"{cfg_name}_decode_b{b}",
+            lambda toks, pos, kc, vc, *p: M.decode_fwd(
+                c, toks, pos[0], kc, vc, *p),
+            [spec((b,), jnp.int32), spec((1,), jnp.int32), kv, kv] + pspecs,
+            ["tokens", "pos", "k_cache", "v_cache"] + pnames)
+
+    # --- hybrid TP-EP verification shards (weights are runtime inputs,
+    # so one artifact serves every rank) --------------------------------
+    vb, vs = 2, 16
+    em.emit(
+        f"{cfg_name}_attn_full_b{vb}_s{vs}",
+        lambda x, wq, wk, wv, wo: M.causal_attention(x, wq, wk, wv, wo, c)[0],
+        [spec((vb, vs, c.hidden))] + [
+            spec((c.hidden, c.qkv_dim))] * 3 + [spec((c.qkv_dim, c.hidden))],
+        ["x", "wq", "wk", "wv", "wo"])
+
+    for m in (2, 4):
+        nh_s = c.n_heads // m
+        if nh_s == 0:
+            continue
+        d_s = nh_s * c.head_dim
+        em.emit(
+            f"{cfg_name}_attn_shard_tp{m}_b{vb}_s{vs}",
+            lambda x, wq, wk, wv, wo, _nh=nh_s: M.attn_tp_shard_fwd(
+                x, wq, wk, wv, wo, _nh, c.head_dim),
+            [spec((vb, vs, c.hidden))] + [spec((c.hidden, d_s))] * 3 +
+            [spec((d_s, c.hidden))],
+            ["x", "wq_s", "wk_s", "wv_s", "wo_s"])
+
+    t = 32
+    em.emit(
+        f"{cfg_name}_expert_mlp_t{t}",
+        lambda x, wg, wu, wd: M.expert_tp_shard_fwd(x, wg, wu, wd),
+        [spec((t, c.hidden)), spec((c.hidden, c.expert_inter)),
+         spec((c.hidden, c.expert_inter)), spec((c.expert_inter, c.hidden))],
+        ["x", "wg", "wu", "wd"])
+    em.emit(
+        f"{cfg_name}_expert_mlp_tp2_t{t}",
+        lambda x, wg, wu, wd: M.expert_tp_shard_fwd(x, wg, wu, wd),
+        [spec((t, c.hidden)), spec((c.hidden, c.expert_inter // 2)),
+         spec((c.hidden, c.expert_inter // 2)),
+         spec((c.expert_inter // 2, c.hidden))],
+        ["x", "wg_s", "wu_s", "wd_s"])
+
+    tg = 64
+    em.emit(
+        f"{cfg_name}_gate_t{tg}",
+        lambda x, r: M.topk_gate(x, r, c.top_k, block_t=min(128, tg)),
+        [spec((tg, c.hidden)), spec((c.hidden, c.n_experts))],
+        ["x", "router"])
+
+    em.emit(
+        f"{cfg_name}_moe_block_dense_t{tg}",
+        lambda x, r, wg, wu, wd, sg, su, sd: M.moe_block_dense_ref(
+            x, r, wg, wu, wd, sg, su, sd, c),
+        [spec((tg, c.hidden)), spec((c.hidden, c.n_experts)),
+         spec((c.n_experts, c.hidden, c.expert_inter)),
+         spec((c.n_experts, c.hidden, c.expert_inter)),
+         spec((c.n_experts, c.expert_inter, c.hidden)),
+         spec((c.hidden, c.expert_inter)), spec((c.hidden, c.expert_inter)),
+         spec((c.expert_inter, c.hidden))],
+        ["x", "router", "wg", "wu", "wd", "sg", "su", "sd"])
+
+    return em.manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny",
+                    help="comma list: tiny,small")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    manifest = {"artifacts": {}, "models": {}}
+    for name in args.configs.split(","):
+        cfg = {"tiny": M.TINY, "small": M.SMALL}[name]
+        manifest["artifacts"].update(build(cfg, name, out))
+        manifest["models"][name] = {
+            **{k: getattr(cfg, k) for k in
+               ["vocab", "hidden", "n_heads", "head_dim", "expert_inter",
+                "n_experts", "top_k", "shared_expert", "n_layers",
+                "max_seq"]},
+            "n_params": cfg.n_params(),
+            "param_order": cfg.param_names(),
+            "prefill_buckets": [[b, s] for b, s in PREFILL_BUCKETS
+                                if s <= cfg.max_seq],
+            "decode_batches": DECODE_BATCHES,
+        }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts + manifest")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""L1 Pallas kernel: decode-phase attention over the KV cache.
+
+One grid step per (batch, head).  The query row lives in VMEM; the K/V
+cache for that (b, head) is streamed through VMEM in seq chunks with an
+online-softmax accumulator carried by a fori_loop *inside* the kernel —
+flash-attention restructured for a scratchpad (no shared-memory tiles, no
+cross-step semaphores; the HBM<->VMEM schedule is the BlockSpec plus the
+chunk loop).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_CHUNK_S = 128
+
+
+def _decode_attn_kernel(chunk_s: int, q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]              # [1, hd] query row for this (b, head)
+    hd = q.shape[-1]
+    ks = k_ref[0, 0]          # [s, hd] cache staged for this (b, head)
+    vs = v_ref[0, 0]
+    s = ks.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    n_chunks = pl.cdiv(s, chunk_s)
+
+    def body(c, carry):
+        m_prev, l_prev, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(ks, c * chunk_s, chunk_s, 0)
+        vc = jax.lax.dynamic_slice_in_dim(vs, c * chunk_s, chunk_s, 0)
+        logits = (q @ kc.T) * scale                  # [1, chunk]
+        m_cur = jnp.max(logits, axis=-1)             # [1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[:, None])         # [1, chunk]
+        alpha = jnp.exp(m_prev - m_new)              # [1]
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ vc          # [1, hd]
+        return m_new, l_new, acc
+
+    m0 = jnp.full((1,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    acc0 = jnp.zeros((1, hd), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _decode_attn_masked_kernel(chunk_s: int, len_ref, q_ref, k_ref, v_ref,
+                               o_ref):
+    """Like _decode_attn_kernel but only the first `valid_len` cache rows
+    participate (the rest are padding in a max-seq-length cache)."""
+    q = q_ref[0]              # [1, hd]
+    hd = q.shape[-1]
+    ks = k_ref[0, 0]          # [smax, hd]
+    vs = v_ref[0, 0]
+    s = ks.shape[0]
+    valid = len_ref[0, 0]     # scalar i32
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    n_chunks = pl.cdiv(s, chunk_s)
+
+    def body(c, carry):
+        m_prev, l_prev, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(ks, c * chunk_s, chunk_s, 0)
+        vc = jax.lax.dynamic_slice_in_dim(vs, c * chunk_s, chunk_s, 0)
+        idx = c * chunk_s + jax.lax.iota(jnp.int32, chunk_s)
+        logits = (q @ kc.T) * scale                  # [1, chunk]
+        logits = jnp.where(idx[None, :] < valid, logits, -jnp.inf)
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(jnp.isfinite(logits), jnp.exp(logits - m_new[:, None]),
+                      0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ vc
+        return m_new, l_new, acc
+
+    m0 = jnp.full((1,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    acc0 = jnp.zeros((1, hd), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_s",))
+def decode_attention_masked(q, k, v, valid_len, chunk_s=DEFAULT_CHUNK_S):
+    """Decode attention over a padded cache: only rows < valid_len attend.
+
+    q: [b, nh, hd]; k/v: [b, smax, nh, hd]; valid_len: scalar i32.
+    """
+    b, nh, hd = q.shape
+    s = k.shape[1]
+    chunk_s = min(chunk_s, s)
+    if s % chunk_s != 0:
+        chunk_s = s
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    vlen = jnp.asarray(valid_len, jnp.int32).reshape(1, 1)
+    grid = (b, nh)
+    return pl.pallas_call(
+        functools.partial(_decode_attn_masked_kernel, chunk_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, hi: (0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, s, hd), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, hd), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, hd), q.dtype),
+        interpret=True,
+        name="decode_attention_masked",
+    )(vlen, q, kt, vt)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_s",))
+def decode_attention(q, k, v, chunk_s=DEFAULT_CHUNK_S):
+    """Decode attention: q: [b, nh, hd]; k/v: [b, s, nh, hd] -> [b, nh, hd].
+
+    All cached positions are visible (decode step attends to full prefix).
+    """
+    b, nh, hd = q.shape
+    s = k.shape[1]
+    chunk_s = min(chunk_s, s)
+    if s % chunk_s != 0:
+        chunk_s = s  # fall back to one chunk: avoids clamped-slice overlap
+    # [b, nh, hd] -> grid (b, nh); K/V staged as [b, nh, s, hd]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    grid = (b, nh)
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, chunk_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, s, hd), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, hd), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, hd), q.dtype),
+        interpret=True,
+        name="decode_attention",
+    )(q, kt, vt)
+    return out

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: grouped (per-expert) SwiGLU MLP.
+
+The paper's compute hot-spot is the expert FFN of the MoE block. On
+GPU/NPU this is a grouped GEMM over capacity-packed token buffers; here it
+is re-thought for a TPU-like memory system (see DESIGN.md
+§Hardware-Adaptation):
+
+  * grid = (E, C // block_t): one step per (expert, token-block);
+  * BlockSpec index maps stage the token block and exactly that expert's
+    W_gate/W_up/W_down slices HBM->VMEM — the analogue of per-threadblock
+    expert routing in the CUDA grouped-GEMM;
+  * the MXU consumes (block_t x h)·(h x f) matmuls; the SwiGLU elementwise
+    runs on the VPU in VMEM without a round-trip to HBM.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO for both pytest and the
+AOT artifacts.  Real-TPU VMEM/MXU estimates live in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_T = 64
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """One (expert, token-block) step: o = (silu(x@wg) * (x@wu)) @ wd."""
+    x = x_ref[0]            # [block_t, h]   (VMEM; leading expert dim squeezed)
+    wg = wg_ref[0]          # [h, f]
+    wu = wu_ref[0]
+    wd = wd_ref[0]          # [f, h]
+    g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    a = (g * jax.nn.sigmoid(g)) * u
+    o_ref[0] = jnp.dot(a, wd, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def grouped_expert_mlp(xs, w_gate, w_up, w_down, block_t=DEFAULT_BLOCK_T):
+    """Grouped SwiGLU expert MLP.
+
+    xs: [E, C, h] capacity-packed tokens (C tokens per expert);
+    w_gate/w_up: [E, h, f]; w_down: [E, f, h]  ->  [E, C, h].
+    """
+    e, c, h = xs.shape
+    f = w_gate.shape[-1]
+    block_t = min(block_t, c)
+    if c % block_t != 0:
+        raise ValueError(f"capacity {c} not divisible by block_t {block_t}")
+    grid = (e, c // block_t)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, h), lambda ei, ti: (ei, ti, 0)),
+            pl.BlockSpec((1, h, f), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, h, f), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, f, h), lambda ei, ti: (ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, h), lambda ei, ti: (ei, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, h), xs.dtype),
+        interpret=True,
+        name="grouped_expert_mlp",
+    )(xs, w_gate, w_up, w_down)
+
+
+def expert_mlp(x, w_gate, w_up, w_down, block_t=DEFAULT_BLOCK_T):
+    """Single-expert SwiGLU MLP via the grouped kernel (E=1).
+
+    x: [t, h]; w_gate/w_up: [h, f]; w_down: [f, h] -> [t, h]
+    """
+    y = grouped_expert_mlp(x[None], w_gate[None], w_up[None], w_down[None],
+                           block_t=min(block_t, x.shape[0]))
+    return y[0]
+
+
+def vmem_bytes_per_step(block_t, h, f, dtype_bytes=4):
+    """VMEM footprint estimate of one grid step (for DESIGN.md §Perf).
+
+    x block + 3 weight slices + activations (g, u, a) + output block.
+    """
+    return dtype_bytes * (
+        block_t * h          # x
+        + 2 * h * f          # wg, wu
+        + f * h              # wd
+        + 3 * block_t * f    # g, u, a
+        + block_t * h        # o
+    )
+
+
+def mxu_flops_per_step(block_t, h, f):
+    """MACs*2 of one grid step: three GEMMs."""
+    return 2 * block_t * f * (2 * h + h) + 0  # x@wg, x@wu: t*h*f each; a@wd: t*f*h

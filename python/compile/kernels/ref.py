@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+Every kernel in this package has an exact functional twin here; pytest +
+hypothesis sweep shapes/dtypes and assert_allclose kernel-vs-ref.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_mlp_ref(x, w_gate, w_up, w_down):
+    """SwiGLU expert MLP: (silu(x @ Wg) * (x @ Wu)) @ Wd.
+
+    x: [t, h]; w_gate/w_up: [h, f]; w_down: [f, h] -> [t, h]
+    """
+    return (silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def grouped_expert_mlp_ref(xs, w_gate, w_up, w_down):
+    """Grouped (per-expert) SwiGLU MLP over capacity-packed tokens.
+
+    xs: [E, C, h]; w_gate/w_up: [E, h, f]; w_down: [E, f, h] -> [E, C, h]
+    """
+    return jax.vmap(expert_mlp_ref)(xs, w_gate, w_up, w_down)
+
+
+def topk_gate_ref(x, w_router, k):
+    """Router: softmax(x @ Wr) then top-k.
+
+    x: [t, h]; w_router: [h, E] -> (weights [t, k] renormalized, idx [t, k] i32)
+
+    Implemented as iterative max-and-mask (not jax.lax.top_k): identical
+    numerics and tie-breaking, and it lowers to plain HLO — lax.top_k
+    emits a `topk(..., largest=true)` op that xla_extension 0.5.1's text
+    parser rejects (see /opt/xla-example/README.md gotchas).
+    """
+    logits = x @ w_router
+    probs = jax.nn.softmax(logits, axis=-1)
+    t = probs.shape[0]
+    eye = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
+
+    def body(j, carry):
+        masked, ws, idxs = carry
+        top = jnp.max(masked, axis=-1)
+        arg = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        ws = ws.at[:, j].set(top)
+        idxs = idxs.at[:, j].set(arg)
+        masked = jnp.where(eye == arg[:, None], -jnp.inf, masked)
+        return masked, ws, idxs
+
+    ws0 = jnp.zeros((t, k), probs.dtype)
+    idx0 = jnp.zeros((t, k), jnp.int32)
+    _, top_w, top_i = jax.lax.fori_loop(0, k, body, (probs, ws0, idx0))
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    return top_w, top_i
+
+
+def decode_attention_ref(q, k, v, scale=None):
+    """Single-step decode attention (no mask: all cached positions visible).
+
+    q: [b, nh, hd]; k/v: [b, s, nh, hd] -> [b, nh, hd]
+    """
+    hd = q.shape[-1]
+    if scale is None:
+        scale = (1.0 / jnp.sqrt(hd)).astype(q.dtype)
+    # [b, nh, s]
+    logits = jnp.einsum("bnd,bsnd->bns", q, k) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bns,bsnd->bnd", probs, v)
+
+
+def moe_block_ref(x, w_router, w_gate, w_up, w_down, k,
+                  w_shared_gate=None, w_shared_up=None, w_shared_down=None):
+    """Dense reference of a full MoE block (token-choice top-k routing).
+
+    x: [t, h]; w_router: [h, E]; w_gate/w_up: [E, h, f]; w_down: [E, f, h]
+    Optional shared expert (DeepSeek-style) weights: [h, f], [h, f], [f, h].
+    Computed densely: every expert processes every token, then combined by
+    the gate weights; mathematically identical to dispatch/combine.
+    """
+    gate_w, gate_i = topk_gate_ref(x, w_router, k)           # [t,k], [t,k]
+    e = w_gate.shape[0]
+    # [t, E] combine matrix from top-k (scatter of gate weights)
+    combine = jnp.zeros((x.shape[0], e), x.dtype)
+    combine = combine.at[jnp.arange(x.shape[0])[:, None], gate_i].set(gate_w)
+    all_out = jax.vmap(lambda wg, wu, wd: expert_mlp_ref(x, wg, wu, wd))(
+        w_gate, w_up, w_down)                                 # [E, t, h]
+    y = jnp.einsum("te,eth->th", combine, all_out)
+    if w_shared_gate is not None:
+        y = y + expert_mlp_ref(x, w_shared_gate, w_shared_up, w_shared_down)
+    return y

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: MoE router (softmax gate + iterative top-k).
+
+Token-choice routing: each token picks its top-k experts by softmax
+probability.  Re-thought for a scratchpad memory system: the whole
+(token-block x E) probability tile lives in VMEM and top-k is an
+iterative max-and-mask loop (k is tiny: 2..8), fully vectorized over the
+token block on the VPU — no HBM gather/scatter, no sort network.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_T = 128
+
+
+def _gate_kernel(k: int, x_ref, wr_ref, w_out_ref, i_out_ref):
+    x = x_ref[...]                                    # [bt, h]
+    wr = wr_ref[...]                                  # [h, E]
+    logits = jnp.dot(x, wr, preferred_element_type=jnp.float32)  # [bt, E]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)    # softmax, [bt, E]
+
+    e = probs.shape[-1]
+    eye = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)  # [bt, E]
+
+    def body(j, carry):
+        masked, ws, idxs = carry
+        top = jnp.max(masked, axis=-1)                          # [bt]
+        arg = jnp.argmax(masked, axis=-1).astype(jnp.int32)     # [bt]
+        ws = ws.at[:, j].set(top)
+        idxs = idxs.at[:, j].set(arg)
+        masked = jnp.where(eye == arg[:, None], -jnp.inf, masked)
+        return masked, ws, idxs
+
+    bt = probs.shape[0]
+    ws0 = jnp.zeros((bt, k), jnp.float32)
+    idx0 = jnp.zeros((bt, k), jnp.int32)
+    _, ws, idxs = jax.lax.fori_loop(0, k, body, (probs, ws0, idx0))
+    ws = ws / jnp.sum(ws, axis=-1, keepdims=True)     # renormalize top-k
+    w_out_ref[...] = ws.astype(w_out_ref.dtype)
+    i_out_ref[...] = idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_t"))
+def topk_gate(x, w_router, k, block_t=DEFAULT_BLOCK_T):
+    """Router: softmax(x @ Wr) -> renormalized top-k weights + indices.
+
+    x: [t, h]; w_router: [h, E] -> (weights [t, k] f32, idx [t, k] i32)
+    """
+    t, h = x.shape
+    e = w_router.shape[-1]
+    block_t = min(block_t, t)
+    if t % block_t != 0:
+        raise ValueError(f"tokens {t} not divisible by block_t {block_t}")
+    grid = (t // block_t,)
+    return pl.pallas_call(
+        functools.partial(_gate_kernel, k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, h), lambda ti: (ti, 0)),
+            pl.BlockSpec((h, e), lambda ti: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, k), lambda ti: (ti, 0)),
+            pl.BlockSpec((block_t, k), lambda ti: (ti, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k), x.dtype),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+        ],
+        interpret=True,
+        name="topk_gate",
+    )(x, w_router)

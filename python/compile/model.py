@@ -1,0 +1,362 @@
+"""L2: tiny MoE decoder in JAX (calls the L1 Pallas kernels).
+
+This is the *numeric* half of the reproduction: a real (small) MoE
+transformer whose forward pass exercises the exact sharded algebra that
+MixServe's hybrid TP-EP partitioner and fused AR-A2A schedules move over
+the wire — TP column/row slices of attention, expert shards, top-k
+dispatch/combine.  The 671B/235B paper models appear only in the L3
+*analytical* path (hyperparameters feeding the cost model).
+
+Everything here is build-time Python: `aot.py` lowers these functions to
+HLO text once; the Rust runtime executes the artifacts.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.attention import decode_attention_masked
+from .kernels.moe_mlp import grouped_expert_mlp
+from .kernels.topk_gate import topk_gate
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyMoEConfig:
+    """Hyperparameters of the numeric-path MoE model."""
+
+    vocab: int = 512
+    hidden: int = 128
+    n_heads: int = 4
+    head_dim: int = 32
+    expert_inter: int = 256   # f: per-expert FFN intermediate dim
+    n_experts: int = 8        # E routed experts
+    top_k: int = 2
+    shared_expert: bool = True  # DeepSeek-style shared expert
+    n_layers: int = 2
+    max_seq: int = 256
+
+    @property
+    def qkv_dim(self):
+        return self.n_heads * self.head_dim
+
+    def param_names(self):
+        """Deterministic flat parameter ordering (shared with aot manifest
+        and the Rust weight loader)."""
+        names = ["embed"]
+        for i in range(self.n_layers):
+            names += [f"l{i}.{n}" for n in
+                      ["ln1", "wq", "wk", "wv", "wo", "ln2", "router",
+                       "wg", "wu", "wd", "sg", "su", "sd"]]
+        names.append("ln_f")
+        return names
+
+    def param_shapes(self):
+        c = self
+        per_layer = {
+            "ln1": (c.hidden,),
+            "wq": (c.hidden, c.qkv_dim),
+            "wk": (c.hidden, c.qkv_dim),
+            "wv": (c.hidden, c.qkv_dim),
+            "wo": (c.qkv_dim, c.hidden),
+            "ln2": (c.hidden,),
+            "router": (c.hidden, c.n_experts),
+            "wg": (c.n_experts, c.hidden, c.expert_inter),
+            "wu": (c.n_experts, c.hidden, c.expert_inter),
+            "wd": (c.n_experts, c.expert_inter, c.hidden),
+            "sg": (c.hidden, c.expert_inter),
+            "su": (c.hidden, c.expert_inter),
+            "sd": (c.expert_inter, c.hidden),
+        }
+        shapes = {"embed": (c.vocab, c.hidden)}
+        for i in range(c.n_layers):
+            for n, s in per_layer.items():
+                shapes[f"l{i}.{n}"] = s
+        shapes["ln_f"] = (c.hidden,)
+        return shapes
+
+    def n_params(self):
+        return sum(int(np.prod(s)) for s in self.param_shapes().values())
+
+
+TINY = TinyMoEConfig()
+# ~110M parameters: the end-to-end example's "small real model".
+SMALL = TinyMoEConfig(vocab=8192, hidden=512, n_heads=8, head_dim=64,
+                      expert_inter=1024, n_experts=16, top_k=2,
+                      n_layers=6, max_seq=512)
+
+
+def init_weights(cfg: TinyMoEConfig, seed: int = 0):
+    """Deterministic scaled-gaussian init; returns {name: np.ndarray f32}."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape in cfg.param_shapes().items():
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            out[name] = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            out[name] = rng.normal(
+                0.0, 1.0 / np.sqrt(fan_in), size=shape).astype(np.float32)
+    return out
+
+
+def params_list(cfg, weights):
+    return [jnp.asarray(weights[n]) for n in cfg.param_names()]
+
+
+def params_dict(cfg, plist):
+    return dict(zip(cfg.param_names(), plist))
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions):
+    """Rotary embedding. x: [..., s, nh, hd]; positions: [s] or [..., s]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., s, half]
+    cos = jnp.cos(angles)[..., :, None, :]   # [..., s, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def causal_attention(x, wq, wk, wv, wo, cfg, positions=None):
+    """Full-prefix causal MHA (prefill path). x: [b, s, h] -> [b, s, h].
+
+    Also returns (k, v) for KV-cache initialization: [b, s, nh, hd].
+    """
+    b, s, _ = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(s)
+    q = (x @ wq).reshape(b, s, nh, hd)
+    k = (x @ wk).reshape(b, s, nh, hd)
+    v = (x @ wv).reshape(b, s, nh, hd)
+    q = rope(q, positions)
+    k = rope(k, positions)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnd,bknd->bnqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bnqk,bknd->bqnd", probs, v).reshape(b, s, nh * hd)
+    return o @ wo, k, v
+
+
+def dispatch(x, gate_i, n_experts, capacity):
+    """Scatter tokens into capacity-packed per-expert buffers.
+
+    x: [t, h]; gate_i: [t, k] -> (buf [E, C, h], flat_e [t*k], slot [t*k],
+    tok [t*k], valid [t*k]).  Tokens beyond an expert's capacity are
+    dropped (with C >= t the packing is dropless).
+    """
+    t, h = x.shape
+    k = gate_i.shape[1]
+    flat_e = gate_i.reshape(-1)                              # [tk]
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot           # [tk, E]
+    slot = jnp.sum(pos_in_e * onehot, axis=1)                # [tk]
+    tok = jnp.repeat(jnp.arange(t), k)                       # [tk]
+    valid = slot < capacity
+    buf = jnp.zeros((n_experts, capacity, h), x.dtype)
+    buf = buf.at[flat_e, jnp.where(valid, slot, capacity)].set(
+        x[tok], mode="drop")
+    return buf, flat_e, slot, tok, valid
+
+
+def combine(buf_out, gate_w, flat_e, slot, tok, valid, t):
+    """Gather expert outputs back to token order, weighted by the gate."""
+    h = buf_out.shape[-1]
+    gathered = buf_out[flat_e, jnp.where(valid, slot, 0)]     # [tk, h]
+    w = jnp.where(valid, gate_w.reshape(-1), 0.0)[:, None]
+    y = jnp.zeros((t, h), buf_out.dtype)
+    return y.at[tok].add(w * gathered)
+
+
+def moe_block(x, router, wg, wu, wd, sg, su, sd, cfg, block_t=None):
+    """Full MoE block on the Pallas path: gate -> dispatch -> grouped
+    expert MLP kernel -> combine (+ shared expert).  x: [t, h]."""
+    t = x.shape[0]
+    bt = block_t or min(64, t)
+    gate_w, gate_i = topk_gate(x, router, cfg.top_k, block_t=min(128, t))
+    capacity = ((t + bt - 1) // bt) * bt                     # dropless
+    buf, flat_e, slot, tok, valid = dispatch(x, gate_i, cfg.n_experts,
+                                             capacity)
+    buf_out = grouped_expert_mlp(buf, wg, wu, wd, block_t=bt)
+    y = combine(buf_out, gate_w, flat_e, slot, tok, valid, t)
+    if cfg.shared_expert:
+        y = y + ref.expert_mlp_ref(x, sg, su, sd)
+    return y
+
+
+def moe_block_dense_ref(x, router, wg, wu, wd, sg, su, sd, cfg):
+    """Dense oracle of moe_block (no dispatch)."""
+    return ref.moe_block_ref(
+        x, router, wg, wu, wd, cfg.top_k,
+        *( (sg, su, sd) if cfg.shared_expert else (None, None, None) ))
+
+
+# ---------------------------------------------------------------------------
+# full model forward passes (AOT entry points)
+# ---------------------------------------------------------------------------
+
+def _layer_params(p, i):
+    return {n: p[f"l{i}.{n}"] for n in
+            ["ln1", "wq", "wk", "wv", "wo", "ln2", "router",
+             "wg", "wu", "wd", "sg", "su", "sd"]}
+
+
+def prefill_fwd(cfg: TinyMoEConfig, tokens, *plist):
+    """Prefill: tokens [b, s] i32 -> (logits [b, vocab] at last position,
+    k_cache, v_cache [b, smax, L, nh, hd] zero-padded past s)."""
+    p = params_dict(cfg, list(plist))
+    b, s = tokens.shape
+    x = p["embed"][tokens]                                   # [b, s, h]
+    kc, vc = [], []
+    for i in range(cfg.n_layers):
+        lp = _layer_params(p, i)
+        a, k, v = causal_attention(rms_norm(x, lp["ln1"]), lp["wq"],
+                                   lp["wk"], lp["wv"], lp["wo"], cfg)
+        x = x + a
+        xr = rms_norm(x, lp["ln2"]).reshape(b * s, cfg.hidden)
+        y = moe_block(xr, lp["router"], lp["wg"], lp["wu"], lp["wd"],
+                      lp["sg"], lp["su"], lp["sd"], cfg)
+        x = x + y.reshape(b, s, cfg.hidden)
+        kc.append(k)
+        vc.append(v)
+    x = rms_norm(x, p["ln_f"])
+    logits = x[:, -1] @ p["embed"].T                         # [b, vocab]
+    pad = cfg.max_seq - s
+    k_cache = jnp.pad(jnp.stack(kc, 2), ((0, 0), (0, pad), (0, 0), (0, 0),
+                                         (0, 0)))
+    v_cache = jnp.pad(jnp.stack(vc, 2), ((0, 0), (0, pad), (0, 0), (0, 0),
+                                         (0, 0)))
+    return logits, k_cache, v_cache
+
+
+def decode_fwd(cfg: TinyMoEConfig, tokens, pos, k_cache, v_cache, *plist):
+    """One decode step with KV cache (the serving hot path).
+
+    tokens: [b] i32 (last generated token); pos: scalar i32 (current
+    sequence length, i.e. index where this token's K/V are written);
+    k_cache/v_cache: [b, smax, L, nh, hd] -> (logits [b, vocab],
+    updated caches).  Attention runs the masked Pallas decode kernel.
+    """
+    p = params_dict(cfg, list(plist))
+    b = tokens.shape[0]
+    nh, hd = cfg.n_heads, cfg.head_dim
+    x = p["embed"][tokens]                                   # [b, h]
+    positions = jnp.full((b, 1), pos)
+    for i in range(cfg.n_layers):
+        lp = _layer_params(p, i)
+        xn = rms_norm(x, lp["ln1"])
+        q = (xn @ lp["wq"]).reshape(b, 1, nh, hd)
+        k = (xn @ lp["wk"]).reshape(b, 1, nh, hd)
+        v = (xn @ lp["wv"]).reshape(b, 1, nh, hd)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[:, :, None], (0, pos, i, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[:, :, None], (0, pos, i, 0, 0))
+        o = decode_attention_masked(q[:, 0], k_cache[:, :, i],
+                                    v_cache[:, :, i], pos + 1)
+        x = x + o.reshape(b, nh * hd) @ lp["wo"]
+        xr = rms_norm(x, lp["ln2"])
+        y = moe_block(xr, lp["router"], lp["wg"], lp["wu"], lp["wd"],
+                      lp["sg"], lp["su"], lp["sd"], cfg,
+                      block_t=min(8, b))
+        x = x + y
+    x = rms_norm(x, p["ln_f"])
+    return x @ p["embed"].T, k_cache, v_cache
+
+
+def prefill_fwd_ref(cfg, tokens, *plist):
+    """jnp-only oracle of prefill_fwd (dense MoE, plain attention)."""
+    p = params_dict(cfg, list(plist))
+    b, s = tokens.shape
+    x = p["embed"][tokens]
+    for i in range(cfg.n_layers):
+        lp = _layer_params(p, i)
+        a, _, _ = causal_attention(rms_norm(x, lp["ln1"]), lp["wq"],
+                                   lp["wk"], lp["wv"], lp["wo"], cfg)
+        x = x + a
+        xr = rms_norm(x, lp["ln2"]).reshape(b * s, cfg.hidden)
+        y = moe_block_dense_ref(xr, lp["router"], lp["wg"], lp["wu"],
+                                lp["wd"], lp["sg"], lp["su"], lp["sd"], cfg)
+        x = x + y.reshape(b, s, cfg.hidden)
+    x = rms_norm(x, p["ln_f"])
+    return x[:, -1] @ p["embed"].T
+
+
+# ---------------------------------------------------------------------------
+# shard variants (hybrid TP-EP verification path)
+# ---------------------------------------------------------------------------
+
+def attn_tp_shard_fwd(x, wq_s, wk_s, wv_s, wo_s, n_heads_shard, head_dim):
+    """TP shard of causal attention: head-parallel column slices of
+    Wq/Wk/Wv and row slice of Wo.  Summing the outputs of all shards (the
+    AR the paper's TP group performs) equals the full attention output.
+
+    x: [b, s, h]; wq_s/wk_s/wv_s: [h, nh_s*hd]; wo_s: [nh_s*hd, h].
+    """
+    b, s, _ = x.shape
+    nh, hd = n_heads_shard, head_dim
+    positions = jnp.arange(s)
+    q = rope((x @ wq_s).reshape(b, s, nh, hd), positions)
+    k = rope((x @ wk_s).reshape(b, s, nh, hd), positions)
+    v = (x @ wv_s).reshape(b, s, nh, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnd,bknd->bnqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bnqk,bknd->bqnd", probs, v).reshape(b, s, nh * hd)
+    return o @ wo_s          # partial sum: AR across the TP group completes it
+
+
+def expert_tp_shard_fwd(x, wg_s, wu_s, wd_s):
+    """TP shard of one expert MLP: column slices of Wg/Wu (f dim), row
+    slice of Wd.  Sum over shards (intra-node RS in Alg. 1) = full MLP."""
+    return ref.expert_mlp_ref(x, wg_s, wu_s, wd_s)
+
+
+def shard_attention_weights(weights, layer, tp, cfg):
+    """Slice layer weights into `tp` head-parallel attention shards."""
+    per = cfg.qkv_dim // tp
+    out = []
+    for r in range(tp):
+        sl = slice(r * per, (r + 1) * per)
+        out.append(dict(
+            wq=weights[f"l{layer}.wq"][:, sl],
+            wk=weights[f"l{layer}.wk"][:, sl],
+            wv=weights[f"l{layer}.wv"][:, sl],
+            wo=weights[f"l{layer}.wo"][sl, :],
+        ))
+    return out
+
+
+def shard_expert_weights(weights, layer, expert, tp, cfg):
+    """Slice one expert's MLP into `tp` intermediate-dim shards."""
+    per = cfg.expert_inter // tp
+    out = []
+    for r in range(tp):
+        sl = slice(r * per, (r + 1) * per)
+        out.append(dict(
+            wg=weights[f"l{layer}.wg"][expert][:, sl],
+            wu=weights[f"l{layer}.wu"][expert][:, sl],
+            wd=weights[f"l{layer}.wd"][expert][sl, :],
+        ))
+    return out

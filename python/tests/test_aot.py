@@ -1,0 +1,78 @@
+"""AOT pipeline: manifest integrity, weight export round-trip, HLO text
+parseability markers."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_every_artifact_file():
+    man = _manifest()
+    for name, ent in man["artifacts"].items():
+        path = os.path.join(ART, ent["file"])
+        assert os.path.exists(path), f"missing {path}"
+        assert ent["inputs"] and ent["outputs"]
+
+
+def test_hlo_text_is_text_not_proto():
+    man = _manifest()
+    name, ent = next(iter(man["artifacts"].items()))
+    with open(os.path.join(ART, ent["file"])) as f:
+        head = f.read(200)
+    assert "HloModule" in head, "interchange must be HLO text"
+
+
+def test_prefill_manifest_shapes():
+    man = _manifest()
+    tiny = man["models"]["tiny"]
+    for b, s in tiny["prefill_buckets"]:
+        ent = man["artifacts"][f"tiny_prefill_b{b}_s{s}"]
+        assert ent["inputs"][0]["shape"] == [b, s]
+        assert ent["inputs"][0]["dtype"] == "int32"
+        # logits + 2 caches
+        assert len(ent["outputs"]) == 3
+        assert ent["outputs"][0]["shape"] == [b, tiny["vocab"]]
+
+
+def test_decode_manifest_shapes():
+    man = _manifest()
+    tiny = man["models"]["tiny"]
+    for b in tiny["decode_batches"]:
+        ent = man["artifacts"][f"tiny_decode_b{b}"]
+        cache = [b, tiny["max_seq"], tiny["n_layers"], tiny["n_heads"],
+                 tiny["head_dim"]]
+        assert ent["inputs"][2]["shape"] == cache
+        assert ent["outputs"][1]["shape"] == cache
+
+
+def test_weight_export_roundtrip(tmp_path):
+    cfg = M.TinyMoEConfig(vocab=32, hidden=16, n_heads=2, head_dim=8,
+                          expert_inter=24, n_experts=2, top_k=1,
+                          n_layers=1, max_seq=16)
+    weights = aot.export_weights(cfg, "t", str(tmp_path))
+    man = json.load(open(tmp_path / "weights" / "t" / "manifest.json"))
+    assert man["order"] == cfg.param_names()
+    for name in cfg.param_names():
+        ent = man["params"][name]
+        arr = np.fromfile(tmp_path / "weights" / "t" / ent["file"],
+                          dtype="<f4").reshape(ent["shape"])
+        np.testing.assert_array_equal(arr, weights[name])
+
+
+def test_param_order_matches_model():
+    man = _manifest()
+    assert man["models"]["tiny"]["param_order"] == M.TINY.param_names()

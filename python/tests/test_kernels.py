@@ -1,0 +1,168 @@
+"""L1 Pallas kernel correctness: hypothesis sweeps shapes/dtypes vs ref.py."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import (decode_attention,
+                                       decode_attention_masked)
+from compile.kernels.moe_mlp import (grouped_expert_mlp, expert_mlp,
+                                     vmem_bytes_per_step)
+from compile.kernels.topk_gate import topk_gate
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def randn(rng, shape, scale=0.1, dtype=np.float32):
+    return jnp.asarray(rng.normal(0.0, scale, size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# grouped expert MLP
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    e=st.sampled_from([1, 2, 4, 8]),
+    c_blocks=st.integers(1, 3),
+    block_t=st.sampled_from([8, 16, 32]),
+    h=st.sampled_from([16, 32, 64]),
+    f=st.sampled_from([16, 48, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grouped_expert_mlp_matches_ref(e, c_blocks, block_t, h, f, seed):
+    rng = np.random.default_rng(seed)
+    c = c_blocks * block_t
+    xs = randn(rng, (e, c, h), 1.0)
+    wg = randn(rng, (e, h, f))
+    wu = randn(rng, (e, h, f))
+    wd = randn(rng, (e, f, h))
+    got = grouped_expert_mlp(xs, wg, wu, wd, block_t=block_t)
+    want = ref.grouped_expert_mlp_ref(xs, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_expert_mlp_single_expert_wrapper():
+    rng = np.random.default_rng(0)
+    x = randn(rng, (32, 16), 1.0)
+    wg, wu, wd = randn(rng, (16, 24)), randn(rng, (16, 24)), randn(rng, (24, 16))
+    got = expert_mlp(x, wg, wu, wd)
+    want = ref.expert_mlp_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_grouped_expert_mlp_rejects_bad_capacity():
+    rng = np.random.default_rng(0)
+    xs = randn(rng, (2, 10, 8))
+    w = randn(rng, (2, 8, 8))
+    wd = randn(rng, (2, 8, 8))
+    with pytest.raises(ValueError):
+        grouped_expert_mlp(xs, w, w, wd, block_t=4)
+
+
+def test_vmem_estimate_positive_and_monotone():
+    a = vmem_bytes_per_step(32, 128, 256)
+    b = vmem_bytes_per_step(64, 128, 256)
+    assert 0 < a < b
+
+
+# ---------------------------------------------------------------------------
+# top-k gate
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    t_blocks=st.integers(1, 3),
+    block_t=st.sampled_from([16, 32]),
+    h=st.sampled_from([16, 64]),
+    e=st.sampled_from([4, 8, 16]),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_topk_gate_matches_ref(t_blocks, block_t, h, e, k, seed):
+    rng = np.random.default_rng(seed)
+    t = t_blocks * block_t
+    x = randn(rng, (t, h), 1.0)
+    wr = randn(rng, (h, e), 1.0)
+    got_w, got_i = topk_gate(x, wr, k, block_t=block_t)
+    want_w, want_i = ref.topk_gate_ref(x, wr, k)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(got_w, want_w, rtol=1e-4, atol=1e-6)
+
+
+def test_topk_gate_weights_normalized_and_sorted():
+    rng = np.random.default_rng(3)
+    x = randn(rng, (32, 16), 1.0)
+    wr = randn(rng, (16, 8), 1.0)
+    w, i = topk_gate(x, wr, 3, block_t=32)
+    w = np.asarray(w)
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-5)
+    assert (np.diff(w, axis=-1) <= 1e-7).all(), "top-k must be descending"
+    assert (np.asarray(i) >= 0).all() and (np.asarray(i) < 8).all()
+
+
+def test_topk_gate_indices_distinct():
+    rng = np.random.default_rng(4)
+    x = randn(rng, (64, 32), 1.0)
+    wr = randn(rng, (32, 8), 1.0)
+    _, i = topk_gate(x, wr, 4, block_t=64)
+    i = np.asarray(i)
+    for row in i:
+        assert len(set(row.tolist())) == 4
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    nh=st.sampled_from([1, 2, 4]),
+    hd=st.sampled_from([8, 16, 32]),
+    s=st.sampled_from([16, 64, 96, 100]),
+    chunk=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, nh, hd, s, chunk, seed):
+    rng = np.random.default_rng(seed)
+    q = randn(rng, (b, nh, hd), 1.0)
+    k = randn(rng, (b, s, nh, hd), 1.0)
+    v = randn(rng, (b, s, nh, hd), 1.0)
+    got = decode_attention(q, k, v, chunk_s=chunk)
+    want = ref.decode_attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    valid=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_decode_attention_ignores_padding(valid, seed):
+    """Masked kernel over a padded cache == plain ref over the valid prefix,
+    regardless of garbage in the padded region."""
+    rng = np.random.default_rng(seed)
+    b, nh, hd, smax = 2, 2, 16, 48
+    q = randn(rng, (b, nh, hd), 1.0)
+    k = randn(rng, (b, smax, nh, hd), 1.0)
+    v = randn(rng, (b, smax, nh, hd), 1.0)
+    # poison the padding
+    k = k.at[:, valid:].set(1e9)
+    v = v.at[:, valid:].set(-1e9)
+    got = decode_attention_masked(q, k, v, valid, chunk_s=16)
+    want = ref.decode_attention_ref(q, k[:, :valid], v[:, :valid])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_attention_softmax_rowsum():
+    """Output must be a convex combination of V rows: bounded by min/max."""
+    rng = np.random.default_rng(7)
+    b, nh, hd, s = 2, 2, 8, 32
+    q = randn(rng, (b, nh, hd), 1.0)
+    k = randn(rng, (b, s, nh, hd), 1.0)
+    v = jnp.ones((b, s, nh, hd), jnp.float32) * 3.0
+    got = np.asarray(decode_attention(q, k, v))
+    np.testing.assert_allclose(got, 3.0, rtol=1e-5)

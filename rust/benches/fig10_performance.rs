@@ -1,0 +1,11 @@
+//! Regenerates Fig. 10: TTFT / ITL / throughput for MixServe vs the
+//! Table II baselines — 2 clusters × 2 models × rates {2,4,8}.
+use mixserve::paperbench::fig10;
+
+fn main() {
+    let duration = std::env::var("FIG10_DURATION")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(30.0);
+    let rows = fig10::sweep(duration, 7);
+    print!("{}", fig10::render(&rows));
+    print!("{}", fig10::accelerations(&rows));
+}

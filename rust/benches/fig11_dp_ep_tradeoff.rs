@@ -1,0 +1,8 @@
+//! Regenerates Fig. 11: the DP↔EP trade-off ablation (three settings per
+//! cluster per model).
+use mixserve::paperbench::fig11;
+
+fn main() {
+    let rows = fig11::sweep(60.0, 7);
+    print!("{}", fig11::render(&rows));
+}

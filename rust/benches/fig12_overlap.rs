@@ -1,0 +1,7 @@
+//! Regenerates Fig. 12: sync vs async fused AR-A2A — Gantt chart plus
+//! end-to-end TTFT / ITL / throughput on DeepSeek-R1 / Ascend 910B.
+use mixserve::paperbench::fig12;
+
+fn main() {
+    print!("{}", fig12::render(60.0, 7));
+}

@@ -1,0 +1,10 @@
+//! Regenerates Fig. 3: AR/A2A latency vs parallel degree (left) and
+//! intra/inter latency vs data size (right), both clusters.
+use mixserve::config::ClusterConfig;
+use mixserve::paperbench::fig3;
+
+fn main() {
+    for c in [ClusterConfig::ascend910b(), ClusterConfig::h20()] {
+        print!("{}\n\n", fig3::run(&c));
+    }
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig. 4: Gantt comparison of pure EP vs hybrid TP+EP for a
+//! single DeepSeek-R1 MoE block on the 4×8 Ascend cluster.
+use mixserve::config::ClusterConfig;
+use mixserve::paperbench::fig4;
+
+fn main() {
+    print!("{}", fig4::run(&ClusterConfig::ascend910b()));
+    print!("\n{}", fig4::run(&ClusterConfig::h20()));
+}

@@ -1,0 +1,106 @@
+//! Micro-benchmarks of the L3 hot paths (in-tree harness; criterion is
+//! unavailable offline).  These are the §Perf profiling entry points:
+//!   * fused RS-Combine / AG-Dispatch data plane (bytes actually moved)
+//!   * unfused RS→A2A→AG baseline pipeline
+//!   * continuous-batching scheduler iteration
+//!   * KV-cache allocator churn
+//!   * analyzer full strategy search
+//!   * discrete-event queue throughput
+
+use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::search::{Analyzer, Objective};
+use mixserve::comm::cost::CollectiveCost;
+use mixserve::comm::fused::{fused_ag_dispatch, fused_rs_combine, Route};
+use mixserve::comm::primitives::{synth_contrib, unfused_rs_a2a_ag};
+use mixserve::comm::world::{RankWorld, Tensor2};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use mixserve::serving::batcher::{Batcher, BatcherConfig};
+use mixserve::serving::kvcache::KvCacheManager;
+use mixserve::simulator::EventQueue;
+use mixserve::testkit::Bench;
+use mixserve::workload::Request;
+
+fn main() {
+    let mut b = Bench::new(3, 20);
+    let cluster = ClusterConfig::ascend910b();
+    let cost = CollectiveCost::new(&cluster);
+
+    // --- fused communication data plane (t_loc=64, h=512, 4×8 grid)
+    let world = RankWorld::new(4, 8);
+    let contrib = synth_contrib(&world, 64, 512, 1);
+    b.run("fused_rs_combine 4x8 64x512", || {
+        fused_rs_combine(&world, &contrib, &cost).per_node.len()
+    });
+    b.run("unfused rs_a2a_ag 4x8 64x512", || {
+        unfused_rs_a2a_ag(&world, &contrib, &cost).0.len()
+    });
+    let tokens: Vec<Tensor2> = (0..4)
+        .map(|s| Tensor2::from_fn(256, 512, |r, c| (s + r + c) as f32))
+        .collect();
+    let route: Route = (0..4).map(|s| (0..256).map(|t| (s + t) % 4).collect()).collect();
+    b.run("fused_ag_dispatch 4x8 256x512", || {
+        fused_ag_dispatch(&world, &tokens, &route, &cost).per_node.len()
+    });
+
+    // --- scheduler iteration at max batch
+    b.run("batcher plan+retire 64 reqs", || {
+        let mut batcher = Batcher::new(BatcherConfig { max_batch: 16, max_seq: 4096 });
+        let mut kv = KvCacheManager::new(4096, 16);
+        for i in 0..64 {
+            batcher.submit(Request { id: i, arrival: 0.0, len_in: 256, len_out: 64 });
+        }
+        let mut done = 0;
+        for step in 0..400 {
+            let plan = batcher.plan(step as f64, &mut kv);
+            for id in plan.prefill {
+                batcher.complete_prefill(id, step as f64);
+            }
+            for id in plan.decode {
+                batcher.complete_decode_token(id, step as f64);
+            }
+            done += batcher.retire(&mut kv).len();
+            if batcher.is_idle() {
+                break;
+            }
+        }
+        done
+    });
+
+    // --- KV allocator churn
+    b.run("kvcache grow/release x1000", || {
+        let mut kv = KvCacheManager::new(8192, 16);
+        for i in 0..1000usize {
+            kv.grow_to(i % 64, 512).unwrap();
+            if i % 3 == 0 {
+                kv.release(i % 64);
+            }
+        }
+        kv.free_blocks()
+    });
+
+    // --- analyzer full search (77 strategies on the 4×8 grid)
+    let analyzer = Analyzer::new(
+        &MoEModelConfig::deepseek_r1(),
+        &cluster,
+        &ServingConfig::default(),
+    );
+    let wl = Workload::sharegpt(4.0);
+    b.run("analyzer rank all strategies", || {
+        analyzer.rank(&wl, Objective::MaxThroughput).len()
+    });
+
+    // --- event queue throughput
+    b.run("event queue 100k push+pop", || {
+        let mut q = EventQueue::new();
+        for i in 0..100_000u64 {
+            q.push((i % 97) as f64, i);
+        }
+        let mut n = 0u64;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        n
+    });
+
+    println!("\n{} benches complete", b.results().len());
+}

@@ -1,0 +1,17 @@
+//! Regenerates Table I: collective operator overheads, with structural
+//! verification of the cost model against the paper's symbolic claims.
+use mixserve::config::ClusterConfig;
+use mixserve::paperbench::table1;
+
+fn main() {
+    for c in [ClusterConfig::ascend910b(), ClusterConfig::h20()] {
+        print!("{}", table1::render(&c));
+        match table1::verify(&c) {
+            Ok(()) => println!("structural checks [{}]: OK\n", c.name),
+            Err(e) => {
+                eprintln!("structural checks [{}]: FAILED: {e}", c.name);
+                std::process::exit(1);
+            }
+        }
+    }
+}

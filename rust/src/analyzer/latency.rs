@@ -1,0 +1,335 @@
+//! Token-generation latency model — §III-B4, Eqs. (4)–(6), plus the
+//! hybrid-vs-pure communication overheads of §III-C2, Eqs. (12)–(13).
+
+use crate::comm::cost::{CollectiveCost, CommDomain};
+use crate::comm::fused::{ag_dispatch_schedule, rs_combine_schedule};
+use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy};
+
+/// Prefill processes the full prompt; decode one token with a cached
+/// context (Eqs. 9–10 evaluate Δt_svc at s = L_in and s = 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// Communication schedule used for the MoE block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommMode {
+    /// back-to-back collectives (baselines; MixServe's sync ablation)
+    Sync,
+    /// fused AR-A2A with intra/inter overlap (Algorithms 1–2)
+    FusedAsync,
+}
+
+/// Per-token latency breakdown of one decoder layer set.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyBreakdown {
+    /// computational latency τ (Eq. 4), seconds
+    pub compute: f64,
+    /// communication latency λ (Eq. 5 / 12 / 13), seconds
+    pub comm: f64,
+    /// PP bubble (Eq. 6 P2P term), seconds
+    pub p2p: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.comm + self.p2p
+    }
+}
+
+/// The analyzer's latency model, bound to (model, cluster).
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    pub model: MoEModelConfig,
+    pub cluster: ClusterConfig,
+    pub cost: CollectiveCost,
+}
+
+impl LatencyModel {
+    pub fn new(model: &MoEModelConfig, cluster: &ClusterConfig) -> Self {
+        Self {
+            model: model.clone(),
+            cluster: cluster.clone(),
+            cost: CollectiveCost::new(cluster),
+        }
+    }
+
+    /// Tokens processed per iteration by one DP replica: batch rows b/d_DP,
+    /// each contributing `s` positions in prefill or 1 in decode.
+    fn tokens_per_dp(&self, s: &ParallelStrategy, batch: usize, seq: usize, phase: Phase) -> f64 {
+        let rows = (batch as f64 / s.attn.dp as f64).max(1.0);
+        match phase {
+            Phase::Prefill => rows * seq as f64,
+            Phase::Decode => rows,
+        }
+    }
+
+    /// Expert-GEMM efficiency under sharding.  DeepSeek-V3's case for EP:
+    /// "each expert [must] process sufficiently large batch sizes, thereby
+    /// maximizing computational efficiency."  TP-slicing the expert FFN
+    /// (width f/d_TP) and starving experts of tokens both collapse MFU;
+    /// modeled as a saturating product in per-expert rows M and slice
+    /// width W.
+    pub fn expert_gemm_efficiency(&self, s: &ParallelStrategy, global_toks: f64) -> f64 {
+        const M_SAT: f64 = 64.0; // rows to saturate the MAC array
+        const W_SAT: f64 = 32.0; // slice width to keep the MAC array fed
+        let m = &self.model;
+        let rows_per_expert =
+            global_toks * m.top_k as f64 / m.n_experts as f64;
+        let width = m.expert_inter as f64 / s.moe.tp as f64;
+        (rows_per_expert / (rows_per_expert + M_SAT))
+            * (width / (width + W_SAT))
+    }
+
+    /// Computational latency τ — Eq. (4): work shrinks with d_TP·d_EP and
+    /// the per-replica batch with d_DP; decode is additionally floored by
+    /// the HBM roofline (streaming the activated expert weights).
+    pub fn compute_latency(
+        &self,
+        s: &ParallelStrategy,
+        batch: usize,
+        seq: usize,
+        phase: Phase,
+    ) -> f64 {
+        let m = &self.model;
+        let eff_flops = self.cluster.flops * self.cluster.mfu;
+        let (attn_f, moe_f) = m.flops_per_token_layer(seq);
+        let toks = self.tokens_per_dp(s, batch, seq, phase);
+        // attention work is sharded by the attention TP group
+        let attn = toks * attn_f / s.attn.tp as f64;
+        // expert work: the communicator processes d_DP replicas' tokens,
+        // spread over the moe.tp × moe.ep grid (Eq. 4's Ψ/(d_TP·d_EP)),
+        // derated by the expert-GEMM efficiency.
+        let global_toks = toks * s.attn.dp as f64;
+        let eff = self.expert_gemm_efficiency(s, global_toks);
+        let moe = global_toks * moe_f / (s.moe.tp * s.moe.ep) as f64 / eff.max(1e-3);
+        // HBM floor: every activated expert's weights stream from HBM once
+        // per iteration on each device holding them.
+        let experts_per_device =
+            (m.n_experts as f64 / s.moe.ep as f64).max(1.0);
+        let touched = experts_per_device
+            .min(global_toks * m.top_k as f64 / s.moe.ep as f64)
+            .max(1.0);
+        let expert_bytes = 3.0
+            * (m.hidden * m.expert_inter * m.dtype_bytes) as f64
+            / s.moe.tp as f64;
+        let hbm_floor = touched * expert_bytes / self.cluster.hbm_bw;
+        let moe_t = (moe / eff_flops).max(hbm_floor);
+        let layers_total = m.n_layers as f64;
+        (attn / eff_flops + moe_t) * layers_total
+    }
+
+    /// Bytes of one replica's activation tensor (b/d_DP · s · h).
+    fn act_bytes(&self, s: &ParallelStrategy, batch: usize, seq: usize, phase: Phase) -> f64 {
+        self.tokens_per_dp(s, batch, seq, phase)
+            * (self.model.hidden * self.model.dtype_bytes) as f64
+    }
+
+    /// Expected activation copies a token ships to *remote* EP groups.
+    ///
+    /// A token activates k experts placed uniformly over `groups` EP
+    /// ranks but sends at most ONE copy per destination group (the
+    /// group's TP ranks serve all its local experts from that copy) —
+    /// the hybrid's central volume saving vs per-expert dispatch:
+    /// E[distinct groups] = g·(1−(1−1/g)^k), of which (g−1)/g are remote.
+    pub fn remote_copies(&self, groups: usize) -> f64 {
+        if groups <= 1 {
+            return 0.0;
+        }
+        let g = groups as f64;
+        let k = self.model.top_k as f64;
+        let distinct = g * (1.0 - (1.0 - 1.0 / g).powf(k));
+        distinct * (g - 1.0) / g
+    }
+
+    /// Communication latency λ of one layer — Eq. (5) with the §III-B3
+    /// DP/EP trade-off, Eq. (12) for pure EP, Eq. (13) for the hybrid,
+    /// and the fused overlap when `mode == FusedAsync`.
+    pub fn comm_latency_layer(
+        &self,
+        s: &ParallelStrategy,
+        batch: usize,
+        seq: usize,
+        phase: Phase,
+        mode: CommMode,
+    ) -> f64 {
+        let c = &self.cost;
+        let k = self.model.top_k as f64;
+        let bytes = self.act_bytes(s, batch, seq, phase);
+
+        // ---- attention block: one AR per layer over the attention TP group
+        let attn_domain = c.domain_of(s.attn.tp);
+        let attn_ar = c.all_reduce(bytes, s.attn.tp, attn_domain);
+
+        // ---- MoE block.  The MoE communicator carries the *global* token
+        // set of all DP replicas (b·s·h), spread over the moe.tp × moe.ep
+        // grid — this is why AR-based pure TP collapses at high degree
+        // (Fig. 3) while EP only ships top-k-selected rows.
+        let global_bytes = bytes * s.attn.dp as f64;
+        let (tp, ep) = (s.moe.tp, s.moe.ep);
+        let moe = if ep == 1 {
+            // pure TP: every token's FFN sharded over all tp devices; one
+            // AR of the full activation volume per layer.
+            c.all_reduce(global_bytes, tp, c.domain_of(tp))
+        } else if tp == 1 {
+            // pure EP: rank-granular dispatch/combine.  Every *distinct
+            // activated rank* receives its own copy of the token's hidden
+            // state — two experts on different ranks of the same remote
+            // node cross the wire twice (the hybrid crosses once, its
+            // volume saving).  Off-node copies ride the NIC, on-node ones
+            // the fabric; Pairwise needs d−1 launch rounds (the EP
+            // pathology at high degree).
+            let _ = k;
+            let d = ep;
+            let g = d as f64;
+            let distinct = g * (1.0 - (1.0 - 1.0 / g).powf(self.model.top_k as f64));
+            let m_node = self.cluster.gpus_per_node.min(d) as f64;
+            let nodes_spanned = (g / m_node).max(1.0);
+            let off_frac = if d <= self.cluster.gpus_per_node {
+                0.0
+            } else {
+                (g - m_node) / g
+            };
+            let per_nic = global_bytes * distinct * off_frac / nodes_spanned;
+            let per_fabric = global_bytes * distinct * (1.0 - off_frac) / nodes_spanned;
+            let rounds = (d as f64 - 1.0).max(0.0);
+            let t_inter = rounds * self.cluster.inter_lat + per_nic / self.cluster.inter_bw;
+            let t_intra = per_fabric / self.cluster.intra_bw;
+            // dispatch + combine; intra and inter lanes progress together
+            2.0 * t_inter.max(t_intra)
+        } else {
+            // hybrid TP-EP (§III-C2, Eq. 13): TP intra-node, EP inter-node.
+            // One copy per destination *node* — the hybrid's volume saving.
+            let vol = global_bytes * self.remote_copies(ep).max(1e-9) / ep as f64;
+            let blk = vol / (ep as f64 - 1.0).max(1.0);
+            // the TP group's RS/AG stay intra-node only while tp fits in a
+            // node — oversized TP groups pay the NIC (Fig. 3's d > 8 wall)
+            let tp_domain = c.domain_of(tp);
+            let rs_t = c.reduce_scatter(blk, tp, tp_domain);
+            let ag_blk = c.all_gather(blk, tp, tp_domain);
+            let send_t = c.round(blk, CommDomain::InterNode);
+            // final AG reassembles this node's combined output (b/d_DP·s·h)
+            let ag_out = c.all_gather(bytes, tp, tp_domain);
+            let (disp_async, disp_sync) = ag_dispatch_schedule(ep, send_t, ag_blk);
+            let (comb_async, comb_sync) = rs_combine_schedule(ep, rs_t, send_t, ag_out);
+            match mode {
+                CommMode::Sync => disp_sync + comb_sync,
+                CommMode::FusedAsync => disp_async + comb_async,
+            }
+        };
+        attn_ar + moe
+    }
+
+    /// Service latency per token — Eq. (6):
+    /// Δt_svc = l·[τ + λ] + (d_PP − 1) · P2P(b/d_DP · s · h).
+    pub fn service_latency(
+        &self,
+        s: &ParallelStrategy,
+        batch: usize,
+        seq: usize,
+        phase: Phase,
+        mode: CommMode,
+    ) -> LatencyBreakdown {
+        let compute = self.compute_latency(s, batch, seq, phase);
+        let comm =
+            self.comm_latency_layer(s, batch, seq, phase, mode) * self.model.n_layers as f64;
+        let p2p = if s.pp > 1 {
+            (s.pp as f64 - 1.0) * self.cost.p2p(self.act_bytes(s, batch, seq, phase))
+        } else {
+            0.0
+        };
+        LatencyBreakdown { compute, comm, p2p }
+    }
+
+    /// The pure-EP deployment's per-layer communication — Eq. (12)
+    /// (used by Fig. 4's Gantt comparison).
+    pub fn lambda_pure_ep(&self, batch: usize, seq: usize) -> f64 {
+        let c = &self.cost;
+        let n_proc = self.cluster.gpus_per_node;
+        let n_node = self.cluster.n_nodes;
+        let bytes = (batch * seq * self.model.hidden * self.model.dtype_bytes) as f64
+            / n_node as f64;
+        let k = self.model.top_k as f64;
+        c.all_reduce(bytes, n_proc, CommDomain::IntraNode)
+            + 2.0 * c.all_to_all(bytes * k, n_node * n_proc, CommDomain::InterNode)
+    }
+
+    /// The hybrid deployment's per-layer communication — Eq. (13).
+    pub fn lambda_mix(&self, batch: usize, seq: usize, mode: CommMode) -> f64 {
+        let s = ParallelStrategy::mixserve(self.cluster.n_nodes, self.cluster.gpus_per_node);
+        self.comm_latency_layer(&s, batch, seq, Phase::Prefill, mode)
+            * (seq as f64 / seq as f64) // per layer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lm() -> LatencyModel {
+        LatencyModel::new(&MoEModelConfig::deepseek_r1(), &ClusterConfig::ascend910b())
+    }
+
+    #[test]
+    fn compute_scales_down_with_parallelism() {
+        let m = lm();
+        let s1 = ParallelStrategy::mixserve(1, 1);
+        let s8 = ParallelStrategy::mixserve(4, 8);
+        let t1 = m.compute_latency(&s1, 16, 512, Phase::Prefill);
+        let t8 = m.compute_latency(&s8, 16, 512, Phase::Prefill);
+        assert!(t8 < t1 / 4.0, "32 devices must be >4x faster: {t1} vs {t8}");
+    }
+
+    #[test]
+    fn prefill_dominates_decode() {
+        let m = lm();
+        let s = ParallelStrategy::mixserve(4, 8);
+        let p = m.service_latency(&s, 16, 1024, Phase::Prefill, CommMode::FusedAsync);
+        let d = m.service_latency(&s, 16, 1024, Phase::Decode, CommMode::FusedAsync);
+        assert!(p.total() > 10.0 * d.total());
+    }
+
+    #[test]
+    fn fused_async_no_slower_than_sync() {
+        let m = lm();
+        let s = ParallelStrategy::mixserve(4, 8);
+        for (b, l) in [(4, 256), (16, 1024), (16, 4096)] {
+            let sync = m.service_latency(&s, b, l, Phase::Prefill, CommMode::Sync);
+            let fused = m.service_latency(&s, b, l, Phase::Prefill, CommMode::FusedAsync);
+            assert!(fused.comm <= sync.comm * 1.0001, "b={b} l={l}");
+        }
+    }
+
+    #[test]
+    fn hybrid_beats_pure_ep_on_paper_clusters() {
+        // §III-C2's claim: λ_mix < λ_EP on bandwidth-hierarchical clusters.
+        for cl in [ClusterConfig::ascend910b(), ClusterConfig::h20()] {
+            let m = LatencyModel::new(&MoEModelConfig::deepseek_r1(), &cl);
+            let pure = m.lambda_pure_ep(16, 1024);
+            let mix = m.lambda_mix(16, 1024, CommMode::FusedAsync);
+            assert!(mix < pure, "{}: mix {mix} !< pure {pure}", cl.name);
+        }
+    }
+
+    #[test]
+    fn pp_adds_p2p_bubble() {
+        let m = lm();
+        let flat = ParallelStrategy::tp_pp(8, 1);
+        let piped = ParallelStrategy::tp_pp(8, 4);
+        let a = m.service_latency(&flat, 8, 512, Phase::Prefill, CommMode::Sync);
+        let b = m.service_latency(&piped, 8, 512, Phase::Prefill, CommMode::Sync);
+        assert_eq!(a.p2p, 0.0);
+        assert!(b.p2p > 0.0);
+    }
+
+    #[test]
+    fn decode_comm_smaller_than_prefill_comm() {
+        let m = lm();
+        let s = ParallelStrategy::pure_ep(4, 8);
+        let p = m.comm_latency_layer(&s, 16, 2048, Phase::Prefill, CommMode::Sync);
+        let d = m.comm_latency_layer(&s, 16, 2048, Phase::Decode, CommMode::Sync);
+        assert!(d < p);
+    }
+}

@@ -1,0 +1,21 @@
+//! The automatic analyzer (§III-B): offline cost modeling and strategy
+//! selection.
+//!
+//! Inputs: model hyperparameters + cluster/network configuration (and,
+//! optionally, profiling observations for calibration).  Output: the
+//! optimal [`ParallelStrategy`] plus predicted TTFT / ITL / throughput.
+
+pub mod indicators;
+pub mod latency;
+pub mod memory;
+pub mod profile;
+pub mod queueing;
+pub mod search;
+pub mod tradeoff;
+
+pub use indicators::{Indicators, Workload};
+pub use latency::{CommMode, LatencyModel, Phase};
+pub use memory::MemoryCheck;
+pub use profile::{calibrate, profile_model, Calibration, Observation};
+pub use search::{Analyzer, StrategyReport};
+pub use tradeoff::{DpEpCase, classify_dp_ep};

@@ -1,0 +1,170 @@
+//! Offline-stage profiling observations (Fig. 5, §III-A): "MixServe first
+//! retrieves the model's hyperparameters and presets prompts with varying
+//! batch sizes and sequence lengths to obtain profiling data as
+//! observations. [...] Both the observations and theoretical values are
+//! then input into the analyzer."
+//!
+//! On this substrate the observations come from *real PJRT executions* of
+//! the tiny AOT model across its compiled shape buckets; calibration fits
+//! the effective per-token service rate that the theoretical model's
+//! `flops × mfu` term should reproduce, closing the loop between the
+//! measured and analytic paths.
+
+use crate::config::{ClusterConfig, MoEModelConfig};
+use crate::runtime::model_runner::TinyMoERunner;
+use crate::runtime::Engine;
+use anyhow::Result;
+use std::time::Instant;
+
+/// One profiling observation: a (batch, seq) preset and its measured
+/// wall-clock latency.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub batch: usize,
+    pub seq: usize,
+    /// measured seconds per forward pass
+    pub latency: f64,
+    /// prefill (full prompt) or decode (single token) measurement
+    pub prefill: bool,
+}
+
+impl Observation {
+    /// Tokens processed by this pass.
+    pub fn tokens(&self) -> usize {
+        if self.prefill {
+            self.batch * self.seq
+        } else {
+            self.batch
+        }
+    }
+}
+
+/// Profile the tiny model across its compiled buckets (`reps` timed
+/// repetitions each, one warmup for compilation).
+pub fn profile_model(engine: &Engine, model: &str, reps: usize) -> Result<Vec<Observation>> {
+    let runner = TinyMoERunner::load(engine, model)?;
+    let info = engine.store.model(model)?.clone();
+    let mut out = Vec::new();
+
+    for &(b, s) in &info.prefill_buckets {
+        let prompts: Vec<Vec<i32>> =
+            (0..b).map(|i| (0..s).map(|j| ((i * 31 + j) % info.vocab) as i32).collect()).collect();
+        runner.prefill(engine, &prompts)?; // warmup + compile
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            runner.prefill(engine, &prompts)?;
+        }
+        out.push(Observation {
+            batch: b,
+            seq: s,
+            latency: t0.elapsed().as_secs_f64() / reps as f64,
+            prefill: true,
+        });
+    }
+
+    for &b in &info.decode_batches {
+        let prompts: Vec<Vec<i32>> =
+            (0..b).map(|i| (0..16).map(|j| ((i * 7 + j) % info.vocab) as i32).collect()).collect();
+        let mut state = runner.prefill(engine, &prompts)?;
+        let tokens: Vec<i32> = (0..b as i32).collect();
+        // warmup decode
+        {
+            let mut refs: Vec<&mut _> = state.iter_mut().map(|(_, s)| s).collect();
+            runner.decode_step(engine, &tokens, &mut refs)?;
+        }
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let mut refs: Vec<&mut _> = state.iter_mut().map(|(_, s)| s).collect();
+            runner.decode_step(engine, &tokens, &mut refs)?;
+        }
+        out.push(Observation {
+            batch: b,
+            seq: 1,
+            latency: t0.elapsed().as_secs_f64() / reps as f64,
+            prefill: false,
+        });
+    }
+    Ok(out)
+}
+
+/// Calibration result: the effective compute rate observed on this
+/// substrate, and the derate to apply to a cluster description so the
+/// theoretical model matches the observations.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    /// observed effective FLOP/s (median over observations)
+    pub eff_flops: f64,
+    /// observations used
+    pub n_obs: usize,
+}
+
+/// Fit the effective FLOP/s from observations: for each, divide the
+/// model's nominal dense FLOPs by the measured latency; take the median
+/// (robust to bucket-boundary outliers).
+pub fn calibrate(model: &MoEModelConfig, obs: &[Observation]) -> Calibration {
+    let mut rates: Vec<f64> = obs
+        .iter()
+        .filter(|o| o.latency > 0.0)
+        .map(|o| {
+            let (attn_f, moe_f) = model.flops_per_token_layer(o.seq);
+            let flops = o.tokens() as f64 * (attn_f + moe_f) * model.n_layers as f64;
+            flops / o.latency
+        })
+        .collect();
+    rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let eff = if rates.is_empty() { 0.0 } else { rates[rates.len() / 2] };
+    Calibration { eff_flops: eff, n_obs: rates.len() }
+}
+
+/// Apply a calibration to a cluster description (observations override
+/// the datasheet `flops × mfu` — the analyzer then consumes BOTH, per
+/// Fig. 5).
+pub fn apply_calibration(cluster: &ClusterConfig, cal: &Calibration) -> ClusterConfig {
+    let mut c = cluster.clone();
+    if cal.eff_flops > 0.0 {
+        c.flops = cal.eff_flops;
+        c.mfu = 1.0; // observed rate already includes utilization
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_obs() -> Vec<Observation> {
+        vec![
+            Observation { batch: 1, seq: 16, latency: 0.010, prefill: true },
+            Observation { batch: 4, seq: 32, latency: 0.080, prefill: true },
+            Observation { batch: 4, seq: 1, latency: 0.004, prefill: false },
+        ]
+    }
+
+    #[test]
+    fn calibration_is_positive_and_median_based() {
+        let m = MoEModelConfig::tiny();
+        let cal = calibrate(&m, &fake_obs());
+        assert_eq!(cal.n_obs, 3);
+        assert!(cal.eff_flops > 0.0);
+    }
+
+    #[test]
+    fn apply_overrides_datasheet() {
+        let c = ClusterConfig::localhost(1, 1);
+        let cal = Calibration { eff_flops: 123e9, n_obs: 5 };
+        let c2 = apply_calibration(&c, &cal);
+        assert_eq!(c2.flops, 123e9);
+        assert_eq!(c2.mfu, 1.0);
+        // zero-obs calibration is a no-op
+        let c3 = apply_calibration(&c, &Calibration { eff_flops: 0.0, n_obs: 0 });
+        assert_eq!(c3.flops, c.flops);
+    }
+
+    #[test]
+    fn observation_token_accounting() {
+        let o = Observation { batch: 4, seq: 32, latency: 0.1, prefill: true };
+        assert_eq!(o.tokens(), 128);
+        let d = Observation { batch: 4, seq: 1, latency: 0.1, prefill: false };
+        assert_eq!(d.tokens(), 4);
+    }
+}

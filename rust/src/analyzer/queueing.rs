@@ -1,0 +1,81 @@
+//! M/M/1 queueing approximation — §III-B4, Eq. (7).
+
+/// Expected queueing delay W_q for arrival rate `lambda_a` (req/s) and
+/// service rate `mu = 1/Δt_svc` (req/s).  Returns `f64::INFINITY` when the
+/// stability condition ρ = λ/μ < 1 is violated (saturation).
+pub fn mm1_wait(lambda_a: f64, mu: f64) -> f64 {
+    if lambda_a <= 0.0 {
+        return 0.0;
+    }
+    if mu <= lambda_a {
+        return f64::INFINITY;
+    }
+    lambda_a / (mu * (mu - lambda_a))
+}
+
+/// Evaluation horizon for overloaded systems: the paper benchmarks
+/// fixed-length runs, during which an unstable queue grows linearly
+/// rather than unboundedly.
+pub const EVAL_HORIZON_S: f64 = 60.0;
+
+/// Finite W_q even under overload: M/M/1 when stable; for ρ ≥ 1 the mean
+/// wait of arrivals during a horizon T while the backlog grows at rate
+/// (λ−μ) — ≈ T·(ρ−1)/(2ρ) · ρ... simplified to the mid-horizon backlog
+/// delay plus the near-saturation M/M/1 value for continuity.
+pub fn wait_with_overload(lambda_a: f64, mu: f64, horizon: f64) -> f64 {
+    if lambda_a <= 0.0 || mu <= 0.0 {
+        return if mu <= 0.0 { horizon } else { 0.0 };
+    }
+    let rho = lambda_a / mu;
+    if rho < 0.99 {
+        mm1_wait(lambda_a, mu)
+    } else {
+        // continuity point: W_q at ρ = 0.99, plus linear backlog growth
+        let base = mm1_wait(0.99 * mu, mu);
+        base + (rho - 0.99).max(0.0) * horizon / 2.0
+    }
+}
+
+/// Utilization ρ = λ/μ.
+pub fn utilization(lambda_a: f64, mu: f64) -> f64 {
+    if mu <= 0.0 {
+        return f64::INFINITY;
+    }
+    lambda_a / mu
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_arrivals_no_wait() {
+        assert_eq!(mm1_wait(0.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn saturation_is_infinite() {
+        assert!(mm1_wait(10.0, 10.0).is_infinite());
+        assert!(mm1_wait(11.0, 10.0).is_infinite());
+    }
+
+    #[test]
+    fn matches_closed_form() {
+        // λ=2, μ=4: Wq = 2/(4·2) = 0.25
+        assert!((mm1_wait(2.0, 4.0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_explodes_near_saturation() {
+        let w50 = mm1_wait(5.0, 10.0);
+        let w90 = mm1_wait(9.0, 10.0);
+        let w99 = mm1_wait(9.9, 10.0);
+        assert!(w90 > 5.0 * w50);
+        assert!(w99 > 5.0 * w90);
+    }
+
+    #[test]
+    fn utilization_basic() {
+        assert!((utilization(2.0, 8.0) - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! Automatic strategy selection (§III-A offline stage, §III-C2):
+//! enumerate the grammar, filter by Eq. (8), score by the theoretical
+//! indicators, and return the optimum — "replacing empirical intuition
+//! with rigorous analysis".
+
+use super::indicators::{evaluate, Indicators, Workload};
+use super::latency::{CommMode, LatencyModel};
+use super::memory::{check_memory, MemoryCheck};
+use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use crate::grammar::enumerate_strategies;
+
+/// What the analyzer optimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// minimize TTFT (prefill-heavy / interactive)
+    MinTtft,
+    /// minimize ITL (streaming)
+    MinItl,
+    /// maximize service throughput Θ (default)
+    MaxThroughput,
+}
+
+#[derive(Debug, Clone)]
+pub struct StrategyReport {
+    pub strategy: ParallelStrategy,
+    pub indicators: Indicators,
+    pub memory: MemoryCheck,
+}
+
+/// The automatic analyzer.
+#[derive(Debug, Clone)]
+pub struct Analyzer {
+    pub model: MoEModelConfig,
+    pub cluster: ClusterConfig,
+    pub serving: ServingConfig,
+    pub mode: CommMode,
+}
+
+impl Analyzer {
+    pub fn new(model: &MoEModelConfig, cluster: &ClusterConfig, serving: &ServingConfig) -> Self {
+        Self {
+            model: model.clone(),
+            cluster: cluster.clone(),
+            serving: serving.clone(),
+            mode: CommMode::FusedAsync,
+        }
+    }
+
+    pub fn with_mode(mut self, mode: CommMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Evaluate one strategy (memory + indicators).
+    pub fn report(&self, s: &ParallelStrategy, wl: &Workload) -> StrategyReport {
+        let lm = LatencyModel::new(&self.model, &self.cluster);
+        let memory = check_memory(
+            &self.model,
+            &self.cluster,
+            s,
+            self.serving.max_batch,
+            self.serving.max_seq,
+        );
+        let indicators = evaluate(&lm, s, &self.serving, wl, self.mode);
+        StrategyReport { strategy: *s, indicators, memory }
+    }
+
+    /// All feasible strategies, ranked best-first by `objective`.
+    pub fn rank(&self, wl: &Workload, objective: Objective) -> Vec<StrategyReport> {
+        let mut reports: Vec<StrategyReport> = enumerate_strategies(&self.cluster)
+            .iter()
+            .filter(|s| s.total_devices() == self.cluster.total_devices())
+            .map(|s| self.report(s, wl))
+            .filter(|r| r.memory.feasible() && r.indicators.ttft.is_finite())
+            .collect();
+        let key = |r: &StrategyReport| -> f64 {
+            match objective {
+                Objective::MinTtft => r.indicators.ttft,
+                Objective::MinItl => r.indicators.itl,
+                Objective::MaxThroughput => -r.indicators.throughput,
+            }
+        };
+        reports.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap());
+        reports
+    }
+
+    /// The optimum (§III-A: "derive the optimal parallelism strategy").
+    pub fn best(&self, wl: &Workload, objective: Objective) -> Option<StrategyReport> {
+        self.rank(wl, objective).into_iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(cluster: ClusterConfig) -> Analyzer {
+        Analyzer::new(
+            &MoEModelConfig::deepseek_r1(),
+            &cluster,
+            &ServingConfig::default(),
+        )
+    }
+
+    #[test]
+    fn finds_feasible_strategy_for_deepseek_on_910b() {
+        let a = setup(ClusterConfig::ascend910b());
+        let best = a.best(&Workload::sharegpt(2.0), Objective::MaxThroughput);
+        let r = best.expect("must find a feasible strategy");
+        assert!(r.memory.feasible());
+        assert!(r.indicators.ttft.is_finite());
+    }
+
+    #[test]
+    fn best_uses_moe_parallelism_not_pure_tp() {
+        // pure TP=32 cannot even hold 671B comfortably and its inter-node
+        // AR is catastrophic (Fig. 3): the winner must shard experts.
+        let a = setup(ClusterConfig::ascend910b());
+        let r = a.best(&Workload::sharegpt(2.0), Objective::MaxThroughput).unwrap();
+        assert!(r.strategy.moe.ep > 1, "winner {} should use EP", r.strategy);
+    }
+
+    #[test]
+    fn ranked_list_is_sorted() {
+        let a = setup(ClusterConfig::h20());
+        let ranked = a.rank(&Workload::sharegpt(2.0), Objective::MinTtft);
+        assert!(ranked.len() > 1);
+        for w in ranked.windows(2) {
+            assert!(w[0].indicators.ttft <= w[1].indicators.ttft);
+        }
+    }
+
+    #[test]
+    fn best_strategy_beats_paper_baselines() {
+        // The analyzer's optimum must dominate the Table II baseline
+        // configurations it searches over (it includes them).
+        let a = setup(ClusterConfig::ascend910b());
+        let wl = Workload::sharegpt(4.0);
+        let best = a.best(&wl, Objective::MaxThroughput).unwrap();
+        for base in [
+            ParallelStrategy::tp_pp(8, 4),
+            ParallelStrategy::pure_ep(4, 8),
+        ] {
+            let r = a.report(&base, &wl);
+            if r.memory.feasible() && r.indicators.ttft.is_finite() {
+                assert!(
+                    best.indicators.throughput >= r.indicators.throughput,
+                    "{} beat the optimum",
+                    base
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn analyzer_adapts_to_cluster() {
+        // §IV-C1: "when cluster bandwidth or node count changes, MixServe
+        // re-evaluates the cost model and picks the best feasible tuple".
+        let wl = Workload::sharegpt(2.0);
+        let a1 = setup(ClusterConfig::ascend910b());
+        let mut degraded = ClusterConfig::ascend910b();
+        degraded.inter_bw /= 16.0; // starve the NIC
+        let a2 = setup(degraded);
+        let b1 = a1.best(&wl, Objective::MinTtft).unwrap();
+        let b2 = a2.best(&wl, Objective::MinTtft).unwrap();
+        // with a starved NIC the optimizer must not pick MORE inter-node
+        // traffic than before
+        assert!(b2.indicators.ttft >= b1.indicators.ttft * 0.99);
+    }
+}

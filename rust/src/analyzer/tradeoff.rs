@@ -1,0 +1,89 @@
+//! DP ↔ EP trade-off — §III-B3, Fig. 6.
+//!
+//! The Attention block's DP degree and the MoE block's EP degree need not
+//! match; the three regimes differ in memory redundancy, throughput, and
+//! A2A communicator shape.
+
+use crate::config::ParallelStrategy;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DpEpCase {
+    /// d_DP = d_EP — balanced; all devices in one A2A group (Fig. 6a).
+    Balanced,
+    /// d_DP > d_EP — expert weights replicated d_DP/d_EP times; that many
+    /// A2A groups run in parallel, each of d_EP devices (Fig. 6b).
+    DpDominant { groups: usize },
+    /// d_DP < d_EP — hidden states redundant d_EP/d_DP times; dropping
+    /// shrinks the A2A to d_DP groups of d_DP devices (Fig. 6c).
+    EpDominant { redundancy: usize },
+}
+
+pub fn classify_dp_ep(s: &ParallelStrategy) -> DpEpCase {
+    let (dp, ep) = (s.attn.dp, s.moe.ep);
+    use std::cmp::Ordering::*;
+    match dp.cmp(&ep) {
+        Equal => DpEpCase::Balanced,
+        Greater => DpEpCase::DpDominant { groups: dp / ep },
+        Less => DpEpCase::EpDominant { redundancy: ep / dp },
+    }
+}
+
+/// Effective A2A (volume multiplier, group degree) per Eq. (5)'s branch:
+/// `if d_DP >= d_EP: A2A(b/d_DP·shk, d_EP) else A2A(b/d_EP·shk, d_DP)`.
+pub fn effective_a2a(s: &ParallelStrategy) -> (f64, usize) {
+    let (dp, ep) = (s.attn.dp as f64, s.moe.ep as f64);
+    if dp >= ep {
+        (1.0, s.moe.ep)
+    } else {
+        // hidden-state redundancy dropped: per-group batch b/d_EP
+        (dp / ep, s.attn.dp)
+    }
+}
+
+/// Expert-weight replication factor (memory cost of Fig. 6b).
+pub fn weight_replication(s: &ParallelStrategy) -> usize {
+    (s.attn.dp / s.moe.ep).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AttnStrategy, MoeStrategy};
+
+    fn strat(dp: usize, ep: usize) -> ParallelStrategy {
+        // keep degrees equal: tp compensates
+        let total = 16;
+        ParallelStrategy {
+            attn: AttnStrategy { tp: total / dp, dp },
+            moe: MoeStrategy { tp: total / ep, ep },
+            pp: 1,
+        }
+    }
+
+    #[test]
+    fn classification_matches_fig6() {
+        assert_eq!(classify_dp_ep(&strat(4, 4)), DpEpCase::Balanced);
+        assert_eq!(classify_dp_ep(&strat(8, 4)), DpEpCase::DpDominant { groups: 2 });
+        assert_eq!(classify_dp_ep(&strat(2, 4)), DpEpCase::EpDominant { redundancy: 2 });
+    }
+
+    #[test]
+    fn ep_dominant_shrinks_group_and_volume() {
+        let (vol, group) = effective_a2a(&strat(2, 8));
+        assert_eq!(group, 2);
+        assert!((vol - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balanced_keeps_full_group() {
+        let (vol, group) = effective_a2a(&strat(4, 4));
+        assert_eq!(group, 4);
+        assert_eq!(vol, 1.0);
+    }
+
+    #[test]
+    fn dp_dominant_replicates_weights() {
+        assert_eq!(weight_replication(&strat(8, 2)), 4);
+        assert_eq!(weight_replication(&strat(2, 8)), 1);
+    }
+}

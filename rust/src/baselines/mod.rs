@@ -1,0 +1,119 @@
+//! Baseline serving systems (§IV-A, Table II): vLLM's TP+PP and DP+EP
+//! deployments and Tutel's TP+EP — same scheduler and cost substrate as
+//! MixServe, but synchronous (unfused) collectives and fixed strategies.
+
+use crate::analyzer::latency::CommMode;
+use crate::config::{ClusterConfig, ParallelStrategy};
+use crate::grammar::parse_strategy;
+
+/// One evaluated system configuration.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub label: String,
+    pub strategy: ParallelStrategy,
+    pub mode: CommMode,
+}
+
+/// Table II: baseline strategy configurations for a cluster.
+/// H20 (2×8) and Ascend 910B (4×8) get the paper's exact rows; other
+/// clusters get the same shapes scaled to (n_nodes, n_proc).
+pub fn baselines(cluster: &ClusterConfig) -> Vec<SystemConfig> {
+    let n = cluster.n_nodes;
+    let m = cluster.gpus_per_node;
+    let mut out = vec![
+        SystemConfig {
+            label: "vLLM TP+PP".into(),
+            strategy: ParallelStrategy::tp_pp(m, n),
+            mode: CommMode::Sync,
+        },
+        SystemConfig {
+            label: format!("vLLM DP+EP (TP={m})"),
+            strategy: ParallelStrategy::pure_ep(n, m),
+            mode: CommMode::Sync,
+        },
+    ];
+    // the TP=4 DP-doubled variant exists whenever m >= 8
+    if m >= 8 {
+        let s = parse_strategy(&format!("TP={} + DP={}, EP={}", m / 2, 2 * n, n * m))
+            .expect("valid Table II row");
+        out.push(SystemConfig {
+            label: format!("vLLM DP+EP (TP={})", m / 2),
+            strategy: s,
+            mode: CommMode::Sync,
+        });
+    }
+    // Tutel-style hybrid TP+EP (H20 only in the paper; synchronous comm)
+    out.push(SystemConfig {
+        label: "Tutel TP+EP".into(),
+        strategy: ParallelStrategy::mixserve(n, m),
+        mode: CommMode::Sync,
+    });
+    out
+}
+
+/// The MixServe configuration under test: hybrid TP-EP with the fused
+/// AR-A2A schedules.
+pub fn mixserve(cluster: &ClusterConfig) -> SystemConfig {
+    SystemConfig {
+        label: "MixServe".into(),
+        strategy: ParallelStrategy::mixserve(cluster.n_nodes, cluster.gpus_per_node),
+        mode: CommMode::FusedAsync,
+    }
+}
+
+/// Everything Fig. 10 compares, MixServe last.
+pub fn all_systems(cluster: &ClusterConfig) -> Vec<SystemConfig> {
+    let mut v = baselines(cluster);
+    v.push(mixserve(cluster));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_rows_for_ascend() {
+        let c = ClusterConfig::ascend910b();
+        let bs = baselines(&c);
+        let labels: Vec<&str> = bs.iter().map(|b| b.label.as_str()).collect();
+        assert!(labels.contains(&"vLLM TP+PP"));
+        assert!(labels.iter().any(|l| l.contains("DP+EP")));
+        // paper: TP=8 [PP=4] on the 910B cluster
+        let tppp = &bs[0];
+        assert_eq!(tppp.strategy.to_string(), "TP=8 + DP=1, TP=8 [PP=4]");
+        // paper: TP=4 + DP=8, EP=32
+        let dpep4 = bs.iter().find(|b| b.label.contains("TP=4")).unwrap();
+        assert_eq!(dpep4.strategy.to_string(), "TP=4 + DP=8, EP=32");
+    }
+
+    #[test]
+    fn table2_rows_for_h20() {
+        let c = ClusterConfig::h20();
+        let bs = baselines(&c);
+        assert_eq!(bs[0].strategy.to_string(), "TP=8 + DP=1, TP=8 [PP=2]");
+        let dpep = bs.iter().find(|b| b.label.contains("TP=8")).unwrap();
+        assert_eq!(dpep.strategy.to_string(), "TP=8 + DP=2, EP=16");
+    }
+
+    #[test]
+    fn all_baselines_are_sync_mixserve_fused() {
+        let c = ClusterConfig::ascend910b();
+        for b in baselines(&c) {
+            assert_eq!(b.mode, CommMode::Sync, "{}", b.label);
+            assert!(b.strategy.is_valid());
+        }
+        let m = mixserve(&c);
+        assert_eq!(m.mode, CommMode::FusedAsync);
+        assert_eq!(m.strategy.to_string(), "TP=8 + DP=4, TP=8 + EP=4");
+    }
+
+    #[test]
+    fn device_counts_match_cluster() {
+        for c in [ClusterConfig::h20(), ClusterConfig::ascend910b()] {
+            for s in all_systems(&c) {
+                assert_eq!(s.strategy.total_devices(), c.total_devices(), "{}", s.label);
+            }
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Analytic collective cost models — §III-B2, Table I, Eqs. (1)–(3).
+//!
+//! The paper models each collective with a per-round volume, a round
+//! count, and a communication domain (intra- vs inter-node); we realize
+//! that with an α–β (latency–bandwidth) link model:
+//!
+//!   time(bytes) = α + bytes / β                  (one full-duplex round)
+//!
+//!   RS(size, d) = AG(size, d):  1 round of size/d          (Broadcast alg.)
+//!   AR(size, d) = RS + AG                                  (Eq. 2)
+//!   A2A(size, d): d−1 rounds of size/d each                (Pairwise alg.)
+//!   P2P(size):    1 round of size
+//!
+//! `size` is the *bytes of the full tensor being synchronized* on one
+//! rank; degrees ≤ gpus_per_node stay intra-node (Fig. 3's d ≤ 8 regime).
+
+use crate::config::ClusterConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommDomain {
+    IntraNode,
+    InterNode,
+}
+
+/// Cost model bound to one cluster description.
+#[derive(Debug, Clone)]
+pub struct CollectiveCost {
+    pub cluster: ClusterConfig,
+}
+
+impl CollectiveCost {
+    pub fn new(cluster: &ClusterConfig) -> Self {
+        Self { cluster: cluster.clone() }
+    }
+
+    fn link(&self, domain: CommDomain) -> (f64, f64) {
+        match domain {
+            CommDomain::IntraNode => (self.cluster.intra_lat, self.cluster.intra_bw),
+            CommDomain::InterNode => (self.cluster.inter_lat, self.cluster.inter_bw),
+        }
+    }
+
+    /// Domain a node-major communicator of `degree` ranks lives in.
+    pub fn domain_of(&self, degree: usize) -> CommDomain {
+        if self.cluster.spans_nodes(degree) {
+            CommDomain::InterNode
+        } else {
+            CommDomain::IntraNode
+        }
+    }
+
+    /// One α–β round moving `bytes` per rank-pair.
+    pub fn round(&self, bytes: f64, domain: CommDomain) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let (alpha, beta) = self.link(domain);
+        alpha + bytes / beta
+    }
+
+    /// Reduce-Scatter — Eq. (1): RS(size, degree) ∝ size/degree, 1 round.
+    pub fn reduce_scatter(&self, bytes: f64, degree: usize, domain: CommDomain) -> f64 {
+        if degree <= 1 {
+            return 0.0;
+        }
+        self.round(bytes * (degree as f64 - 1.0) / degree as f64, domain)
+    }
+
+    /// All-Gather — same cost shape as RS (Eq. 1).
+    pub fn all_gather(&self, bytes: f64, degree: usize, domain: CommDomain) -> f64 {
+        self.reduce_scatter(bytes, degree, domain)
+    }
+
+    /// All-Reduce — Eq. (2): decomposed RS + AG.
+    pub fn all_reduce(&self, bytes: f64, degree: usize, domain: CommDomain) -> f64 {
+        self.reduce_scatter(bytes, degree, domain)
+            + self.all_gather(bytes, degree, domain)
+    }
+
+    /// All-To-All, Pairwise — Eq. (3): (degree−1) rounds of size/degree.
+    pub fn all_to_all(&self, bytes: f64, degree: usize, domain: CommDomain) -> f64 {
+        if degree <= 1 {
+            return 0.0;
+        }
+        (degree as f64 - 1.0) * self.round(bytes / degree as f64, domain)
+    }
+
+    /// Point-to-point transfer (PP stage boundary).
+    pub fn p2p(&self, bytes: f64) -> f64 {
+        // PP stages sit on different nodes in every paper configuration.
+        self.round(bytes, CommDomain::InterNode)
+    }
+
+    /// Convenience: AR over a node-major communicator (domain inferred).
+    pub fn ar_auto(&self, bytes: f64, degree: usize) -> f64 {
+        self.all_reduce(bytes, degree, self.domain_of(degree))
+    }
+
+    /// Convenience: A2A over a node-major communicator (domain inferred).
+    pub fn a2a_auto(&self, bytes: f64, degree: usize) -> f64 {
+        self.all_to_all(bytes, degree, self.domain_of(degree))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cc() -> CollectiveCost {
+        CollectiveCost::new(&ClusterConfig::ascend910b())
+    }
+
+    #[test]
+    fn degree_one_is_free() {
+        let c = cc();
+        assert_eq!(c.all_reduce(1e6, 1, CommDomain::IntraNode), 0.0);
+        assert_eq!(c.all_to_all(1e6, 1, CommDomain::InterNode), 0.0);
+    }
+
+    #[test]
+    fn ar_equals_rs_plus_ag() {
+        let c = cc();
+        let (b, d) = (8e6, 8);
+        let ar = c.all_reduce(b, d, CommDomain::IntraNode);
+        let rs = c.reduce_scatter(b, d, CommDomain::IntraNode);
+        let ag = c.all_gather(b, d, CommDomain::IntraNode);
+        assert!((ar - (rs + ag)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn a2a_rounds_scale_with_degree() {
+        // Table I: Pairwise needs d-1 rounds of size/d; with size fixed the
+        // volume term is ~constant but the α term grows linearly.
+        let c = cc();
+        let t4 = c.all_to_all(4e6, 4, CommDomain::InterNode);
+        let t16 = c.all_to_all(4e6, 16, CommDomain::InterNode);
+        assert!(t16 > t4 * 0.9);
+    }
+
+    #[test]
+    fn inter_node_slower_than_intra() {
+        let c = cc();
+        assert!(
+            c.all_reduce(64e6, 8, CommDomain::InterNode)
+                > c.all_reduce(64e6, 8, CommDomain::IntraNode)
+        );
+    }
+
+    #[test]
+    fn fig3_shape_tp_worse_than_ep_at_32() {
+        // Fig. 3 (left): at d=32 the AR-based TP overtakes A2A-based EP.
+        let c = cc();
+        let m = crate::config::MoEModelConfig::deepseek_r1();
+        let bytes = (16 * 1024 * m.hidden * m.dtype_bytes) as f64; // b*s*h
+        let ar = c.ar_auto(bytes, 32);
+        let a2a = c.a2a_auto(bytes * m.top_k as f64 / 32.0, 32);
+        assert!(ar > a2a, "AR {ar:.6} should exceed A2A {a2a:.6} at d=32");
+    }
+
+    #[test]
+    fn monotone_in_bytes() {
+        let c = cc();
+        let mut prev = 0.0;
+        for kb in [1, 16, 256, 4096, 65536] {
+            let t = c.all_reduce((kb * 1024) as f64, 8, CommDomain::InterNode);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Collective communication: analytic cost models (Table I, Eqs. 1–3),
+//! data-level primitives over simulated ranks, and the paper's fused
+//! AR-A2A schedules (Algorithms 1–2).
+
+pub mod cost;
+pub mod fused;
+pub mod primitives;
+pub mod ring;
+pub mod world;
+
+pub use cost::{CollectiveCost, CommDomain};
+pub use world::{RankId, RankWorld, Tensor2};

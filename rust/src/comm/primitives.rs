@@ -1,0 +1,276 @@
+//! Data-level collective primitives over simulated ranks.
+//!
+//! These move real bytes between per-rank buffers (correctness) and
+//! report the α–β time the same movement would take on the modeled
+//! cluster (performance).  The *unfused* baselines (vLLM/Tutel-style
+//! synchronous RS → A2A → AG) are built from these; the fused schedules
+//! in [`super::fused`] are verified against them.
+
+use super::cost::{CollectiveCost, CommDomain};
+use super::world::{RankWorld, Tensor2};
+
+/// All-Reduce (sum) across a group of rank buffers; every buffer ends up
+/// holding the elementwise sum.  Returns modeled time (Eq. 2).
+pub fn all_reduce(bufs: &mut [Tensor2], cost: &CollectiveCost, domain: CommDomain) -> f64 {
+    let d = bufs.len();
+    if d <= 1 {
+        return 0.0;
+    }
+    let mut sum = bufs[0].clone();
+    for b in &bufs[1..] {
+        sum.add_assign(b);
+    }
+    let bytes = sum.bytes();
+    for b in bufs.iter_mut() {
+        *b = sum.clone();
+    }
+    cost.all_reduce(bytes, d, domain)
+}
+
+/// Reduce-Scatter (sum) along columns: rank `i` keeps column slice `i` of
+/// the sum.  Returns (per-rank slices, modeled time).
+pub fn reduce_scatter_cols(
+    bufs: &[Tensor2],
+    cost: &CollectiveCost,
+    domain: CommDomain,
+) -> (Vec<Tensor2>, f64) {
+    let d = bufs.len();
+    assert!(d >= 1);
+    let (rows, cols) = (bufs[0].rows, bufs[0].cols);
+    assert!(cols % d == 0, "cols {cols} not divisible by group {d}");
+    let mut sum = bufs[0].clone();
+    for b in &bufs[1..] {
+        sum.add_assign(b);
+    }
+    let w = cols / d;
+    let slices = (0..d).map(|i| sum.slice_cols(i * w..(i + 1) * w)).collect();
+    let t = cost.reduce_scatter((rows * cols * 4) as f64, d, domain);
+    (slices, t)
+}
+
+/// All-Gather along columns: every rank gets the concatenation of all
+/// ranks' column slices.  Returns (full tensor, modeled time).
+pub fn all_gather_cols(
+    slices: &[Tensor2],
+    cost: &CollectiveCost,
+    domain: CommDomain,
+) -> (Tensor2, f64) {
+    let d = slices.len();
+    assert!(d >= 1);
+    let rows = slices[0].rows;
+    let w = slices[0].cols;
+    let mut full = Tensor2::zeros(rows, w * d);
+    for (i, s) in slices.iter().enumerate() {
+        assert_eq!((s.rows, s.cols), (rows, w));
+        full.set_cols(i * w, s);
+    }
+    let t = cost.all_gather((rows * w * d * 4) as f64, d, domain);
+    (full, t)
+}
+
+/// All-To-All over row blocks: participant `i` sends its `j`-th row block
+/// to participant `j`.  `send[i][j]` -> `recv[j][i]`.  Returns
+/// (received blocks per rank, modeled time with the Pairwise algorithm).
+pub fn all_to_all_rows(
+    send: &[Vec<Tensor2>],
+    cost: &CollectiveCost,
+    domain: CommDomain,
+) -> (Vec<Vec<Tensor2>>, f64) {
+    let d = send.len();
+    assert!(send.iter().all(|s| s.len() == d));
+    let mut recv: Vec<Vec<Tensor2>> = vec![Vec::with_capacity(d); d];
+    for j in 0..d {
+        for (_i, si) in send.iter().enumerate() {
+            recv[j].push(si[j].clone());
+        }
+    }
+    // Pairwise: d-1 rounds; per round each rank ships one block.
+    let per_round: f64 = send
+        .iter()
+        .flat_map(|s| s.iter())
+        .map(|t| t.bytes())
+        .sum::<f64>()
+        / (d * d) as f64;
+    let t = if d > 1 {
+        (d as f64 - 1.0) * cost.round(per_round, domain)
+    } else {
+        0.0
+    };
+    (recv, t)
+}
+
+/// The **unfused** hybrid TP-EP output path (what MixServe's sync ablation
+/// and the Tutel baseline run): intra-node RS, inter-node A2A of the
+/// scattered slices, intra-node AG.  Eq. (13) without overlap.
+///
+/// `contrib[node][tp]` = partial contribution tensor held by rank
+/// (node, tp), laid out as `n_nodes` stacked row blocks (one per
+/// destination node), each `t_loc × h`.
+/// Returns (per-node combined `t_loc × h` output, total modeled time).
+pub fn unfused_rs_a2a_ag(
+    world: &RankWorld,
+    contrib: &[Vec<Tensor2>],
+    cost: &CollectiveCost,
+) -> (Vec<Tensor2>, f64) {
+    let (n, m) = (world.n_nodes, world.m_per_node);
+    let h = contrib[0][0].cols;
+    let t_total = contrib[0][0].rows;
+    assert!(t_total % n == 0);
+    let t_loc = t_total / n;
+    let mut total = 0.0;
+
+    // 1) intra-node RS: rank p of node j gets column slice p of the
+    //    node-summed contribution.
+    let mut scattered: Vec<Vec<Tensor2>> = Vec::with_capacity(n);
+    let mut rs_t = 0.0f64;
+    for node in 0..n {
+        let (slices, t) = reduce_scatter_cols(&contrib[node], cost, CommDomain::IntraNode);
+        rs_t = rs_t.max(t); // nodes run in parallel
+        scattered.push(slices);
+    }
+    total += rs_t;
+
+    // 2) inter-node A2A: for each TP rank p, nodes exchange destination
+    //    row blocks of their slice (n-way pairwise, m lanes in parallel).
+    let mut gathered_slices: Vec<Vec<Tensor2>> = vec![Vec::new(); n];
+    let mut a2a_t = 0.0f64;
+    for p in 0..m {
+        let send: Vec<Vec<Tensor2>> = (0..n)
+            .map(|src| {
+                (0..n)
+                    .map(|dst| scattered[src][p].slice_rows(dst * t_loc..(dst + 1) * t_loc))
+                    .collect()
+            })
+            .collect();
+        let (recv, t) = all_to_all_rows(&send, cost, CommDomain::InterNode);
+        a2a_t = a2a_t.max(t); // TP lanes ride distinct NIC queues concurrently
+        for dst in 0..n {
+            // sum contributions from all source nodes for my tokens
+            let mut acc = Tensor2::zeros(t_loc, h / m);
+            for blk in &recv[dst] {
+                acc.add_assign(blk);
+            }
+            gathered_slices[dst].push(acc);
+        }
+    }
+    total += a2a_t;
+
+    // 3) intra-node AG: reassemble full hidden per node.
+    let mut out = Vec::with_capacity(n);
+    let mut ag_t = 0.0f64;
+    for slices in gathered_slices.iter() {
+        let (full, t) = all_gather_cols(slices, cost, CommDomain::IntraNode);
+        ag_t = ag_t.max(t);
+        out.push(full);
+    }
+    total += ag_t;
+    (out, total)
+}
+
+/// Dense reference for the combine: `Y[dst] = Σ_src Σ_tp contrib[src][tp][dst-block]`.
+pub fn combine_reference(world: &RankWorld, contrib: &[Vec<Tensor2>]) -> Vec<Tensor2> {
+    let n = world.n_nodes;
+    let h = contrib[0][0].cols;
+    let t_total = contrib[0][0].rows;
+    let t_loc = t_total / n;
+    (0..n)
+        .map(|dst| {
+            let mut acc = Tensor2::zeros(t_loc, h);
+            for node_bufs in contrib.iter() {
+                for buf in node_bufs {
+                    acc.add_assign(&buf.slice_rows(dst * t_loc..(dst + 1) * t_loc));
+                }
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Build a deterministic pseudo-random contribution world for tests and
+/// benches: `contrib[node][tp]` stacked destination blocks.
+pub fn synth_contrib(world: &RankWorld, t_loc: usize, h: usize, seed: u64) -> Vec<Vec<Tensor2>> {
+    let (n, m) = (world.n_nodes, world.m_per_node);
+    (0..n)
+        .map(|node| {
+            (0..m)
+                .map(|tp| {
+                    Tensor2::from_fn(n * t_loc, h, |r, c| {
+                        let x = seed
+                            .wrapping_mul(6364136223846793005)
+                            .wrapping_add((node * 1009 + tp * 31 + r * 7 + c) as u64);
+                        ((x >> 33) % 1000) as f32 / 500.0 - 1.0
+                    })
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn cost() -> CollectiveCost {
+        CollectiveCost::new(&ClusterConfig::ascend910b())
+    }
+
+    #[test]
+    fn all_reduce_sums_everywhere() {
+        let mut bufs: Vec<Tensor2> = (0..4)
+            .map(|i| Tensor2::from_fn(3, 4, |r, c| (i + r + c) as f32))
+            .collect();
+        let t = all_reduce(&mut bufs, &cost(), CommDomain::IntraNode);
+        assert!(t > 0.0);
+        let want = Tensor2::from_fn(3, 4, |r, c| (0..4).map(|i| (i + r + c) as f32).sum());
+        for b in &bufs {
+            assert!(b.approx_eq(&want, 1e-6));
+        }
+    }
+
+    #[test]
+    fn rs_then_ag_equals_ar() {
+        let bufs: Vec<Tensor2> = (0..4)
+            .map(|i| Tensor2::from_fn(2, 8, |r, c| (i * 100 + r * 10 + c) as f32))
+            .collect();
+        let c = cost();
+        let (slices, _) = reduce_scatter_cols(&bufs, &c, CommDomain::IntraNode);
+        let (full, _) = all_gather_cols(&slices, &c, CommDomain::IntraNode);
+        let mut want = bufs[0].clone();
+        for b in &bufs[1..] {
+            want.add_assign(b);
+        }
+        assert!(full.approx_eq(&want, 1e-5));
+    }
+
+    #[test]
+    fn a2a_transposes_blocks() {
+        let d = 3;
+        let send: Vec<Vec<Tensor2>> = (0..d)
+            .map(|i| {
+                (0..d)
+                    .map(|j| Tensor2::from_fn(1, 1, |_, _| (i * 10 + j) as f32))
+                    .collect()
+            })
+            .collect();
+        let (recv, t) = all_to_all_rows(&send, &cost(), CommDomain::InterNode);
+        assert!(t > 0.0);
+        for j in 0..d {
+            for i in 0..d {
+                assert_eq!(recv[j][i].at(0, 0), (i * 10 + j) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn unfused_pipeline_matches_dense_reference() {
+        let world = RankWorld::new(4, 2);
+        let contrib = synth_contrib(&world, 6, 8, 42);
+        let (got, t) = unfused_rs_a2a_ag(&world, &contrib, &cost());
+        let want = combine_reference(&world, &contrib);
+        assert!(t > 0.0);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(g.approx_eq(w, 1e-4), "diff {}", g.max_abs_diff(w));
+        }
+    }
+}

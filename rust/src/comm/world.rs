@@ -1,0 +1,238 @@
+//! Simulated rank world: real `f32` buffers for every rank of an
+//! `n_nodes × m_per_node` cluster, so collective algorithms (including the
+//! fused AR-A2A schedules) are executed as *actual data movement* and can
+//! be checked bit-for-bit against dense references.
+
+use std::ops::Range;
+
+/// Dense row-major f32 matrix (hidden states: rows = tokens, cols = h).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of a column range (a TP "hidden slice").
+    pub fn slice_cols(&self, range: Range<usize>) -> Tensor2 {
+        let w = range.len();
+        let mut out = Tensor2::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.data[r * w..(r + 1) * w]
+                .copy_from_slice(&self.row(r)[range.clone()]);
+        }
+        out
+    }
+
+    /// Copy of a row range (a token segment).
+    pub fn slice_rows(&self, range: Range<usize>) -> Tensor2 {
+        let h = range.len();
+        Tensor2 {
+            rows: h,
+            cols: self.cols,
+            data: self.data[range.start * self.cols..range.end * self.cols].to_vec(),
+        }
+    }
+
+    /// Write `src` into our column range starting at `col0`.
+    pub fn set_cols(&mut self, col0: usize, src: &Tensor2) {
+        assert_eq!(self.rows, src.rows);
+        assert!(col0 + src.cols <= self.cols);
+        for r in 0..self.rows {
+            let d = r * self.cols + col0;
+            self.data[d..d + src.cols]
+                .copy_from_slice(&src.data[r * src.cols..(r + 1) * src.cols]);
+        }
+    }
+
+    /// Write `src` into our row range starting at `row0`.
+    pub fn set_rows(&mut self, row0: usize, src: &Tensor2) {
+        assert_eq!(self.cols, src.cols);
+        assert!(row0 + src.rows <= self.rows);
+        self.data[row0 * self.cols..(row0 + src.rows) * self.cols]
+            .copy_from_slice(&src.data);
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor2) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn bytes(&self) -> f64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as f64
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor2) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn approx_eq(&self, other: &Tensor2, tol: f32) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.max_abs_diff(other) <= tol
+    }
+}
+
+/// Global rank identifier; node-major placement (`rank = node * m + tp`),
+/// matching Algorithms 1–2 (`r_TP = r mod m`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RankId(pub usize);
+
+/// The `n × m` rank grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankWorld {
+    pub n_nodes: usize,
+    pub m_per_node: usize,
+}
+
+impl RankWorld {
+    pub fn new(n_nodes: usize, m_per_node: usize) -> Self {
+        assert!(n_nodes > 0 && m_per_node > 0);
+        Self { n_nodes, m_per_node }
+    }
+
+    pub fn size(&self) -> usize {
+        self.n_nodes * self.m_per_node
+    }
+
+    pub fn node_of(&self, r: RankId) -> usize {
+        r.0 / self.m_per_node
+    }
+
+    pub fn tp_of(&self, r: RankId) -> usize {
+        r.0 % self.m_per_node
+    }
+
+    pub fn rank(&self, node: usize, tp: usize) -> RankId {
+        debug_assert!(node < self.n_nodes && tp < self.m_per_node);
+        RankId(node * self.m_per_node + tp)
+    }
+
+    /// TP-slice column range for rank `tp` of a hidden dim `h`
+    /// (h must divide evenly; the partitioner guarantees it).
+    pub fn tp_slice(&self, tp: usize, h: usize) -> Range<usize> {
+        let w = h / self.m_per_node;
+        tp * w..(tp + 1) * w
+    }
+
+    pub fn ranks(&self) -> impl Iterator<Item = RankId> {
+        (0..self.size()).map(RankId)
+    }
+
+    pub fn node_ranks(&self, node: usize) -> impl Iterator<Item = RankId> + '_ {
+        (0..self.m_per_node).map(move |p| self.rank(node, p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_slicing_roundtrip() {
+        let t = Tensor2::from_fn(4, 6, |r, c| (r * 10 + c) as f32);
+        let s = t.slice_cols(2..5);
+        assert_eq!(s.at(1, 0), 12.0);
+        let mut z = Tensor2::zeros(4, 6);
+        z.set_cols(2, &s);
+        assert_eq!(z.at(3, 4), 34.0);
+        assert_eq!(z.at(3, 0), 0.0);
+    }
+
+    #[test]
+    fn tensor_row_ops() {
+        let t = Tensor2::from_fn(5, 3, |r, c| (r + c) as f32);
+        let s = t.slice_rows(1..3);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.at(0, 2), 3.0);
+        let mut z = Tensor2::zeros(5, 3);
+        z.set_rows(2, &s);
+        assert_eq!(z.at(2, 2), 3.0);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = Tensor2::from_fn(2, 2, |_, _| 1.0);
+        let b = Tensor2::from_fn(2, 2, |_, _| 2.0);
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.5; 4]);
+    }
+
+    #[test]
+    fn world_rank_arithmetic_matches_paper() {
+        let w = RankWorld::new(4, 8);
+        assert_eq!(w.size(), 32);
+        let r = w.rank(2, 3);
+        assert_eq!(r.0, 19);
+        assert_eq!(w.tp_of(r), 3); // r mod m
+        assert_eq!(w.node_of(r), 2);
+    }
+
+    #[test]
+    fn tp_slices_tile_hidden() {
+        let w = RankWorld::new(2, 4);
+        let mut covered = vec![false; 16];
+        for p in 0..4 {
+            for c in w.tp_slice(p, 16) {
+                assert!(!covered[c]);
+                covered[c] = true;
+            }
+        }
+        assert!(covered.iter().all(|&x| x));
+    }
+}

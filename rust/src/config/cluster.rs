@@ -1,0 +1,148 @@
+//! Cluster / network resource description (the analyzer's second input).
+//!
+//! Substitution note (DESIGN.md §2): the paper's physical testbeds are
+//! represented by these descriptors feeding an α–β link model and the
+//! discrete-event simulator — bandwidths/latencies are the paper's
+//! published figures.
+
+
+/// One homogeneous cluster: `n_nodes` nodes × `gpus_per_node` devices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub name: String,
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    /// intra-node per-link unidirectional bandwidth, bytes/s
+    pub intra_bw: f64,
+    /// inter-node per-NIC unidirectional bandwidth, bytes/s
+    pub inter_bw: f64,
+    /// intra-node link launch latency (α), seconds
+    pub intra_lat: f64,
+    /// inter-node link launch latency (α), seconds
+    pub inter_lat: f64,
+    /// per-device dense half-precision compute, FLOP/s
+    pub flops: f64,
+    /// per-device HBM bandwidth, bytes/s (decode roofline floor)
+    pub hbm_bw: f64,
+    /// achievable fraction of peak FLOPs (MFU) used by the latency model
+    pub mfu: f64,
+    /// per-device HBM capacity, bytes
+    pub mem_bytes: u64,
+}
+
+const GB: f64 = 1e9;
+const GIB: u64 = 1 << 30;
+
+impl ClusterConfig {
+    /// 2 × 8 NVIDIA H20 (96 GB): NVLink 4.0 900 GB/s aggregate
+    /// (~450 GB/s unidirectional effective), InfiniBand 400 Gbps.
+    pub fn h20() -> Self {
+        Self {
+            name: "H20-2x8".into(),
+            n_nodes: 2,
+            gpus_per_node: 8,
+            intra_bw: 450.0 * GB,
+            inter_bw: 50.0 * GB, // 400 Gbps
+            intra_lat: 5e-6,
+            inter_lat: 15e-6,
+            flops: 148e12, // H20 FP16 dense
+            hbm_bw: 4.0e12, // HBM3 4 TB/s
+            mfu: 0.45,
+            mem_bytes: 96 * GIB,
+        }
+    }
+
+    /// 4 × 8 Ascend 910B (64 GB): HCCS 480 Gbps full-mesh,
+    /// RoCE 200 Gbps inter-node.
+    pub fn ascend910b() -> Self {
+        Self {
+            name: "Ascend910B-4x8".into(),
+            n_nodes: 4,
+            gpus_per_node: 8,
+            intra_bw: 60.0 * GB, // 480 Gbps
+            inter_bw: 25.0 * GB, // 200 Gbps
+            intra_lat: 10e-6,    // HCCS launch overhead
+            inter_lat: 18e-6,    // RoCE
+
+            flops: 320e12,
+            hbm_bw: 1.6e12,
+            mfu: 0.40,
+            mem_bytes: 64 * GIB,
+        }
+    }
+
+    /// Local-host pseudo-cluster used by the numeric path / examples: the
+    /// PJRT CPU device plays every rank; bandwidths are memcpy-class.
+    pub fn localhost(n_nodes: usize, gpus_per_node: usize) -> Self {
+        Self {
+            name: format!("localhost-{n_nodes}x{gpus_per_node}"),
+            n_nodes,
+            gpus_per_node,
+            intra_bw: 20.0 * GB,
+            inter_bw: 4.0 * GB,
+            intra_lat: 1e-6,
+            inter_lat: 5e-6,
+            flops: 200e9,
+            hbm_bw: 20e9,
+            mfu: 0.5,
+            mem_bytes: 8 * GIB,
+        }
+    }
+
+    pub fn total_devices(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    /// Effective bandwidth for a communication domain.
+    pub fn bw(&self, inter_node: bool) -> f64 {
+        if inter_node {
+            self.inter_bw
+        } else {
+            self.intra_bw
+        }
+    }
+
+    pub fn lat(&self, inter_node: bool) -> f64 {
+        if inter_node {
+            self.inter_lat
+        } else {
+            self.intra_lat
+        }
+    }
+
+    /// Does a communicator of `degree` ranks (node-major placement) span
+    /// node boundaries?
+    pub fn spans_nodes(&self, degree: usize) -> bool {
+        degree > self.gpus_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_specs() {
+        let h = ClusterConfig::h20();
+        assert_eq!(h.total_devices(), 16);
+        assert!(h.intra_bw > h.inter_bw);
+        let a = ClusterConfig::ascend910b();
+        assert_eq!(a.total_devices(), 32);
+        assert!(a.intra_bw > a.inter_bw);
+        // the paper's premise: intra/inter disparity is large
+        assert!(h.intra_bw / h.inter_bw >= 4.0);
+    }
+
+    #[test]
+    fn spans_nodes_at_degree_boundary() {
+        let a = ClusterConfig::ascend910b();
+        assert!(!a.spans_nodes(8));
+        assert!(a.spans_nodes(16)); // Fig. 3: d > 8 goes inter-node
+    }
+
+    #[test]
+    fn clone_roundtrip() {
+        let c = ClusterConfig::h20();
+        assert_eq!(c.clone(), c);
+    }
+}

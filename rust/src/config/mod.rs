@@ -1,0 +1,17 @@
+//! Configuration: model hyperparameters, cluster/network descriptions,
+//! parallel strategies, serving parameters.
+//!
+//! The analytical path (automatic analyzer, Figs. 3/10/11/12) consumes the
+//! *paper* models (DeepSeek-R1, Qwen3-235B) and clusters (H20, Ascend 910B);
+//! the numeric path consumes the tiny AOT model described by
+//! `artifacts/manifest.json`.
+
+pub mod cluster;
+pub mod model;
+pub mod parallel;
+pub mod serving;
+
+pub use cluster::ClusterConfig;
+pub use model::MoEModelConfig;
+pub use parallel::{AttnStrategy, MoeStrategy, ParallelStrategy};
+pub use serving::ServingConfig;

@@ -1,0 +1,209 @@
+//! MoE model hyperparameters (the analyzer's primary input).
+
+
+/// Hyperparameters of an MoE decoder LLM, as consumed by the automatic
+/// analyzer (§III-B).  Only *architectural* quantities appear here — the
+/// analyzer never needs the weights themselves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoEModelConfig {
+    pub name: String,
+    /// decoder layers (l in Eq. 6)
+    pub n_layers: usize,
+    /// hidden dimension (h)
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// routed experts per layer (E)
+    pub n_experts: usize,
+    /// activated experts per token (k)
+    pub top_k: usize,
+    /// shared (always-active) experts per layer
+    pub n_shared_experts: usize,
+    /// per-expert FFN intermediate dimension
+    pub expert_inter: usize,
+    pub vocab: usize,
+    /// bytes per parameter / activation element (2 = bf16/fp16)
+    pub dtype_bytes: usize,
+}
+
+impl MoEModelConfig {
+    /// DeepSeek-R1: 671B total / 37B activated, 256 routed + 1 shared
+    /// experts, top-8 (DeepSeek-V3 architecture).
+    pub fn deepseek_r1() -> Self {
+        Self {
+            name: "DeepSeek-R1".into(),
+            n_layers: 61,
+            hidden: 7168,
+            n_heads: 128,
+            // MLA compresses the KV projection (kv_lora_rank 512 ≈ 16
+            // full heads' worth); modeled as 16 effective KV heads.
+            n_kv_heads: 16,
+            head_dim: 128,
+            n_experts: 256,
+            top_k: 8,
+            n_shared_experts: 1,
+            expert_inter: 2048,
+            vocab: 129_280,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Qwen3-235B-A22B: 235B total / 22B activated, 128 experts, top-8.
+    pub fn qwen3_235b() -> Self {
+        Self {
+            name: "Qwen3-235B-A22B".into(),
+            n_layers: 94,
+            hidden: 4096,
+            n_heads: 64,
+            n_kv_heads: 4,
+            head_dim: 128,
+            n_experts: 128,
+            top_k: 8,
+            n_shared_experts: 0,
+            expert_inter: 1536,
+            vocab: 151_936,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// The numeric-path tiny model (must match python/compile/model.py TINY).
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny".into(),
+            n_layers: 2,
+            hidden: 128,
+            n_heads: 4,
+            n_kv_heads: 4,
+            head_dim: 32,
+            n_experts: 8,
+            top_k: 2,
+            n_shared_experts: 1,
+            expert_inter: 256,
+            vocab: 512,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// Attention-block parameters of one layer (Ψ_Attn / l).
+    pub fn attn_params_per_layer(&self) -> u64 {
+        let h = self.hidden as u64;
+        let q = (self.n_heads * self.head_dim) as u64;
+        let kv = (self.n_kv_heads * self.head_dim) as u64;
+        h * q + 2 * h * kv + q * h
+    }
+
+    /// Routed-expert parameters of one layer (Ψ_MoE / l, EP-shardable part).
+    pub fn moe_params_per_layer(&self) -> u64 {
+        3 * (self.hidden as u64) * (self.expert_inter as u64)
+            * (self.n_experts as u64)
+    }
+
+    /// Shared-expert + router parameters of one layer (replicated under EP).
+    pub fn shared_params_per_layer(&self) -> u64 {
+        3 * (self.hidden as u64)
+            * (self.expert_inter as u64)
+            * (self.n_shared_experts as u64)
+            + (self.hidden * self.n_experts) as u64
+    }
+
+    /// Total parameter count Ψ.
+    pub fn total_params(&self) -> u64 {
+        let per_layer = self.attn_params_per_layer()
+            + self.moe_params_per_layer()
+            + self.shared_params_per_layer();
+        per_layer * self.n_layers as u64 + 2 * (self.vocab * self.hidden) as u64
+    }
+
+    /// Parameters activated per token (attention + top-k + shared experts).
+    pub fn active_params(&self) -> u64 {
+        let moe_active = 3
+            * (self.hidden as u64)
+            * (self.expert_inter as u64)
+            * (self.top_k as u64 + self.n_shared_experts as u64);
+        (self.attn_params_per_layer() + moe_active) * self.n_layers as u64
+            + 2 * (self.vocab * self.hidden) as u64
+    }
+
+    /// FLOPs to process one token through one layer on the *dense* path
+    /// (2 FLOPs per MAC), split (attention, moe).
+    pub fn flops_per_token_layer(&self, context_len: usize) -> (f64, f64) {
+        let attn_proj = 2.0 * self.attn_params_per_layer() as f64;
+        // score + value matmuls against the context
+        let attn_ctx = 4.0
+            * (self.n_heads * self.head_dim) as f64
+            * context_len as f64;
+        let moe = 2.0
+            * 3.0
+            * (self.hidden * self.expert_inter) as f64
+            * (self.top_k + self.n_shared_experts) as f64;
+        (attn_proj + attn_ctx, moe)
+    }
+
+    /// KV-cache bytes per token (all layers).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * (self.n_kv_heads * self.head_dim) as u64
+            * self.n_layers as u64
+            * self.dtype_bytes as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deepseek_r1_total_params_near_671b() {
+        let m = MoEModelConfig::deepseek_r1();
+        let t = m.total_params() as f64 / 1e9;
+        assert!(
+            (600.0..750.0).contains(&t),
+            "DeepSeek-R1 total {t:.0}B out of band"
+        );
+    }
+
+    #[test]
+    fn deepseek_r1_active_params_near_37b() {
+        let m = MoEModelConfig::deepseek_r1();
+        let a = m.active_params() as f64 / 1e9;
+        assert!((25.0..45.0).contains(&a), "active {a:.1}B out of band");
+    }
+
+    #[test]
+    fn qwen3_total_params_near_235b() {
+        let m = MoEModelConfig::qwen3_235b();
+        let t = m.total_params() as f64 / 1e9;
+        assert!((200.0..260.0).contains(&t), "Qwen3 total {t:.0}B out of band");
+    }
+
+    #[test]
+    fn qwen3_active_near_22b() {
+        let m = MoEModelConfig::qwen3_235b();
+        let a = m.active_params() as f64 / 1e9;
+        assert!((15.0..30.0).contains(&a), "active {a:.1}B out of band");
+    }
+
+    #[test]
+    fn active_less_than_total() {
+        for m in [
+            MoEModelConfig::deepseek_r1(),
+            MoEModelConfig::qwen3_235b(),
+            MoEModelConfig::tiny(),
+        ] {
+            assert!(m.active_params() < m.total_params(), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn flops_grow_with_context() {
+        let m = MoEModelConfig::qwen3_235b();
+        let (a1, _) = m.flops_per_token_layer(1);
+        let (a2, _) = m.flops_per_token_layer(4096);
+        assert!(a2 > a1);
+    }
+
+    #[test]
+    fn kv_bytes_positive() {
+        assert!(MoEModelConfig::deepseek_r1().kv_bytes_per_token() > 0);
+    }
+}

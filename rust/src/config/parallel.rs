@@ -1,0 +1,165 @@
+//! Parallel strategy types (§III-B1 grammar's semantic payload).
+//!
+//! One strategy describes a single Decoder layer: the Attention block uses
+//! intra-node TP × inter-node DP; the MoE block uses TP and/or EP (with
+//! the hybrid placing TP intra-node and EP inter-node); PP is applied
+//! between layers only (the grammar keeps per-layer strategies orthogonal).
+
+use std::fmt;
+
+/// Attention block: `block -> intra-node + inter-node`, with
+/// `intra -> TP`, `inter -> DP`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AttnStrategy {
+    pub tp: usize,
+    pub dp: usize,
+}
+
+/// MoE block: TP (intra) × EP (inter) hybrid; pure strategies are the
+/// degenerate cases `tp == 1` (pure EP, the DeepSeek-V3 deployment) and
+/// `ep == 1` (pure TP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MoeStrategy {
+    pub tp: usize,
+    pub ep: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelStrategy {
+    pub attn: AttnStrategy,
+    pub moe: MoeStrategy,
+    pub pp: usize,
+}
+
+impl AttnStrategy {
+    pub fn degree(&self) -> usize {
+        self.tp * self.dp
+    }
+}
+
+impl MoeStrategy {
+    pub fn degree(&self) -> usize {
+        self.tp * self.ep
+    }
+}
+
+impl ParallelStrategy {
+    /// Devices used by one PP stage.
+    pub fn devices_per_stage(&self) -> usize {
+        debug_assert_eq!(self.attn.degree(), self.moe.degree());
+        self.attn.degree()
+    }
+
+    /// Total devices consumed.
+    pub fn total_devices(&self) -> usize {
+        self.devices_per_stage() * self.pp
+    }
+
+    /// Structural validity: both blocks must cover the same device set and
+    /// every degree is a power of two (`degree -> 2^k`, grammar rule 9).
+    pub fn is_valid(&self) -> bool {
+        let pow2 = |x: usize| x > 0 && x.is_power_of_two();
+        pow2(self.attn.tp)
+            && pow2(self.attn.dp)
+            && pow2(self.moe.tp)
+            && pow2(self.moe.ep)
+            && pow2(self.pp)
+            && self.attn.degree() == self.moe.degree()
+    }
+
+    /// The paper's MixServe configuration for a cluster of
+    /// `n_nodes × n_proc`: TP=n_proc + DP=n_nodes, TP=n_proc + EP=n_nodes.
+    pub fn mixserve(n_nodes: usize, n_proc: usize) -> Self {
+        Self {
+            attn: AttnStrategy { tp: n_proc, dp: n_nodes },
+            moe: MoeStrategy { tp: n_proc, ep: n_nodes },
+            pp: 1,
+        }
+    }
+
+    /// The DeepSeek-V3-style deployment: attention TP intra-node ×
+    /// DP inter-node, MoE pure EP over all devices.
+    pub fn pure_ep(n_nodes: usize, n_proc: usize) -> Self {
+        Self {
+            attn: AttnStrategy { tp: n_proc, dp: n_nodes },
+            moe: MoeStrategy { tp: 1, ep: n_nodes * n_proc },
+            pp: 1,
+        }
+    }
+
+    /// vLLM-style TP within node + PP across nodes.
+    pub fn tp_pp(n_proc: usize, pp: usize) -> Self {
+        Self {
+            attn: AttnStrategy { tp: n_proc, dp: 1 },
+            moe: MoeStrategy { tp: n_proc, ep: 1 },
+            pp,
+        }
+    }
+}
+
+impl fmt::Display for ParallelStrategy {
+    /// Paper notation, e.g. `TP=4 + DP=8, EP=32` or
+    /// `TP=8 + DP=4, TP=8 + EP=4 [PP=2]`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TP={} + DP={}, ", self.attn.tp, self.attn.dp)?;
+        if self.moe.tp == 1 {
+            write!(f, "EP={}", self.moe.ep)?;
+        } else if self.moe.ep == 1 {
+            write!(f, "TP={}", self.moe.tp)?;
+        } else {
+            write!(f, "TP={} + EP={}", self.moe.tp, self.moe.ep)?;
+        }
+        if self.pp > 1 {
+            write!(f, " [PP={}]", self.pp)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixserve_preset_valid() {
+        let s = ParallelStrategy::mixserve(4, 8);
+        assert!(s.is_valid());
+        assert_eq!(s.total_devices(), 32);
+        assert_eq!(s.to_string(), "TP=8 + DP=4, TP=8 + EP=4");
+    }
+
+    #[test]
+    fn pure_ep_preset_matches_deepseek_notation() {
+        let s = ParallelStrategy::pure_ep(8, 4);
+        assert!(s.is_valid());
+        assert_eq!(s.to_string(), "TP=4 + DP=8, EP=32");
+    }
+
+    #[test]
+    fn tp_pp_display() {
+        let s = ParallelStrategy::tp_pp(8, 2);
+        assert!(s.is_valid());
+        assert_eq!(s.to_string(), "TP=8 + DP=1, TP=8 [PP=2]");
+        assert_eq!(s.total_devices(), 16);
+    }
+
+    #[test]
+    fn mismatched_block_degrees_invalid() {
+        let s = ParallelStrategy {
+            attn: AttnStrategy { tp: 4, dp: 2 },
+            moe: MoeStrategy { tp: 2, ep: 2 },
+            pp: 1,
+        };
+        assert!(!s.is_valid());
+    }
+
+    #[test]
+    fn non_power_of_two_invalid() {
+        let s = ParallelStrategy {
+            attn: AttnStrategy { tp: 3, dp: 1 },
+            moe: MoeStrategy { tp: 3, ep: 1 },
+            pp: 1,
+        };
+        assert!(!s.is_valid());
+    }
+}

@@ -1,0 +1,46 @@
+//! Serving-side knobs (mirrors the paper's evaluation setup, §IV-B).
+
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// maximum batch size formed by the continuous batcher
+    pub max_batch: usize,
+    /// maximum total sequence length (prompt + generation)
+    pub max_seq: usize,
+    /// request arrival rate, requests/s (paper sweeps {2, 4, 8})
+    pub request_rate: f64,
+    /// KV-cache page size, tokens per block
+    pub kv_block_tokens: usize,
+    /// scheduling quantum: decode iterations between scheduler passes
+    pub sched_interval: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 16,
+            max_seq: 4096,
+            request_rate: 4.0,
+            kv_block_tokens: 16,
+            sched_interval: 1,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn paper_eval(request_rate: f64) -> Self {
+        Self { request_rate, ..Self::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = ServingConfig::default();
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.max_seq, 4096);
+    }
+}

@@ -1,0 +1,164 @@
+//! Gantt traces: the communication/compute spans the paper draws in
+//! Figs. 4, 9 and 12, plus ASCII / CSV renderers.
+
+
+/// What a span occupies.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// intra-node fabric of one node (NVLink / HCCS)
+    Intra(usize),
+    /// inter-node NIC of one node (IB / RoCE)
+    Inter(usize),
+    /// compute stream of one node (expert MLP, top-k weighting, ...)
+    Compute(usize),
+}
+
+impl Lane {
+    pub fn label(&self) -> String {
+        match self {
+            Lane::Intra(n) => format!("node{n}/intra"),
+            Lane::Inter(n) => format!("node{n}/inter"),
+            Lane::Compute(n) => format!("node{n}/comp"),
+        }
+    }
+
+    pub fn node(&self) -> usize {
+        match self {
+            Lane::Intra(n) | Lane::Inter(n) | Lane::Compute(n) => *n,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub lane: Lane,
+    pub label: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Span {
+    pub fn dur(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// A full trace: spans plus the makespan.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn push(&mut self, lane: Lane, label: impl Into<String>, start: f64, end: f64) {
+        debug_assert!(end >= start);
+        self.spans.push(Span { lane, label: label.into(), start, end });
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Sum of busy time on one lane.
+    pub fn busy(&self, lane: &Lane) -> f64 {
+        self.spans.iter().filter(|s| &s.lane == lane).map(Span::dur).sum()
+    }
+
+    /// Overlap check: no two spans on one lane may intersect.
+    pub fn lanes_are_serial(&self) -> bool {
+        let mut by_lane: std::collections::HashMap<&Lane, Vec<(f64, f64)>> =
+            std::collections::HashMap::new();
+        for s in &self.spans {
+            by_lane.entry(&s.lane).or_default().push((s.start, s.end));
+        }
+        for spans in by_lane.values_mut() {
+            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in spans.windows(2) {
+                if w[1].0 < w[0].1 - 1e-12 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// ASCII Gantt chart (Figs. 4 / 9 / 12 style), `width` chars across.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let total = self.makespan().max(1e-12);
+        let mut lanes: Vec<Lane> = Vec::new();
+        for s in &self.spans {
+            if !lanes.contains(&s.lane) {
+                lanes.push(s.lane.clone());
+            }
+        }
+        lanes.sort_by_key(|l| (l.node(), matches!(l, Lane::Inter(_)), matches!(l, Lane::Compute(_))));
+        let mut out = String::new();
+        out.push_str(&format!("makespan: {:.3} ms\n", total * 1e3));
+        for lane in &lanes {
+            let mut row = vec![' '; width];
+            for s in self.spans.iter().filter(|s| &s.lane == lane) {
+                let a = ((s.start / total) * width as f64) as usize;
+                let b = (((s.end / total) * width as f64).ceil() as usize).min(width);
+                let ch = s.label.chars().next().unwrap_or('#');
+                for slot in row.iter_mut().take(b).skip(a) {
+                    *slot = ch;
+                }
+            }
+            out.push_str(&format!("{:>14} |{}|\n", lane.label(), row.iter().collect::<String>()));
+        }
+        out
+    }
+
+    /// CSV export (lane,label,start,end) for external plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("lane,label,start,end\n");
+        for s in &self.spans {
+            out.push_str(&format!("{},{},{:.9},{:.9}\n", s.lane.label(), s.label, s.start, s.end));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn makespan_and_busy() {
+        let mut t = Trace::default();
+        t.push(Lane::Intra(0), "RS", 0.0, 1.0);
+        t.push(Lane::Inter(0), "A2A", 0.5, 2.5);
+        t.push(Lane::Intra(0), "AG", 1.0, 1.5);
+        assert_eq!(t.makespan(), 2.5);
+        assert!((t.busy(&Lane::Intra(0)) - 1.5).abs() < 1e-12);
+        assert!(t.lanes_are_serial());
+    }
+
+    #[test]
+    fn detects_lane_conflicts() {
+        let mut t = Trace::default();
+        t.push(Lane::Inter(0), "a", 0.0, 2.0);
+        t.push(Lane::Inter(0), "b", 1.0, 3.0);
+        assert!(!t.lanes_are_serial());
+    }
+
+    #[test]
+    fn ascii_render_contains_lanes() {
+        let mut t = Trace::default();
+        t.push(Lane::Intra(0), "RS", 0.0, 1.0);
+        t.push(Lane::Inter(0), "A2A", 0.0, 2.0);
+        let s = t.render_ascii(40);
+        assert!(s.contains("node0/intra"));
+        assert!(s.contains("node0/inter"));
+        assert!(s.contains("makespan"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut t = Trace::default();
+        t.push(Lane::Compute(1), "topk", 0.0, 0.5);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("lane,label,start,end\n"));
+        assert!(csv.contains("node1/comp,topk"));
+    }
+}

@@ -1,0 +1,187 @@
+//! The context-free grammar of parallel strategies (§III-B1) — parsing,
+//! printing, and exhaustive enumeration.
+//!
+//! ```text
+//! strategy   -> Decoder | Decoder [PP = degree]
+//! Decoder    -> Attention, MoE
+//! Attention  -> block          (TP and DP)
+//! MoE        -> block          (TP and EP; DP excluded: EP over experts
+//!                               is already DP among experts)
+//! block      -> intra-node + inter-node | parallel
+//! intra-node -> parallel
+//! inter-node -> parallel
+//! parallel   -> TP | EP (DP) = degree
+//! degree     -> 2^k (k ∈ ℕ)
+//! ```
+//!
+//! Enumeration is the analyzer's search space: every `(attn, moe, pp)`
+//! combination whose degrees are powers of two and whose per-stage device
+//! product equals the stage size.
+
+use crate::config::{AttnStrategy, ClusterConfig, MoeStrategy, ParallelStrategy};
+
+/// All power-of-two factorizations `(a, b)` with `a * b == n`.
+pub fn pow2_factorizations(n: usize) -> Vec<(usize, usize)> {
+    if !n.is_power_of_two() {
+        return vec![];
+    }
+    let mut out = vec![];
+    let mut a = 1;
+    while a <= n {
+        out.push((a, n / a));
+        a *= 2;
+    }
+    out
+}
+
+/// Enumerate every grammar-valid strategy for a cluster, over all PP
+/// degrees that divide the node count (PP stages are placed on whole
+/// nodes, as in the paper's baselines).
+pub fn enumerate_strategies(cluster: &ClusterConfig) -> Vec<ParallelStrategy> {
+    let total = cluster.total_devices();
+    let mut out = vec![];
+    let mut pp = 1;
+    while pp <= cluster.n_nodes {
+        let stage = total / pp;
+        if stage == 0 || !stage.is_power_of_two() {
+            pp *= 2;
+            continue;
+        }
+        for (attn_tp, attn_dp) in pow2_factorizations(stage) {
+            for (moe_tp, moe_ep) in pow2_factorizations(stage) {
+                let s = ParallelStrategy {
+                    attn: AttnStrategy { tp: attn_tp, dp: attn_dp },
+                    moe: MoeStrategy { tp: moe_tp, ep: moe_ep },
+                    pp,
+                };
+                debug_assert!(s.is_valid());
+                out.push(s);
+            }
+        }
+        pp *= 2;
+    }
+    out
+}
+
+/// Parse the paper notation produced by `Display`:
+/// `TP=a + DP=b, TP=c + EP=d [PP=e]` (each clause optional per grammar).
+pub fn parse_strategy(s: &str) -> Result<ParallelStrategy, String> {
+    let s = s.trim();
+    let (body, pp) = match s.find('[') {
+        Some(i) => {
+            let tail = s[i..].trim();
+            let inner = tail
+                .strip_prefix("[PP=")
+                .and_then(|t| t.strip_suffix(']'))
+                .ok_or_else(|| format!("bad PP clause in {s:?}"))?;
+            (s[..i].trim(), inner.trim().parse::<usize>().map_err(|e| e.to_string())?)
+        }
+        None => (s, 1),
+    };
+    let (attn_part, moe_part) = body
+        .split_once(',')
+        .ok_or_else(|| format!("expected `attn, moe` in {s:?}"))?;
+
+    fn parse_block(part: &str) -> Result<Vec<(String, usize)>, String> {
+        part.split('+')
+            .map(|term| {
+                let (k, v) = term
+                    .trim()
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad term {term:?}"))?;
+                Ok((
+                    k.trim().to_uppercase(),
+                    v.trim().parse::<usize>().map_err(|e| e.to_string())?,
+                ))
+            })
+            .collect()
+    }
+
+    let attn_terms = parse_block(attn_part)?;
+    let moe_terms = parse_block(moe_part)?;
+    let mut attn = AttnStrategy { tp: 1, dp: 1 };
+    for (k, v) in &attn_terms {
+        match k.as_str() {
+            "TP" => attn.tp = *v,
+            "DP" => attn.dp = *v,
+            other => return Err(format!("attention block cannot use {other}")),
+        }
+    }
+    let mut moe = MoeStrategy { tp: 1, ep: 1 };
+    for (k, v) in &moe_terms {
+        match k.as_str() {
+            "TP" => moe.tp = *v,
+            "EP" => moe.ep = *v,
+            other => return Err(format!("MoE block cannot use {other}")),
+        }
+    }
+    let st = ParallelStrategy { attn, moe, pp };
+    if !st.is_valid() {
+        return Err(format!("strategy {st} violates grammar constraints"));
+    }
+    Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorizations_of_8() {
+        assert_eq!(pow2_factorizations(8), vec![(1, 8), (2, 4), (4, 2), (8, 1)]);
+        assert!(pow2_factorizations(6).is_empty());
+    }
+
+    #[test]
+    fn enumeration_counts() {
+        // 4x8 = 32 devices: pp=1 -> 6*6, pp=2 -> 5*5, pp=4 -> 4*4
+        let c = ClusterConfig::ascend910b();
+        let all = enumerate_strategies(&c);
+        assert_eq!(all.len(), 36 + 25 + 16);
+        assert!(all.iter().all(|s| s.is_valid()));
+    }
+
+    #[test]
+    fn enumeration_contains_paper_strategies() {
+        let c = ClusterConfig::ascend910b();
+        let all = enumerate_strategies(&c);
+        for want in [
+            ParallelStrategy::mixserve(4, 8),
+            ParallelStrategy::pure_ep(4, 8),
+            ParallelStrategy::tp_pp(8, 4),
+        ] {
+            assert!(all.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in [
+            ParallelStrategy::mixserve(2, 4),
+            ParallelStrategy::pure_ep(4, 8),
+            ParallelStrategy::tp_pp(8, 2),
+        ] {
+            let text = s.to_string();
+            assert_eq!(parse_strategy(&text).unwrap(), s, "{text}");
+        }
+    }
+
+    #[test]
+    fn parse_deepseek_v3_prefill_notation() {
+        // §III-B1: "the parallelism strategy for the prefill phase is
+        // TP=4 + DP=8, EP=32"
+        let s = parse_strategy("TP=4 + DP=8, EP=32").unwrap();
+        assert_eq!(s.attn, AttnStrategy { tp: 4, dp: 8 });
+        assert_eq!(s.moe, MoeStrategy { tp: 1, ep: 32 });
+    }
+
+    #[test]
+    fn parse_rejects_dp_in_moe() {
+        assert!(parse_strategy("TP=4 + DP=8, DP=32").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_mismatched_degrees() {
+        assert!(parse_strategy("TP=4 + DP=2, EP=4").is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! MixServe: an automatic distributed serving system for MoE models with
+//! hybrid TP-EP parallelism based on a fused AR-A2A communication algorithm.
+//!
+//! Reproduction of Zhou et al., "MixServe" (CS.DC 2026). The paper's
+//! multi-node NPU/GPU testbeds are substituted with a discrete-event
+//! cluster simulator (see DESIGN.md §Substitutions); real numerics flow
+//! through a three-layer Rust + JAX + Pallas stack (AOT via PJRT).
+
+pub mod analyzer;
+pub mod baselines;
+pub mod comm;
+pub mod config;
+pub mod gantt;
+pub mod grammar;
+pub mod moe;
+pub mod netsim;
+pub mod partitioner;
+pub mod paperbench;
+pub mod runtime;
+pub mod serving;
+pub mod simulator;
+pub mod testkit;
+pub mod util;
+pub mod workload;

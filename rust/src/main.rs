@@ -1,0 +1,152 @@
+//! MixServe CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   analyze   run the automatic analyzer and print the ranked strategies
+//!   serve     serve a synthetic trace on the real PJRT runtime (tiny model)
+//!   simulate  paper-scale serving simulation for one system config
+//!   fig3|fig4|fig10|fig11|fig12|table1   regenerate a paper artifact
+
+use anyhow::{bail, Result};
+use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::search::{Analyzer, Objective};
+use mixserve::baselines::all_systems;
+use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use mixserve::paperbench::{fig10, fig11, fig12, fig3, fig4, table1};
+use mixserve::runtime::Engine;
+use mixserve::serving::engine::RealEngine;
+use mixserve::serving::sim::run_rate;
+use mixserve::util::cli::Args;
+use mixserve::workload::TraceGen;
+
+fn cluster_by_name(name: &str) -> Result<ClusterConfig> {
+    Ok(match name {
+        "h20" => ClusterConfig::h20(),
+        "ascend910b" | "910b" | "ascend" => ClusterConfig::ascend910b(),
+        "localhost" => ClusterConfig::localhost(2, 4),
+        other => bail!("unknown cluster {other:?} (h20 | ascend910b | localhost)"),
+    })
+}
+
+fn model_by_name(name: &str) -> Result<MoEModelConfig> {
+    Ok(match name {
+        "deepseek-r1" | "deepseek" => MoEModelConfig::deepseek_r1(),
+        "qwen3" | "qwen3-235b" => MoEModelConfig::qwen3_235b(),
+        "tiny" => MoEModelConfig::tiny(),
+        other => bail!("unknown model {other:?} (deepseek-r1 | qwen3 | tiny)"),
+    })
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let cluster = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+    let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+    let rate = args.f64_or("rate", 4.0);
+    let top = args.usize_or("top", 10);
+    let analyzer = Analyzer::new(&model, &cluster, &ServingConfig::paper_eval(rate));
+    let wl = Workload::sharegpt(rate);
+    println!(
+        "MixServe automatic analyzer — {} on {} @ {rate} req/s",
+        model.name, cluster.name
+    );
+    println!(
+        "{:<36} {:>10} {:>9} {:>10} {:>8} {:>10}",
+        "strategy", "TTFT(ms)", "ITL(ms)", "tok/s", "rho", "mem(GB)"
+    );
+    for r in analyzer.rank(&wl, Objective::MaxThroughput).iter().take(top) {
+        println!(
+            "{:<36} {:>10.1} {:>9.2} {:>10.1} {:>8.2} {:>10.1}",
+            r.strategy.to_string(),
+            r.indicators.ttft * 1e3,
+            r.indicators.itl * 1e3,
+            r.indicators.throughput,
+            r.indicators.rho,
+            r.memory.total() as f64 / 1e9
+        );
+    }
+    if let Some(best) = analyzer.best(&wl, Objective::MaxThroughput) {
+        println!("\noptimal strategy: {}", best.strategy);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let root = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "tiny");
+    let rate = args.f64_or("rate", 4.0);
+    let duration = args.f64_or("duration", 10.0);
+    let engine = Engine::new(&root)?;
+    println!("PJRT platform: {}", engine.platform());
+    let mut server = RealEngine::new(&engine, &model)?;
+    let trace =
+        TraceGen::sharegpt(rate, server.runner.max_seq, args.usize_or("seed", 0) as u64)
+            .generate(duration);
+    println!(
+        "serving {} requests over {duration}s at {rate} req/s (model {model})...",
+        trace.len()
+    );
+    let metrics = server.serve(&trace, 42)?;
+    println!("{}", metrics.report("serve"));
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cluster = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+    let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+    let rate = args.f64_or("rate", 4.0);
+    let duration = args.f64_or("duration", 60.0);
+    println!(
+        "simulating {} on {} at {rate} req/s for {duration}s",
+        model.name, cluster.name
+    );
+    for sys in all_systems(&cluster) {
+        let rep = run_rate(&model, &cluster, &sys.strategy, sys.mode, rate, duration, 7);
+        println!("{}", rep.metrics.report(&format!("{:<22}", sys.label)));
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "analyze" => cmd_analyze(&args)?,
+        "serve" => cmd_serve(&args)?,
+        "simulate" => cmd_simulate(&args)?,
+        "fig3" => {
+            let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+            print!("{}", fig3::run(&c));
+        }
+        "fig4" => {
+            let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+            print!("{}", fig4::run(&c));
+        }
+        "fig10" => {
+            let rows = fig10::sweep(args.f64_or("duration", 60.0), 7);
+            print!("{}", fig10::render(&rows));
+            print!("{}", fig10::accelerations(&rows));
+        }
+        "fig11" => {
+            let rows = fig11::sweep(args.f64_or("duration", 60.0), 7);
+            print!("{}", fig11::render(&rows));
+        }
+        "fig12" => print!("{}", fig12::render(args.f64_or("duration", 60.0), 7)),
+        "table1" => {
+            let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+            print!("{}", table1::render(&c));
+            table1::verify(&c).map_err(|e| anyhow::anyhow!(e))?;
+            println!("table I structural checks: OK");
+        }
+        _ => {
+            println!(
+                "mixserve — automatic distributed MoE serving (paper reproduction)\n\n\
+                 usage: mixserve <command> [--options]\n\n\
+                 commands:\n\
+                 \x20 analyze   [--model M] [--cluster C] [--rate R] [--top N]\n\
+                 \x20 serve     [--artifacts DIR] [--model tiny] [--rate R] [--duration S]\n\
+                 \x20 simulate  [--model M] [--cluster C] [--rate R] [--duration S]\n\
+                 \x20 fig3|fig4|fig10|fig11|fig12|table1   regenerate paper artifacts\n\n\
+                 models: deepseek-r1 qwen3 tiny | clusters: h20 ascend910b localhost"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! MoE-specific modeling: token→expert routing with realistic load skew,
+//! expert placement, load-imbalance metrics (the EP pathology of §I/§II).
+
+pub mod placement;
+pub mod router;
+
+pub use placement::ExpertPlacement;
+pub use router::{LoadStats, RouterSim};

@@ -1,0 +1,72 @@
+//! Expert placement: which EP rank / node hosts which experts.
+
+use crate::comm::world::RankWorld;
+
+/// Contiguous expert placement over EP ranks (the layout the hybrid
+/// partitioner and Algorithms 1–2 assume: node j hosts experts
+/// [j·E/n, (j+1)·E/n)).
+#[derive(Debug, Clone)]
+pub struct ExpertPlacement {
+    pub n_experts: usize,
+    pub ep_degree: usize,
+}
+
+impl ExpertPlacement {
+    pub fn new(n_experts: usize, ep_degree: usize) -> Self {
+        assert!(ep_degree >= 1 && n_experts % ep_degree == 0,
+                "experts {n_experts} must divide EP degree {ep_degree}");
+        Self { n_experts, ep_degree }
+    }
+
+    pub fn experts_per_rank(&self) -> usize {
+        self.n_experts / self.ep_degree
+    }
+
+    /// EP rank hosting `expert`.
+    pub fn rank_of(&self, expert: usize) -> usize {
+        assert!(expert < self.n_experts);
+        expert / self.experts_per_rank()
+    }
+
+    /// Experts hosted by `rank`.
+    pub fn experts_of(&self, rank: usize) -> std::ops::Range<usize> {
+        let per = self.experts_per_rank();
+        rank * per..(rank + 1) * per
+    }
+
+    /// Map an expert to the *node* hosting it when EP ranks are the nodes
+    /// of `world` (the hybrid TP-EP layout of Fig. 7).
+    pub fn node_of(&self, expert: usize, world: &RankWorld) -> usize {
+        assert_eq!(self.ep_degree, world.n_nodes);
+        self.rank_of(expert)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_blocks() {
+        let p = ExpertPlacement::new(256, 32);
+        assert_eq!(p.experts_per_rank(), 8);
+        assert_eq!(p.rank_of(0), 0);
+        assert_eq!(p.rank_of(255), 31);
+        assert_eq!(p.experts_of(3), 24..32);
+    }
+
+    #[test]
+    fn every_expert_has_exactly_one_rank() {
+        let p = ExpertPlacement::new(64, 8);
+        for e in 0..64 {
+            let r = p.rank_of(e);
+            assert!(p.experts_of(r).contains(&e));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_panics() {
+        ExpertPlacement::new(10, 4);
+    }
+}

@@ -1,0 +1,138 @@
+//! Token→expert routing simulation with configurable skew.
+//!
+//! EP "tends to suffer from load imbalance, especially when the parallel
+//! degree is high" (§Abstract).  We model gate popularity with a Zipf-like
+//! distribution so benches can dial imbalance and watch EP degrade.
+
+use crate::util::rng::Rng;
+
+/// Routing simulator: draws top-k expert assignments for token batches.
+#[derive(Debug, Clone)]
+pub struct RouterSim {
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// Zipf exponent: 0 = uniform (perfectly balanced), ~1 = heavy skew
+    pub skew: f64,
+    weights: Vec<f64>,
+    rng: Rng,
+}
+
+impl RouterSim {
+    pub fn new(n_experts: usize, top_k: usize, skew: f64, seed: u64) -> Self {
+        assert!(top_k <= n_experts);
+        let weights: Vec<f64> = (1..=n_experts)
+            .map(|r| 1.0 / (r as f64).powf(skew))
+            .collect();
+        Self { n_experts, top_k, skew, weights, rng: Rng::seed_from_u64(seed) }
+    }
+
+    /// Draw `top_k` distinct experts for one token (weighted without
+    /// replacement).
+    pub fn route_token(&mut self) -> Vec<usize> {
+        let mut avail: Vec<usize> = (0..self.n_experts).collect();
+        let mut w: Vec<f64> = self.weights.clone();
+        let mut picks = Vec::with_capacity(self.top_k);
+        for _ in 0..self.top_k {
+            let idx = self.rng.weighted(&w);
+            picks.push(avail.remove(idx));
+            w.remove(idx);
+        }
+        picks
+    }
+
+    /// Route a batch; returns per-expert token counts.
+    pub fn route_batch(&mut self, n_tokens: usize) -> Vec<usize> {
+        let mut loads = vec![0usize; self.n_experts];
+        for _ in 0..n_tokens {
+            for e in self.route_token() {
+                loads[e] += 1;
+            }
+        }
+        loads
+    }
+}
+
+/// Load-balance statistics over expert groups (EP ranks).
+#[derive(Debug, Clone, Copy)]
+pub struct LoadStats {
+    pub max: usize,
+    pub mean: f64,
+    /// max/mean — the straggler factor that stretches EP compute & A2A
+    pub imbalance: f64,
+}
+
+impl LoadStats {
+    /// Aggregate per-expert loads into `groups` EP ranks (contiguous
+    /// placement) and compute the imbalance factor.
+    pub fn from_loads(loads: &[usize], groups: usize) -> Self {
+        assert!(groups >= 1 && loads.len() % groups == 0);
+        let per = loads.len() / groups;
+        let group_loads: Vec<usize> =
+            (0..groups).map(|g| loads[g * per..(g + 1) * per].iter().sum()).collect();
+        let max = *group_loads.iter().max().unwrap();
+        let mean = group_loads.iter().sum::<usize>() as f64 / groups as f64;
+        let imbalance = if mean > 0.0 { max as f64 / mean } else { 1.0 };
+        Self { max, mean, imbalance }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_are_distinct_and_in_range() {
+        let mut r = RouterSim::new(8, 3, 0.5, 1);
+        for _ in 0..50 {
+            let picks = r.route_token();
+            assert_eq!(picks.len(), 3);
+            let mut sorted = picks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "duplicates in {picks:?}");
+            assert!(picks.iter().all(|&e| e < 8));
+        }
+    }
+
+    #[test]
+    fn batch_conserves_token_assignments() {
+        let mut r = RouterSim::new(16, 2, 0.0, 2);
+        let loads = r.route_batch(100);
+        assert_eq!(loads.iter().sum::<usize>(), 200); // tokens × k
+    }
+
+    #[test]
+    fn uniform_routing_is_nearly_balanced() {
+        let mut r = RouterSim::new(8, 2, 0.0, 3);
+        let loads = r.route_batch(4000);
+        let st = LoadStats::from_loads(&loads, 8);
+        assert!(st.imbalance < 1.15, "imbalance {} too high", st.imbalance);
+    }
+
+    #[test]
+    fn skew_increases_imbalance() {
+        let mut balanced = RouterSim::new(32, 2, 0.0, 4);
+        let mut skewed = RouterSim::new(32, 2, 1.2, 4);
+        let b = LoadStats::from_loads(&balanced.route_batch(2000), 32);
+        let s = LoadStats::from_loads(&skewed.route_batch(2000), 32);
+        assert!(s.imbalance > b.imbalance * 1.5, "{} vs {}", s.imbalance, b.imbalance);
+    }
+
+    #[test]
+    fn higher_ep_degree_worsens_imbalance() {
+        // the paper's motivation: imbalance grows with parallel degree
+        let mut r = RouterSim::new(32, 2, 0.8, 5);
+        let loads = r.route_batch(2000);
+        let few = LoadStats::from_loads(&loads, 4);
+        let many = LoadStats::from_loads(&loads, 32);
+        assert!(many.imbalance >= few.imbalance);
+    }
+
+    #[test]
+    fn grouping_must_divide() {
+        let loads = vec![1usize; 8];
+        let st = LoadStats::from_loads(&loads, 4);
+        assert_eq!(st.max, 2);
+        assert!((st.imbalance - 1.0).abs() < 1e-12);
+    }
+}

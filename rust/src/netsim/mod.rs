@@ -1,0 +1,142 @@
+//! Network simulator: topology + contention-aware transfer timing.
+//!
+//! Substitutes the paper's physical fabrics (DESIGN.md §2).  Each node has
+//! one intra-node fabric (NVLink/HCCS, full-mesh modeled as a shared
+//! serial resource per node) and one inter-node NIC (IB/RoCE).  Transfers
+//! are α–β timed and queue on their lane — reproducing Fig. 3's two
+//! regimes: latency-bound small messages, bandwidth-bound large ones,
+//! with the inter-node inflection arriving earlier.
+
+use crate::config::ClusterConfig;
+use crate::simulator::Resource;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Link {
+    /// intra-node fabric of a node
+    Intra(usize),
+    /// inter-node NIC of a node
+    Inter(usize),
+}
+
+/// Timed network with per-lane queueing.
+#[derive(Debug, Clone)]
+pub struct NetSim {
+    pub cluster: ClusterConfig,
+    intra: Vec<Resource>,
+    inter: Vec<Resource>,
+}
+
+impl NetSim {
+    pub fn new(cluster: &ClusterConfig) -> Self {
+        Self {
+            cluster: cluster.clone(),
+            intra: vec![Resource::new(); cluster.n_nodes],
+            inter: vec![Resource::new(); cluster.n_nodes],
+        }
+    }
+
+    /// Pure α–β duration of one transfer (no queueing).
+    pub fn xfer_time(&self, link: Link, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        match link {
+            Link::Intra(_) => self.cluster.intra_lat + bytes / self.cluster.intra_bw,
+            Link::Inter(_) => self.cluster.inter_lat + bytes / self.cluster.inter_bw,
+        }
+    }
+
+    /// Submit a transfer at `now`; returns (start, end) after queueing
+    /// behind earlier traffic on the same lane.
+    pub fn submit(&mut self, now: f64, link: Link, bytes: f64) -> (f64, f64) {
+        let dur = self.xfer_time(link, bytes);
+        let res = match link {
+            Link::Intra(n) => &mut self.intra[n],
+            Link::Inter(n) => &mut self.inter[n],
+        };
+        res.acquire(now, dur)
+    }
+
+    /// Fig. 3 (right): latency of one transfer per data size, both domains.
+    /// Returns rows of (bytes, intra_seconds, inter_seconds).
+    pub fn size_sweep(&self, sizes: &[u64]) -> Vec<(u64, f64, f64)> {
+        sizes
+            .iter()
+            .map(|&b| {
+                (
+                    b,
+                    self.xfer_time(Link::Intra(0), b as f64),
+                    self.xfer_time(Link::Inter(0), b as f64),
+                )
+            })
+            .collect()
+    }
+
+    /// Size at which a domain leaves the latency floor (the "inflection
+    /// point" in Fig. 3): bytes where the bandwidth term equals α.
+    pub fn inflection_bytes(&self, inter_node: bool) -> f64 {
+        if inter_node {
+            self.cluster.inter_lat * self.cluster.inter_bw
+        } else {
+            self.cluster.intra_lat * self.cluster.intra_bw
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> NetSim {
+        NetSim::new(&ClusterConfig::ascend910b())
+    }
+
+    #[test]
+    fn small_messages_latency_bound() {
+        let n = net();
+        let t1 = n.xfer_time(Link::Inter(0), 64.0);
+        let t2 = n.xfer_time(Link::Inter(0), 4096.0);
+        // both dominated by α: within 2x
+        assert!(t2 < t1 * 2.0);
+    }
+
+    #[test]
+    fn large_messages_bandwidth_bound() {
+        let n = net();
+        let t1 = n.xfer_time(Link::Inter(0), 1e8);
+        let t2 = n.xfer_time(Link::Inter(0), 2e8);
+        assert!((t2 / t1 - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn intra_inflection_later_than_inter() {
+        // Fig. 3 (right): "due to more intra-node bandwidth ... the onset
+        // of this inflection point occurs relatively later."
+        let n = net();
+        assert!(n.inflection_bytes(false) > n.inflection_bytes(true) * 0.99);
+        let h20 = NetSim::new(&ClusterConfig::h20());
+        assert!(h20.inflection_bytes(false) > h20.inflection_bytes(true));
+    }
+
+    #[test]
+    fn lanes_queue_independent_nodes_dont() {
+        let mut n = net();
+        let (_, e1) = n.submit(0.0, Link::Inter(0), 1e8);
+        let (s2, _) = n.submit(0.0, Link::Inter(0), 1e8);
+        assert_eq!(s2, e1, "same NIC must serialize");
+        let (s3, _) = n.submit(0.0, Link::Inter(1), 1e8);
+        assert_eq!(s3, 0.0, "different node NIC is free");
+    }
+
+    #[test]
+    fn sweep_is_monotone() {
+        let n = net();
+        let rows = n.size_sweep(&[1 << 10, 1 << 15, 1 << 20, 1 << 25, 1 << 30]);
+        for w in rows.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+            assert!(w[1].2 >= w[0].2);
+            // inter is never faster than intra
+            assert!(w[0].2 >= w[0].1);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Fig. 10 — end-to-end performance: TTFT / ITL / throughput for MixServe
+//! vs the Table II baselines, on both clusters, both models, request
+//! rates {2, 4, 8} req/s.
+
+use crate::baselines::all_systems;
+use crate::config::{ClusterConfig, MoEModelConfig};
+use crate::serving::sim::run_rate;
+
+pub struct Fig10Row {
+    pub cluster: String,
+    pub model: String,
+    pub system: String,
+    pub rate: f64,
+    pub ttft_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub itl_ms: f64,
+    pub itl_p99_ms: f64,
+    pub throughput: f64,
+}
+
+pub fn sweep(duration: f64, seed: u64) -> Vec<Fig10Row> {
+    let mut rows = Vec::new();
+    for cluster in [ClusterConfig::h20(), ClusterConfig::ascend910b()] {
+        for model in [MoEModelConfig::deepseek_r1(), MoEModelConfig::qwen3_235b()] {
+            for sys in all_systems(&cluster) {
+                for rate in [2.0, 4.0, 8.0] {
+                    let rep = run_rate(
+                        &model, &cluster, &sys.strategy, sys.mode, rate, duration, seed,
+                    );
+                    let t = rep.metrics.ttft_summary();
+                    let i = rep.metrics.itl_summary();
+                    rows.push(Fig10Row {
+                        cluster: cluster.name.clone(),
+                        model: model.name.clone(),
+                        system: sys.label.clone(),
+                        rate,
+                        ttft_ms: t.mean * 1e3,
+                        ttft_p99_ms: t.p99 * 1e3,
+                        itl_ms: i.mean * 1e3,
+                        itl_p99_ms: i.p99 * 1e3,
+                        throughput: rep.metrics.throughput(),
+                    });
+                }
+            }
+        }
+    }
+    rows
+}
+
+pub fn render(rows: &[Fig10Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Fig. 10 — serving performance (mean over trace)\n{:<16} {:<18} {:<20} {:>5} {:>10} {:>10} {:>9} {:>9} {:>10}\n",
+        "cluster", "model", "system", "req/s", "TTFT(ms)", "p99", "ITL(ms)", "p99", "tok/s"
+    ));
+    let mut last_key = String::new();
+    for r in rows {
+        let key = format!("{}/{}/{}", r.cluster, r.model, r.rate);
+        if key != last_key && !last_key.is_empty() {
+            out.push('\n');
+        }
+        last_key = key;
+        out.push_str(&format!(
+            "{:<16} {:<18} {:<20} {:>5} {:>10.1} {:>10.1} {:>9.2} {:>9.2} {:>10.1}\n",
+            r.cluster, r.model, r.system, r.rate, r.ttft_ms, r.ttft_p99_ms, r.itl_ms,
+            r.itl_p99_ms, r.throughput
+        ));
+    }
+    out
+}
+
+/// Summary accelerations (the abstract's headline numbers).
+pub fn accelerations(rows: &[Fig10Row]) -> String {
+    let mut out = String::from("\nMixServe acceleration vs baselines:\n");
+    let mut ttft_ratios = Vec::new();
+    let mut itl_ratios = Vec::new();
+    let mut thr_gains = Vec::new();
+    let keys: Vec<(String, String, String)> = rows
+        .iter()
+        .map(|r| (r.cluster.clone(), r.model.clone(), format!("{}", r.rate)))
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    for (cl, mo, rate) in keys {
+        let group: Vec<&Fig10Row> = rows
+            .iter()
+            .filter(|r| r.cluster == cl && r.model == mo && format!("{}", r.rate) == rate)
+            .collect();
+        let Some(mix) = group.iter().find(|r| r.system == "MixServe") else { continue };
+        for b in group.iter().filter(|r| r.system != "MixServe") {
+            if mix.ttft_ms > 0.0 {
+                ttft_ratios.push(b.ttft_ms / mix.ttft_ms);
+            }
+            if mix.itl_ms > 0.0 {
+                itl_ratios.push(b.itl_ms / mix.itl_ms);
+            }
+            if b.throughput > 0.0 {
+                thr_gains.push((mix.throughput / b.throughput - 1.0) * 100.0);
+            }
+        }
+    }
+    let rng = |v: &[f64]| -> (f64, f64) {
+        (v.iter().cloned().fold(f64::INFINITY, f64::min),
+         v.iter().cloned().fold(f64::NEG_INFINITY, f64::max))
+    };
+    let (tl, th) = rng(&ttft_ratios);
+    let (il, ih) = rng(&itl_ratios);
+    let (gl, gh) = rng(&thr_gains);
+    out.push_str(&format!(
+        "  TTFT: {tl:.2}x ~ {th:.2}x   (paper: 1.08x ~ 3.80x)\n\
+         \x20 ITL:  {il:.2}x ~ {ih:.2}x   (paper: 1.03x ~ 1.66x)\n\
+         \x20 throughput: {gl:.1}% ~ {gh:.1}%  (paper: 5.2% ~ 50.3%)\n"
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<Fig10Row> {
+        sweep(40.0, 3)
+    }
+
+    #[test]
+    fn mixserve_wins_ttft_under_load() {
+        // Fig. 10's ordering: under sustained load MixServe's TTFT beats
+        // every baseline.  (At the lightest rate, with near-empty batches,
+        // hybrid and intra-only TP+PP can tie — the paper's gains also
+        // grow with load; we allow slack there.)
+        let rows = rows();
+        let keys: std::collections::BTreeSet<(String, String, String)> = rows
+            .iter()
+            .map(|r| (r.cluster.clone(), r.model.clone(), format!("{}", r.rate)))
+            .collect();
+        for (cl, mo, rate) in keys {
+            let group: Vec<&Fig10Row> = rows
+                .iter()
+                .filter(|r| r.cluster == cl && r.model == mo && format!("{}", r.rate) == rate)
+                .collect();
+            let mix = group.iter().find(|r| r.system == "MixServe").unwrap();
+            let slack = if rate == "2" { 1.6 } else { 1.05 };
+            for b in group.iter().filter(|r| r.system != "MixServe") {
+                assert!(
+                    mix.ttft_ms <= b.ttft_ms * slack,
+                    "{cl}/{mo}@{rate}: MixServe {:.1}ms vs {} {:.1}ms",
+                    mix.ttft_ms,
+                    b.system,
+                    b.ttft_ms
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixserve_best_mean_throughput() {
+        // aggregate headline: MixServe's mean throughput across configs
+        // beats every baseline's mean.
+        let rows = rows();
+        let mut by_system: std::collections::BTreeMap<String, (f64, usize)> = Default::default();
+        for r in &rows {
+            let e = by_system.entry(r.system.clone()).or_insert((0.0, 0));
+            e.0 += r.throughput;
+            e.1 += 1;
+        }
+        let mean =
+            |s: &str| by_system.get(s).map(|(t, n)| t / *n as f64).unwrap_or(0.0);
+        let mix = mean("MixServe");
+        for (sys, _) in by_system.iter().filter(|(s, _)| s.as_str() != "MixServe") {
+            assert!(
+                mix > mean(sys),
+                "MixServe mean {:.1} tok/s must beat {} {:.1}",
+                mix,
+                sys,
+                mean(sys)
+            );
+        }
+    }
+
+    #[test]
+    fn render_mentions_all_systems() {
+        let s = render(&rows()[..8]);
+        assert!(s.contains("TTFT"));
+        assert!(s.contains("vLLM"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Fig. 11 — ablation: the DP↔EP trade-off (§III-B3, §IV-C1).
+//! Three representative settings per cluster: d_DP = d_EP (balanced),
+//! d_DP > d_EP (weight replication), d_DP < d_EP (hidden-state
+//! redundancy + drop).
+
+use crate::analyzer::latency::CommMode;
+use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy};
+use crate::grammar::parse_strategy;
+use crate::serving::sim::run_rate;
+
+pub struct Fig11Row {
+    pub cluster: String,
+    pub model: String,
+    pub setting: String,
+    pub strategy: ParallelStrategy,
+    pub ttft_ms: f64,
+    pub itl_ms: f64,
+    pub throughput: f64,
+}
+
+/// The paper's three settings, adapted to the cluster grid (n nodes × m).
+pub fn settings(cluster: &ClusterConfig) -> Vec<(String, ParallelStrategy)> {
+    let n = cluster.n_nodes;
+    let m = cluster.gpus_per_node;
+    let balanced = ParallelStrategy::mixserve(n, m); // d_DP = d_EP = n
+    let dp_dom = parse_strategy(&format!(
+        "TP={} + DP={}, TP={m} + EP={}",
+        m / 2,
+        2 * n,
+        n
+    ))
+    .expect("dp>ep setting");
+    let ep_dom = parse_strategy(&format!(
+        "TP={m} + DP={n}, TP={} + EP={}",
+        m / 2,
+        2 * n
+    ))
+    .expect("dp<ep setting");
+    vec![
+        ("d_DP = d_EP".to_string(), balanced),
+        ("d_DP > d_EP".to_string(), dp_dom),
+        ("d_DP < d_EP".to_string(), ep_dom),
+    ]
+}
+
+pub fn sweep(duration: f64, seed: u64) -> Vec<Fig11Row> {
+    let mut rows = Vec::new();
+    for cluster in [ClusterConfig::h20(), ClusterConfig::ascend910b()] {
+        for model in [MoEModelConfig::deepseek_r1(), MoEModelConfig::qwen3_235b()] {
+            for (label, strat) in settings(&cluster) {
+                let rep = run_rate(
+                    &model,
+                    &cluster,
+                    &strat,
+                    CommMode::FusedAsync,
+                    4.0,
+                    duration,
+                    seed,
+                );
+                rows.push(Fig11Row {
+                    cluster: cluster.name.clone(),
+                    model: model.name.clone(),
+                    setting: label.clone(),
+                    strategy: strat,
+                    ttft_ms: rep.metrics.ttft_summary().mean * 1e3,
+                    itl_ms: rep.metrics.itl_summary().mean * 1e3,
+                    throughput: rep.metrics.throughput(),
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn render(rows: &[Fig11Row]) -> String {
+    let mut out = String::from(
+        "Fig. 11 — DP/EP trade-off ablation (rate 4 req/s, fused comm)\n",
+    );
+    out.push_str(&format!(
+        "{:<16} {:<18} {:<12} {:<34} {:>10} {:>9} {:>10}\n",
+        "cluster", "model", "setting", "strategy", "TTFT(ms)", "ITL(ms)", "tok/s"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:<18} {:<12} {:<34} {:>10.1} {:>9.2} {:>10.1}\n",
+            r.cluster,
+            r.model,
+            r.setting,
+            r.strategy.to_string(),
+            r.ttft_ms,
+            r.itl_ms,
+            r.throughput
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::tradeoff::{classify_dp_ep, DpEpCase};
+
+    #[test]
+    fn settings_cover_all_three_cases() {
+        for c in [ClusterConfig::h20(), ClusterConfig::ascend910b()] {
+            let st = settings(&c);
+            assert_eq!(st.len(), 3);
+            assert_eq!(classify_dp_ep(&st[0].1), DpEpCase::Balanced);
+            assert!(matches!(classify_dp_ep(&st[1].1), DpEpCase::DpDominant { .. }));
+            assert!(matches!(classify_dp_ep(&st[2].1), DpEpCase::EpDominant { .. }));
+            for (_, s) in &st {
+                assert!(s.is_valid());
+                assert_eq!(s.total_devices(), c.total_devices());
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_produces_all_rows() {
+        let rows = sweep(10.0, 1);
+        assert_eq!(rows.len(), 2 * 2 * 3);
+        assert!(rows.iter().all(|r| r.ttft_ms > 0.0));
+    }
+
+    #[test]
+    fn some_setting_differentiates() {
+        // the ablation is meaningful: settings must not be identical
+        let rows = sweep(10.0, 2);
+        let group: Vec<&Fig11Row> = rows
+            .iter()
+            .filter(|r| r.cluster.contains("Ascend") && r.model.contains("DeepSeek"))
+            .collect();
+        let t: Vec<f64> = group.iter().map(|r| r.ttft_ms).collect();
+        assert!(t.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-3), "{t:?}");
+    }
+}

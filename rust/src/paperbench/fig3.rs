@@ -1,0 +1,128 @@
+//! Fig. 3 — communication overhead of AR and A2A operators.
+//! Left: latency vs parallel degree for DeepSeek-R1 and Qwen3 MoE-block
+//! tensors.  Right: intra- vs inter-node latency vs data size (with the
+//! inflection points).
+
+use crate::comm::cost::CollectiveCost;
+use crate::config::{ClusterConfig, MoEModelConfig};
+use crate::netsim::NetSim;
+
+pub struct Fig3Row {
+    pub model: String,
+    pub degree: usize,
+    pub ar_ms: f64,
+    pub a2a_ms: f64,
+}
+
+/// Left subfigure: AR vs A2A latency per parallel degree.
+pub fn degree_sweep(cluster: &ClusterConfig) -> Vec<Fig3Row> {
+    let cost = CollectiveCost::new(cluster);
+    let mut rows = Vec::new();
+    for model in [MoEModelConfig::deepseek_r1(), MoEModelConfig::qwen3_235b()] {
+        // MoE-block activation tensor of the profiling setup:
+        // batch 16 × seq 1024 tokens
+        let bytes = (16 * 1024 * model.hidden * model.dtype_bytes) as f64;
+        for degree in [2usize, 4, 8, 16, 32] {
+            if degree > cluster.total_devices() {
+                continue;
+            }
+            let ar = cost.ar_auto(bytes, degree);
+            // EP ships only top-k-selected rows, 1/degree each
+            let a2a = cost.a2a_auto(bytes * model.top_k as f64 / degree as f64, degree);
+            rows.push(Fig3Row {
+                model: model.name.clone(),
+                degree,
+                ar_ms: ar * 1e3,
+                a2a_ms: a2a * 1e3,
+            });
+        }
+    }
+    rows
+}
+
+pub struct Fig3SizeRow {
+    pub bytes: u64,
+    pub intra_us: f64,
+    pub inter_us: f64,
+}
+
+/// Right subfigure: transfer latency vs data size per domain.
+pub fn size_sweep(cluster: &ClusterConfig) -> Vec<Fig3SizeRow> {
+    let net = NetSim::new(cluster);
+    let sizes: Vec<u64> = (10..=30).step_by(2).map(|p| 1u64 << p).collect();
+    net.size_sweep(&sizes)
+        .into_iter()
+        .map(|(b, intra, inter)| Fig3SizeRow {
+            bytes: b,
+            intra_us: intra * 1e6,
+            inter_us: inter * 1e6,
+        })
+        .collect()
+}
+
+/// Render both subfigures as text tables.
+pub fn run(cluster: &ClusterConfig) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Fig. 3 (left) — AR vs A2A latency by parallel degree [{}]\n\
+         {:<18} {:>6} {:>12} {:>12}  winner\n",
+        cluster.name, "model", "d", "AR (ms)", "A2A (ms)"
+    ));
+    for r in degree_sweep(cluster) {
+        let winner = if r.ar_ms <= r.a2a_ms { "AR/TP" } else { "A2A/EP" };
+        out.push_str(&format!(
+            "{:<18} {:>6} {:>12.3} {:>12.3}  {}\n",
+            r.model, r.degree, r.ar_ms, r.a2a_ms, winner
+        ));
+    }
+    out.push_str(&format!(
+        "\nFig. 3 (right) — latency vs data size [{}]\n\
+         {:>12} {:>14} {:>14}\n",
+        cluster.name, "bytes", "intra (µs)", "inter (µs)"
+    ));
+    for r in size_sweep(cluster) {
+        out.push_str(&format!(
+            "{:>12} {:>14.1} {:>14.1}\n",
+            r.bytes, r.intra_us, r.inter_us
+        ));
+    }
+    let net = NetSim::new(cluster);
+    out.push_str(&format!(
+        "inflection: intra ≈ {:.0} KiB, inter ≈ {:.0} KiB (intra later: {})\n",
+        net.inflection_bytes(false) / 1024.0,
+        net.inflection_bytes(true) / 1024.0,
+        net.inflection_bytes(false) > net.inflection_bytes(true),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tp_loses_at_degree_32() {
+        // the paper's headline observation: "TP is worse than EP when d=32"
+        let rows = degree_sweep(&ClusterConfig::ascend910b());
+        for r in rows.iter().filter(|r| r.degree == 32) {
+            assert!(r.ar_ms > r.a2a_ms, "{} d=32: AR {} <= A2A {}", r.model, r.ar_ms, r.a2a_ms);
+        }
+    }
+
+    #[test]
+    fn intra_cheap_below_node_boundary() {
+        let rows = degree_sweep(&ClusterConfig::ascend910b());
+        let d8 = rows.iter().find(|r| r.degree == 8).unwrap();
+        let d16 = rows.iter().find(|r| r.degree == 16 && r.model == d8.model).unwrap();
+        // crossing the node boundary must jump the AR cost
+        assert!(d16.ar_ms > d8.ar_ms * 2.0);
+    }
+
+    #[test]
+    fn render_has_all_degrees() {
+        let s = run(&ClusterConfig::ascend910b());
+        for d in ["     2", "     4", "     8", "    16", "    32"] {
+            assert!(s.contains(d), "missing degree {d}");
+        }
+    }
+}

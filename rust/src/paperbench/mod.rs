@@ -1,0 +1,11 @@
+//! Paper experiment harness: one function per table/figure of the
+//! evaluation section, shared by `rust/benches/*` and the CLI.  Each
+//! prints the same rows/series the paper reports (shape reproduction —
+//! see EXPERIMENTS.md for paper-vs-measured).
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;

@@ -1,0 +1,225 @@
+//! Artifact + weight manifests (written by `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered executable's interface.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    /// (name, shape, dtype) per input, in call order
+    pub inputs: Vec<(String, Vec<usize>, String)>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Model metadata recorded alongside the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub n_params: usize,
+    pub param_order: Vec<String>,
+    /// (batch, seq) prefill shape buckets, ascending
+    pub prefill_buckets: Vec<(usize, usize)>,
+    pub decode_batches: Vec<usize>,
+}
+
+/// Parsed `artifacts/` directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub root: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+fn shaped(v: &Json) -> Result<(String, Vec<usize>, String)> {
+    Ok((
+        v.req("name")?.as_str().unwrap_or("?").to_string(),
+        v.req("shape")?.usize_vec()?,
+        v.req("dtype")?.as_str().unwrap_or("float32").to_string(),
+    ))
+}
+
+impl ArtifactStore {
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let man_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?} (run `make artifacts`)"))?;
+        let man = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, ent) in man.req("artifacts")?.as_obj().ok_or_else(|| anyhow!("bad artifacts"))? {
+            let inputs = ent
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad inputs"))?
+                .iter()
+                .map(shaped)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = ent
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad outputs"))?
+                .iter()
+                .map(|o| o.req("shape")?.usize_vec())
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file: root.join(ent.req("file")?.as_str().unwrap_or("")),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in man.req("models")?.as_obj().ok_or_else(|| anyhow!("bad models"))? {
+            let get = |k: &str| -> Result<usize> {
+                m.req(k)?.as_usize().ok_or_else(|| anyhow!("bad {k}"))
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    vocab: get("vocab")?,
+                    hidden: get("hidden")?,
+                    n_heads: get("n_heads")?,
+                    head_dim: get("head_dim")?,
+                    n_experts: get("n_experts")?,
+                    top_k: get("top_k")?,
+                    n_layers: get("n_layers")?,
+                    max_seq: get("max_seq")?,
+                    n_params: get("n_params")?,
+                    param_order: m
+                        .req("param_order")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("bad param_order"))?
+                        .iter()
+                        .map(|v| v.as_str().unwrap_or("").to_string())
+                        .collect(),
+                    prefill_buckets: m
+                        .req("prefill_buckets")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("bad buckets"))?
+                        .iter()
+                        .map(|b| {
+                            let v = b.usize_vec()?;
+                            Ok((v[0], v[1]))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                    decode_batches: m.req("decode_batches")?.usize_vec()?,
+                },
+            );
+        }
+        Ok(Self { root, artifacts, models })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    /// Load one model's weights (little-endian f32 `.bin` files) in
+    /// parameter order, returning (name, shape, data).
+    pub fn load_weights(&self, model: &str) -> Result<Vec<(String, Vec<usize>, Vec<f32>)>> {
+        let wdir = self.root.join("weights").join(model);
+        let man = Json::parse(
+            &std::fs::read_to_string(wdir.join("manifest.json"))
+                .context("weight manifest")?,
+        )?;
+        let order: Vec<String> = man
+            .req("order")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad order"))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+        let params = man.req("params")?;
+        let mut out = Vec::with_capacity(order.len());
+        for name in order {
+            let ent = params.req(&name)?;
+            let shape = ent.req("shape")?.usize_vec()?;
+            let bytes = std::fs::read(wdir.join(ent.req("file")?.as_str().unwrap_or("")))?;
+            anyhow::ensure!(bytes.len() % 4 == 0, "truncated weight file for {name}");
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let expect: usize = shape.iter().product();
+            anyhow::ensure!(
+                data.len() == expect,
+                "weight {name}: {} elements, manifest says {expect}",
+                data.len()
+            );
+            out.push((name, shape, data));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn store() -> Option<ArtifactStore> {
+        ArtifactStore::open(art_root()).ok()
+    }
+
+    #[test]
+    fn opens_manifest_when_built() {
+        let Some(s) = store() else { return }; // skip if artifacts absent
+        assert!(s.models.contains_key("tiny"));
+        assert!(!s.artifacts.is_empty());
+    }
+
+    #[test]
+    fn prefill_entries_match_model_buckets() {
+        let Some(s) = store() else { return };
+        let m = s.model("tiny").unwrap();
+        for (b, sq) in &m.prefill_buckets {
+            let e = s.entry(&format!("tiny_prefill_b{b}_s{sq}")).unwrap();
+            assert_eq!(e.inputs[0].1, vec![*b, *sq]);
+            assert!(e.file.exists());
+        }
+    }
+
+    #[test]
+    fn weights_load_and_match_order() {
+        let Some(s) = store() else { return };
+        let m = s.model("tiny").unwrap();
+        let w = s.load_weights("tiny").unwrap();
+        assert_eq!(w.len(), m.param_order.len());
+        for ((name, shape, data), want) in w.iter().zip(&m.param_order) {
+            assert_eq!(name, want);
+            assert_eq!(data.len(), shape.iter().product::<usize>());
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let Some(s) = store() else { return };
+        assert!(s.entry("nope").is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! PJRT execution engine: compile-once / execute-many over HLO text
+//! artifacts, with a per-artifact executable cache.
+
+use super::artifacts::ArtifactStore;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Wraps the PJRT CPU client and a cache of loaded executables.
+pub struct Engine {
+    pub store: ArtifactStore,
+    client: xla::PjRtClient,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    pub fn new(artifact_root: impl AsRef<Path>) -> Result<Self> {
+        let store = ArtifactStore::open(artifact_root)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { store, client, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.store.entry(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact.  The AOT path lowers with `return_tuple=True`,
+    /// so the single device output is a tuple literal; we decompose it
+    /// into the artifact's declared outputs.  Inputs are borrowed
+    /// (weights stay resident across calls).
+    pub fn run(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let entry = self.store.entry(name)?;
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "{name}: {} inputs given, manifest wants {}",
+            inputs.len(),
+            entry.inputs.len()
+        );
+        let exe = self.executable(name)?;
+        let result = exe.execute::<&xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == entry.outputs.len(),
+            "{name}: {} outputs, manifest says {}",
+            outs.len(),
+            entry.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == shape.iter().product::<usize>(), "shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == shape.iter().product::<usize>(), "shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}

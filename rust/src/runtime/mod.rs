@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! once by `python/compile/aot.py` and executes them from the Rust
+//! request path.  Python never runs at serving time.
+//!
+//! Pipeline (see /opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.  One compiled executable per model
+//! variant (prefill shape buckets × decode batch sizes), cached.
+
+pub mod artifacts;
+pub mod client;
+pub mod model_runner;
+
+pub use artifacts::{ArtifactEntry, ArtifactStore, ModelInfo};
+pub use client::Engine;
+pub use model_runner::TinyMoERunner;

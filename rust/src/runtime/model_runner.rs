@@ -1,0 +1,199 @@
+//! Tiny-MoE model runner: the serving engine's interface to the AOT
+//! executables.  Owns the weight literals, picks shape buckets, pads
+//! batches, and maintains per-slot KV caches on the host.
+
+use super::client::{literal_f32, literal_i32, Engine};
+use anyhow::{anyhow, Result};
+
+/// Per-request KV cache: host copies of `[smax, L, nh, hd]` K and V plus
+/// the valid length.
+#[derive(Debug, Clone)]
+pub struct KvSlot {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// current valid sequence length (cache write position)
+    pub len: usize,
+}
+
+/// Runs prefill/decode for the `tiny` (or `small`) AOT model.
+pub struct TinyMoERunner {
+    pub model: String,
+    pub vocab: usize,
+    pub max_seq: usize,
+    /// [smax, L, nh, hd]
+    cache_dims: [usize; 4],
+    prefill_buckets: Vec<(usize, usize)>,
+    decode_batches: Vec<usize>,
+    params: Vec<xla::Literal>,
+}
+
+impl TinyMoERunner {
+    pub fn load(engine: &Engine, model: &str) -> Result<Self> {
+        let info = engine.store.model(model)?.clone();
+        let weights = engine.store.load_weights(model)?;
+        let params = weights
+            .iter()
+            .map(|(_, shape, data)| literal_f32(data, shape))
+            .collect::<Result<Vec<_>>>()?;
+        let mut prefill_buckets = info.prefill_buckets.clone();
+        prefill_buckets.sort();
+        Ok(Self {
+            model: model.to_string(),
+            vocab: info.vocab,
+            max_seq: info.max_seq,
+            cache_dims: [info.max_seq, info.n_layers, info.n_heads, info.head_dim],
+            prefill_buckets,
+            decode_batches: info.decode_batches.clone(),
+            params,
+        })
+    }
+
+    fn cache_elems(&self) -> usize {
+        self.cache_dims.iter().product()
+    }
+
+    /// Smallest prefill bucket covering (batch, seq).
+    pub fn pick_prefill_bucket(&self, batch: usize, seq: usize) -> Option<(usize, usize)> {
+        self.prefill_buckets
+            .iter()
+            .filter(|(b, s)| *b >= batch && *s >= seq)
+            .min_by_key(|(b, s)| b * s)
+            .copied()
+    }
+
+    /// Largest prompt length any bucket supports.
+    pub fn max_prefill_len(&self) -> usize {
+        self.prefill_buckets.iter().map(|(_, s)| *s).max().unwrap_or(0)
+    }
+
+    /// Largest prefill batch supported.
+    pub fn max_prefill_batch(&self) -> usize {
+        self.prefill_buckets.iter().map(|(b, _)| *b).max().unwrap_or(1)
+    }
+
+    /// Smallest decode batch bucket covering `batch`.
+    pub fn pick_decode_batch(&self, batch: usize) -> Option<usize> {
+        self.decode_batches.iter().filter(|b| **b >= batch).min().copied()
+    }
+
+    pub fn max_decode_batch(&self) -> usize {
+        self.decode_batches.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Prefill a batch of prompts.  Prompts are *left-padded* with token 0
+    /// so the bucket's last position always holds the final prompt token
+    /// (whose logits the artifact returns).  Returns per-request
+    /// (last-token logits, KV slot).
+    pub fn prefill(
+        &self,
+        engine: &Engine,
+        prompts: &[Vec<i32>],
+    ) -> Result<Vec<(Vec<f32>, KvSlot)>> {
+        anyhow::ensure!(!prompts.is_empty());
+        let maxlen = prompts.iter().map(|p| p.len()).max().unwrap();
+        let (bb, bs) = self
+            .pick_prefill_bucket(prompts.len(), maxlen)
+            .ok_or_else(|| anyhow!("no prefill bucket for b={} s={maxlen}", prompts.len()))?;
+        let mut toks = vec![0i32; bb * bs];
+        for (i, p) in prompts.iter().enumerate() {
+            let off = bs - p.len();
+            toks[i * bs + off..(i + 1) * bs].copy_from_slice(p);
+        }
+        let name = format!("{}_prefill_b{bb}_s{bs}", self.model);
+        let temps = [literal_i32(&toks, &[bb, bs])?];
+        let inputs: Vec<&xla::Literal> = temps.iter().chain(self.params.iter()).collect();
+        let outs = engine.run(&name, &inputs)?;
+        let logits: Vec<f32> = outs[0].to_vec()?;
+        let k_all: Vec<f32> = outs[1].to_vec()?;
+        let v_all: Vec<f32> = outs[2].to_vec()?;
+        let ce = self.cache_elems();
+        let mut results = Vec::with_capacity(prompts.len());
+        for i in 0..prompts.len() {
+            let lo = i * ce;
+            let slot = KvSlot {
+                k: k_all[lo..lo + ce].to_vec(),
+                v: v_all[lo..lo + ce].to_vec(),
+                // left-padded: positions [0, bs) are all populated
+                len: bs,
+            };
+            results.push((logits[i * self.vocab..(i + 1) * self.vocab].to_vec(), slot));
+        }
+        Ok(results)
+    }
+
+    /// One decode step for a group of requests sharing a cache position
+    /// (the batcher groups by `len`).  Updates slots in place, returns
+    /// per-request logits.
+    pub fn decode_step(
+        &self,
+        engine: &Engine,
+        tokens: &[i32],
+        slots: &mut [&mut KvSlot],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(tokens.len() == slots.len());
+        anyhow::ensure!(!tokens.is_empty());
+        let n = tokens.len();
+        let pos = slots[0].len;
+        anyhow::ensure!(
+            slots.iter().all(|s| s.len == pos),
+            "decode group must share a position"
+        );
+        anyhow::ensure!(pos < self.max_seq, "sequence overflow at {pos}");
+        let bb = self
+            .pick_decode_batch(n)
+            .ok_or_else(|| anyhow!("no decode bucket for b={n}"))?;
+        let ce = self.cache_elems();
+        let mut k = vec![0.0f32; bb * ce];
+        let mut v = vec![0.0f32; bb * ce];
+        let mut toks = vec![0i32; bb];
+        for (i, slot) in slots.iter().enumerate() {
+            k[i * ce..(i + 1) * ce].copy_from_slice(&slot.k);
+            v[i * ce..(i + 1) * ce].copy_from_slice(&slot.v);
+            toks[i] = tokens[i];
+        }
+        let [smax, l, nh, hd] = self.cache_dims;
+        let shape = [bb, smax, l, nh, hd];
+        let name = format!("{}_decode_b{bb}", self.model);
+        let temps = [
+            literal_i32(&toks, &[bb])?,
+            literal_i32(&[pos as i32], &[1])?,
+            literal_f32(&k, &shape)?,
+            literal_f32(&v, &shape)?,
+        ];
+        let inputs: Vec<&xla::Literal> = temps.iter().chain(self.params.iter()).collect();
+        let outs = engine.run(&name, &inputs)?;
+        let logits: Vec<f32> = outs[0].to_vec()?;
+        let k_new: Vec<f32> = outs[1].to_vec()?;
+        let v_new: Vec<f32> = outs[2].to_vec()?;
+        let mut per_req = Vec::with_capacity(n);
+        for (i, slot) in slots.iter_mut().enumerate() {
+            slot.k.copy_from_slice(&k_new[i * ce..(i + 1) * ce]);
+            slot.v.copy_from_slice(&v_new[i * ce..(i + 1) * ce]);
+            slot.len = pos + 1;
+            per_req.push(logits[i * self.vocab..(i + 1) * self.vocab].to_vec());
+        }
+        Ok(per_req)
+    }
+}
+
+/// Greedy sampling helper.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Continuous (iteration-level) batcher — Orca-style scheduling as used
+//! by vLLM and adopted by MixServe's online stage.
+//!
+//! Each engine iteration the batcher:
+//!   1. admits waiting requests (FIFO) while batch + KV budget allow,
+//!   2. emits a prefill group (newly admitted) and a decode group
+//!      (running requests),
+//!   3. retires finished requests, releasing their KV blocks.
+
+use super::kvcache::KvCacheManager;
+use crate::workload::Request;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_seq: usize,
+}
+
+/// Request lifecycle state tracked by the batcher.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReqPhase {
+    Waiting,
+    Prefilling,
+    Decoding { generated: usize },
+    Done,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrackedRequest {
+    pub req: Request,
+    pub phase: ReqPhase,
+    /// engine-time when admitted to its first prefill
+    pub admitted_at: Option<f64>,
+    pub first_token_at: Option<f64>,
+    pub last_token_at: Option<f64>,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    waiting: VecDeque<TrackedRequest>,
+    running: Vec<TrackedRequest>,
+}
+
+/// One iteration's work order.
+#[derive(Debug, Default)]
+pub struct IterationPlan {
+    /// request ids entering prefill this iteration
+    pub prefill: Vec<usize>,
+    /// request ids doing one decode step
+    pub decode: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self { cfg, waiting: VecDeque::new(), running: Vec::new() }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back(TrackedRequest {
+            req,
+            phase: ReqPhase::Waiting,
+            admitted_at: None,
+            first_token_at: None,
+            last_token_at: None,
+        });
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+
+    pub fn get(&self, id: usize) -> Option<&TrackedRequest> {
+        self.running.iter().find(|t| t.req.id == id)
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> Option<&mut TrackedRequest> {
+        self.running.iter_mut().find(|t| t.req.id == id)
+    }
+
+    /// Form this iteration's plan at engine time `now`.  Admission is
+    /// FIFO and KV-budget-aware: a request is admitted only if its full
+    /// context (prompt + max generation) can be granted blocks.
+    pub fn plan(&mut self, now: f64, kv: &mut KvCacheManager) -> IterationPlan {
+        let mut plan = IterationPlan::default();
+        // 1) admit
+        while self.running.len() < self.cfg.max_batch {
+            let Some(front) = self.waiting.front() else { break };
+            let worst = (front.req.len_in + front.req.len_out).min(self.cfg.max_seq);
+            if !kv.can_grow_to(front.req.id, worst) {
+                break; // FIFO head-of-line: wait for blocks
+            }
+            let mut t = self.waiting.pop_front().unwrap();
+            kv.grow_to(t.req.id, worst).expect("checked can_grow_to");
+            t.phase = ReqPhase::Prefilling;
+            t.admitted_at = Some(now);
+            plan.prefill.push(t.req.id);
+            self.running.push(t);
+        }
+        // 2) decode group: everyone already past prefill
+        for t in &self.running {
+            if matches!(t.phase, ReqPhase::Decoding { .. }) {
+                plan.decode.push(t.req.id);
+            }
+        }
+        plan
+    }
+
+    /// Mark prefill completion (first token emitted) at `now`.
+    pub fn complete_prefill(&mut self, id: usize, now: f64) {
+        if let Some(t) = self.get_mut(id) {
+            t.phase = ReqPhase::Decoding { generated: 1 };
+            t.first_token_at = Some(now);
+            t.last_token_at = Some(now);
+        }
+    }
+
+    /// Mark one decode token at `now`; returns true if the request just
+    /// finished (budget reached).
+    pub fn complete_decode_token(&mut self, id: usize, now: f64) -> bool {
+        let Some(t) = self.get_mut(id) else { return false };
+        if let ReqPhase::Decoding { generated } = &mut t.phase {
+            *generated += 1;
+            t.last_token_at = Some(now);
+            if *generated >= t.req.len_out {
+                t.phase = ReqPhase::Done;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Remove finished requests, releasing KV blocks; returns them.
+    pub fn retire(&mut self, kv: &mut KvCacheManager) -> Vec<TrackedRequest> {
+        let mut done = Vec::new();
+        self.running.retain(|t| {
+            if t.phase == ReqPhase::Done {
+                kv.release(t.req.id);
+                done.push(t.clone());
+                false
+            } else {
+                true
+            }
+        });
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, len_in: usize, len_out: usize) -> Request {
+        Request { id, arrival: 0.0, len_in, len_out }
+    }
+
+    fn setup(cap_blocks: usize) -> (Batcher, KvCacheManager) {
+        (
+            Batcher::new(BatcherConfig { max_batch: 4, max_seq: 64 }),
+            KvCacheManager::new(cap_blocks, 16),
+        )
+    }
+
+    #[test]
+    fn admits_fifo_up_to_batch() {
+        let (mut b, mut kv) = setup(64);
+        for i in 0..6 {
+            b.submit(req(i, 16, 8));
+        }
+        let plan = b.plan(0.0, &mut kv);
+        assert_eq!(plan.prefill, vec![0, 1, 2, 3]);
+        assert_eq!(b.waiting_len(), 2);
+        assert!(plan.decode.is_empty());
+    }
+
+    #[test]
+    fn kv_exhaustion_blocks_admission() {
+        let (mut b, mut kv) = setup(3); // 48 tokens of cache
+        b.submit(req(0, 16, 16)); // needs 2 blocks
+        b.submit(req(1, 16, 16)); // needs 2 blocks — only 1 left
+        let plan = b.plan(0.0, &mut kv);
+        assert_eq!(plan.prefill, vec![0]);
+        assert_eq!(b.waiting_len(), 1);
+        // after release the next request gets in
+        b.complete_prefill(0, 1.0);
+        for _ in 0..16 {
+            b.complete_decode_token(0, 1.0);
+        }
+        b.retire(&mut kv);
+        let plan = b.plan(2.0, &mut kv);
+        assert_eq!(plan.prefill, vec![1]);
+    }
+
+    #[test]
+    fn lifecycle_to_completion() {
+        let (mut b, mut kv) = setup(64);
+        b.submit(req(0, 16, 3));
+        let p = b.plan(0.0, &mut kv);
+        assert_eq!(p.prefill, vec![0]);
+        b.complete_prefill(0, 0.5);
+        // decode plan now includes it
+        let p = b.plan(1.0, &mut kv);
+        assert_eq!(p.decode, vec![0]);
+        assert!(!b.complete_decode_token(0, 1.1));
+        assert!(b.complete_decode_token(0, 1.2)); // 3rd token
+        let done = b.retire(&mut kv);
+        assert_eq!(done.len(), 1);
+        assert!(b.is_idle());
+        assert_eq!(kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn no_starvation_under_churn() {
+        // head-of-line FIFO: earlier requests always admitted first
+        let (mut b, mut kv) = setup(1000);
+        for i in 0..20 {
+            b.submit(req(i, 16, 2));
+        }
+        let mut admitted = Vec::new();
+        for step in 0..30 {
+            let plan = b.plan(step as f64, &mut kv);
+            admitted.extend(plan.prefill.clone());
+            for id in plan.prefill {
+                b.complete_prefill(id, step as f64);
+            }
+            for id in plan.decode {
+                b.complete_decode_token(id, step as f64);
+            }
+            b.retire(&mut kv);
+            if b.is_idle() {
+                break;
+            }
+        }
+        assert_eq!(admitted, (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,180 @@
+//! The *real* serving engine: continuous batching over the PJRT runtime
+//! (tiny AOT model).  Wall-clock timed — this is what
+//! `examples/serve_e2e.rs` runs end-to-end to prove the three layers
+//! compose (L1 Pallas kernels → L2 JAX model → HLO artifacts → L3 Rust
+//! scheduler), Python nowhere on the path.
+
+use crate::runtime::model_runner::{argmax, KvSlot, TinyMoERunner};
+use crate::runtime::Engine;
+use crate::serving::batcher::{Batcher, BatcherConfig};
+use crate::serving::kvcache::KvCacheManager;
+use crate::serving::metrics::ServingMetrics;
+use crate::util::rng::Rng;
+use crate::workload::Request;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+pub struct RealEngine<'a> {
+    pub engine: &'a Engine,
+    pub runner: TinyMoERunner,
+    batcher: Batcher,
+    kv: KvCacheManager,
+    slots: BTreeMap<usize, KvSlot>,
+    tokens: BTreeMap<usize, i32>, // last sampled token per request
+}
+
+impl<'a> RealEngine<'a> {
+    pub fn new(engine: &'a Engine, model: &str) -> Result<Self> {
+        let runner = TinyMoERunner::load(engine, model)?;
+        let max_batch = runner.max_decode_batch();
+        let max_seq = runner.max_seq;
+        // virtual KV pool sized to the physical slots we can hold
+        let kv = KvCacheManager::new(4 * max_batch * (max_seq / 16).max(1), 16);
+        Ok(Self {
+            engine,
+            runner,
+            batcher: Batcher::new(BatcherConfig { max_batch, max_seq }),
+            kv,
+            slots: BTreeMap::new(),
+            tokens: BTreeMap::new(),
+        })
+    }
+
+    /// Serve a whole trace (arrival seconds are wall-clock offsets);
+    /// returns the measured metrics.  `prompt_seed` synthesizes token ids
+    /// for each request's prompt length.
+    pub fn serve(&mut self, trace: &[Request], prompt_seed: u64) -> Result<ServingMetrics> {
+        let mut rng = Rng::seed_from_u64(prompt_seed);
+        let mut metrics = ServingMetrics::new();
+        let t0 = Instant::now();
+        let mut next = 0usize;
+        let max_prompt = self.runner.max_prefill_len();
+        let headroom = self.runner.max_seq.saturating_sub(max_prompt).max(1);
+
+        let mut arrivals = trace.to_vec();
+        arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+
+        loop {
+            let now = t0.elapsed().as_secs_f64();
+            while next < arrivals.len() && arrivals[next].arrival <= now {
+                let mut r = arrivals[next].clone();
+                // clamp to the tiny model's shape envelope
+                r.len_in = r.len_in.clamp(1, max_prompt);
+                r.len_out = r.len_out.clamp(1, headroom);
+                self.batcher.submit(r);
+                next += 1;
+            }
+            if self.batcher.is_idle() {
+                if next >= arrivals.len() {
+                    break;
+                }
+                let wait = (arrivals[next].arrival - now).max(0.0);
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(0.05)));
+                continue;
+            }
+
+            let plan = self.batcher.plan(now, &mut self.kv);
+
+            // ---- prefill admitted requests (one bucketed call)
+            if !plan.prefill.is_empty() {
+                let mut prompts = Vec::new();
+                for id in &plan.prefill {
+                    let len = self.batcher.get(*id).unwrap().req.len_in;
+                    let p: Vec<i32> = (0..len)
+                        .map(|_| rng.below(self.runner.vocab) as i32)
+                        .collect();
+                    prompts.push(p);
+                }
+                // greedy bucket-aware chunking: take the largest prefix of
+                // the group that still fits some compiled (b, s) bucket
+                let mut pairs: Vec<(usize, Vec<i32>)> =
+                    plan.prefill.iter().copied().zip(prompts).collect();
+                // longest prompts first so singles get the big-s buckets
+                pairs.sort_by_key(|(_, p)| std::cmp::Reverse(p.len()));
+                let mut chunks: Vec<(Vec<usize>, Vec<Vec<i32>>)> = Vec::new();
+                while !pairs.is_empty() {
+                    let mut take = pairs.len();
+                    while take > 1 {
+                        let maxlen =
+                            pairs[..take].iter().map(|(_, p)| p.len()).max().unwrap();
+                        if self.runner.pick_prefill_bucket(take, maxlen).is_some() {
+                            break;
+                        }
+                        take -= 1;
+                    }
+                    let rest = pairs.split_off(take);
+                    let (ids, ps): (Vec<usize>, Vec<Vec<i32>>) =
+                        pairs.drain(..).unzip();
+                    chunks.push((ids, ps));
+                    pairs = rest;
+                }
+                for (ids, ps) in &chunks {
+                    let results = self.runner.prefill(self.engine, ps)?;
+                    let done_at = t0.elapsed().as_secs_f64();
+                    for (id, (logits, slot)) in ids.iter().zip(results) {
+                        let arrival = self.batcher.get(*id).unwrap().req.arrival;
+                        self.slots.insert(*id, slot);
+                        self.tokens.insert(*id, argmax(&logits));
+                        self.batcher.complete_prefill(*id, done_at);
+                        metrics.record_first_token(done_at - arrival);
+                    }
+                }
+            }
+
+            // ---- one decode step: group running requests by cache length
+            if !plan.decode.is_empty() {
+                let mut by_len: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+                for id in &plan.decode {
+                    if let Some(slot) = self.slots.get(id) {
+                        if slot.len < self.runner.max_seq {
+                            by_len.entry(slot.len).or_default().push(*id);
+                        }
+                    }
+                }
+                for (_len, ids) in by_len {
+                    let cap = self.runner.max_decode_batch();
+                    for group in ids.chunks(cap) {
+                        let toks: Vec<i32> =
+                            group.iter().map(|id| self.tokens[id]).collect();
+                        // take the slots out of the map for the duration of
+                        // the step so we can hand out disjoint &mut
+                        let mut taken: Vec<(usize, KvSlot)> = group
+                            .iter()
+                            .map(|id| (*id, self.slots.remove(id).unwrap()))
+                            .collect();
+                        let mut slot_refs: Vec<&mut KvSlot> =
+                            taken.iter_mut().map(|(_, s)| s).collect();
+                        let step_t = Instant::now();
+                        let logits = self.runner.decode_step(self.engine, &toks, &mut slot_refs)?;
+                        let dt = step_t.elapsed().as_secs_f64();
+                        let done_at = t0.elapsed().as_secs_f64();
+                        for ((id, slot), lg) in taken.into_iter().zip(logits) {
+                            self.tokens.insert(id, argmax(&lg));
+                            self.slots.insert(id, slot);
+                            metrics.record_inter_token(dt);
+                            self.batcher.complete_decode_token(id, done_at);
+                        }
+                    }
+                }
+                // requests that ran out of cache space finish early
+                let max_seq = self.runner.max_seq;
+                for id in plan.decode {
+                    if self.slots.get(&id).map(|s| s.len >= max_seq).unwrap_or(false) {
+                        if let Some(t) = self.batcher.get_mut(id) {
+                            t.phase = super::batcher::ReqPhase::Done;
+                        }
+                    }
+                }
+            }
+
+            for done in self.batcher.retire(&mut self.kv) {
+                self.slots.remove(&done.req.id);
+                self.tokens.remove(&done.req.id);
+                metrics.record_completion(done.req.len_in, done.req.len_out);
+            }
+        }
+        metrics.duration = t0.elapsed().as_secs_f64().max(1e-9);
+        Ok(metrics)
+    }
+}

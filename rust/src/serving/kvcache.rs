@@ -1,0 +1,146 @@
+//! Paged KV-cache manager (PagedAttention-style block allocator).
+//!
+//! The serving engine admits a request only if its worst-case block need
+//! can be satisfied; blocks are allocated incrementally as the sequence
+//! grows and freed on completion.  Invariants (property-tested in
+//! rust/tests/proptests.rs): no block is owned twice, frees balance
+//! allocations, and used + free == capacity at all times.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct KvCacheManager {
+    /// tokens per block
+    pub block_tokens: usize,
+    /// total blocks in the pool
+    pub capacity: usize,
+    free: Vec<usize>,
+    owned: BTreeMap<usize, Vec<usize>>, // request id -> blocks
+}
+
+impl KvCacheManager {
+    pub fn new(capacity: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0 && capacity > 0);
+        Self {
+            block_tokens,
+            capacity,
+            free: (0..capacity).rev().collect(),
+            owned: BTreeMap::new(),
+        }
+    }
+
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    pub fn holds(&self, req: usize) -> usize {
+        self.owned.get(&req).map_or(0, |b| b.len())
+    }
+
+    /// Can `req` grow to `total_tokens` (counting blocks it already has)?
+    pub fn can_grow_to(&self, req: usize, total_tokens: usize) -> bool {
+        let need = self.blocks_for_tokens(total_tokens).saturating_sub(self.holds(req));
+        need <= self.free.len()
+    }
+
+    /// Ensure `req` owns enough blocks for `total_tokens`.  Returns the
+    /// number of newly allocated blocks, or None if the pool is exhausted
+    /// (caller must preempt or wait).
+    pub fn grow_to(&mut self, req: usize, total_tokens: usize) -> Option<usize> {
+        let need = self.blocks_for_tokens(total_tokens).saturating_sub(self.holds(req));
+        if need > self.free.len() {
+            return None;
+        }
+        let entry = self.owned.entry(req).or_default();
+        for _ in 0..need {
+            entry.push(self.free.pop().unwrap());
+        }
+        Some(need)
+    }
+
+    /// Release all of `req`'s blocks.
+    pub fn release(&mut self, req: usize) -> usize {
+        let blocks = self.owned.remove(&req).unwrap_or_default();
+        let n = blocks.len();
+        self.free.extend(blocks);
+        n
+    }
+
+    /// Internal consistency (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let owned_total: usize = self.owned.values().map(|b| b.len()).sum();
+        if owned_total + self.free.len() != self.capacity {
+            return Err(format!(
+                "leak: owned {} + free {} != capacity {}",
+                owned_total,
+                self.free.len(),
+                self.capacity
+            ));
+        }
+        let mut seen = vec![false; self.capacity];
+        for b in self.free.iter().chain(self.owned.values().flatten()) {
+            if seen[*b] {
+                return Err(format!("block {b} owned twice"));
+            }
+            seen[*b] = true;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_release_roundtrip() {
+        let mut m = KvCacheManager::new(16, 4);
+        assert_eq!(m.blocks_for_tokens(1), 1);
+        assert_eq!(m.blocks_for_tokens(4), 1);
+        assert_eq!(m.blocks_for_tokens(5), 2);
+        assert_eq!(m.grow_to(7, 10), Some(3));
+        assert_eq!(m.holds(7), 3);
+        assert_eq!(m.free_blocks(), 13);
+        // growing within existing blocks allocates nothing
+        assert_eq!(m.grow_to(7, 12), Some(0));
+        assert_eq!(m.grow_to(7, 13), Some(1));
+        assert_eq!(m.release(7), 4);
+        assert_eq!(m.free_blocks(), 16);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_returns_none_and_keeps_state() {
+        let mut m = KvCacheManager::new(4, 4);
+        assert_eq!(m.grow_to(1, 12), Some(3));
+        assert!(m.grow_to(2, 8).is_none(), "needs 2, only 1 free");
+        assert_eq!(m.holds(2), 0, "failed grow must not partially allocate");
+        assert_eq!(m.grow_to(2, 4), Some(1));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn can_grow_predicts_grow() {
+        let mut m = KvCacheManager::new(8, 2);
+        assert!(m.can_grow_to(1, 16));
+        assert!(!m.can_grow_to(1, 17));
+        m.grow_to(1, 10).unwrap();
+        assert!(m.can_grow_to(2, 6));
+        assert!(!m.can_grow_to(2, 7));
+    }
+
+    #[test]
+    fn release_unknown_request_is_noop() {
+        let mut m = KvCacheManager::new(4, 4);
+        assert_eq!(m.release(99), 0);
+        m.check_invariants().unwrap();
+    }
+}

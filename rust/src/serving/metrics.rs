@@ -1,0 +1,110 @@
+//! Serving metrics: TTFT / ITL / throughput with mean ± std and P99
+//! (the quantities of Fig. 10).
+
+use crate::util::stats::{Series, Summary};
+
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    pub ttft: Series,
+    pub itl: Series,
+    pub tokens_out: usize,
+    pub tokens_in: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub duration: f64,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_first_token(&mut self, ttft: f64) {
+        self.ttft.push(ttft);
+    }
+
+    pub fn record_inter_token(&mut self, itl: f64) {
+        self.itl.push(itl);
+    }
+
+    pub fn record_completion(&mut self, len_in: usize, len_out: usize) {
+        self.completed += 1;
+        self.tokens_in += len_in;
+        self.tokens_out += len_out;
+    }
+
+    /// Total token throughput (prefill + decode tokens / wall time), the
+    /// paper's Fig. 10c quantity.
+    pub fn throughput(&self) -> f64 {
+        if self.duration <= 0.0 {
+            return 0.0;
+        }
+        (self.tokens_in + self.tokens_out) as f64 / self.duration
+    }
+
+    /// Generation-only throughput.
+    pub fn decode_throughput(&self) -> f64 {
+        if self.duration <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / self.duration
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        self.ttft.summary()
+    }
+
+    pub fn itl_summary(&self) -> Summary {
+        self.itl.summary()
+    }
+
+    pub fn report(&self, label: &str) -> String {
+        let t = self.ttft_summary();
+        let i = self.itl_summary();
+        format!(
+            "{label}: {} done | TTFT {:.1}±{:.1}ms (p99 {:.1}) | ITL {:.2}±{:.2}ms (p99 {:.2}) | {:.1} tok/s",
+            self.completed,
+            t.mean * 1e3,
+            t.std * 1e3,
+            t.p99 * 1e3,
+            i.mean * 1e3,
+            i.std * 1e3,
+            i.p99 * 1e3,
+            self.throughput()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts_both_directions() {
+        let mut m = ServingMetrics::new();
+        m.record_completion(100, 50);
+        m.record_completion(200, 50);
+        m.duration = 10.0;
+        assert!((m.throughput() - 40.0).abs() < 1e-12);
+        assert!((m.decode_throughput() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_contains_key_fields() {
+        let mut m = ServingMetrics::new();
+        m.record_first_token(0.25);
+        m.record_inter_token(0.05);
+        m.record_completion(10, 5);
+        m.duration = 1.0;
+        let r = m.report("test");
+        assert!(r.contains("TTFT"));
+        assert!(r.contains("tok/s"));
+    }
+
+    #[test]
+    fn empty_metrics_no_panic() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.throughput(), 0.0);
+        let _ = m.report("empty");
+    }
+}

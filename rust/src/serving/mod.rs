@@ -1,0 +1,16 @@
+//! The serving layer (§III-A online stage): vLLM-style request management
+//! on top of either the *analytic* cluster simulation (paper-scale
+//! models, Figs. 10–12) or the *real* PJRT runtime (tiny model,
+//! examples/serve_e2e).
+
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod sim;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::RealEngine;
+pub use kvcache::KvCacheManager;
+pub use metrics::ServingMetrics;
+pub use sim::{simulate_serving, SimReport};

@@ -1,0 +1,173 @@
+//! Minimal discrete-event machinery: a monotonic event queue plus serial
+//! resources.  Used by the serving simulation (Fig. 10), the Gantt
+//! builders (Figs. 4 / 12), and the network contention model.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// f64 with a total order (times are never NaN).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Time(pub f64);
+
+impl Eq for Time {}
+impl PartialOrd for Time {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Time {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN time")
+    }
+}
+
+struct Entry<E> {
+    time: Time,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest-first;
+        // ties break FIFO by sequence number.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Earliest-first event queue with FIFO tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: f64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn push(&mut self, time: f64, ev: E) {
+        debug_assert!(time >= self.now, "cannot schedule into the past");
+        self.heap.push(Entry { time: Time(time), seq: self.seq, ev });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| {
+            self.now = e.time.0;
+            (e.time.0, e.ev)
+        })
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// A serial resource (one NIC, one fabric, one compute stream): jobs
+/// acquire it back-to-back.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Resource {
+    free_at: f64,
+}
+
+impl Resource {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Occupy the resource for `dur` starting no earlier than `now`.
+    /// Returns (start, end).
+    pub fn acquire(&mut self, now: f64, dur: f64) -> (f64, f64) {
+        let start = self.free_at.max(now);
+        let end = start + dur;
+        self.free_at = end;
+        (start, end)
+    }
+
+    pub fn free_at(&self) -> f64 {
+        self.free_at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 1);
+        q.push(1.0, 2);
+        q.push(1.0, 3);
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ());
+        q.push(7.0, ());
+        q.pop();
+        assert_eq!(q.now(), 5.0);
+        q.push(6.0, ());
+        q.pop();
+        assert_eq!(q.now(), 6.0);
+    }
+
+    #[test]
+    fn resource_serializes_jobs() {
+        let mut r = Resource::new();
+        let (s1, e1) = r.acquire(0.0, 2.0);
+        let (s2, e2) = r.acquire(1.0, 3.0);
+        assert_eq!((s1, e1), (0.0, 2.0));
+        assert_eq!((s2, e2), (2.0, 5.0));
+        let (s3, _) = r.acquire(10.0, 1.0);
+        assert_eq!(s3, 10.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! In-tree property-testing and micro-benchmark harness (offline build:
+//! no `proptest` / `criterion`).
+//!
+//! * [`forall`] — seeded randomized property runner with shrinking-free
+//!   failure reporting (prints the failing case number + seed so a run is
+//!   reproducible).
+//! * [`Bench`] — wall-clock micro-benchmark with warmup, N timed
+//!   iterations, and mean/p50/p99 reporting, used by `rust/benches/micro.rs`.
+
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Run `prop` over `cases` randomized cases drawn via `gen`.
+/// Panics with the case index + seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::seed_from_u64(seed.wrapping_add(case as u64));
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (seed {seed}): {msg}\ninput: {input:?}",
+            );
+        }
+    }
+}
+
+/// Timed measurement of one closure.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<40} {:>10.3} µs/iter  (p50 {:>9.3}, p99 {:>9.3}, n={})",
+            self.name,
+            s.mean * 1e6,
+            s.p50 * 1e6,
+            s.p99 * 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Minimal micro-benchmark runner.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 30, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f`, preventing the compiler from discarding its result.
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            summary: Summary::of(&samples),
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall(
+            "addition commutes",
+            50,
+            0,
+            |r| (r.below(1000), r.below(1000)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failures() {
+        forall(
+            "always fails eventually",
+            50,
+            0,
+            |r| r.below(10),
+            |&x| if x < 9 { Ok(()) } else { Err(format!("x = {x}")) },
+        );
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new(1, 5);
+        let r = b.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.summary.mean >= 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree utility layer.  The build is fully offline with only `xla` +
+//! `anyhow` available, so JSON, PRNG/distributions, descriptive stats and
+//! CLI parsing live here instead of crates.io.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Summary;

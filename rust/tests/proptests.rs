@@ -1,0 +1,320 @@
+//! Property tests (in-tree `testkit::forall` — proptest is unavailable
+//! offline): randomized invariants over the fused communication
+//! algorithms, the KV-cache allocator, the batcher, routing, the
+//! grammar, and the analyzer.
+
+use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::latency::{CommMode, LatencyModel, Phase};
+use mixserve::analyzer::search::{Analyzer, Objective};
+use mixserve::comm::cost::CollectiveCost;
+use mixserve::comm::fused::{dispatch_reference, fused_ag_dispatch, fused_rs_combine,
+                            rs_combine_reference, Route};
+use mixserve::comm::primitives::{synth_contrib, unfused_rs_a2a_ag};
+use mixserve::comm::world::{RankWorld, Tensor2};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use mixserve::grammar::{enumerate_strategies, parse_strategy};
+use mixserve::moe::router::{LoadStats, RouterSim};
+use mixserve::serving::batcher::{Batcher, BatcherConfig};
+use mixserve::serving::kvcache::KvCacheManager;
+use mixserve::testkit::forall;
+use mixserve::util::rng::Rng;
+use mixserve::workload::Request;
+
+fn cost() -> CollectiveCost {
+    CollectiveCost::new(&ClusterConfig::ascend910b())
+}
+
+#[test]
+fn prop_fused_rs_combine_equals_dense_reference() {
+    forall(
+        "alg1 == dense combine",
+        25,
+        11,
+        |r: &mut Rng| {
+            let n = [1, 2, 3, 4][r.below(4)];
+            let m = [1, 2, 4][r.below(3)];
+            let t = [2, 4, 8][r.below(3)];
+            let h = [4usize, 8, 16][r.below(3)] * m;
+            (n, m, t, h, r.next_u64())
+        },
+        |&(n, m, t, h, seed)| {
+            let world = RankWorld::new(n, m);
+            let contrib = synth_contrib(&world, t, h, seed);
+            let got = fused_rs_combine(&world, &contrib, &cost());
+            let want = rs_combine_reference(&world, &contrib);
+            for (g, w) in got.per_node.iter().zip(&want) {
+                if !g.approx_eq(w, 1e-3) {
+                    return Err(format!("max diff {}", g.max_abs_diff(w)));
+                }
+            }
+            if got.async_time() > got.sync_time * (1.0 + 1e-9) {
+                return Err(format!(
+                    "async {} slower than sync {}",
+                    got.async_time(),
+                    got.sync_time
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_equals_unfused_pipeline() {
+    forall(
+        "alg1 == RS->A2A->AG",
+        20,
+        13,
+        |r: &mut Rng| {
+            let n = [2, 3, 4][r.below(3)];
+            let m = [2, 4][r.below(2)];
+            (n, m, 4usize, 8usize * m, r.next_u64())
+        },
+        |&(n, m, t, h, seed)| {
+            let world = RankWorld::new(n, m);
+            let contrib = synth_contrib(&world, t, h, seed);
+            let fused = fused_rs_combine(&world, &contrib, &cost());
+            let (unfused, _) = unfused_rs_a2a_ag(&world, &contrib, &cost());
+            for (g, w) in fused.per_node.iter().zip(&unfused) {
+                if !g.approx_eq(w, 1e-3) {
+                    return Err(format!("diff {}", g.max_abs_diff(w)));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_dispatch_exact_and_token_conserving() {
+    forall(
+        "alg2 == dispatch reference; tokens conserved",
+        25,
+        17,
+        |r: &mut Rng| {
+            let n = [2, 3, 4][r.below(3)];
+            let m = [1, 2, 4][r.below(3)];
+            let t = 1 + r.below(20);
+            let h = [4usize, 8][r.below(2)] * m;
+            let route: Route =
+                (0..n).map(|_| (0..t).map(|_| r.below(n)).collect()).collect();
+            (n, m, t, h, route, r.next_u64())
+        },
+        |(n, m, t, h, route, seed)| {
+            let world = RankWorld::new(*n, *m);
+            let tokens: Vec<Tensor2> = (0..*n)
+                .map(|i| {
+                    Tensor2::from_fn(*t, *h, |r, c| {
+                        let x = seed
+                            .wrapping_mul(0x9e3779b97f4a7c15)
+                            .wrapping_add((i * 131 + r * 17 + c) as u64);
+                        ((x >> 33) % 997) as f32 / 499.0 - 1.0
+                    })
+                })
+                .collect();
+            let got = fused_ag_dispatch(&world, &tokens, route, &cost());
+            let want = dispatch_reference(&tokens, route);
+            // exact copy (dispatch moves, never sums)
+            for (g, w) in got.per_node.iter().zip(&want) {
+                if g != w {
+                    return Err("dispatch mismatch".into());
+                }
+            }
+            // token conservation: every routed token lands exactly once
+            let total_out: usize = got.per_node.iter().map(|x| x.rows).sum();
+            if total_out != n * t {
+                return Err(format!("{} rows out, expected {}", total_out, n * t));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kvcache_invariants_under_random_ops() {
+    forall(
+        "kvcache: no double-own, allocs balance",
+        40,
+        19,
+        |r: &mut Rng| {
+            let cap = 4 + r.below(60);
+            let ops: Vec<(u8, usize, usize)> = (0..80)
+                .map(|_| (r.below(3) as u8, r.below(12), 1 + r.below(200)))
+                .collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let mut kv = KvCacheManager::new(*cap, 8);
+            for (op, req, toks) in ops {
+                match op {
+                    0 | 1 => {
+                        let _ = kv.grow_to(*req, *toks);
+                    }
+                    _ => {
+                        kv.release(*req);
+                    }
+                }
+                kv.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_conserves_and_never_exceeds_batch() {
+    forall(
+        "batcher: all requests finish exactly once, batch bounded",
+        20,
+        23,
+        |r: &mut Rng| {
+            let n_req = 1 + r.below(30);
+            let max_batch = 1 + r.below(8);
+            let reqs: Vec<(usize, usize)> =
+                (0..n_req).map(|_| (1 + r.below(64), 1 + r.below(16))).collect();
+            (max_batch, reqs)
+        },
+        |(max_batch, reqs)| {
+            let mut b = Batcher::new(BatcherConfig { max_batch: *max_batch, max_seq: 128 });
+            let mut kv = KvCacheManager::new(10_000, 16);
+            for (i, (li, lo)) in reqs.iter().enumerate() {
+                b.submit(Request { id: i, arrival: 0.0, len_in: *li, len_out: *lo });
+            }
+            let mut finished = vec![0usize; reqs.len()];
+            for step in 0..10_000 {
+                let plan = b.plan(step as f64, &mut kv);
+                if plan.prefill.len() + plan.decode.len() > *max_batch {
+                    return Err("batch limit exceeded".into());
+                }
+                for id in plan.prefill {
+                    b.complete_prefill(id, step as f64);
+                }
+                for id in plan.decode {
+                    b.complete_decode_token(id, step as f64);
+                }
+                for t in b.retire(&mut kv) {
+                    finished[t.req.id] += 1;
+                }
+                if b.is_idle() {
+                    break;
+                }
+            }
+            if finished.iter().any(|&c| c != 1) {
+                return Err(format!("completion counts {finished:?}"));
+            }
+            kv.check_invariants()?;
+            if kv.used_blocks() != 0 {
+                return Err("blocks leaked after drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_router_token_conservation() {
+    forall(
+        "router: batch loads sum to tokens*k",
+        30,
+        29,
+        |r: &mut Rng| {
+            let e = [4usize, 8, 16, 32][r.below(4)];
+            let k = 1 + r.below(e.min(6));
+            (e, k, 1 + r.below(300), r.next_u64())
+        },
+        |&(e, k, tokens, seed)| {
+            let mut router = RouterSim::new(e, k, 0.6, seed);
+            let loads = router.route_batch(tokens);
+            let total: usize = loads.iter().sum();
+            if total != tokens * k {
+                return Err(format!("{total} != {}", tokens * k));
+            }
+            let st = LoadStats::from_loads(&loads, e);
+            if st.imbalance < 1.0 - 1e-9 {
+                return Err(format!("imbalance {} < 1", st.imbalance));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_grammar_roundtrip_and_validity() {
+    let clusters = [ClusterConfig::h20(), ClusterConfig::ascend910b()];
+    for c in &clusters {
+        for s in enumerate_strategies(c) {
+            assert!(s.is_valid(), "{s}");
+            let parsed = parse_strategy(&s.to_string()).unwrap_or_else(|e| {
+                panic!("roundtrip of {s} failed: {e}");
+            });
+            assert_eq!(parsed, s);
+        }
+    }
+}
+
+#[test]
+fn prop_analyzer_winner_is_argmin_over_enumeration() {
+    forall(
+        "best() == scan minimum",
+        6,
+        31,
+        |r: &mut Rng| {
+            let rate = [2.0, 4.0, 8.0][r.below(3)];
+            let model_i = r.below(2);
+            (rate, model_i)
+        },
+        |&(rate, model_i)| {
+            let model = if model_i == 0 {
+                MoEModelConfig::deepseek_r1()
+            } else {
+                MoEModelConfig::qwen3_235b()
+            };
+            let cluster = ClusterConfig::ascend910b();
+            let a = Analyzer::new(&model, &cluster, &ServingConfig::paper_eval(rate));
+            let wl = Workload::sharegpt(rate);
+            let ranked = a.rank(&wl, Objective::MinTtft);
+            if ranked.is_empty() {
+                return Err("no feasible strategy".into());
+            }
+            let min = ranked
+                .iter()
+                .map(|r| r.indicators.ttft)
+                .fold(f64::INFINITY, f64::min);
+            if (ranked[0].indicators.ttft - min).abs() > 1e-12 {
+                return Err("rank[0] is not the minimum".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_mode_never_slower_in_latency_model() {
+    forall(
+        "FusedAsync <= Sync for all hybrid strategies",
+        20,
+        37,
+        |r: &mut Rng| {
+            let batch = 1 + r.below(16);
+            let seq = 16 + r.below(2048);
+            let prefill = r.below(2) == 0;
+            (batch, seq, prefill)
+        },
+        |&(batch, seq, prefill)| {
+            let lm = LatencyModel::new(
+                &MoEModelConfig::deepseek_r1(),
+                &ClusterConfig::ascend910b(),
+            );
+            let s = mixserve::config::ParallelStrategy::mixserve(4, 8);
+            let phase = if prefill { Phase::Prefill } else { Phase::Decode };
+            let sync = lm.service_latency(&s, batch, seq, phase, CommMode::Sync).total();
+            let fused = lm
+                .service_latency(&s, batch, seq, phase, CommMode::FusedAsync)
+                .total();
+            if fused > sync * (1.0 + 1e-9) {
+                return Err(format!("fused {fused} > sync {sync} (b={batch} s={seq})"));
+            }
+            Ok(())
+        },
+    );
+}
