@@ -44,7 +44,8 @@ fn main() {
 
     // --- scheduler iteration at max batch
     b.run("batcher plan+retire 64 reqs", || {
-        let mut batcher = Batcher::new(BatcherConfig { max_batch: 16, max_seq: 4096 });
+        let mut batcher =
+            Batcher::new(BatcherConfig { max_batch: 16, max_seq: 4096, max_waiting: None });
         let mut kv = KvCacheManager::new(4096, 16);
         for i in 0..64 {
             batcher.submit(Request { id: i, arrival: 0.0, len_in: 256, len_out: 64 });

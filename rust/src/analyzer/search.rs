@@ -27,6 +27,17 @@ pub struct StrategyReport {
     pub memory: MemoryCheck,
 }
 
+/// Scalarize indicators for ranking under an objective (lower is better).
+/// Shared by [`Analyzer::rank`] and the fleet planner
+/// (`cluster::planner`), which reuses the same ordering one level up.
+pub fn objective_key(objective: Objective, ind: &Indicators) -> f64 {
+    match objective {
+        Objective::MinTtft => ind.ttft,
+        Objective::MinItl => ind.itl,
+        Objective::MaxThroughput => -ind.throughput,
+    }
+}
+
 /// The automatic analyzer.
 #[derive(Debug, Clone)]
 pub struct Analyzer {
@@ -73,13 +84,7 @@ impl Analyzer {
             .map(|s| self.report(s, wl))
             .filter(|r| r.memory.feasible() && r.indicators.ttft.is_finite())
             .collect();
-        let key = |r: &StrategyReport| -> f64 {
-            match objective {
-                Objective::MinTtft => r.indicators.ttft,
-                Objective::MinItl => r.indicators.itl,
-                Objective::MaxThroughput => -r.indicators.throughput,
-            }
-        };
+        let key = |r: &StrategyReport| objective_key(objective, &r.indicators);
         reports.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap());
         reports
     }

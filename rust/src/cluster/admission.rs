@@ -1,0 +1,152 @@
+//! SLO-aware admission control: shed a request at the fleet's front door
+//! when its *predicted* TTFT on the chosen replica would blow the
+//! deadline.
+//!
+//! The prediction composes the analytic latency model (§III-B4) with the
+//! queueing view of §III-B5: a replica drains whole requests at rate
+//! μ = max_batch / Δt_req (iteration-level batching serves `max_batch`
+//! requests concurrently), so a request joining behind a backlog of `q`
+//! requests waits ≈ q/μ before its own prefill.  Shedding early keeps the
+//! served requests' tail latency bounded instead of letting every request
+//! time out under overload.
+
+use crate::analyzer::indicators::Workload;
+use crate::analyzer::latency::{CommMode, LatencyModel, Phase};
+use crate::analyzer::queueing::{wait_with_overload, EVAL_HORIZON_S};
+use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+
+/// The service-level objective enforced at admission.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloPolicy {
+    /// shed a request when its predicted TTFT exceeds this deadline, s
+    pub ttft_deadline: f64,
+}
+
+/// Backlog-aware TTFT predictor + shedding decision.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    pub slo: SloPolicy,
+    /// whole-request service rate of one replica, req/s
+    mu: f64,
+    /// prefill latency of a mean-length prompt at full batch, s
+    prefill_base: f64,
+}
+
+impl AdmissionController {
+    pub fn new(
+        model: &MoEModelConfig,
+        replica_cluster: &ClusterConfig,
+        strategy: &ParallelStrategy,
+        serving: &ServingConfig,
+        wl: &Workload,
+        mode: CommMode,
+        slo: SloPolicy,
+    ) -> Self {
+        let lm = LatencyModel::new(model, replica_cluster);
+        let prf = lm
+            .service_latency(strategy, serving.max_batch, wl.len_in, Phase::Prefill, mode)
+            .total();
+        let ctx = wl.len_in + wl.len_out / 2;
+        let dec = lm
+            .service_latency(strategy, serving.max_batch, ctx, Phase::Decode, mode)
+            .total();
+        let req_service = prf + wl.len_out as f64 * dec;
+        let mu = serving.max_batch as f64 / req_service.max(1e-9);
+        Self { slo, mu, prefill_base: prf }
+    }
+
+    /// Estimated whole-request service rate of the replica, req/s.
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+
+    /// Predicted TTFT for a request joining a replica whose current
+    /// backlog (queued + running) is `backlog` requests: the backlog
+    /// drains at μ, then the request prefills.
+    pub fn predicted_ttft(&self, backlog: usize) -> f64 {
+        self.prefill_base + backlog as f64 / self.mu.max(1e-12)
+    }
+
+    /// Steady-state TTFT at a sustained per-replica arrival rate — the
+    /// Eq. (7)/(9) view, used to sanity-check a deadline against what the
+    /// replica can promise at all (finite even past saturation, like the
+    /// analyzer's fixed-horizon treatment).
+    pub fn steady_state_ttft(&self, rate: f64) -> f64 {
+        wait_with_overload(rate, self.mu, EVAL_HORIZON_S) + self.prefill_base
+    }
+
+    /// Admission decision for a replica with `backlog` requests ahead.
+    pub fn admit(&self, backlog: usize) -> bool {
+        self.predicted_ttft(backlog) <= self.slo.ttft_deadline
+    }
+
+    /// Largest backlog that still meets the deadline (the effective
+    /// queue bound this SLO induces).
+    pub fn max_admissible_backlog(&self) -> usize {
+        let slack = self.slo.ttft_deadline - self.prefill_base;
+        if slack <= 0.0 {
+            return 0;
+        }
+        (slack * self.mu).floor() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller(deadline: f64) -> AdmissionController {
+        AdmissionController::new(
+            &MoEModelConfig::deepseek_r1(),
+            &ClusterConfig::ascend910b(),
+            &ParallelStrategy::mixserve(4, 8),
+            &ServingConfig::paper_eval(4.0),
+            &Workload::sharegpt(4.0),
+            CommMode::FusedAsync,
+            SloPolicy { ttft_deadline: deadline },
+        )
+    }
+
+    #[test]
+    fn empty_backlog_admits_under_generous_deadline() {
+        let ac = controller(30.0);
+        assert!(ac.admit(0));
+        assert!(ac.predicted_ttft(0) > 0.0);
+    }
+
+    #[test]
+    fn prediction_grows_with_backlog() {
+        let ac = controller(30.0);
+        let t0 = ac.predicted_ttft(0);
+        let t64 = ac.predicted_ttft(64);
+        assert!(t64 > t0);
+        // backlog term is linear in μ
+        let expect = t0 + 64.0 / ac.mu();
+        assert!((t64 - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tight_deadline_sheds_deep_backlogs() {
+        let ac = controller(30.0);
+        let bound = ac.max_admissible_backlog();
+        assert!(bound > 0, "a 30s deadline must admit some backlog");
+        assert!(ac.admit(bound));
+        assert!(!ac.admit(bound + 1));
+    }
+
+    #[test]
+    fn impossible_deadline_sheds_everything() {
+        let ac = controller(1e-9);
+        assert!(!ac.admit(0));
+        assert_eq!(ac.max_admissible_backlog(), 0);
+    }
+
+    #[test]
+    fn steady_state_consistent_with_mu() {
+        let ac = controller(30.0);
+        let light = ac.steady_state_ttft(ac.mu() * 0.1);
+        let heavy = ac.steady_state_ttft(ac.mu() * 0.95);
+        assert!(light < heavy);
+        assert!(light >= ac.predicted_ttft(0) * 0.99);
+    }
+}

@@ -1,0 +1,194 @@
+//! Request routing across data-parallel replicas.
+//!
+//! The dispatcher is the fleet's front door: every arrival is assigned to
+//! exactly one replica before admission control sees it.  Policies range
+//! from oblivious (round-robin) to load-aware (join-shortest-queue,
+//! least-outstanding-tokens) to role-aware (a prefill/decode pool split —
+//! the disaggregation substitute described in DESIGN.md §Cluster).
+
+use super::replica::ReplicaSim;
+use crate::workload::Request;
+
+/// How the fleet routes arrivals to replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// cycle through replicas, oblivious to load
+    RoundRobin,
+    /// send to the replica with the fewest queued + running requests
+    JoinShortestQueue,
+    /// send to the replica owing the fewest outstanding tokens — a
+    /// work-aware refinement of JSQ for heavy-tailed lengths
+    LeastOutstandingTokens,
+    /// static pool split: prompt-heavy requests go to the first half of
+    /// the fleet, decode-heavy ones to the second half (JSQ within each
+    /// pool), isolating long prefills from latency-sensitive decoding
+    PrefillDecodeDisagg,
+}
+
+impl RoutingPolicy {
+    pub fn all() -> [RoutingPolicy; 4] {
+        [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::JoinShortestQueue,
+            RoutingPolicy::LeastOutstandingTokens,
+            RoutingPolicy::PrefillDecodeDisagg,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::JoinShortestQueue => "join-shortest-queue",
+            RoutingPolicy::LeastOutstandingTokens => "least-tokens",
+            RoutingPolicy::PrefillDecodeDisagg => "pd-disagg",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RoutingPolicy> {
+        RoutingPolicy::all().into_iter().find(|p| p.label() == s)
+    }
+}
+
+impl std::fmt::Display for RoutingPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Stateful router in front of a replica slice.
+#[derive(Debug, Clone)]
+pub struct Dispatcher {
+    pub policy: RoutingPolicy,
+    rr_next: usize,
+}
+
+impl Dispatcher {
+    pub fn new(policy: RoutingPolicy) -> Self {
+        Self { policy, rr_next: 0 }
+    }
+
+    /// Pick the target replica index for `req` given current loads.
+    /// `replicas` must be non-empty.
+    pub fn route(&mut self, req: &Request, replicas: &[ReplicaSim]) -> usize {
+        let n = replicas.len();
+        assert!(n > 0, "cannot route over an empty fleet");
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let i = self.rr_next % n;
+                self.rr_next = self.rr_next.wrapping_add(1);
+                i
+            }
+            RoutingPolicy::JoinShortestQueue => argmin(0..n, |i| replicas[i].queue_depth()),
+            RoutingPolicy::LeastOutstandingTokens => {
+                argmin(0..n, |i| replicas[i].outstanding_tokens())
+            }
+            RoutingPolicy::PrefillDecodeDisagg => {
+                if n == 1 {
+                    return 0;
+                }
+                let split = n / 2;
+                // prompt-dominant work to the prefill pool [0, split),
+                // generation-dominant work to the decode pool [split, n)
+                let (lo, hi) = if req.len_in >= req.len_out { (0, split) } else { (split, n) };
+                argmin(lo..hi, |i| replicas[i].queue_depth())
+            }
+        }
+    }
+}
+
+/// Index minimizing `key` over a non-empty range; earliest wins ties.
+fn argmin(range: std::ops::Range<usize>, key: impl Fn(usize) -> usize) -> usize {
+    range
+        .clone()
+        .min_by_key(|&i| (key(i), i))
+        .unwrap_or_else(|| panic!("argmin over empty range {range:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::latency::CommMode;
+    use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+
+    fn fleet(n: usize) -> Vec<ReplicaSim> {
+        (0..n)
+            .map(|i| {
+                ReplicaSim::new(
+                    &MoEModelConfig::deepseek_r1(),
+                    &ClusterConfig::ascend910b(),
+                    &ParallelStrategy::mixserve(4, 8),
+                    &ServingConfig::paper_eval(4.0),
+                    CommMode::FusedAsync,
+                    i as u64,
+                    i,
+                )
+            })
+            .collect()
+    }
+
+    fn req(id: usize, len_in: usize, len_out: usize) -> Request {
+        Request { id, arrival: 0.0, len_in, len_out }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let replicas = fleet(3);
+        let mut d = Dispatcher::new(RoutingPolicy::RoundRobin);
+        let picks: Vec<usize> =
+            (0..6).map(|i| d.route(&req(i, 100, 100), &replicas)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_prefers_the_empty_replica() {
+        let mut replicas = fleet(3);
+        for id in 0..4 {
+            replicas[0].submit(req(id, 100, 50));
+        }
+        replicas[1].submit(req(10, 100, 50));
+        let mut d = Dispatcher::new(RoutingPolicy::JoinShortestQueue);
+        assert_eq!(d.route(&req(20, 100, 50), &replicas), 2);
+    }
+
+    #[test]
+    fn least_tokens_sees_through_request_counts() {
+        let mut replicas = fleet(2);
+        // one giant request vs three small ones: JSQ would pick replica 0,
+        // least-tokens must pick replica 1
+        replicas[0].submit(req(0, 4000, 90));
+        for id in 1..4 {
+            replicas[1].submit(req(id, 10, 10));
+        }
+        let mut d = Dispatcher::new(RoutingPolicy::LeastOutstandingTokens);
+        assert_eq!(d.route(&req(9, 100, 100), &replicas), 1);
+        let mut jsq = Dispatcher::new(RoutingPolicy::JoinShortestQueue);
+        assert_eq!(jsq.route(&req(9, 100, 100), &replicas), 0);
+    }
+
+    #[test]
+    fn pd_split_separates_pools() {
+        let replicas = fleet(4);
+        let mut d = Dispatcher::new(RoutingPolicy::PrefillDecodeDisagg);
+        let prefill_heavy = d.route(&req(0, 2000, 50), &replicas);
+        let decode_heavy = d.route(&req(1, 50, 2000), &replicas);
+        assert!(prefill_heavy < 2, "prompt-dominant → first pool");
+        assert!(decode_heavy >= 2, "generation-dominant → second pool");
+    }
+
+    #[test]
+    fn single_replica_always_zero() {
+        let replicas = fleet(1);
+        for policy in RoutingPolicy::all() {
+            let mut d = Dispatcher::new(policy);
+            assert_eq!(d.route(&req(0, 10, 500), &replicas), 0, "{policy}");
+        }
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for p in RoutingPolicy::all() {
+            assert_eq!(RoutingPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(RoutingPolicy::parse("nope"), None);
+    }
+}

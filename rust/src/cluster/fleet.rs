@@ -1,0 +1,249 @@
+//! The fleet simulator: many data-parallel replicas behind a dispatcher
+//! and an SLO admission gate, interleaved by one discrete-event loop.
+//!
+//! This is the layer above `serving/sim.rs`'s single engine — the EP+DP
+//! production regime.  Each replica is a full serving engine on its own
+//! device pod ([`ReplicaSim`]); the fleet loop advances whichever event
+//! is earliest: the next trace arrival (routed, admission-checked, and
+//! enqueued) or the next replica iteration completion.
+
+use super::admission::{AdmissionController, SloPolicy};
+use super::dispatch::{Dispatcher, RoutingPolicy};
+use super::replica::ReplicaSim;
+use crate::analyzer::indicators::Workload;
+use crate::analyzer::latency::CommMode;
+use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use crate::serving::metrics::ServingMetrics;
+use crate::workload::Request;
+
+/// One fleet deployment: `replicas` copies of a pod running `strategy`.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub replicas: usize,
+    pub strategy: ParallelStrategy,
+    pub policy: RoutingPolicy,
+    pub mode: CommMode,
+    /// SLO admission gate; None admits everything the queues can hold
+    pub slo: Option<SloPolicy>,
+}
+
+/// Result of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub policy: RoutingPolicy,
+    pub replicas: usize,
+    pub strategy: ParallelStrategy,
+    /// pooled latency samples + counters across the fleet, including
+    /// front-door sheds
+    pub metrics: ServingMetrics,
+    pub per_replica: Vec<ServingMetrics>,
+    /// iteration-weighted mean EP straggler factor across replicas
+    pub mean_imbalance: f64,
+}
+
+/// Mean request shape of a trace (drives the admission predictor).
+pub fn trace_workload(trace: &[Request], duration: f64) -> Workload {
+    if trace.is_empty() {
+        return Workload::sharegpt(1.0);
+    }
+    let n = trace.len();
+    Workload {
+        len_in: (trace.iter().map(|r| r.len_in).sum::<usize>() / n).max(1),
+        len_out: (trace.iter().map(|r| r.len_out).sum::<usize>() / n).max(1),
+        rate: n as f64 / duration.max(1e-9),
+    }
+}
+
+/// Run `trace` through a fleet of `cfg.replicas` pods, each shaped like
+/// `replica_cluster`.  The trace is shared — arrivals are routed by the
+/// dispatcher, possibly shed by admission, and the loop runs until every
+/// admitted request completes.
+pub fn simulate_fleet(
+    model: &MoEModelConfig,
+    replica_cluster: &ClusterConfig,
+    cfg: &FleetConfig,
+    serving: &ServingConfig,
+    trace: &[Request],
+    seed: u64,
+) -> FleetReport {
+    assert!(cfg.replicas > 0, "fleet needs at least one replica");
+    let mut replicas: Vec<ReplicaSim> = (0..cfg.replicas)
+        .map(|i| {
+            ReplicaSim::new(
+                model,
+                replica_cluster,
+                &cfg.strategy,
+                serving,
+                cfg.mode,
+                seed.wrapping_add(0x9e37_79b9 * (i as u64 + 1)),
+                i,
+            )
+        })
+        .collect();
+    let mut dispatcher = Dispatcher::new(cfg.policy);
+
+    let mut arrivals = trace.to_vec();
+    arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let span = arrivals.last().map(|r| r.arrival).unwrap_or(0.0).max(1e-9);
+    let admission = cfg.slo.map(|slo| {
+        AdmissionController::new(
+            model,
+            replica_cluster,
+            &cfg.strategy,
+            serving,
+            &trace_workload(&arrivals, span),
+            cfg.mode,
+            slo,
+        )
+    });
+
+    let mut shed_front_door = 0usize;
+    let mut next = 0usize;
+    let mut now = 0.0f64;
+    loop {
+        // route arrivals due by `now`
+        while next < arrivals.len() && arrivals[next].arrival <= now {
+            let req = arrivals[next].clone();
+            next += 1;
+            let target = dispatcher.route(&req, &replicas);
+            let admitted = match &admission {
+                Some(ac) => ac.admit(replicas[target].queue_depth()),
+                None => true,
+            };
+            if admitted {
+                // queue-cap sheds are counted inside the replica
+                replicas[target].submit(req);
+            } else {
+                shed_front_door += 1;
+            }
+        }
+
+        // earliest next event across replicas and the arrival stream
+        let mut next_t = f64::INFINITY;
+        for r in replicas.iter_mut() {
+            if let Some(t) = r.step(now) {
+                next_t = next_t.min(t);
+            }
+        }
+        if next < arrivals.len() {
+            next_t = next_t.min(arrivals[next].arrival);
+        }
+        if !next_t.is_finite() {
+            break; // fully drained, no arrivals left
+        }
+        debug_assert!(next_t > now, "fleet clock must advance: {next_t} !> {now}");
+        now = next_t;
+    }
+
+    // aggregate
+    let mut agg = ServingMetrics::new();
+    let mut per_replica = Vec::with_capacity(replicas.len());
+    let (mut imb_weighted, mut iters) = (0.0f64, 0usize);
+    for r in &replicas {
+        let mut m = r.metrics.clone();
+        m.duration = now.max(1e-9);
+        agg.merge(&m);
+        imb_weighted += r.mean_imbalance() * r.iterations as f64;
+        iters += r.iterations;
+        per_replica.push(m);
+    }
+    agg.rejected += shed_front_door;
+    agg.duration = now.max(1e-9);
+    FleetReport {
+        policy: cfg.policy,
+        replicas: cfg.replicas,
+        strategy: cfg.strategy,
+        metrics: agg,
+        per_replica,
+        mean_imbalance: if iters > 0 { imb_weighted / iters as f64 } else { 1.0 },
+    }
+}
+
+/// Convenience wrapper: ShareGPT trace at `rate` for `duration` seconds
+/// through the fleet (the fleet analogue of `serving::sim::run_rate`).
+pub fn run_fleet_rate(
+    model: &MoEModelConfig,
+    replica_cluster: &ClusterConfig,
+    cfg: &FleetConfig,
+    rate: f64,
+    duration: f64,
+    seed: u64,
+) -> FleetReport {
+    let serving = ServingConfig::paper_eval(rate);
+    let trace = crate::workload::TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
+    simulate_fleet(model, replica_cluster, cfg, &serving, &trace, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(replicas: usize, policy: RoutingPolicy, slo: Option<SloPolicy>) -> FleetConfig {
+        FleetConfig {
+            replicas,
+            strategy: ParallelStrategy::mixserve(4, 8),
+            policy,
+            mode: CommMode::FusedAsync,
+            slo,
+        }
+    }
+
+    #[test]
+    fn fleet_drains_trace_completely() {
+        let model = MoEModelConfig::deepseek_r1();
+        let pod = ClusterConfig::ascend910b();
+        let trace =
+            crate::workload::TraceGen::sharegpt(8.0, 4096, 7).generate(20.0);
+        let n = trace.len();
+        let rep = simulate_fleet(
+            &model,
+            &pod,
+            &cfg(4, RoutingPolicy::JoinShortestQueue, None),
+            &ServingConfig::paper_eval(8.0),
+            &trace,
+            7,
+        );
+        assert_eq!(rep.metrics.completed + rep.metrics.rejected, n);
+        assert_eq!(rep.metrics.rejected, 0, "no SLO, no queue cap: nothing shed");
+        assert_eq!(rep.per_replica.len(), 4);
+        assert!(rep.metrics.throughput() > 0.0);
+        assert!(rep.mean_imbalance >= 1.0);
+    }
+
+    #[test]
+    fn fleet_outserves_single_replica_at_high_rate() {
+        let model = MoEModelConfig::deepseek_r1();
+        let pod = ClusterConfig::ascend910b();
+        let one = run_fleet_rate(
+            &model, &pod, &cfg(1, RoutingPolicy::JoinShortestQueue, None), 16.0, 20.0, 7,
+        );
+        let four = run_fleet_rate(
+            &model, &pod, &cfg(4, RoutingPolicy::JoinShortestQueue, None), 16.0, 20.0, 7,
+        );
+        assert!(
+            four.metrics.ttft_summary().mean < one.metrics.ttft_summary().mean,
+            "4 pods {:.3}s !< 1 pod {:.3}s",
+            four.metrics.ttft_summary().mean,
+            one.metrics.ttft_summary().mean
+        );
+    }
+
+    #[test]
+    fn slo_sheds_under_overload_and_bounds_ttft() {
+        let model = MoEModelConfig::deepseek_r1();
+        let pod = ClusterConfig::ascend910b();
+        let slo = SloPolicy { ttft_deadline: 8.0 };
+        let jsq = RoutingPolicy::JoinShortestQueue;
+        let open = run_fleet_rate(&model, &pod, &cfg(2, jsq, None), 24.0, 30.0, 3);
+        let gated = run_fleet_rate(&model, &pod, &cfg(2, jsq, Some(slo)), 24.0, 30.0, 3);
+        assert!(gated.metrics.rejected > 0, "overload must trigger shedding");
+        // shed requests never get a first token: sample counts stay consistent
+        assert_eq!(gated.metrics.ttft.len(), gated.metrics.completed);
+        assert!(
+            gated.metrics.ttft_summary().p99 <= open.metrics.ttft_summary().p99,
+            "shedding must not worsen served-tail TTFT: gated {:.2}s vs open {:.2}s",
+            gated.metrics.ttft_summary().p99,
+            open.metrics.ttft_summary().p99
+        );
+    }
+}

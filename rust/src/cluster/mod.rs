@@ -1,0 +1,32 @@
+//! Cluster fleet subsystem: multi-replica data-parallel serving above the
+//! single-engine simulation (DESIGN.md §Cluster).
+//!
+//! The paper's analyzer answers the *intra-replica* question — the best
+//! TP-EP strategy for one engine.  Production MoE serving runs many such
+//! engines as data-parallel replicas behind a request router (the EP+DP
+//! regime).  This module adds that layer:
+//!
+//! * [`replica`] — one engine as a discrete-event stepper
+//!   ([`replica::ReplicaSim`]), the refactored core of `serving/sim.rs`;
+//! * [`dispatch`] — the fleet's front-door router
+//!   ([`dispatch::RoutingPolicy`]: round-robin, join-shortest-queue,
+//!   least-outstanding-tokens, prefill/decode pool split);
+//! * [`admission`] — SLO-aware shedding from predicted TTFT
+//!   (latency model + queueing backlog drain);
+//! * [`fleet`] — the discrete-event loop interleaving all replicas;
+//! * [`planner`] — joint (replica count × strategy) search under a
+//!   device budget, extending `analyzer::search` one level up;
+//! * [`sweep`] — the paperbench-style policy × traffic-pattern table.
+
+pub mod admission;
+pub mod dispatch;
+pub mod fleet;
+pub mod planner;
+pub mod replica;
+pub mod sweep;
+
+pub use admission::{AdmissionController, SloPolicy};
+pub use dispatch::{Dispatcher, RoutingPolicy};
+pub use fleet::{run_fleet_rate, simulate_fleet, FleetConfig, FleetReport};
+pub use planner::{carve_replicas, FleetPlan, FleetPlanner};
+pub use replica::ReplicaSim;

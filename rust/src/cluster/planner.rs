@@ -1,0 +1,249 @@
+//! Fleet planner: jointly choose the replica count and the per-replica
+//! parallel strategy for a target arrival rate under a fixed device
+//! budget.
+//!
+//! The paper's analyzer (§III-A) answers "best strategy for *this*
+//! cluster"; the planner extends that search one level up: partition the
+//! budget cluster into `r` equal pods (along node boundaries first, then
+//! within nodes), run the analyzer on each pod shape at the per-replica
+//! rate share, and rank the (r × strategy) points by fleet throughput.
+//! Scale-up (one big replica, cheap intra-replica comm) trades against
+//! scale-out (more replicas, smaller comm domains, more aggregate batch
+//! slots) exactly as in the DP/EP trade-off of §III-B3 — the planner makes
+//! the choice quantitative.
+
+use crate::analyzer::indicators::{Indicators, Workload};
+use crate::analyzer::latency::CommMode;
+use crate::analyzer::search::{objective_key, Analyzer, Objective};
+use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+
+/// One point of the joint search.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub replicas: usize,
+    /// the pod each replica runs on (an even carve of the budget)
+    pub replica_cluster: ClusterConfig,
+    pub strategy: ParallelStrategy,
+    /// per-replica indicators at rate/replicas
+    pub indicators: Indicators,
+    /// fleet-level tokens/s: replicas × per-replica Θ
+    pub total_throughput: f64,
+}
+
+/// Carve the budget cluster into `r` equal replica pods.  Splits along
+/// node boundaries when `r` divides the node count, else within nodes
+/// when each node can host a whole number of replicas; None when the
+/// split is uneven (those replica counts are simply not in the search
+/// space — no fractional pods).
+pub fn carve_replicas(budget: &ClusterConfig, r: usize) -> Option<ClusterConfig> {
+    if r == 0 {
+        return None;
+    }
+    if budget.n_nodes % r == 0 {
+        return Some(ClusterConfig {
+            name: format!("{}/r{r}", budget.name),
+            n_nodes: budget.n_nodes / r,
+            ..budget.clone()
+        });
+    }
+    if r % budget.n_nodes == 0 {
+        let per_node = r / budget.n_nodes;
+        if per_node <= budget.gpus_per_node && budget.gpus_per_node % per_node == 0 {
+            return Some(ClusterConfig {
+                name: format!("{}/r{r}", budget.name),
+                n_nodes: 1,
+                gpus_per_node: budget.gpus_per_node / per_node,
+                ..budget.clone()
+            });
+        }
+    }
+    None
+}
+
+/// The joint (replica count × strategy) planner over a device budget.
+#[derive(Debug, Clone)]
+pub struct FleetPlanner {
+    pub model: MoEModelConfig,
+    pub budget: ClusterConfig,
+    pub serving: ServingConfig,
+    pub mode: CommMode,
+}
+
+impl FleetPlanner {
+    pub fn new(model: &MoEModelConfig, budget: &ClusterConfig, serving: &ServingConfig) -> Self {
+        Self {
+            model: model.clone(),
+            budget: budget.clone(),
+            serving: serving.clone(),
+            mode: CommMode::FusedAsync,
+        }
+    }
+
+    pub fn with_mode(mut self, mode: CommMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// All feasible (replicas × strategy) points for `rate`, ranked by
+    /// fleet throughput (best first).  Replica counts are powers of two
+    /// up to the device budget; memory-infeasible pods fall out because
+    /// the per-pod analyzer finds no strategy for them.
+    pub fn plan(&self, rate: f64) -> Vec<FleetPlan> {
+        let mut out = Vec::new();
+        let mut r = 1usize;
+        while r <= self.budget.total_devices() {
+            if let Some(pod) = carve_replicas(&self.budget, r) {
+                let analyzer =
+                    Analyzer::new(&self.model, &pod, &self.serving).with_mode(self.mode);
+                let wl = Workload::sharegpt(rate / r as f64);
+                if let Some(best) = analyzer.best(&wl, Objective::MaxThroughput) {
+                    out.push(FleetPlan {
+                        replicas: r,
+                        replica_cluster: pod,
+                        strategy: best.strategy,
+                        indicators: best.indicators,
+                        total_throughput: best.indicators.throughput * r as f64,
+                    });
+                }
+            }
+            r *= 2;
+        }
+        out.sort_by(|a, b| {
+            b.total_throughput
+                .partial_cmp(&a.total_throughput)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| {
+                    // tie-break: prefer the plan with the better per-replica
+                    // TTFT (same scalarization the analyzer uses)
+                    objective_key(Objective::MinTtft, &a.indicators)
+                        .partial_cmp(&objective_key(Objective::MinTtft, &b.indicators))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+        });
+        out
+    }
+
+    /// The winning point, if any pod shape is feasible at all.
+    pub fn best(&self, rate: f64) -> Option<FleetPlan> {
+        self.plan(rate).into_iter().next()
+    }
+
+    /// Render the ranked plan as a table (CLI + fleet sweep output).
+    pub fn render(&self, rate: f64) -> String {
+        let plans = self.plan(rate);
+        let mut out = format!(
+            "fleet plan — {} under a {}-device budget ({}) @ {rate} req/s\n\
+             {:<4} {:<14} {:<36} {:>10} {:>9} {:>12}\n",
+            self.model.name,
+            self.budget.total_devices(),
+            self.budget.name,
+            "R",
+            "pod",
+            "per-replica strategy",
+            "TTFT(ms)",
+            "ITL(ms)",
+            "fleet tok/s"
+        );
+        for p in &plans {
+            let pod = format!("{}x{}", p.replica_cluster.n_nodes, p.replica_cluster.gpus_per_node);
+            out.push_str(&format!(
+                "{:<4} {:<14} {:<36} {:>10.1} {:>9.2} {:>12.1}\n",
+                p.replicas,
+                pod,
+                p.strategy,
+                p.indicators.ttft * 1e3,
+                p.indicators.itl * 1e3,
+                p.total_throughput
+            ));
+        }
+        if plans.is_empty() {
+            out.push_str("(no feasible pod shape under this budget)\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner(model: MoEModelConfig) -> FleetPlanner {
+        FleetPlanner::new(&model, &ClusterConfig::ascend910b(), &ServingConfig::paper_eval(8.0))
+    }
+
+    #[test]
+    fn carve_splits_nodes_then_devices() {
+        let budget = ClusterConfig::ascend910b(); // 4 x 8
+        let r2 = carve_replicas(&budget, 2).unwrap();
+        assert_eq!((r2.n_nodes, r2.gpus_per_node), (2, 8));
+        let r8 = carve_replicas(&budget, 8).unwrap();
+        assert_eq!((r8.n_nodes, r8.gpus_per_node), (1, 4));
+        let r32 = carve_replicas(&budget, 32).unwrap();
+        assert_eq!((r32.n_nodes, r32.gpus_per_node), (1, 1));
+        assert!(carve_replicas(&budget, 3).is_none(), "uneven splits rejected");
+        assert!(carve_replicas(&budget, 0).is_none());
+    }
+
+    #[test]
+    fn carve_conserves_devices() {
+        let budget = ClusterConfig::ascend910b();
+        for r in [1usize, 2, 4, 8, 16, 32] {
+            let pod = carve_replicas(&budget, r).unwrap();
+            assert_eq!(pod.total_devices() * r, budget.total_devices(), "r={r}");
+        }
+    }
+
+    #[test]
+    fn joint_optimum_never_worse_than_single_replica() {
+        for model in [MoEModelConfig::deepseek_r1(), MoEModelConfig::qwen3_235b()] {
+            let p = planner(model.clone());
+            let plans = p.plan(8.0);
+            let best = plans.first().expect("budget cluster itself must be feasible");
+            let single = plans
+                .iter()
+                .find(|pl| pl.replicas == 1)
+                .expect("r=1 must be in the search space");
+            assert!(
+                best.total_throughput >= single.total_throughput,
+                "{}: joint {:.1} < single {:.1}",
+                model.name,
+                best.total_throughput,
+                single.total_throughput
+            );
+        }
+    }
+
+    #[test]
+    fn memory_prunes_small_pods_for_deepseek() {
+        // 671B @ bf16 cannot fit an 8-device (1/4-budget) pod: those
+        // replica counts must be absent, not mispredicted
+        let p = planner(MoEModelConfig::deepseek_r1());
+        let plans = p.plan(8.0);
+        assert!(plans.iter().all(|pl| pl.replicas <= 2), "{:?}", plans
+            .iter()
+            .map(|pl| pl.replicas)
+            .collect::<Vec<_>>());
+        assert!(plans.iter().any(|pl| pl.replicas == 1));
+    }
+
+    #[test]
+    fn qwen_budget_admits_scale_out() {
+        // 235B fits half the budget: the planner must surface a
+        // multi-replica option for the smaller model
+        let p = planner(MoEModelConfig::qwen3_235b());
+        let plans = p.plan(8.0);
+        assert!(
+            plans.iter().any(|pl| pl.replicas > 1),
+            "expected a scale-out point, got {:?}",
+            plans.iter().map(|pl| pl.replicas).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn render_lists_ranked_plans() {
+        let p = planner(MoEModelConfig::qwen3_235b());
+        let s = p.render(8.0);
+        assert!(s.contains("fleet plan"));
+        assert!(s.contains("fleet tok/s"));
+    }
+}

@@ -1,0 +1,145 @@
+//! Fleet policy-comparison sweep (paperbench-style): every routing policy
+//! under every traffic pattern, on one fleet shape, one table.
+//!
+//! This is the experiment the paper's single-replica evaluation cannot
+//! express: under bursty and diurnal load the oblivious router's tail
+//! TTFT degrades while load-aware policies absorb the transients (the
+//! fleet-level analogue of Fig. 10's system comparison).
+
+use super::admission::SloPolicy;
+use super::dispatch::RoutingPolicy;
+use super::fleet::{simulate_fleet, FleetConfig};
+use crate::analyzer::latency::CommMode;
+use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use crate::workload::{Request, TraceGen};
+
+/// One (pattern × policy) measurement.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub pattern: String,
+    pub policy: RoutingPolicy,
+    pub completed: usize,
+    pub ttft_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub itl_ms: f64,
+    pub throughput: f64,
+    pub rejection_pct: f64,
+}
+
+/// The sweep's traffic patterns: steady Poisson, 4x bursts, and a
+/// day/night cycle (all mean-preserving at `rate`).
+pub fn traces(rate: f64, max_seq: usize, duration: f64, seed: u64) -> Vec<(String, Vec<Request>)> {
+    vec![
+        (
+            "poisson".to_string(),
+            TraceGen::sharegpt(rate, max_seq, seed).generate(duration),
+        ),
+        (
+            "bursty".to_string(),
+            TraceGen::bursty(rate, max_seq, seed, 4.0, 10.0, 0.25).generate(duration),
+        ),
+        (
+            "diurnal".to_string(),
+            TraceGen::diurnal(rate, max_seq, seed, 0.8, (duration / 2.0).max(10.0))
+                .generate(duration),
+        ),
+    ]
+}
+
+/// Run every routing policy over every traffic pattern.  All runs share
+/// the same traces, fleet shape, and strategy, so rows differ only by the
+/// decision under test.
+#[allow(clippy::too_many_arguments)]
+pub fn policy_sweep(
+    model: &MoEModelConfig,
+    replica_cluster: &ClusterConfig,
+    strategy: &ParallelStrategy,
+    replicas: usize,
+    rate: f64,
+    duration: f64,
+    seed: u64,
+    slo: Option<SloPolicy>,
+) -> Vec<SweepRow> {
+    let serving = ServingConfig::paper_eval(rate);
+    let mut rows = Vec::new();
+    for (pattern, trace) in traces(rate, serving.max_seq, duration, seed) {
+        for policy in RoutingPolicy::all() {
+            let cfg = FleetConfig {
+                replicas,
+                strategy: *strategy,
+                policy,
+                mode: CommMode::FusedAsync,
+                slo,
+            };
+            let rep = simulate_fleet(model, replica_cluster, &cfg, &serving, &trace, seed);
+            let t = rep.metrics.ttft_summary();
+            let i = rep.metrics.itl_summary();
+            rows.push(SweepRow {
+                pattern: pattern.clone(),
+                policy,
+                completed: rep.metrics.completed,
+                ttft_ms: t.mean * 1e3,
+                ttft_p99_ms: t.p99 * 1e3,
+                itl_ms: i.mean * 1e3,
+                throughput: rep.metrics.throughput(),
+                rejection_pct: rep.metrics.rejection_rate() * 100.0,
+            });
+        }
+    }
+    rows
+}
+
+/// Render the sweep as a table grouped by pattern.
+pub fn render(rows: &[SweepRow]) -> String {
+    let mut out = format!(
+        "fleet policy sweep — TTFT / ITL / throughput / shed per routing policy\n\
+         {:<10} {:<20} {:>6} {:>10} {:>10} {:>9} {:>10} {:>7}\n",
+        "pattern", "policy", "done", "TTFT(ms)", "p99", "ITL(ms)", "tok/s", "shed%"
+    );
+    let mut last = String::new();
+    for r in rows {
+        if r.pattern != last && !last.is_empty() {
+            out.push('\n');
+        }
+        last = r.pattern.clone();
+        out.push_str(&format!(
+            "{:<10} {:<20} {:>6} {:>10.1} {:>10.1} {:>9.2} {:>10.1} {:>7.1}\n",
+            r.pattern,
+            r.policy.label(),
+            r.completed,
+            r.ttft_ms,
+            r.ttft_p99_ms,
+            r.itl_ms,
+            r.throughput,
+            r.rejection_pct
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_patterns_x_policies() {
+        let rows = policy_sweep(
+            &MoEModelConfig::deepseek_r1(),
+            &ClusterConfig::ascend910b(),
+            &ParallelStrategy::mixserve(4, 8),
+            2,
+            6.0,
+            15.0,
+            7,
+            None,
+        );
+        assert_eq!(rows.len(), 3 * RoutingPolicy::all().len());
+        let rendered = render(&rows);
+        assert!(rendered.contains("bursty"));
+        assert!(rendered.contains("join-shortest-queue"));
+        assert!(rendered.contains("diurnal"));
+        for r in &rows {
+            assert!(r.completed > 0, "{}/{} served nothing", r.pattern, r.policy);
+        }
+    }
+}

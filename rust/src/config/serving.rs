@@ -13,6 +13,9 @@ pub struct ServingConfig {
     pub kv_block_tokens: usize,
     /// scheduling quantum: decode iterations between scheduler passes
     pub sched_interval: usize,
+    /// admission cap on the waiting queue (None = unbounded); arrivals
+    /// beyond the cap are shed and counted in `ServingMetrics::rejected`
+    pub queue_cap: Option<usize>,
 }
 
 impl Default for ServingConfig {
@@ -23,6 +26,7 @@ impl Default for ServingConfig {
             request_rate: 4.0,
             kv_block_tokens: 16,
             sched_interval: 1,
+            queue_cap: None,
         }
     }
 }

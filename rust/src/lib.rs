@@ -8,6 +8,7 @@
 
 pub mod analyzer;
 pub mod baselines;
+pub mod cluster;
 pub mod comm;
 pub mod config;
 pub mod gantt;

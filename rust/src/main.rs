@@ -4,19 +4,25 @@
 //!   analyze   run the automatic analyzer and print the ranked strategies
 //!   serve     serve a synthetic trace on the real PJRT runtime (tiny model)
 //!   simulate  paper-scale serving simulation for one system config
+//!   fleet     multi-replica DP serving: per-policy TTFT/ITL/throughput/shed
+//!   plan      joint (replica count x strategy) search under a device budget
+//!   fleetsweep  routing policy x traffic pattern comparison table
 //!   fig3|fig4|fig10|fig11|fig12|table1   regenerate a paper artifact
 
 use anyhow::{bail, Result};
 use mixserve::analyzer::indicators::Workload;
 use mixserve::analyzer::search::{Analyzer, Objective};
 use mixserve::baselines::all_systems;
+use mixserve::cluster::sweep::{policy_sweep, render as render_sweep};
+use mixserve::cluster::{simulate_fleet, FleetConfig, FleetPlanner, RoutingPolicy, SloPolicy};
 use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use mixserve::grammar::parse_strategy;
 use mixserve::paperbench::{fig10, fig11, fig12, fig3, fig4, table1};
 use mixserve::runtime::Engine;
 use mixserve::serving::engine::RealEngine;
 use mixserve::serving::sim::run_rate;
 use mixserve::util::cli::Args;
-use mixserve::workload::TraceGen;
+use mixserve::workload::{ArrivalPattern, TraceGen};
 
 fn cluster_by_name(name: &str) -> Result<ClusterConfig> {
     Ok(match name {
@@ -54,7 +60,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     for r in analyzer.rank(&wl, Objective::MaxThroughput).iter().take(top) {
         println!(
             "{:<36} {:>10.1} {:>9.2} {:>10.1} {:>8.2} {:>10.1}",
-            r.strategy.to_string(),
+            r.strategy,
             r.indicators.ttft * 1e3,
             r.indicators.itl * 1e3,
             r.indicators.throughput,
@@ -75,7 +81,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let duration = args.f64_or("duration", 10.0);
     let engine = Engine::new(&root)?;
     println!("PJRT platform: {}", engine.platform());
-    let mut server = RealEngine::new(&engine, &model)?;
+    let queue_cap = args.get("queue-cap").and_then(|s| s.parse().ok());
+    let mut server = RealEngine::with_queue_cap(&engine, &model, queue_cap)?;
     let trace =
         TraceGen::sharegpt(rate, server.runner.max_seq, args.usize_or("seed", 0) as u64)
             .generate(duration);
@@ -104,6 +111,166 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn pattern_from_args(args: &Args, duration: f64) -> Result<ArrivalPattern> {
+    Ok(match args.get_or("pattern", "poisson").as_str() {
+        "poisson" | "constant" => ArrivalPattern::Constant,
+        "bursty" => {
+            let amplitude = args.f64_or("burst-amp", 4.0);
+            let period = args.f64_or("burst-period", 10.0);
+            let duty = args.f64_or("burst-duty", 0.25);
+            if amplitude < 1.0 || period <= 0.0 || duty <= 0.0 || duty >= 1.0 {
+                bail!("bursty needs --burst-amp >= 1, --burst-period > 0, --burst-duty in (0, 1)");
+            }
+            if amplitude * duty > 1.0 {
+                bail!(
+                    "--burst-amp {amplitude} x --burst-duty {duty} > 1: the off-burst rate \
+                     would go negative (lower one of them)"
+                );
+            }
+            ArrivalPattern::Bursty { amplitude, period, duty }
+        }
+        "diurnal" => {
+            let depth = args.f64_or("diurnal-depth", 0.8);
+            let period = args.f64_or("diurnal-period", (duration / 2.0).max(10.0));
+            if !(0.0..1.0).contains(&depth) || period <= 0.0 {
+                bail!("diurnal needs --diurnal-depth in [0, 1) and --diurnal-period > 0");
+            }
+            ArrivalPattern::Diurnal { depth, period }
+        }
+        other => bail!("unknown pattern {other:?} (poisson | bursty | diurnal)"),
+    })
+}
+
+/// Common setup shared by the `fleet` and `fleetsweep` subcommands.
+struct FleetArgs {
+    pod: ClusterConfig,
+    model: MoEModelConfig,
+    rate: f64,
+    duration: f64,
+    replicas: usize,
+    seed: u64,
+    serving: ServingConfig,
+    slo: Option<SloPolicy>,
+    strategy: mixserve::config::ParallelStrategy,
+}
+
+fn fleet_args(args: &Args, default_rate: f64) -> Result<FleetArgs> {
+    let pod = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+    let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+    let rate = args.f64_or("rate", default_rate);
+    let duration = args.f64_or("duration", 60.0);
+    let replicas = args.usize_or("replicas", 4).max(1);
+    let seed = args.usize_or("seed", 7) as u64;
+    let serving = ServingConfig::paper_eval(rate);
+    let slo_ttft = args.f64_or("slo-ttft", 0.0);
+    let slo = (slo_ttft > 0.0).then_some(SloPolicy { ttft_deadline: slo_ttft });
+    let strategy = fleet_strategy(args, &model, &pod, &serving, rate / replicas as f64)?;
+    Ok(FleetArgs { pod, model, rate, duration, replicas, seed, serving, slo, strategy })
+}
+
+/// Per-replica strategy: explicit `--strategy "TP=8 + DP=4, TP=8 + EP=4"`,
+/// else the analyzer's optimum for the pod at the per-replica rate share.
+fn fleet_strategy(
+    args: &Args,
+    model: &MoEModelConfig,
+    pod: &ClusterConfig,
+    serving: &ServingConfig,
+    per_replica_rate: f64,
+) -> Result<mixserve::config::ParallelStrategy> {
+    if let Some(s) = args.get("strategy") {
+        return parse_strategy(s).map_err(|e| anyhow::anyhow!(e));
+    }
+    let analyzer = Analyzer::new(model, pod, serving);
+    let wl = Workload::sharegpt(per_replica_rate);
+    analyzer
+        .best(&wl, Objective::MaxThroughput)
+        .map(|r| r.strategy)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no feasible strategy for {} on pod {} — try a larger pod",
+                model.name,
+                pod.name
+            )
+        })
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let fa = fleet_args(args, 32.0)?;
+    let pattern = pattern_from_args(args, fa.duration)?;
+    let trace = TraceGen::sharegpt(fa.rate, fa.serving.max_seq, fa.seed)
+        .with_pattern(pattern)
+        .generate(fa.duration);
+
+    println!(
+        "fleet: {} x {} pods of {}, {} per replica\n\
+         {} requests @ {} req/s over {}s ({:?}){}",
+        fa.replicas,
+        fa.pod.name,
+        fa.model.name,
+        fa.strategy,
+        trace.len(),
+        fa.rate,
+        fa.duration,
+        pattern,
+        fa.slo.map(|s| format!(", SLO TTFT <= {}s", s.ttft_deadline)).unwrap_or_default()
+    );
+    for policy in RoutingPolicy::all() {
+        let cfg = FleetConfig {
+            replicas: fa.replicas,
+            strategy: fa.strategy,
+            policy,
+            mode: mixserve::analyzer::latency::CommMode::FusedAsync,
+            slo: fa.slo,
+        };
+        let rep = simulate_fleet(&fa.model, &fa.pod, &cfg, &fa.serving, &trace, fa.seed);
+        let t = rep.metrics.ttft_summary();
+        let i = rep.metrics.itl_summary();
+        println!(
+            "{:<20} TTFT {:>7.1}ms (p99 {:>8.1}) | ITL {:>6.2}ms | {:>8.1} tok/s | shed {:>5.1}%",
+            policy.label(),
+            t.mean * 1e3,
+            t.p99 * 1e3,
+            i.mean * 1e3,
+            rep.metrics.throughput(),
+            rep.metrics.rejection_rate() * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let budget = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+    let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+    let rate = args.f64_or("rate", 8.0);
+    let planner = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(rate));
+    print!("{}", planner.render(rate));
+    if let Some(best) = planner.best(rate) {
+        println!(
+            "\noptimal fleet: {} x ({}) on {}-device pods",
+            best.replicas,
+            best.strategy,
+            best.replica_cluster.total_devices()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fleetsweep(args: &Args) -> Result<()> {
+    let fa = fleet_args(args, 16.0)?;
+    let rows = policy_sweep(
+        &fa.model,
+        &fa.pod,
+        &fa.strategy,
+        fa.replicas,
+        fa.rate,
+        fa.duration,
+        fa.seed,
+        fa.slo,
+    );
+    print!("{}", render_sweep(&rows));
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -111,6 +278,9 @@ fn main() -> Result<()> {
         "analyze" => cmd_analyze(&args)?,
         "serve" => cmd_serve(&args)?,
         "simulate" => cmd_simulate(&args)?,
+        "fleet" => cmd_fleet(&args)?,
+        "plan" => cmd_plan(&args)?,
+        "fleetsweep" => cmd_fleetsweep(&args)?,
         "fig3" => {
             let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
             print!("{}", fig3::run(&c));
@@ -142,7 +312,15 @@ fn main() -> Result<()> {
                  commands:\n\
                  \x20 analyze   [--model M] [--cluster C] [--rate R] [--top N]\n\
                  \x20 serve     [--artifacts DIR] [--model tiny] [--rate R] [--duration S]\n\
+                 \x20           [--queue-cap N]\n\
                  \x20 simulate  [--model M] [--cluster C] [--rate R] [--duration S]\n\
+                 \x20 fleet     [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
+                 \x20           [--duration S] [--pattern poisson|bursty|diurnal]\n\
+                 \x20           [--slo-ttft S] [--strategy \"TP=8 + DP=4, TP=8 + EP=4\"]\n\
+                 \x20           (each replica runs on its own POD-shaped device pool)\n\
+                 \x20 plan      [--model M] [--cluster BUDGET] [--rate R]\n\
+                 \x20           (carve one device budget into replicas x strategy)\n\
+                 \x20 fleetsweep  [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
                  \x20 fig3|fig4|fig10|fig11|fig12|table1   regenerate paper artifacts\n\n\
                  models: deepseek-r1 qwen3 tiny | clusters: h20 ascend910b localhost"
             );

@@ -2,6 +2,7 @@
 //! artifacts, with a per-artifact executable cache.
 
 use super::artifacts::ArtifactStore;
+use super::xla;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -10,6 +10,7 @@
 pub mod artifacts;
 pub mod client;
 pub mod model_runner;
+pub mod xla;
 
 pub use artifacts::{ArtifactEntry, ArtifactStore, ModelInfo};
 pub use client::Engine;

@@ -3,6 +3,7 @@
 //! batches, and maintains per-slot KV caches on the host.
 
 use super::client::{literal_f32, literal_i32, Engine};
+use super::xla;
 use anyhow::{anyhow, Result};
 
 /// Per-request KV cache: host copies of `[smax, L, nh, hd]` K and V plus

@@ -15,6 +15,10 @@ use std::collections::VecDeque;
 pub struct BatcherConfig {
     pub max_batch: usize,
     pub max_seq: usize,
+    /// admission cap on the waiting queue (None = unbounded).  Arrivals
+    /// beyond the cap are shed at `submit` and must be counted by the
+    /// caller into `ServingMetrics::rejected`.
+    pub max_waiting: Option<usize>,
 }
 
 /// Request lifecycle state tracked by the batcher.
@@ -57,7 +61,14 @@ impl Batcher {
         Self { cfg, waiting: VecDeque::new(), running: Vec::new() }
     }
 
-    pub fn submit(&mut self, req: Request) {
+    /// Enqueue a request.  Returns false (request shed, nothing enqueued)
+    /// when the waiting queue is at its admission cap.
+    pub fn submit(&mut self, req: Request) -> bool {
+        if let Some(cap) = self.cfg.max_waiting {
+            if self.waiting.len() >= cap {
+                return false;
+            }
+        }
         self.waiting.push_back(TrackedRequest {
             req,
             phase: ReqPhase::Waiting,
@@ -65,6 +76,7 @@ impl Batcher {
             first_token_at: None,
             last_token_at: None,
         });
+        true
     }
 
     pub fn waiting_len(&self) -> usize {
@@ -77,6 +89,42 @@ impl Batcher {
 
     pub fn is_idle(&self) -> bool {
         self.waiting.is_empty() && self.running.is_empty()
+    }
+
+    /// Mean current context length (prompt + tokens generated so far) of
+    /// the requests in decode — the `s` the decode latency model should
+    /// see.  0 when nothing is decoding.
+    pub fn mean_decode_context(&self) -> usize {
+        let (mut sum, mut n) = (0usize, 0usize);
+        for t in &self.running {
+            if let ReqPhase::Decoding { generated } = &t.phase {
+                sum += t.req.len_in + *generated;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0
+        } else {
+            sum / n
+        }
+    }
+
+    /// Tokens this replica still owes its queued + running requests
+    /// (un-prefilled prompts plus unexpended generation budgets) — the
+    /// load signal behind least-outstanding-tokens routing.
+    pub fn outstanding_tokens(&self) -> usize {
+        let mut total = 0usize;
+        for t in &self.waiting {
+            total += t.req.len_in + t.req.len_out;
+        }
+        for t in &self.running {
+            total += match &t.phase {
+                ReqPhase::Waiting | ReqPhase::Prefilling => t.req.len_in + t.req.len_out,
+                ReqPhase::Decoding { generated } => t.req.len_out.saturating_sub(*generated),
+                ReqPhase::Done => 0,
+            };
+        }
+        total
     }
 
     pub fn get(&self, id: usize) -> Option<&TrackedRequest> {
@@ -165,7 +213,7 @@ mod tests {
 
     fn setup(cap_blocks: usize) -> (Batcher, KvCacheManager) {
         (
-            Batcher::new(BatcherConfig { max_batch: 4, max_seq: 64 }),
+            Batcher::new(BatcherConfig { max_batch: 4, max_seq: 64, max_waiting: None }),
             KvCacheManager::new(cap_blocks, 16),
         )
     }
@@ -216,6 +264,57 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert!(b.is_idle());
         assert_eq!(kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn queue_cap_sheds_overflow() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 2,
+            max_seq: 64,
+            max_waiting: Some(3),
+        });
+        let mut accepted = 0;
+        for i in 0..10 {
+            if b.submit(req(i, 8, 4)) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 3);
+        assert_eq!(b.waiting_len(), 3);
+        // draining the queue reopens admission
+        let mut kv = KvCacheManager::new(64, 16);
+        b.plan(0.0, &mut kv);
+        assert!(b.submit(req(10, 8, 4)), "slots freed by admission");
+    }
+
+    #[test]
+    fn decode_context_tracks_generation() {
+        let (mut b, mut kv) = setup(64);
+        b.submit(req(0, 16, 8));
+        b.submit(req(1, 32, 8));
+        assert_eq!(b.mean_decode_context(), 0, "nothing decoding yet");
+        let p = b.plan(0.0, &mut kv);
+        assert_eq!(p.prefill, vec![0, 1]);
+        b.complete_prefill(0, 1.0);
+        b.complete_prefill(1, 1.0);
+        // both have generated 1 token: contexts 17 and 33, mean 25
+        assert_eq!(b.mean_decode_context(), 25);
+        b.complete_decode_token(0, 2.0);
+        b.complete_decode_token(1, 2.0);
+        assert_eq!(b.mean_decode_context(), 26);
+    }
+
+    #[test]
+    fn outstanding_tokens_decreases_with_progress() {
+        let (mut b, mut kv) = setup(64);
+        b.submit(req(0, 16, 4));
+        assert_eq!(b.outstanding_tokens(), 20);
+        b.plan(0.0, &mut kv);
+        b.complete_prefill(0, 1.0);
+        // prompt prefilled + first token out: 3 decode tokens owed
+        assert_eq!(b.outstanding_tokens(), 3);
+        b.complete_decode_token(0, 2.0);
+        assert_eq!(b.outstanding_tokens(), 2);
     }
 
     #[test]

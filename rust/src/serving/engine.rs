@@ -26,6 +26,17 @@ pub struct RealEngine<'a> {
 
 impl<'a> RealEngine<'a> {
     pub fn new(engine: &'a Engine, model: &str) -> Result<Self> {
+        Self::with_queue_cap(engine, model, None)
+    }
+
+    /// Like [`RealEngine::new`] but with an admission cap on the waiting
+    /// queue (the real-runtime analogue of `ServingConfig::queue_cap`);
+    /// shed arrivals are counted in the serve metrics' `rejected`.
+    pub fn with_queue_cap(
+        engine: &'a Engine,
+        model: &str,
+        queue_cap: Option<usize>,
+    ) -> Result<Self> {
         let runner = TinyMoERunner::load(engine, model)?;
         let max_batch = runner.max_decode_batch();
         let max_seq = runner.max_seq;
@@ -34,7 +45,7 @@ impl<'a> RealEngine<'a> {
         Ok(Self {
             engine,
             runner,
-            batcher: Batcher::new(BatcherConfig { max_batch, max_seq }),
+            batcher: Batcher::new(BatcherConfig { max_batch, max_seq, max_waiting: queue_cap }),
             kv,
             slots: BTreeMap::new(),
             tokens: BTreeMap::new(),
@@ -62,7 +73,9 @@ impl<'a> RealEngine<'a> {
                 // clamp to the tiny model's shape envelope
                 r.len_in = r.len_in.clamp(1, max_prompt);
                 r.len_out = r.len_out.clamp(1, headroom);
-                self.batcher.submit(r);
+                if !self.batcher.submit(r) {
+                    metrics.rejected += 1;
+                }
                 next += 1;
             }
             if self.batcher.is_idle() {

@@ -58,11 +58,40 @@ impl ServingMetrics {
         self.itl.summary()
     }
 
+    /// Fraction of offered requests shed by admission control.  After a
+    /// trace fully drains, `completed + rejected` equals the offered
+    /// request count, so this is rejected / offered.
+    pub fn rejection_rate(&self) -> f64 {
+        let offered = self.completed + self.rejected;
+        if offered == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / offered as f64
+    }
+
+    /// Fold another replica's metrics into this one (fleet aggregation):
+    /// latency samples are pooled, counters summed, and the duration is
+    /// the max (replicas run concurrently, not back-to-back).
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        self.ttft.extend_from(&other.ttft);
+        self.itl.extend_from(&other.itl);
+        self.tokens_out += other.tokens_out;
+        self.tokens_in += other.tokens_in;
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.duration = self.duration.max(other.duration);
+    }
+
     pub fn report(&self, label: &str) -> String {
         let t = self.ttft_summary();
         let i = self.itl_summary();
+        let rej = if self.rejected > 0 {
+            format!(" | shed {} ({:.1}%)", self.rejected, self.rejection_rate() * 100.0)
+        } else {
+            String::new()
+        };
         format!(
-            "{label}: {} done | TTFT {:.1}±{:.1}ms (p99 {:.1}) | ITL {:.2}±{:.2}ms (p99 {:.2}) | {:.1} tok/s",
+            "{label}: {} done | TTFT {:.1}±{:.1}ms (p99 {:.1}) | ITL {:.2}±{:.2}ms (p99 {:.2}) | {:.1} tok/s{rej}",
             self.completed,
             t.mean * 1e3,
             t.std * 1e3,
@@ -105,6 +134,36 @@ mod tests {
     fn empty_metrics_no_panic() {
         let m = ServingMetrics::new();
         assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.rejection_rate(), 0.0);
         let _ = m.report("empty");
+    }
+
+    #[test]
+    fn merge_pools_samples_and_counters() {
+        let mut a = ServingMetrics::new();
+        a.record_first_token(0.1);
+        a.record_completion(100, 50);
+        a.duration = 5.0;
+        let mut b = ServingMetrics::new();
+        b.record_first_token(0.3);
+        b.record_completion(200, 20);
+        b.rejected = 2;
+        b.duration = 8.0;
+        a.merge(&b);
+        assert_eq!(a.ttft.len(), 2);
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.rejected, 2);
+        assert_eq!(a.tokens_in, 300);
+        assert_eq!(a.duration, 8.0);
+        assert!((a.rejection_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_shows_shed_requests() {
+        let mut m = ServingMetrics::new();
+        m.record_completion(10, 5);
+        m.rejected = 1;
+        m.duration = 1.0;
+        assert!(m.report("x").contains("shed 1"));
     }
 }

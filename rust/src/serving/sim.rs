@@ -7,13 +7,17 @@
 //! (DESIGN.md §2): same scheduler, same workload process, same
 //! communication schedules — compute/transfer times come from the α–β +
 //! roofline model instead of hardware counters.
+//!
+//! The engine loop itself lives in `cluster::replica::ReplicaSim`
+//! (an explicit `step(now) -> next_event_time` machine, so the fleet
+//! simulator can interleave many replicas); this module drives a single
+//! replica over a trace and keeps the historical entry points.
 
-use crate::analyzer::latency::{CommMode, LatencyModel, Phase};
-use crate::analyzer::memory::check_memory;
+pub use crate::cluster::replica::GATE_SKEW;
+
+use crate::analyzer::latency::CommMode;
+use crate::cluster::replica::ReplicaSim;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
-use crate::moe::router::{LoadStats, RouterSim};
-use crate::serving::batcher::{Batcher, BatcherConfig};
-use crate::serving::kvcache::KvCacheManager;
 use crate::serving::metrics::ServingMetrics;
 use crate::workload::{Request, TraceGen};
 
@@ -28,10 +32,7 @@ pub struct SimReport {
     pub mean_imbalance: f64,
 }
 
-/// Degree of gate skew used in the evaluation (mild, ShareGPT-like).
-pub const GATE_SKEW: f64 = 0.4;
-
-/// Run the continuous-batching loop over `trace`.
+/// Run the continuous-batching loop over `trace` on one replica.
 pub fn simulate_serving(
     model: &MoEModelConfig,
     cluster: &ClusterConfig,
@@ -41,125 +42,43 @@ pub fn simulate_serving(
     trace: &[Request],
     seed: u64,
 ) -> SimReport {
-    let lm = LatencyModel::new(model, cluster);
-    // KV pool: whatever Eq. (8) leaves after weights, cluster-wide.
-    let mem = check_memory(model, cluster, strategy, serving.max_batch, serving.max_seq);
-    let kv_budget_bytes = mem
-        .limit_bytes
-        .saturating_sub(mem.weights_bytes)
-        .max(1)
-        .saturating_mul(cluster.total_devices() as u64);
-    let kv_tokens =
-        (kv_budget_bytes / model.kv_bytes_per_token().max(1)).max(serving.max_seq as u64);
-    let blocks = (kv_tokens as usize / serving.kv_block_tokens).max(1);
-    let mut kv = KvCacheManager::new(blocks, serving.kv_block_tokens);
-    let mut batcher = Batcher::new(BatcherConfig {
-        max_batch: serving.max_batch,
-        max_seq: serving.max_seq,
-    });
-    let mut router = RouterSim::new(model.n_experts, model.top_k, GATE_SKEW, seed);
-    let mut metrics = ServingMetrics::new();
-
+    let mut replica = ReplicaSim::new(model, cluster, strategy, serving, mode, seed, 0);
     let mut arrivals = trace.to_vec();
     arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-    let mut next_arrival = 0usize;
+
+    let mut next = 0usize;
     let mut now = 0.0f64;
-    let mut iterations = 0usize;
-    let mut imb_sum = 0.0f64;
-
     loop {
-        // feed arrivals due by `now`
-        while next_arrival < arrivals.len() && arrivals[next_arrival].arrival <= now {
-            batcher.submit(arrivals[next_arrival].clone());
-            next_arrival += 1;
+        // feed arrivals due by `now` (queue-cap sheds are counted by the
+        // replica into metrics.rejected)
+        while next < arrivals.len() && arrivals[next].arrival <= now {
+            replica.submit(arrivals[next].clone());
+            next += 1;
         }
-        if batcher.is_idle() {
-            if next_arrival >= arrivals.len() {
-                break;
-            }
-            now = arrivals[next_arrival].arrival; // jump to next work
-            continue;
+        let next_arrival =
+            if next < arrivals.len() { arrivals[next].arrival } else { f64::INFINITY };
+        let t = match replica.step(now) {
+            Some(t) => t.min(next_arrival),
+            None => next_arrival, // idle: jump to next work
+        };
+        if !t.is_finite() {
+            break; // drained and no arrivals left
         }
-
-        let plan = batcher.plan(now, &mut kv);
-        let mut iter_time = 0.0f64;
-
-        // ---- prefill chunk
-        if !plan.prefill.is_empty() {
-            let b = plan.prefill.len();
-            let maxlen = plan
-                .prefill
-                .iter()
-                .map(|id| batcher.get(*id).unwrap().req.len_in)
-                .max()
-                .unwrap();
-            let lat = lm.service_latency(strategy, b.max(1), maxlen, Phase::Prefill, mode);
-            let imb = expert_imbalance(&mut router, b * maxlen, strategy);
-            imb_sum += imb;
-            iter_time += lat.compute * blend(imb) + lat.comm + lat.p2p;
-        }
-        // ---- decode step for running requests
-        if !plan.decode.is_empty() {
-            let b = plan.decode.len();
-            // context: mean current length of decoding requests
-            let ctx = 256; // ShareGPT mean context during decode
-            let lat = lm.service_latency(strategy, b.max(1), ctx, Phase::Decode, mode);
-            let imb = expert_imbalance(&mut router, b, strategy);
-            imb_sum += imb;
-            iter_time += lat.compute * blend(imb) + lat.comm + lat.p2p;
-        }
-        if plan.prefill.is_empty() && plan.decode.is_empty() {
-            // nothing runnable (KV exhausted): wait for retirement next tick
-            now += 1e-3;
-            continue;
-        }
-
-        now += iter_time;
-        iterations += 1;
-
-        // bookkeeping: first tokens & decode tokens land at iteration end
-        for id in &plan.prefill {
-            let arrival = batcher.get(*id).unwrap().req.arrival;
-            batcher.complete_prefill(*id, now);
-            metrics.record_first_token(now - arrival);
-        }
-        for id in &plan.decode {
-            metrics.record_inter_token(iter_time);
-            batcher.complete_decode_token(*id, now);
-        }
-        for done in batcher.retire(&mut kv) {
-            metrics.record_completion(done.req.len_in, done.req.len_out);
-        }
+        now = t;
     }
 
+    let mut metrics = replica.metrics.clone();
     metrics.duration = now.max(1e-9);
     SimReport {
         strategy: *strategy,
         mode,
         metrics,
-        iterations,
-        mean_imbalance: if iterations > 0 { imb_sum / iterations as f64 } else { 1.0 },
+        iterations: replica.iterations,
+        mean_imbalance: replica.mean_imbalance(),
     }
-}
-
-/// Straggler factor for the MoE compute of one iteration: max/mean load
-/// over the EP groups (1.0 when EP is not used).
-fn expert_imbalance(router: &mut RouterSim, tokens: usize, s: &ParallelStrategy) -> f64 {
-    if s.moe.ep <= 1 {
-        return 1.0;
-    }
-    let loads = router.route_batch(tokens.clamp(1, 512));
-    LoadStats::from_loads(&loads, s.moe.ep).imbalance
-}
-
-/// The MoE block is roughly half the per-layer compute: blend the
-/// straggler factor accordingly.
-fn blend(imb: f64) -> f64 {
-    1.0 + (imb - 1.0) * 0.5
 }
 
 /// Convenience: build a trace and run (the Fig. 10 entry point).
-#[allow(clippy::too_many_arguments)]
 pub fn run_rate(
     model: &MoEModelConfig,
     cluster: &ClusterConfig,
@@ -231,5 +150,65 @@ mod tests {
         let hi = quick(ParallelStrategy::mixserve(4, 8), CommMode::FusedAsync, 8.0);
         assert!(hi.metrics.completed + hi.metrics.rejected >= lo.metrics.completed);
         assert!(hi.metrics.ttft_summary().mean >= lo.metrics.ttft_summary().mean * 0.8);
+    }
+
+    #[test]
+    fn queue_cap_sheds_and_excludes_from_ttft() {
+        // a 2-slot waiting queue at an overload rate must shed; shed
+        // requests are counted and never contribute a TTFT sample
+        let model = MoEModelConfig::deepseek_r1();
+        let cluster = ClusterConfig::ascend910b();
+        let serving =
+            ServingConfig { queue_cap: Some(2), ..ServingConfig::paper_eval(16.0) };
+        let trace = TraceGen::sharegpt(16.0, serving.max_seq, 11).generate(30.0);
+        let n = trace.len();
+        let rep = simulate_serving(
+            &model,
+            &cluster,
+            &ParallelStrategy::mixserve(4, 8),
+            &serving,
+            CommMode::FusedAsync,
+            &trace,
+            11,
+        );
+        assert!(rep.metrics.rejected > 0, "overload + tiny queue must shed");
+        assert_eq!(rep.metrics.completed + rep.metrics.rejected, n);
+        assert_eq!(
+            rep.metrics.ttft.len(),
+            rep.metrics.completed,
+            "shed requests must not contribute TTFT samples"
+        );
+    }
+
+    #[test]
+    fn decode_context_follows_prompt_lengths() {
+        // longer prompts → larger decode contexts → slower decode: the
+        // hardcoded-256 bug this regression pins down
+        let model = MoEModelConfig::deepseek_r1();
+        let cluster = ClusterConfig::ascend910b();
+        let serving = ServingConfig::paper_eval(2.0);
+        let strategy = ParallelStrategy::mixserve(4, 8);
+        let mk = |len_in: usize| -> Vec<Request> {
+            (0..24)
+                .map(|id| Request {
+                    id,
+                    arrival: id as f64 * 0.5,
+                    len_in,
+                    len_out: 64,
+                })
+                .collect()
+        };
+        let short = simulate_serving(
+            &model, &cluster, &strategy, &serving, CommMode::FusedAsync, &mk(64), 3,
+        );
+        let long = simulate_serving(
+            &model, &cluster, &strategy, &serving, CommMode::FusedAsync, &mk(3000), 3,
+        );
+        assert!(
+            long.metrics.itl_summary().mean > short.metrics.itl_summary().mean,
+            "decode over a 3k context must be slower than over 64: {} !> {}",
+            long.metrics.itl_summary().mean,
+            short.metrics.itl_summary().mean
+        );
     }
 }

@@ -71,6 +71,11 @@ impl Series {
     pub fn values(&self) -> &[f64] {
         &self.xs
     }
+
+    /// Append all of `other`'s samples (fleet-level metric aggregation).
+    pub fn extend_from(&mut self, other: &Series) {
+        self.xs.extend_from_slice(&other.xs);
+    }
 }
 
 #[cfg(test)]

@@ -1,5 +1,7 @@
 //! Workload generation: ShareGPT-like request traces with Poisson
-//! arrivals (the paper evaluates ShareGPT-V3 at 2/4/8 req/s).
+//! arrivals (the paper evaluates ShareGPT-V3 at 2/4/8 req/s), plus
+//! mean-preserving bursty and diurnal modulations ([`ArrivalPattern`])
+//! for the fleet-level experiments of `cluster/`.
 //!
 //! Substitution (DESIGN.md §2): we cannot ship the 1.2B-token corpus, so
 //! prompt/response lengths are drawn from a lognormal mixture fit to the
@@ -21,12 +23,82 @@ pub struct Request {
     pub len_out: usize,
 }
 
+/// Time-varying modulation of the arrival rate.  All patterns are
+/// mean-preserving: averaged over whole periods the effective rate equals
+/// the generator's nominal `rate`, so capacity planning against the
+/// nominal rate stays meaningful (the fleet sweep stresses the *tails*).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// homogeneous Poisson at the nominal rate (the paper's setting)
+    Constant,
+    /// square-wave bursts: within each `period`, the first `duty`
+    /// fraction runs at `amplitude`× the nominal rate; the remainder at
+    /// the complementary rate that preserves the mean (requires
+    /// `amplitude * duty <= 1`)
+    Bursty { amplitude: f64, period: f64, duty: f64 },
+    /// sinusoidal day/night cycle: λ(t) = rate · (1 + depth·sin(2πt/period))
+    Diurnal { depth: f64, period: f64 },
+}
+
+impl ArrivalPattern {
+    /// Instantaneous rate multiplier λ(t)/rate at time `t` ≥ 0.
+    pub fn multiplier(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalPattern::Constant => 1.0,
+            ArrivalPattern::Bursty { amplitude, period, duty } => {
+                let phase = (t / period).rem_euclid(1.0);
+                if phase < duty {
+                    amplitude
+                } else {
+                    (1.0 - duty * amplitude) / (1.0 - duty)
+                }
+            }
+            ArrivalPattern::Diurnal { depth, period } => {
+                1.0 + depth * (2.0 * std::f64::consts::PI * t / period).sin()
+            }
+        }
+    }
+
+    /// Peak multiplier — the thinning envelope for non-homogeneous
+    /// Poisson generation.
+    pub fn peak(&self) -> f64 {
+        match *self {
+            ArrivalPattern::Constant => 1.0,
+            ArrivalPattern::Bursty { amplitude, duty, .. } => {
+                amplitude.max((1.0 - duty * amplitude) / (1.0 - duty))
+            }
+            ArrivalPattern::Diurnal { depth, .. } => 1.0 + depth,
+        }
+    }
+
+    fn validate(&self) {
+        match *self {
+            ArrivalPattern::Constant => {}
+            ArrivalPattern::Bursty { amplitude, period, duty } => {
+                assert!(amplitude >= 1.0, "burst amplitude must be >= 1");
+                assert!(period > 0.0, "burst period must be positive");
+                assert!(duty > 0.0 && duty < 1.0, "duty must be in (0, 1)");
+                assert!(
+                    amplitude * duty <= 1.0,
+                    "amplitude*duty must be <= 1 so the off-burst rate stays nonnegative"
+                );
+            }
+            ArrivalPattern::Diurnal { depth, period } => {
+                assert!((0.0..1.0).contains(&depth), "diurnal depth must be in [0, 1)");
+                assert!(period > 0.0, "diurnal period must be positive");
+            }
+        }
+    }
+}
+
 /// ShareGPT-like trace generator.
 #[derive(Debug, Clone)]
 pub struct TraceGen {
     /// mean arrival rate, req/s
     pub rate: f64,
     pub max_len: usize,
+    /// time-varying modulation of the arrival process
+    pub pattern: ArrivalPattern,
     rng: Rng,
     /// ln-space (mu, sigma) of the prompt-length lognormal
     prompt_dist: (f64, f64),
@@ -39,6 +111,7 @@ impl TraceGen {
         Self {
             rate,
             max_len,
+            pattern: ArrivalPattern::Constant,
             rng: Rng::seed_from_u64(seed),
             // ln-space parameters: median e^mu, shape sigma
             prompt_dist: (5.0, 1.0), // median ~148
@@ -46,20 +119,54 @@ impl TraceGen {
         }
     }
 
+    /// ShareGPT lengths under square-wave burst arrivals.
+    pub fn bursty(
+        rate: f64,
+        max_len: usize,
+        seed: u64,
+        amplitude: f64,
+        period: f64,
+        duty: f64,
+    ) -> Self {
+        Self::sharegpt(rate, max_len, seed)
+            .with_pattern(ArrivalPattern::Bursty { amplitude, period, duty })
+    }
+
+    /// ShareGPT lengths under a sinusoidal day/night arrival cycle.
+    pub fn diurnal(rate: f64, max_len: usize, seed: u64, depth: f64, period: f64) -> Self {
+        Self::sharegpt(rate, max_len, seed).with_pattern(ArrivalPattern::Diurnal { depth, period })
+    }
+
+    pub fn with_pattern(mut self, pattern: ArrivalPattern) -> Self {
+        pattern.validate();
+        self.pattern = pattern;
+        self
+    }
+
     fn clamp_len(&self, x: f64) -> usize {
         (x.round() as usize).clamp(1, self.max_len)
     }
 
-    /// Generate requests for `duration` seconds.
+    /// Generate requests for `duration` seconds.  Non-constant patterns
+    /// use Lewis–Shedler thinning: candidates are drawn from a homogeneous
+    /// Poisson process at the peak rate and accepted with probability
+    /// λ(t)/λ_peak — an exact sampler for the non-homogeneous process.
     pub fn generate(&mut self, duration: f64) -> Vec<Request> {
         let mut out = Vec::new();
         let mut t = 0.0;
         let mut id = 0;
-        // exponential inter-arrivals == Poisson process
+        let peak = self.pattern.peak();
         while t < duration {
-            t += self.rng.exponential(self.rate);
+            t += self.rng.exponential(self.rate * peak);
             if t >= duration {
                 break;
+            }
+            // Constant keeps the historical single-draw stream (bit-exact
+            // traces for the paper figures); thinning needs one more draw.
+            if self.pattern != ArrivalPattern::Constant
+                && self.rng.f64() * peak > self.pattern.multiplier(t)
+            {
+                continue;
             }
             let (pm, ps) = self.prompt_dist;
             let raw_in = self.rng.lognormal(pm, ps);
@@ -128,5 +235,74 @@ mod tests {
         let counts = poisson_counts(3.0, 2000, 5);
         let mean = counts.iter().sum::<usize>() as f64 / counts.len() as f64;
         assert!((mean - 3.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn bursty_preserves_mean_rate() {
+        let mut g = TraceGen::bursty(4.0, 4096, 11, 4.0, 10.0, 0.25);
+        let reqs = g.generate(1000.0);
+        let n = reqs.len() as f64;
+        let expect = g.expected_count(1000.0);
+        assert!((n - expect).abs() < expect * 0.15, "{n} vs {expect}");
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_in_burst_windows() {
+        let (amp, period, duty) = (3.0, 10.0, 0.25);
+        let mut g = TraceGen::bursty(4.0, 4096, 3, amp, period, duty);
+        let reqs = g.generate(800.0);
+        let in_burst = reqs
+            .iter()
+            .filter(|r| (r.arrival / period).rem_euclid(1.0) < duty)
+            .count() as f64;
+        let off_burst = reqs.len() as f64 - in_burst;
+        // density ratio should approach amplitude/off-mult = 3/(1/3) = 9
+        let burst_density = in_burst / (duty * 800.0);
+        let off_density = off_burst / ((1.0 - duty) * 800.0);
+        assert!(
+            burst_density > 2.0 * off_density,
+            "burst {burst_density:.2}/s vs off {off_density:.2}/s"
+        );
+    }
+
+    #[test]
+    fn diurnal_peak_half_outweighs_trough_half() {
+        let period = 50.0;
+        let mut g = TraceGen::diurnal(4.0, 4096, 5, 0.8, period);
+        let reqs = g.generate(1000.0);
+        // sin > 0 on the first half of each period (the "day")
+        let day = reqs
+            .iter()
+            .filter(|r| (r.arrival / period).rem_euclid(1.0) < 0.5)
+            .count() as f64;
+        let night = reqs.len() as f64 - day;
+        assert!(day > 1.5 * night, "day {day} vs night {night}");
+    }
+
+    #[test]
+    fn patterned_traces_deterministic_given_seed() {
+        let a = TraceGen::bursty(2.0, 2048, 9, 4.0, 8.0, 0.2).generate(200.0);
+        let b = TraceGen::bursty(2.0, 2048, 9, 4.0, 8.0, 0.2).generate(200.0);
+        assert_eq!(a, b);
+        let c = TraceGen::diurnal(2.0, 2048, 9, 0.5, 60.0).generate(200.0);
+        let d = TraceGen::diurnal(2.0, 2048, 9, 0.5, 60.0).generate(200.0);
+        assert_eq!(c, d);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn pattern_multipliers_bounded_by_peak() {
+        let patterns = [
+            ArrivalPattern::Constant,
+            ArrivalPattern::Bursty { amplitude: 4.0, period: 10.0, duty: 0.25 },
+            ArrivalPattern::Diurnal { depth: 0.8, period: 60.0 },
+        ];
+        for p in patterns {
+            for i in 0..200 {
+                let t = i as f64 * 0.37;
+                let m = p.multiplier(t);
+                assert!((0.0..=p.peak() + 1e-12).contains(&m), "{p:?} at {t}: {m}");
+            }
+        }
     }
 }

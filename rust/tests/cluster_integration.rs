@@ -1,0 +1,202 @@
+//! Fleet-level integration: the cluster subsystem end-to-end — routing
+//! policy ordering under bursty load, planner dominance over the
+//! single-replica optimum, SLO shedding accounting, and the fleet
+//! pipeline the `fleet` CLI subcommand drives.
+
+use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::latency::CommMode;
+use mixserve::analyzer::search::{Analyzer, Objective};
+use mixserve::cluster::{
+    carve_replicas, simulate_fleet, FleetConfig, FleetPlanner, RoutingPolicy, SloPolicy,
+};
+use mixserve::cluster::sweep::policy_sweep;
+use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use mixserve::workload::TraceGen;
+
+fn fleet_cfg(replicas: usize, policy: RoutingPolicy, slo: Option<SloPolicy>) -> FleetConfig {
+    FleetConfig {
+        replicas,
+        strategy: ParallelStrategy::mixserve(4, 8),
+        policy,
+        mode: CommMode::FusedAsync,
+        slo,
+    }
+}
+
+/// The acceptance scenario: `mixserve fleet --model deepseek-r1
+/// --cluster ascend910b --rate 32 --replicas 4` — every policy must run
+/// end-to-end and report sane TTFT/ITL/throughput/rejection numbers.
+#[test]
+fn fleet_cli_scenario_runs_for_every_policy() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let serving = ServingConfig::paper_eval(32.0);
+    let trace = TraceGen::sharegpt(32.0, serving.max_seq, 7).generate(20.0);
+    let n = trace.len();
+    assert!(n > 300, "32 req/s for 20s must offer a real load, got {n}");
+    for policy in RoutingPolicy::all() {
+        let rep = simulate_fleet(
+            &model,
+            &pod,
+            &fleet_cfg(4, policy, None),
+            &serving,
+            &trace,
+            7,
+        );
+        assert_eq!(
+            rep.metrics.completed + rep.metrics.rejected,
+            n,
+            "{policy}: every request must complete or be shed"
+        );
+        assert!(rep.metrics.ttft_summary().mean > 0.0, "{policy}");
+        assert!(rep.metrics.itl_summary().mean > 0.0, "{policy}");
+        assert!(rep.metrics.throughput() > 0.0, "{policy}");
+        assert!(rep.metrics.rejection_rate() >= 0.0, "{policy}");
+        assert_eq!(rep.per_replica.len(), 4, "{policy}");
+        // a shared-nothing fleet must spread work: no replica starves
+        // under any of the shipped policies at this load
+        for (i, m) in rep.per_replica.iter().enumerate() {
+            assert!(m.completed > 0, "{policy}: replica {i} served nothing");
+        }
+    }
+}
+
+/// Acceptance: join-shortest-queue beats round-robin on p99 TTFT under a
+/// bursty trace.  Bursts pile arrivals onto whatever the oblivious router
+/// picks next; JSQ steers them to the replica that drained.
+#[test]
+fn jsq_beats_round_robin_p99_ttft_under_bursts() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let rate = 16.0;
+    let serving = ServingConfig::paper_eval(rate);
+    // amplitude 4 over 4 pods: bursts hit 16 req/s fleet-wide peak share
+    // per pod — transient overload, the regime where routing matters
+    let trace =
+        TraceGen::bursty(rate, serving.max_seq, 7, 4.0, 10.0, 0.25).generate(120.0);
+    let run = |policy| {
+        simulate_fleet(&model, &pod, &fleet_cfg(4, policy, None), &serving, &trace, 7)
+    };
+    let rr = run(RoutingPolicy::RoundRobin);
+    let jsq = run(RoutingPolicy::JoinShortestQueue);
+    let rr_p99 = rr.metrics.ttft_summary().p99;
+    let jsq_p99 = jsq.metrics.ttft_summary().p99;
+    assert!(
+        jsq_p99 < rr_p99,
+        "JSQ p99 TTFT {jsq_p99:.3}s must beat round-robin {rr_p99:.3}s under bursts"
+    );
+    assert!(
+        jsq.metrics.ttft_summary().mean <= rr.metrics.ttft_summary().mean * 1.05,
+        "JSQ must not trade the mean away: {:.3}s vs {:.3}s",
+        jsq.metrics.ttft_summary().mean,
+        rr.metrics.ttft_summary().mean
+    );
+}
+
+/// Acceptance: for a fixed device budget the planner's joint
+/// (replicas × strategy) choice is never worse in throughput than the
+/// single-replica optimum over the same budget.
+#[test]
+fn planner_joint_choice_dominates_single_replica_optimum() {
+    for model in [MoEModelConfig::deepseek_r1(), MoEModelConfig::qwen3_235b()] {
+        for budget in [ClusterConfig::ascend910b(), ClusterConfig::h20()] {
+            for rate in [4.0, 8.0, 16.0] {
+                let serving = ServingConfig::paper_eval(rate);
+                let planner = FleetPlanner::new(&model, &budget, &serving);
+                let best = planner
+                    .best(rate)
+                    .unwrap_or_else(|| panic!("{} on {}: no plan", model.name, budget.name));
+                // the single-replica optimum is the analyzer's best over
+                // the undivided budget at the full rate
+                let single = Analyzer::new(&model, &budget, &serving)
+                    .best(&Workload::sharegpt(rate), Objective::MaxThroughput)
+                    .expect("budget cluster must be feasible");
+                assert!(
+                    best.total_throughput >= single.indicators.throughput * (1.0 - 1e-9),
+                    "{} on {} @ {rate}: planner {:.1} tok/s < single-replica {:.1}",
+                    model.name,
+                    budget.name,
+                    best.total_throughput,
+                    single.indicators.throughput
+                );
+                // device budget is conserved by the carve
+                assert_eq!(
+                    best.replica_cluster.total_devices() * best.replicas,
+                    budget.total_devices()
+                );
+            }
+        }
+    }
+}
+
+/// SLO admission sheds under sustained overload, counts every shed, and
+/// keeps shed requests out of the latency samples.
+#[test]
+fn slo_shedding_accounting_is_exact() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let rate = 40.0; // 20 req/s per replica: deep overload
+    let serving = ServingConfig::paper_eval(rate);
+    let trace = TraceGen::sharegpt(rate, serving.max_seq, 5).generate(30.0);
+    let n = trace.len();
+    let rep = simulate_fleet(
+        &model,
+        &pod,
+        &fleet_cfg(2, RoutingPolicy::JoinShortestQueue, Some(SloPolicy { ttft_deadline: 6.0 })),
+        &serving,
+        &trace,
+        5,
+    );
+    assert!(rep.metrics.rejected > 0, "deep overload must shed");
+    assert!(rep.metrics.completed > 0, "shedding must not starve the fleet");
+    assert_eq!(rep.metrics.completed + rep.metrics.rejected, n);
+    assert_eq!(rep.metrics.ttft.len(), rep.metrics.completed);
+    let frac = rep.metrics.rejection_rate();
+    assert!(frac > 0.0 && frac < 1.0, "rejection rate {frac} out of band");
+}
+
+/// The carve helper never fabricates devices and rejects uneven splits.
+#[test]
+fn carve_is_exact_or_absent() {
+    for budget in [ClusterConfig::ascend910b(), ClusterConfig::h20()] {
+        for r in 1..=64usize {
+            match carve_replicas(&budget, r) {
+                Some(pod) => assert_eq!(
+                    pod.total_devices() * r,
+                    budget.total_devices(),
+                    "{} r={r}",
+                    budget.name
+                ),
+                None => assert!(
+                    budget.n_nodes % r != 0
+                        && (r % budget.n_nodes != 0
+                            || r / budget.n_nodes > budget.gpus_per_node
+                            || budget.gpus_per_node % (r / budget.n_nodes) != 0),
+                    "{} r={r}: even split wrongly rejected",
+                    budget.name
+                ),
+            }
+        }
+    }
+}
+
+/// The policy sweep drives all patterns × policies through the fleet —
+/// the `fleetsweep` CLI path — and every cell serves traffic.
+#[test]
+fn policy_sweep_covers_grid_and_serves() {
+    let rows = policy_sweep(
+        &MoEModelConfig::deepseek_r1(),
+        &ClusterConfig::ascend910b(),
+        &ParallelStrategy::mixserve(4, 8),
+        2,
+        8.0,
+        20.0,
+        3,
+        None,
+    );
+    assert_eq!(rows.len(), 3 * RoutingPolicy::all().len());
+    for r in &rows {
+        assert!(r.completed > 0, "{}/{}", r.pattern, r.policy);
+        assert!(r.throughput > 0.0, "{}/{}", r.pattern, r.policy);
+    }
+}

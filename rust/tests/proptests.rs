@@ -18,7 +18,7 @@ use mixserve::serving::batcher::{Batcher, BatcherConfig};
 use mixserve::serving::kvcache::KvCacheManager;
 use mixserve::testkit::forall;
 use mixserve::util::rng::Rng;
-use mixserve::workload::Request;
+use mixserve::workload::{ArrivalPattern, Request, TraceGen};
 
 fn cost() -> CollectiveCost {
     CollectiveCost::new(&ClusterConfig::ascend910b())
@@ -175,7 +175,11 @@ fn prop_batcher_conserves_and_never_exceeds_batch() {
             (max_batch, reqs)
         },
         |(max_batch, reqs)| {
-            let mut b = Batcher::new(BatcherConfig { max_batch: *max_batch, max_seq: 128 });
+            let mut b = Batcher::new(BatcherConfig {
+                max_batch: *max_batch,
+                max_seq: 128,
+                max_waiting: None,
+            });
             let mut kv = KvCacheManager::new(10_000, 16);
             for (i, (li, lo)) in reqs.iter().enumerate() {
                 b.submit(Request { id: i, arrival: 0.0, len_in: *li, len_out: *lo });
@@ -282,6 +286,149 @@ fn prop_analyzer_winner_is_argmin_over_enumeration() {
                 .fold(f64::INFINITY, f64::min);
             if (ranked[0].indicators.ttft - min).abs() > 1e-12 {
                 return Err("rank[0] is not the minimum".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_patterned_traces_deterministic_under_seed() {
+    forall(
+        "trace(seed) is a pure function; different seeds diverge",
+        15,
+        41,
+        |r: &mut Rng| {
+            let rate = 1.0 + r.f64() * 8.0;
+            let seed = r.next_u64();
+            let kind = r.below(3);
+            (rate, seed, kind)
+        },
+        |&(rate, seed, kind)| {
+            let make = |s: u64| -> Vec<Request> {
+                match kind {
+                    0 => TraceGen::sharegpt(rate, 4096, s).generate(60.0),
+                    1 => TraceGen::bursty(rate, 4096, s, 4.0, 10.0, 0.25).generate(60.0),
+                    _ => TraceGen::diurnal(rate, 4096, s, 0.7, 30.0).generate(60.0),
+                }
+            };
+            if make(seed) != make(seed) {
+                return Err("same seed produced different traces".into());
+            }
+            let a = make(seed);
+            let b = make(seed.wrapping_add(1));
+            if !a.is_empty() && !b.is_empty() && a == b {
+                return Err("different seeds produced identical traces".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_burst_amplitude_shapes_arrival_density() {
+    forall(
+        "bursty: in-burst density ~= amplitude x off-burst density",
+        10,
+        43,
+        |r: &mut Rng| {
+            let amplitude = 2.0 + r.f64() * 1.5; // 2.0..3.5
+            let duty = 0.15 + r.f64() * 0.1; // 0.15..0.25 (amp*duty < 1)
+            let period = 5.0 + r.f64() * 10.0;
+            (amplitude, period, duty, r.next_u64())
+        },
+        |&(amplitude, period, duty, seed)| {
+            let horizon = 1200.0;
+            let reqs =
+                TraceGen::bursty(4.0, 4096, seed, amplitude, period, duty).generate(horizon);
+            let in_burst = reqs
+                .iter()
+                .filter(|r| (r.arrival / period).rem_euclid(1.0) < duty)
+                .count() as f64;
+            let off = reqs.len() as f64 - in_burst;
+            let burst_density = in_burst / (duty * horizon);
+            let off_density = off / ((1.0 - duty) * horizon);
+            let off_mult = (1.0 - duty * amplitude) / (1.0 - duty);
+            let want = amplitude / off_mult;
+            let got = burst_density / off_density.max(1e-9);
+            if (got - want).abs() > want * 0.35 {
+                return Err(format!("density ratio {got:.2}, expected ~{want:.2}"));
+            }
+            // mean preservation
+            let mean_rate = reqs.len() as f64 / horizon;
+            if (mean_rate - 4.0).abs() > 0.6 {
+                return Err(format!("mean rate {mean_rate:.2} drifted from 4.0"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_diurnal_period_phase_split() {
+    forall(
+        "diurnal: day half-period outweighs night half-period",
+        10,
+        47,
+        |r: &mut Rng| {
+            let depth = 0.5 + r.f64() * 0.4; // 0.5..0.9
+            let period = 20.0 + r.f64() * 60.0;
+            (depth, period, r.next_u64())
+        },
+        |&(depth, period, seed)| {
+            // whole number of periods so the halves are balanced
+            let horizon = period * 20.0;
+            let reqs = TraceGen::diurnal(3.0, 4096, seed, depth, period).generate(horizon);
+            let day = reqs
+                .iter()
+                .filter(|r| (r.arrival / period).rem_euclid(1.0) < 0.5)
+                .count() as f64;
+            let night = reqs.len() as f64 - day;
+            // E[day]/E[night] = (1 + 2d/pi) / (1 - 2d/pi)
+            let m = 2.0 * depth / std::f64::consts::PI;
+            let want = (1.0 + m) / (1.0 - m);
+            let got = day / night.max(1.0);
+            if (got - want).abs() > want * 0.3 {
+                return Err(format!("day/night {got:.2}, expected ~{want:.2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pattern_multiplier_mean_preserving() {
+    forall(
+        "integral of multiplier over whole periods ~= 1",
+        20,
+        53,
+        |r: &mut Rng| {
+            if r.below(2) == 0 {
+                ArrivalPattern::Bursty {
+                    amplitude: 1.5 + r.f64() * 2.0,
+                    period: 4.0 + r.f64() * 20.0,
+                    duty: 0.1 + r.f64() * 0.15,
+                }
+            } else {
+                ArrivalPattern::Diurnal {
+                    depth: r.f64() * 0.9,
+                    period: 4.0 + r.f64() * 20.0,
+                }
+            }
+        },
+        |p| {
+            let period = match *p {
+                ArrivalPattern::Bursty { period, .. } => period,
+                ArrivalPattern::Diurnal { period, .. } => period,
+                ArrivalPattern::Constant => 1.0,
+            };
+            let steps = 20_000usize;
+            let dt = period * 4.0 / steps as f64;
+            let mean: f64 =
+                (0..steps).map(|i| p.multiplier((i as f64 + 0.5) * dt)).sum::<f64>()
+                    / steps as f64;
+            if (mean - 1.0).abs() > 0.02 {
+                return Err(format!("mean multiplier {mean:.4} over 4 periods"));
             }
             Ok(())
         },
