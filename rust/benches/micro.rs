@@ -14,6 +14,7 @@ use mixserve::comm::fused::{fused_ag_dispatch, fused_rs_combine, Route};
 use mixserve::comm::primitives::{synth_contrib, unfused_rs_a2a_ag};
 use mixserve::comm::world::{RankWorld, Tensor2};
 use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use mixserve::moe::router::RouterSim;
 use mixserve::serving::batcher::{Batcher, BatcherConfig};
 use mixserve::serving::kvcache::KvCacheManager;
 use mixserve::simulator::EventQueue;
@@ -77,6 +78,17 @@ fn main() {
             }
         }
         kv.free_blocks()
+    });
+
+    // --- router hot path: alias-table batch routing vs the old
+    //     clone-the-weights reference (the O(k·n)-copies-per-token path)
+    let mut router_fast = RouterSim::new(256, 8, 0.8, 1);
+    b.run("router route_batch 512tok (alias)", || {
+        router_fast.route_batch(512).len()
+    });
+    let mut router_ref = RouterSim::new(256, 8, 0.8, 1);
+    b.run("router route_batch 512tok (reference)", || {
+        router_ref.route_batch_reference(512).len()
     });
 
     // --- analyzer full search (77 strategies on the 4×8 grid)

@@ -4,6 +4,7 @@
 use super::latency::{CommMode, LatencyModel, Phase};
 use super::queueing::{wait_with_overload, EVAL_HORIZON_S};
 use crate::config::{ParallelStrategy, ServingConfig};
+use crate::timing::CommCost;
 
 /// A request-population description (ShareGPT-like averages).
 #[derive(Debug, Clone, Copy)]
@@ -44,9 +45,10 @@ impl Indicators {
     }
 }
 
-/// Evaluate Eqs. (9)–(11) for a strategy on a workload.
-pub fn evaluate(
-    lm: &LatencyModel,
+/// Evaluate Eqs. (9)–(11) for a strategy on a workload, under whatever
+/// cost backend and load profile the latency model is bound to.
+pub fn evaluate<C: CommCost>(
+    lm: &LatencyModel<C>,
     strategy: &ParallelStrategy,
     serving: &ServingConfig,
     wl: &Workload,

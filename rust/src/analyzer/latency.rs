@@ -1,9 +1,18 @@
 //! Token-generation latency model — §III-B4, Eqs. (4)–(6), plus the
 //! hybrid-vs-pure communication overheads of §III-C2, Eqs. (12)–(13).
+//!
+//! All communication is timed through the [`CommCost`] trait (the
+//! unified timing layer): the model is generic over the cost backend, so
+//! the same Eq. (5)/(12)/(13) arithmetic prices strategies under the
+//! analytic α–β model *or* the contention-aware NetSim-backed one.  The
+//! MoE block's λ is load-aware: an [`ExpertLoadProfile`] scales the
+//! dispatch/combine volume by the *hot rank's* share (max load), not the
+//! uniform-placement mean — the §I imbalance finally reaching Eq. (5).
 
-use crate::comm::cost::{CollectiveCost, CommDomain};
-use crate::comm::fused::{ag_dispatch_schedule, rs_combine_schedule};
+use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy};
+use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir};
+use crate::timing::{remote_group_copies, CommCost, CommDomain, ExpertLoadProfile};
 
 /// Prefill processes the full prompt; decode one token with a cached
 /// context (Eqs. 9–10 evaluate Δt_svc at s = L_in and s = 1).
@@ -39,21 +48,43 @@ impl LatencyBreakdown {
     }
 }
 
-/// The analyzer's latency model, bound to (model, cluster).
+/// The analyzer's latency model, bound to (model, cluster, cost backend,
+/// expert-load profile).
 #[derive(Debug, Clone)]
-pub struct LatencyModel {
+pub struct LatencyModel<C: CommCost = CollectiveCost> {
     pub model: MoEModelConfig,
     pub cluster: ClusterConfig,
-    pub cost: CollectiveCost,
+    pub cost: C,
+    pub load: ExpertLoadProfile,
 }
 
-impl LatencyModel {
+impl LatencyModel<CollectiveCost> {
     pub fn new(model: &MoEModelConfig, cluster: &ClusterConfig) -> Self {
+        Self::with_cost(model, cluster, CollectiveCost::new(cluster))
+    }
+}
+
+impl<C: CommCost> LatencyModel<C> {
+    /// Bind the model to an explicit cost backend (uniform load).
+    pub fn with_cost(model: &MoEModelConfig, cluster: &ClusterConfig, cost: C) -> Self {
         Self {
             model: model.clone(),
             cluster: cluster.clone(),
-            cost: CollectiveCost::new(cluster),
+            cost,
+            load: ExpertLoadProfile::uniform(model.n_experts),
         }
+    }
+
+    /// Price λ under this expert-load profile (builder style).
+    pub fn with_load(mut self, load: ExpertLoadProfile) -> Self {
+        self.load = load;
+        self
+    }
+
+    /// Swap the load profile in place (per-iteration re-pricing in the
+    /// serving simulator).
+    pub fn set_load(&mut self, load: ExpertLoadProfile) {
+        self.load = load;
     }
 
     /// Tokens processed per iteration by one DP replica: batch rows b/d_DP,
@@ -127,26 +158,17 @@ impl LatencyModel {
             * (self.model.hidden * self.model.dtype_bytes) as f64
     }
 
-    /// Expected activation copies a token ships to *remote* EP groups.
-    ///
-    /// A token activates k experts placed uniformly over `groups` EP
-    /// ranks but sends at most ONE copy per destination group (the
-    /// group's TP ranks serve all its local experts from that copy) —
-    /// the hybrid's central volume saving vs per-expert dispatch:
-    /// E[distinct groups] = g·(1−(1−1/g)^k), of which (g−1)/g are remote.
+    /// Expected activation copies a token ships to *remote* EP groups
+    /// (one copy per destination group — the hybrid's volume saving; see
+    /// [`remote_group_copies`] in the timing layer).
     pub fn remote_copies(&self, groups: usize) -> f64 {
-        if groups <= 1 {
-            return 0.0;
-        }
-        let g = groups as f64;
-        let k = self.model.top_k as f64;
-        let distinct = g * (1.0 - (1.0 - 1.0 / g).powf(k));
-        distinct * (g - 1.0) / g
+        remote_group_copies(groups, self.model.top_k)
     }
 
     /// Communication latency λ of one layer — Eq. (5) with the §III-B3
     /// DP/EP trade-off, Eq. (12) for pure EP, Eq. (13) for the hybrid,
-    /// and the fused overlap when `mode == FusedAsync`.
+    /// the fused overlap when `mode == FusedAsync`, and the load
+    /// profile's hot-rank factor scaling the EP dispatch/combine volume.
     pub fn comm_latency_layer(
         &self,
         s: &ParallelStrategy,
@@ -156,22 +178,24 @@ impl LatencyModel {
         mode: CommMode,
     ) -> f64 {
         let c = &self.cost;
-        let k = self.model.top_k as f64;
         let bytes = self.act_bytes(s, batch, seq, phase);
 
         // ---- attention block: one AR per layer over the attention TP group
-        let attn_domain = c.domain_of(s.attn.tp);
-        let attn_ar = c.all_reduce(bytes, s.attn.tp, attn_domain);
+        let attn_ar = c.all_reduce(bytes, s.attn.tp, c.domain_of(s.attn.tp));
 
         // ---- MoE block.  The MoE communicator carries the *global* token
         // set of all DP replicas (b·s·h), spread over the moe.tp × moe.ep
         // grid — this is why AR-based pure TP collapses at high degree
-        // (Fig. 3) while EP only ships top-k-selected rows.
+        // (Fig. 3) while EP only ships top-k-selected rows.  Under skew
+        // the collective completes when the *hot* rank's volume lands:
+        // the profile's max/mean factor scales the EP-bound volume.
         let global_bytes = bytes * s.attn.dp as f64;
         let (tp, ep) = (s.moe.tp, s.moe.ep);
+        let hot = self.load.hot_factor(ep);
         let moe = if ep == 1 {
             // pure TP: every token's FFN sharded over all tp devices; one
-            // AR of the full activation volume per layer.
+            // AR of the full activation volume per layer (skew-immune —
+            // every device serves every expert).
             c.all_reduce(global_bytes, tp, c.domain_of(tp))
         } else if tp == 1 {
             // pure EP: rank-granular dispatch/combine.  Every *distinct
@@ -180,11 +204,11 @@ impl LatencyModel {
             // node cross the wire twice (the hybrid crosses once, its
             // volume saving).  Off-node copies ride the NIC, on-node ones
             // the fabric; Pairwise needs d−1 launch rounds (the EP
-            // pathology at high degree).
-            let _ = k;
+            // pathology at high degree), and the hot rank's inflated
+            // share gates both lanes.
             let d = ep;
             let g = d as f64;
-            let distinct = g * (1.0 - (1.0 - 1.0 / g).powf(self.model.top_k as f64));
+            let distinct = crate::timing::expected_distinct_groups(d, self.model.top_k);
             let m_node = self.cluster.gpus_per_node.min(d) as f64;
             let nodes_spanned = (g / m_node).max(1.0);
             let off_frac = if d <= self.cluster.gpus_per_node {
@@ -192,28 +216,30 @@ impl LatencyModel {
             } else {
                 (g - m_node) / g
             };
-            let per_nic = global_bytes * distinct * off_frac / nodes_spanned;
-            let per_fabric = global_bytes * distinct * (1.0 - off_frac) / nodes_spanned;
-            let rounds = (d as f64 - 1.0).max(0.0);
-            let t_inter = rounds * self.cluster.inter_lat + per_nic / self.cluster.inter_bw;
-            let t_intra = per_fabric / self.cluster.intra_bw;
+            let per_nic = global_bytes * distinct * off_frac / nodes_spanned * hot;
+            let per_fabric = global_bytes * distinct * (1.0 - off_frac) / nodes_spanned * hot;
+            // per_nic already aggregates every local rank's traffic onto
+            // the node's NIC (÷ nodes_spanned, not ÷ ranks), so this lane
+            // model is per-link-traffic-aware by construction: sharers = 1
+            // or a contention-aware backend would double-count.
+            let t_inter = c.pairwise_rounds(d - 1, per_nic, 1, CommDomain::InterNode);
+            let t_intra = c.wire(per_fabric, 1, CommDomain::IntraNode);
             // dispatch + combine; intra and inter lanes progress together
             2.0 * t_inter.max(t_intra)
         } else {
             // hybrid TP-EP (§III-C2, Eq. 13): TP intra-node, EP inter-node.
             // One copy per destination *node* — the hybrid's volume saving.
-            let vol = global_bytes * self.remote_copies(ep).max(1e-9) / ep as f64;
+            let vol = global_bytes * self.remote_copies(ep).max(1e-9) / ep as f64 * hot;
             let blk = vol / (ep as f64 - 1.0).max(1.0);
             // the TP group's RS/AG stay intra-node only while tp fits in a
             // node — oversized TP groups pay the NIC (Fig. 3's d > 8 wall)
             let tp_domain = c.domain_of(tp);
-            let rs_t = c.reduce_scatter(blk, tp, tp_domain);
-            let ag_blk = c.all_gather(blk, tp, tp_domain);
-            let send_t = c.round(blk, CommDomain::InterNode);
-            // final AG reassembles this node's combined output (b/d_DP·s·h)
-            let ag_out = c.all_gather(bytes, tp, tp_domain);
-            let (disp_async, disp_sync) = ag_dispatch_schedule(ep, send_t, ag_blk);
-            let (comb_async, comb_sync) = rs_combine_schedule(ep, rs_t, send_t, ag_out);
+            // Algorithms 1–2 as the shared schedule IR, played under the
+            // bound cost backend (async) or summed per lane (sync).
+            let disp = ag_dispatch_ir(1, ep, tp, blk, blk, tp_domain);
+            let comb = rs_combine_ir(1, ep, tp, blk, bytes, tp_domain);
+            let (disp_async, disp_sync) = disp.makespans(c);
+            let (comb_async, comb_sync) = comb.makespans(c);
             match mode {
                 CommMode::Sync => disp_sync + comb_sync,
                 CommMode::FusedAsync => disp_async + comb_async,
@@ -260,13 +286,13 @@ impl LatencyModel {
     pub fn lambda_mix(&self, batch: usize, seq: usize, mode: CommMode) -> f64 {
         let s = ParallelStrategy::mixserve(self.cluster.n_nodes, self.cluster.gpus_per_node);
         self.comm_latency_layer(&s, batch, seq, Phase::Prefill, mode)
-            * (seq as f64 / seq as f64) // per layer
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::timing::NetSimCost;
 
     fn lm() -> LatencyModel {
         LatencyModel::new(&MoEModelConfig::deepseek_r1(), &ClusterConfig::ascend910b())
@@ -331,5 +357,70 @@ mod tests {
         let p = m.comm_latency_layer(&s, 16, 2048, Phase::Prefill, CommMode::Sync);
         let d = m.comm_latency_layer(&s, 16, 2048, Phase::Decode, CommMode::Sync);
         assert!(d < p);
+    }
+
+    #[test]
+    fn uniform_profile_prices_like_no_profile() {
+        // hot factor 1 must be a no-op: the skew-aware path reproduces
+        // the historical uniform-mean pricing bit-for-bit
+        let m = lm();
+        let explicit = m
+            .clone()
+            .with_load(ExpertLoadProfile::uniform(m.model.n_experts));
+        for s in [
+            ParallelStrategy::mixserve(4, 8),
+            ParallelStrategy::pure_ep(4, 8),
+            ParallelStrategy::tp_pp(8, 4),
+        ] {
+            for mode in [CommMode::Sync, CommMode::FusedAsync] {
+                let a = m.comm_latency_layer(&s, 16, 1024, Phase::Prefill, mode);
+                let b = explicit.comm_latency_layer(&s, 16, 1024, Phase::Prefill, mode);
+                assert_eq!(a, b, "{s} {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hot_profile_stretches_ep_but_not_pure_tp() {
+        let base = lm();
+        let hot = base
+            .clone()
+            .with_load(ExpertLoadProfile::zipf(256, 8, 1.2, 11));
+        let ep = ParallelStrategy::pure_ep(4, 8);
+        let hy = ParallelStrategy::mixserve(4, 8);
+        let tppp = ParallelStrategy::tp_pp(8, 1); // moe.ep == 1: skew-immune
+        for (s, grows) in [(ep, true), (hy, true), (tppp, false)] {
+            let a = base.comm_latency_layer(&s, 16, 1024, Phase::Prefill, CommMode::Sync);
+            let b = hot.comm_latency_layer(&s, 16, 1024, Phase::Prefill, CommMode::Sync);
+            if grows {
+                assert!(b > a * 1.05, "{s}: skew must stretch λ ({a} -> {b})");
+            } else {
+                assert_eq!(a, b, "{s}: pure TP is skew-immune");
+            }
+        }
+    }
+
+    #[test]
+    fn netsim_backend_never_cheaper_than_analytic() {
+        let model = MoEModelConfig::deepseek_r1();
+        let cl = ClusterConfig::ascend910b();
+        let analytic = LatencyModel::new(&model, &cl);
+        let contended = LatencyModel::with_cost(&model, &cl, NetSimCost::new(&cl));
+        // canonical strategies route intra-node collectives and
+        // per-node-aggregated sends: the backends agree exactly there;
+        // oversized (inter-node) TP groups share the NIC and must pay.
+        for (s, strictly) in [
+            (ParallelStrategy::mixserve(4, 8), false),
+            (ParallelStrategy::pure_ep(4, 8), false),
+            (ParallelStrategy::tp_pp(8, 4), false),
+            (ParallelStrategy::tp_pp(32, 1), true),
+        ] {
+            let a = analytic.comm_latency_layer(&s, 16, 1024, Phase::Prefill, CommMode::Sync);
+            let n = contended.comm_latency_layer(&s, 16, 1024, Phase::Prefill, CommMode::Sync);
+            assert!(n >= a * (1.0 - 1e-12), "{s}: netsim {n} < analytic {a}");
+            if strictly {
+                assert!(n > a * 1.5, "{s}: NIC sharing must bite ({n} !>> {a})");
+            }
+        }
     }
 }

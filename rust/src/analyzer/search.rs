@@ -2,12 +2,23 @@
 //! enumerate the grammar, filter by Eq. (8), score by the theoretical
 //! indicators, and return the optimum — "replacing empirical intuition
 //! with rigorous analysis".
+//!
+//! The analyzer is generic over the [`CommCost`] backend (analytic α–β
+//! by default, NetSim-backed for contention-aware selection) and carries
+//! an [`ExpertLoadProfile`], so the search prices the hot rank's A2A
+//! volume under measured gate skew instead of the uniform mean.
 
 use super::indicators::{evaluate, Indicators, Workload};
 use super::latency::{CommMode, LatencyModel};
 use super::memory::{check_memory, MemoryCheck};
+use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::grammar::enumerate_strategies;
+use crate::timing::{CommCost, ExpertLoadProfile};
+
+/// Seed for measured load profiles built via [`Analyzer::with_load_skew`]
+/// (deterministic selection runs).
+pub const LOAD_PROFILE_SEED: u64 = 0x10ad;
 
 /// What the analyzer optimizes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,31 +51,68 @@ pub fn objective_key(objective: Objective, ind: &Indicators) -> f64 {
 
 /// The automatic analyzer.
 #[derive(Debug, Clone)]
-pub struct Analyzer {
+pub struct Analyzer<C: CommCost = CollectiveCost> {
     pub model: MoEModelConfig,
     pub cluster: ClusterConfig,
     pub serving: ServingConfig,
     pub mode: CommMode,
+    pub cost: C,
+    pub load: ExpertLoadProfile,
 }
 
-impl Analyzer {
+impl Analyzer<CollectiveCost> {
     pub fn new(model: &MoEModelConfig, cluster: &ClusterConfig, serving: &ServingConfig) -> Self {
         Self {
             model: model.clone(),
             cluster: cluster.clone(),
             serving: serving.clone(),
             mode: CommMode::FusedAsync,
+            cost: CollectiveCost::new(cluster),
+            load: ExpertLoadProfile::uniform(model.n_experts),
         }
     }
+}
 
+impl<C: CommCost> Analyzer<C> {
     pub fn with_mode(mut self, mode: CommMode) -> Self {
         self.mode = mode;
         self
     }
 
+    /// Swap in a different cost backend (e.g. the NetSim-backed one).
+    pub fn with_cost<D: CommCost>(self, cost: D) -> Analyzer<D> {
+        Analyzer {
+            model: self.model,
+            cluster: self.cluster,
+            serving: self.serving,
+            mode: self.mode,
+            cost,
+            load: self.load,
+        }
+    }
+
+    /// Select under an explicit expert-load profile.
+    pub fn with_load(mut self, load: ExpertLoadProfile) -> Self {
+        self.load = load;
+        self
+    }
+
+    /// Select under gate skew measured at Zipf exponent `skew` (0 is the
+    /// exact uniform profile: choices reproduce the uniform pricing).
+    pub fn with_load_skew(self, skew: f64) -> Self {
+        let load = ExpertLoadProfile::zipf(
+            self.model.n_experts,
+            self.model.top_k,
+            skew,
+            LOAD_PROFILE_SEED,
+        );
+        self.with_load(load)
+    }
+
     /// Evaluate one strategy (memory + indicators).
     pub fn report(&self, s: &ParallelStrategy, wl: &Workload) -> StrategyReport {
-        let lm = LatencyModel::new(&self.model, &self.cluster);
+        let lm = LatencyModel::with_cost(&self.model, &self.cluster, self.cost.clone())
+            .with_load(self.load.clone());
         let memory = check_memory(
             &self.model,
             &self.cluster,
@@ -171,5 +219,29 @@ mod tests {
         // with a starved NIC the optimizer must not pick MORE inter-node
         // traffic than before
         assert!(b2.indicators.ttft >= b1.indicators.ttft * 0.99);
+    }
+
+    #[test]
+    fn zero_skew_profile_is_identity() {
+        let a = setup(ClusterConfig::ascend910b());
+        let wl = Workload::sharegpt(4.0);
+        let plain = a.best(&wl, Objective::MaxThroughput).unwrap();
+        let skewed = a.with_load_skew(0.0).best(&wl, Objective::MaxThroughput).unwrap();
+        assert_eq!(plain.strategy, skewed.strategy);
+        assert_eq!(plain.indicators.throughput, skewed.indicators.throughput);
+    }
+
+    #[test]
+    fn netsim_backend_searches_too() {
+        use crate::timing::NetSimCost;
+        let cluster = ClusterConfig::h20();
+        let a = Analyzer::new(
+            &MoEModelConfig::qwen3_235b(),
+            &cluster,
+            &ServingConfig::default(),
+        )
+        .with_cost(NetSimCost::new(&cluster));
+        let r = a.best(&Workload::sharegpt(2.0), Objective::MaxThroughput);
+        assert!(r.expect("netsim-backed search must succeed").memory.feasible());
     }
 }

@@ -11,11 +11,18 @@
 //! scale-out (more replicas, smaller comm domains, more aggregate batch
 //! slots) exactly as in the DP/EP trade-off of §III-B3 — the planner makes
 //! the choice quantitative.
+//!
+//! The planner inherits the timing layer end-to-end: it is generic over
+//! the [`CommCost`] backend (re-bound to every candidate pod shape) and
+//! carries a gate-skew exponent, so the fleet re-ranks (r × strategy)
+//! points under measured expert-load skew.
 
 use crate::analyzer::indicators::{Indicators, Workload};
 use crate::analyzer::latency::CommMode;
-use crate::analyzer::search::{objective_key, Analyzer, Objective};
+use crate::analyzer::search::{objective_key, Analyzer, LOAD_PROFILE_SEED, Objective};
+use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use crate::timing::{CommCost, ExpertLoadProfile};
 
 /// One point of the joint search.
 #[derive(Debug, Clone)]
@@ -62,26 +69,52 @@ pub fn carve_replicas(budget: &ClusterConfig, r: usize) -> Option<ClusterConfig>
 
 /// The joint (replica count × strategy) planner over a device budget.
 #[derive(Debug, Clone)]
-pub struct FleetPlanner {
+pub struct FleetPlanner<C: CommCost = CollectiveCost> {
     pub model: MoEModelConfig,
     pub budget: ClusterConfig,
     pub serving: ServingConfig,
     pub mode: CommMode,
+    pub cost: C,
+    /// gate-skew exponent the per-pod analyzers price λ under (0 =
+    /// uniform: the historical planner behavior)
+    pub skew: f64,
 }
 
-impl FleetPlanner {
+impl FleetPlanner<CollectiveCost> {
     pub fn new(model: &MoEModelConfig, budget: &ClusterConfig, serving: &ServingConfig) -> Self {
         Self {
             model: model.clone(),
             budget: budget.clone(),
             serving: serving.clone(),
             mode: CommMode::FusedAsync,
+            cost: CollectiveCost::new(budget),
+            skew: 0.0,
         }
     }
+}
 
+impl<C: CommCost> FleetPlanner<C> {
     pub fn with_mode(mut self, mode: CommMode) -> Self {
         self.mode = mode;
         self
+    }
+
+    /// Re-rank the joint search under measured gate skew.
+    pub fn with_skew(mut self, skew: f64) -> Self {
+        self.skew = skew;
+        self
+    }
+
+    /// Swap in a different cost backend (re-bound per candidate pod).
+    pub fn with_cost<D: CommCost>(self, cost: D) -> FleetPlanner<D> {
+        FleetPlanner {
+            model: self.model,
+            budget: self.budget,
+            serving: self.serving,
+            mode: self.mode,
+            cost,
+            skew: self.skew,
+        }
     }
 
     /// All feasible (replicas × strategy) points for `rate`, ranked by
@@ -89,12 +122,22 @@ impl FleetPlanner {
     /// up to the device budget; memory-infeasible pods fall out because
     /// the per-pod analyzer finds no strategy for them.
     pub fn plan(&self, rate: f64) -> Vec<FleetPlan> {
+        // the load profile depends only on (model, skew) — measure once,
+        // not per replica-count candidate
+        let load = ExpertLoadProfile::zipf(
+            self.model.n_experts,
+            self.model.top_k,
+            self.skew,
+            LOAD_PROFILE_SEED,
+        );
         let mut out = Vec::new();
         let mut r = 1usize;
         while r <= self.budget.total_devices() {
             if let Some(pod) = carve_replicas(&self.budget, r) {
-                let analyzer =
-                    Analyzer::new(&self.model, &pod, &self.serving).with_mode(self.mode);
+                let analyzer = Analyzer::new(&self.model, &pod, &self.serving)
+                    .with_cost(self.cost.rebind(&pod))
+                    .with_mode(self.mode)
+                    .with_load(load.clone());
                 let wl = Workload::sharegpt(rate / r as f64);
                 if let Some(best) = analyzer.best(&wl, Objective::MaxThroughput) {
                     out.push(FleetPlan {
@@ -245,5 +288,19 @@ mod tests {
         let s = p.render(8.0);
         assert!(s.contains("fleet plan"));
         assert!(s.contains("fleet tok/s"));
+    }
+
+    #[test]
+    fn skew_aware_planner_never_promises_more_throughput() {
+        // hot-rank pricing only removes λ optimism: every fleet point's
+        // predicted throughput at heavy skew is <= its uniform prediction
+        let uniform = planner(MoEModelConfig::qwen3_235b()).plan(8.0);
+        let skewed = planner(MoEModelConfig::qwen3_235b()).with_skew(1.2).plan(8.0);
+        let best_u = uniform.first().expect("feasible").total_throughput;
+        let best_s = skewed.first().expect("feasible").total_throughput;
+        assert!(
+            best_s <= best_u * 1.0001,
+            "skew-aware fleet optimum {best_s} exceeds uniform {best_u}"
+        );
     }
 }

@@ -6,14 +6,22 @@
 //! to a caller-supplied `now` and returns the next time anything can
 //! happen on it.  `serving::sim::simulate_serving` is now a thin
 //! single-replica driver over this type (DESIGN.md §Cluster).
+//!
+//! The replica is generic over the [`CommCost`] backend and can price λ
+//! under the *measured* per-iteration expert-load profile (the skew→λ
+//! pipeline's online end): when `lambda_load_aware` is set, each
+//! iteration's router output re-prices the hot rank's dispatch/combine
+//! volume before the iteration is timed.
 
 use crate::analyzer::latency::{CommMode, LatencyModel, Phase};
 use crate::analyzer::memory::check_memory;
+use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::moe::router::{LoadStats, RouterSim};
 use crate::serving::batcher::{Batcher, BatcherConfig};
 use crate::serving::kvcache::KvCacheManager;
 use crate::serving::metrics::ServingMetrics;
+use crate::timing::{CommCost, ExpertLoadProfile};
 use crate::workload::Request;
 
 /// Degree of gate skew used in the evaluation (mild, ShareGPT-like).
@@ -31,14 +39,20 @@ struct InFlight {
 /// One data-parallel serving replica: continuous batcher + paged KV cache
 /// + MoE router skew, timed by the analytic latency model.
 #[derive(Debug)]
-pub struct ReplicaSim {
+pub struct ReplicaSim<C: CommCost = CollectiveCost> {
     pub id: usize,
     strategy: ParallelStrategy,
     mode: CommMode,
-    lm: LatencyModel,
+    lm: LatencyModel<C>,
     batcher: Batcher,
     kv: KvCacheManager,
     router: RouterSim,
+    /// Zipf exponent the router draws gates at.
+    skew: f64,
+    /// When set, each iteration's measured loads re-price λ (hot-rank
+    /// volume); when clear, λ uses the uniform profile (the historical
+    /// seed behavior — skew then only stretches compute via `blend`).
+    lambda_load_aware: bool,
     pub metrics: ServingMetrics,
     in_flight: Option<InFlight>,
     /// time the last completed iteration finished
@@ -47,7 +61,7 @@ pub struct ReplicaSim {
     imb_sum: f64,
 }
 
-impl ReplicaSim {
+impl ReplicaSim<CollectiveCost> {
     pub fn new(
         model: &MoEModelConfig,
         cluster: &ClusterConfig,
@@ -57,7 +71,65 @@ impl ReplicaSim {
         seed: u64,
         id: usize,
     ) -> Self {
-        let lm = LatencyModel::new(model, cluster);
+        Self::with_cost(
+            model,
+            cluster,
+            strategy,
+            serving,
+            mode,
+            seed,
+            id,
+            GATE_SKEW,
+            false,
+            CollectiveCost::new(cluster),
+        )
+    }
+
+    /// A replica whose router draws at `skew` *and* whose λ is re-priced
+    /// from the measured per-iteration load (the load-aware pipeline).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_skew(
+        model: &MoEModelConfig,
+        cluster: &ClusterConfig,
+        strategy: &ParallelStrategy,
+        serving: &ServingConfig,
+        mode: CommMode,
+        seed: u64,
+        id: usize,
+        skew: f64,
+    ) -> Self {
+        Self::with_cost(
+            model,
+            cluster,
+            strategy,
+            serving,
+            mode,
+            seed,
+            id,
+            skew,
+            true,
+            CollectiveCost::new(cluster),
+        )
+    }
+}
+
+impl<C: CommCost> ReplicaSim<C> {
+    /// Fully parameterized constructor: cost backend, gate skew, and
+    /// whether the measured load re-prices λ each iteration.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_cost(
+        model: &MoEModelConfig,
+        cluster: &ClusterConfig,
+        strategy: &ParallelStrategy,
+        serving: &ServingConfig,
+        mode: CommMode,
+        seed: u64,
+        id: usize,
+        skew: f64,
+        lambda_load_aware: bool,
+        cost: C,
+    ) -> Self {
+        let lm = LatencyModel::with_cost(model, cluster, cost);
         // KV pool: whatever Eq. (8) leaves after weights, cluster-wide.
         let mem = check_memory(model, cluster, strategy, serving.max_batch, serving.max_seq);
         let kv_budget_bytes = mem
@@ -79,7 +151,9 @@ impl ReplicaSim {
                 max_waiting: serving.queue_cap,
             }),
             kv: KvCacheManager::new(blocks, serving.kv_block_tokens),
-            router: RouterSim::new(model.n_experts, model.top_k, GATE_SKEW, seed),
+            router: RouterSim::new(model.n_experts, model.top_k, skew, seed),
+            skew,
+            lambda_load_aware,
             metrics: ServingMetrics::new(),
             in_flight: None,
             clock: 0.0,
@@ -167,9 +241,11 @@ impl ReplicaSim {
                 .map(|id| self.batcher.get(*id).unwrap().req.len_in)
                 .max()
                 .unwrap();
-            let lat = self.lm.service_latency(&self.strategy, b, maxlen, Phase::Prefill, self.mode);
+            // measure this iteration's gate load first: it re-prices λ
+            // (when load-aware) and stretches the MoE compute
             let imb = self.expert_imbalance(b * maxlen);
             self.imb_sum += imb;
+            let lat = self.lm.service_latency(&self.strategy, b, maxlen, Phase::Prefill, self.mode);
             iter_time += lat.compute * blend(imb) + lat.comm + lat.p2p;
         }
         // ---- decode step for running requests
@@ -178,9 +254,9 @@ impl ReplicaSim {
             // context: actual mean current length (prompt + generated) of
             // the decoding requests, from batcher state
             let ctx = self.batcher.mean_decode_context().max(1);
-            let lat = self.lm.service_latency(&self.strategy, b, ctx, Phase::Decode, self.mode);
             let imb = self.expert_imbalance(b);
             self.imb_sum += imb;
+            let lat = self.lm.service_latency(&self.strategy, b, ctx, Phase::Decode, self.mode);
             iter_time += lat.compute * blend(imb) + lat.comm + lat.p2p;
         }
 
@@ -214,12 +290,27 @@ impl ReplicaSim {
     }
 
     /// Straggler factor for the MoE compute of one iteration: max/mean
-    /// load over the EP groups (1.0 when EP is not used).
+    /// load over the EP groups (1.0 when EP is not used).  When the
+    /// replica is load-aware, the same measured loads become the λ
+    /// pricing profile for this iteration.
     fn expert_imbalance(&mut self, tokens: usize) -> f64 {
         if self.strategy.moe.ep <= 1 {
             return 1.0;
         }
-        let loads = self.router.route_batch(tokens.clamp(1, 512));
+        // λ-aware replicas measure over ≥ 256 tokens so the hot-rank
+        // factor tracks the workload's skew, not single-iteration shot
+        // noise (a b=1 decode sample would report hot factors of 4-8
+        // even at zero skew); the historical path keeps its exact
+        // sampling so uniform-priced runs reproduce the seed behavior.
+        let sample = if self.lambda_load_aware {
+            tokens.clamp(256, 512)
+        } else {
+            tokens.clamp(1, 512)
+        };
+        let loads = self.router.route_batch(sample);
+        if self.lambda_load_aware {
+            self.lm.set_load(ExpertLoadProfile::from_loads(&loads, self.skew));
+        }
         LoadStats::from_loads(&loads, self.strategy.moe.ep).imbalance
     }
 }
@@ -298,5 +389,43 @@ mod tests {
         let t2 = r.step(t1 * 0.5).expect("still in flight");
         assert_eq!(t1, t2);
         assert!(r.queue_depth() > 0, "request still in service");
+    }
+
+    #[test]
+    fn load_aware_replica_runs_slower_under_heavy_skew() {
+        // the λ pipeline end-to-end: at heavy gate skew a load-aware
+        // EP replica's iterations take longer than a uniform-priced one's
+        let serving = ServingConfig::paper_eval(4.0);
+        let model = MoEModelConfig::deepseek_r1();
+        let cluster = ClusterConfig::ascend910b();
+        let strategy = ParallelStrategy::pure_ep(4, 8);
+        let mk = |aware: bool| {
+            let mut r = ReplicaSim::with_cost(
+                &model,
+                &cluster,
+                &strategy,
+                &serving,
+                CommMode::Sync,
+                5,
+                0,
+                1.2,
+                aware,
+                CollectiveCost::new(&cluster),
+            );
+            for id in 0..8 {
+                r.submit(Request { id, arrival: 0.0, len_in: 512, len_out: 16 });
+            }
+            let mut now = 0.0;
+            while let Some(t) = r.step(now) {
+                now = t;
+            }
+            now
+        };
+        let uniform_priced = mk(false);
+        let load_aware = mk(true);
+        assert!(
+            load_aware > uniform_priced,
+            "hot-rank pricing must stretch the run: {load_aware} !> {uniform_priced}"
+        );
     }
 }

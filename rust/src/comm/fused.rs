@@ -18,14 +18,16 @@
 //!   (n−1) inter, O(n) time, O(1) extra space.
 //!
 //! Implementations move real `f32` data (verified against the unfused
-//! primitives and a dense reference) *and* emit Gantt spans timed by the
-//! α–β cost model, so the same code answers both "is it correct?" and
-//! "what does the overlap buy?" (Fig. 12).
+//! primitives and a dense reference) *and* emit their round structure as
+//! the shared schedule IR (`timing::schedule`), played under any
+//! [`CommCost`] — so the same code answers "is it correct?", "what does
+//! the overlap buy?" (Fig. 12), and "what does contention change?".
 
-use super::cost::{CollectiveCost, CommDomain};
 use super::primitives::combine_reference;
 use super::world::{RankWorld, Tensor2};
-use crate::gantt::{Lane, Trace};
+use crate::gantt::Trace;
+use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir};
+use crate::timing::{CommCost, CommDomain};
 
 /// Result of a fused collective: per-node output tensors plus the timed
 /// trace (async schedule) and the equivalent synchronous makespan.
@@ -57,10 +59,10 @@ impl FusedResult {
 ///
 /// Output per node: `t_loc × h` fully combined hidden states for its own
 /// tokens (`Y[dst] = Σ_src Σ_tp contrib[src][tp][dst]`).
-pub fn fused_rs_combine(
+pub fn fused_rs_combine<C: CommCost>(
     world: &RankWorld,
     contrib: &[Vec<Tensor2>],
-    cost: &CollectiveCost,
+    cost: &C,
 ) -> FusedResult {
     let (n, m) = (world.n_nodes, world.m_per_node);
     let h = contrib[0][0].cols;
@@ -68,7 +70,6 @@ pub fn fused_rs_combine(
     assert!(t_total % n == 0, "rows must stack n destination blocks");
     let t_loc = t_total / n;
     assert!(h % m == 0, "hidden must divide TP degree");
-    let w = h / m;
 
     // --- data plane -----------------------------------------------------
     // §Perf: accumulate directly from each node's TP-summed contribution
@@ -93,94 +94,18 @@ pub fn fused_rs_combine(
             }
         }
     }
-    let _ = w; // slice width only matters to the time plane
 
     // --- time plane -------------------------------------------------------
-    // Per node, symmetric: n RS rounds (one per destination block) on the
-    // intra lane; n-1 sends on the inter lane, send_i gated on RS_i done;
-    // final AG gated on the last receive.  Receives land at the sender's
-    // send-completion time (full-duplex pairwise, i-step neighbour).
+    // Alg. 1's round structure as the shared IR: per node, n RS rounds
+    // (one per destination block) on the intra lane; n-1 sends on the
+    // inter lane, send_i gated on RS_i; final AG gated on the last send
+    // (full-duplex pairwise: receives land at the senders' send end).
     let blk_bytes = (t_loc * h * 4) as f64;
-    let slice_bytes = (t_loc * w * 4) as f64;
-    let rs_t = cost.reduce_scatter(blk_bytes, m, CommDomain::IntraNode);
-    let ag_t = cost.all_gather(blk_bytes, m, CommDomain::IntraNode);
-    // one pairwise round ships every rank's slice over the node NIC
-    let send_t = cost.round(slice_bytes * m as f64, CommDomain::InterNode);
-
-    let mut trace = Trace::default();
-    // all nodes are symmetric: draw node 0's lanes (and replicate logically)
-    for node in 0..n {
-        let mut intra_free = 0.0f64;
-        let mut inter_free = 0.0f64;
-        let mut rs_done = vec![0.0f64; n];
-        for i in 0..n {
-            // RS of destination block for round i ((node+i) mod n); round 0
-            // reduces the local block.
-            let s = intra_free;
-            let e = s + rs_t;
-            trace.push(Lane::Intra(node), format!("RS{i}"), s, e);
-            intra_free = e;
-            rs_done[i] = e;
-            if i >= 1 {
-                // ship block i as soon as it is reduced and the NIC is free
-                let s = inter_free.max(rs_done[i]);
-                let e = s + send_t;
-                trace.push(Lane::Inter(node), format!("S{i}"), s, e);
-                inter_free = e;
-            }
-        }
-        // AG can start once the last inbound block has landed; by symmetry
-        // the last receive completes at the senders' last send end.
-        let ag_start = intra_free.max(inter_free);
-        trace.push(Lane::Intra(node), "AG".to_string(), ag_start, ag_start + ag_t);
-    }
-
-    let sync_time = (n as f64) * rs_t + (n as f64 - 1.0) * send_t + ag_t;
+    let sched = rs_combine_ir(n, n, m, blk_bytes, blk_bytes, CommDomain::IntraNode);
+    let trace = sched.play(cost).trace;
+    let sync_time = sched.sync_time(cost);
 
     FusedResult { per_node, trace, sync_time }
-}
-
-/// Closed-form makespan of the Alg. 1 schedule (used by the analyzer on
-/// paper-scale models where we never materialize data):
-/// returns `(async, sync)` times for n pairwise rounds with per-round
-/// intra RS time `rs_t`, inter send time `send_t`, final AG `ag_t`.
-pub fn rs_combine_schedule(n: usize, rs_t: f64, send_t: f64, ag_t: f64) -> (f64, f64) {
-    if n <= 1 {
-        return (rs_t + ag_t, rs_t + ag_t);
-    }
-    let nf = n as f64;
-    // async: RS pipeline fills the intra lane; send_i gated on RS_i; the
-    // NIC drains sends back-to-back after its gate.
-    let mut intra_free = 0.0f64;
-    let mut inter_free = 0.0f64;
-    for i in 0..n {
-        let rs_done = intra_free + rs_t;
-        intra_free = rs_done;
-        if i >= 1 {
-            inter_free = inter_free.max(rs_done) + send_t;
-        }
-    }
-    let async_t = intra_free.max(inter_free) + ag_t;
-    let sync_t = nf * rs_t + (nf - 1.0) * send_t + ag_t;
-    (async_t, sync_t)
-}
-
-/// Closed-form makespan of the Alg. 2 schedule: `(async, sync)` for n−1
-/// pairwise rounds with inter send `send_t` and intra AG `ag_t` each.
-pub fn ag_dispatch_schedule(n: usize, send_t: f64, ag_t: f64) -> (f64, f64) {
-    if n <= 1 {
-        return (0.0, 0.0);
-    }
-    let mut inter_free = 0.0f64;
-    let mut intra_free = 0.0f64;
-    for _i in 1..n {
-        let recv_done = inter_free + send_t;
-        inter_free = recv_done;
-        intra_free = intra_free.max(recv_done) + ag_t;
-    }
-    let async_t = intra_free;
-    let sync_t = (n as f64 - 1.0) * (send_t + ag_t);
-    (async_t, sync_t)
 }
 
 /// Routing plan for dispatch: `route[src][tok]` = destination node of each
@@ -196,11 +121,11 @@ pub type Route = Vec<Vec<usize>>;
 /// Output per node `d`: rows of every token routed to `d`, ordered by
 /// (source node, token index), with full hidden dimension — i.e. exactly
 /// what the unfused AG-then-dispatch produces.
-pub fn fused_ag_dispatch(
+pub fn fused_ag_dispatch<C: CommCost>(
     world: &RankWorld,
     tokens: &[Tensor2],
     route: &Route,
-    cost: &CollectiveCost,
+    cost: &C,
 ) -> FusedResult {
     let (n, m) = (world.n_nodes, world.m_per_node);
     let h = tokens[0].cols;
@@ -243,35 +168,10 @@ pub fn fused_ag_dispatch(
     let total_remote: usize = max_rows_sent.iter().sum();
     let avg_rows = if n > 1 { total_remote as f64 / (n * (n - 1)) as f64 } else { 0.0 };
     let send_bytes = avg_rows * (w * 4) as f64 * m as f64; // all m lanes per round
-    let send_t = cost.round(send_bytes, CommDomain::InterNode);
     let ag_bytes = avg_rows * (h * 4) as f64;
-    let ag_t = cost.all_gather(ag_bytes, m, CommDomain::IntraNode);
-
-    let mut trace = Trace::default();
-    for node in 0..n {
-        let mut inter_free = 0.0f64;
-        let mut intra_free = 0.0f64;
-        let mut recv_done = vec![0.0f64; n];
-        for i in 1..n {
-            // send block i; receive lands simultaneously (symmetric pairwise)
-            let s = inter_free;
-            let e = s + send_t;
-            trace.push(Lane::Inter(node), format!("S{i}"), s, e);
-            inter_free = e;
-            recv_done[i] = e;
-            // AG of the block received in round i (overlaps round i+1's send)
-            let s = intra_free.max(recv_done[i]);
-            let e = s + ag_t;
-            trace.push(Lane::Intra(node), format!("AG{i}"), s, e);
-            intra_free = e;
-        }
-    }
-
-    let sync_time = if n > 1 {
-        (n as f64 - 1.0) * (send_t + ag_t)
-    } else {
-        0.0
-    };
+    let sched = ag_dispatch_ir(n, n, m, send_bytes, ag_bytes, CommDomain::IntraNode);
+    let trace = sched.play(cost).trace;
+    let sync_time = sched.sync_time(cost);
 
     FusedResult { per_node, trace, sync_time }
 }
@@ -307,8 +207,11 @@ pub fn rs_combine_reference(world: &RankWorld, contrib: &[Vec<Tensor2>]) -> Vec<
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::cost::CollectiveCost;
     use crate::comm::primitives::{synth_contrib, unfused_rs_a2a_ag};
     use crate::config::ClusterConfig;
+    use crate::gantt::Lane;
+    use crate::timing::NetSimCost;
 
     fn cost() -> CollectiveCost {
         CollectiveCost::new(&ClusterConfig::ascend910b())
@@ -412,5 +315,26 @@ mod tests {
             res.trace.spans.iter().filter(|s| matches!(s.lane, Lane::Inter(_))).count(),
             0
         );
+    }
+
+    #[test]
+    fn schedule_ir_is_cost_backend_agnostic() {
+        // the IR carries the round structure, not durations: Alg. 1's
+        // intra collectives and per-node sends time identically under
+        // both backends (no lane is shared)...
+        let world = RankWorld::new(4, 8);
+        let contrib = synth_contrib(&world, 64, 128, 2);
+        let netsim = NetSimCost::new(&ClusterConfig::ascend910b());
+        let analytic = fused_rs_combine(&world, &contrib, &cost());
+        let contended = fused_rs_combine(&world, &contrib, &netsim);
+        assert!((contended.async_time() - analytic.async_time()).abs() < 1e-15);
+        assert_eq!(contended.trace.spans.len(), analytic.trace.spans.len());
+        // ...while the SAME builder with an oversized (inter-node) TP
+        // group strictly stretches under the contention-aware backend
+        use crate::timing::schedule::rs_combine_ir;
+        let oversized = rs_combine_ir(1, 4, 16, 2e6, 2e6, CommDomain::InterNode);
+        let (a, _) = oversized.makespans(&cost());
+        let (n, _) = oversized.makespans(&netsim);
+        assert!(n > a, "shared-NIC RS/AG must stretch: {n} !> {a}");
     }
 }

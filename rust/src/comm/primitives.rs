@@ -6,12 +6,12 @@
 //! synchronous RS → A2A → AG) are built from these; the fused schedules
 //! in [`super::fused`] are verified against them.
 
-use super::cost::{CollectiveCost, CommDomain};
 use super::world::{RankWorld, Tensor2};
+use crate::timing::{CommCost, CommDomain};
 
 /// All-Reduce (sum) across a group of rank buffers; every buffer ends up
 /// holding the elementwise sum.  Returns modeled time (Eq. 2).
-pub fn all_reduce(bufs: &mut [Tensor2], cost: &CollectiveCost, domain: CommDomain) -> f64 {
+pub fn all_reduce(bufs: &mut [Tensor2], cost: &impl CommCost, domain: CommDomain) -> f64 {
     let d = bufs.len();
     if d <= 1 {
         return 0.0;
@@ -31,7 +31,7 @@ pub fn all_reduce(bufs: &mut [Tensor2], cost: &CollectiveCost, domain: CommDomai
 /// the sum.  Returns (per-rank slices, modeled time).
 pub fn reduce_scatter_cols(
     bufs: &[Tensor2],
-    cost: &CollectiveCost,
+    cost: &impl CommCost,
     domain: CommDomain,
 ) -> (Vec<Tensor2>, f64) {
     let d = bufs.len();
@@ -52,7 +52,7 @@ pub fn reduce_scatter_cols(
 /// ranks' column slices.  Returns (full tensor, modeled time).
 pub fn all_gather_cols(
     slices: &[Tensor2],
-    cost: &CollectiveCost,
+    cost: &impl CommCost,
     domain: CommDomain,
 ) -> (Tensor2, f64) {
     let d = slices.len();
@@ -73,7 +73,7 @@ pub fn all_gather_cols(
 /// (received blocks per rank, modeled time with the Pairwise algorithm).
 pub fn all_to_all_rows(
     send: &[Vec<Tensor2>],
-    cost: &CollectiveCost,
+    cost: &impl CommCost,
     domain: CommDomain,
 ) -> (Vec<Vec<Tensor2>>, f64) {
     let d = send.len();
@@ -110,7 +110,7 @@ pub fn all_to_all_rows(
 pub fn unfused_rs_a2a_ag(
     world: &RankWorld,
     contrib: &[Vec<Tensor2>],
-    cost: &CollectiveCost,
+    cost: &impl CommCost,
 ) -> (Vec<Tensor2>, f64) {
     let (n, m) = (world.n_nodes, world.m_per_node);
     let h = contrib[0][0].cols;
@@ -209,6 +209,7 @@ pub fn synth_contrib(world: &RankWorld, t_loc: usize, h: usize, seed: u64) -> Ve
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::cost::CollectiveCost;
     use crate::config::ClusterConfig;
 
     fn cost() -> CollectiveCost {

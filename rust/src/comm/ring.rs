@@ -8,8 +8,8 @@
 //! why MixServe's fused schedules build on Pairwise (direct delivery,
 //! overlappable) rather than Ring (store-and-forward volume inflation).
 
-use super::cost::{CollectiveCost, CommDomain};
 use super::world::Tensor2;
+use crate::timing::{CommCost, CommDomain};
 
 /// Ring All-To-All over row blocks: in round r, participant i forwards
 /// to (i+1) mod d whatever is destined further along the ring, keeping
@@ -17,7 +17,7 @@ use super::world::Tensor2;
 /// a block travels (j−i) mod d hops — total traffic is ~d/2× Pairwise's.
 pub fn ring_all_to_all_rows(
     send: &[Vec<Tensor2>],
-    cost: &CollectiveCost,
+    cost: &impl CommCost,
     domain: CommDomain,
 ) -> (Vec<Vec<Tensor2>>, f64) {
     let d = send.len();
@@ -69,7 +69,7 @@ pub fn ring_all_to_all_rows(
 /// Analytic Ring A2A cost: d−1 rounds; per-round per-link volume is the
 /// average in-flight share — Σ_h (h hops per block) ≈ d/2 × the Pairwise
 /// volume.  Exposed for the algorithm-choice ablation.
-pub fn ring_a2a_cost(cost: &CollectiveCost, bytes: f64, degree: usize, domain: CommDomain) -> f64 {
+pub fn ring_a2a_cost(cost: &impl CommCost, bytes: f64, degree: usize, domain: CommDomain) -> f64 {
     if degree <= 1 {
         return 0.0;
     }
@@ -82,6 +82,7 @@ pub fn ring_a2a_cost(cost: &CollectiveCost, bytes: f64, degree: usize, domain: C
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::cost::CollectiveCost;
     use crate::comm::primitives::all_to_all_rows;
     use crate::config::ClusterConfig;
 

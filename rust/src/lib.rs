@@ -21,5 +21,6 @@ pub mod runtime;
 pub mod serving;
 pub mod simulator;
 pub mod testkit;
+pub mod timing;
 pub mod util;
 pub mod workload;

@@ -20,7 +20,8 @@ use mixserve::grammar::parse_strategy;
 use mixserve::paperbench::{fig10, fig11, fig12, fig3, fig4, table1};
 use mixserve::runtime::Engine;
 use mixserve::serving::engine::RealEngine;
-use mixserve::serving::sim::run_rate;
+use mixserve::serving::sim::{run_rate, run_rate_skewed};
+use mixserve::timing::{CommCost, NetSimCost};
 use mixserve::util::cli::Args;
 use mixserve::workload::{ArrivalPattern, TraceGen};
 
@@ -42,22 +43,12 @@ fn model_by_name(name: &str) -> Result<MoEModelConfig> {
     })
 }
 
-fn cmd_analyze(args: &Args) -> Result<()> {
-    let cluster = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
-    let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
-    let rate = args.f64_or("rate", 4.0);
-    let top = args.usize_or("top", 10);
-    let analyzer = Analyzer::new(&model, &cluster, &ServingConfig::paper_eval(rate));
-    let wl = Workload::sharegpt(rate);
-    println!(
-        "MixServe automatic analyzer — {} on {} @ {rate} req/s",
-        model.name, cluster.name
-    );
+fn render_analysis<C: CommCost>(analyzer: &Analyzer<C>, wl: &Workload, top: usize) {
     println!(
         "{:<36} {:>10} {:>9} {:>10} {:>8} {:>10}",
         "strategy", "TTFT(ms)", "ITL(ms)", "tok/s", "rho", "mem(GB)"
     );
-    for r in analyzer.rank(&wl, Objective::MaxThroughput).iter().take(top) {
+    for r in analyzer.rank(wl, Objective::MaxThroughput).iter().take(top) {
         println!(
             "{:<36} {:>10.1} {:>9.2} {:>10.1} {:>8.2} {:>10.1}",
             r.strategy,
@@ -68,8 +59,32 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             r.memory.total() as f64 / 1e9
         );
     }
-    if let Some(best) = analyzer.best(&wl, Objective::MaxThroughput) {
+    if let Some(best) = analyzer.best(wl, Objective::MaxThroughput) {
         println!("\noptimal strategy: {}", best.strategy);
+    }
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let cluster = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+    let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+    let rate = args.f64_or("rate", 4.0);
+    let top = args.usize_or("top", 10);
+    let skew = args.f64_or("skew", 0.0);
+    let analyzer = Analyzer::new(&model, &cluster, &ServingConfig::paper_eval(rate))
+        .with_load_skew(skew);
+    let wl = Workload::sharegpt(rate);
+    let backend = args.get_or("cost", "analytic");
+    println!(
+        "MixServe automatic analyzer — {} on {} @ {rate} req/s (skew {skew}, {backend} cost)",
+        model.name, cluster.name
+    );
+    match backend.as_str() {
+        "analytic" => render_analysis(&analyzer, &wl, top),
+        "netsim" => {
+            let contended = analyzer.with_cost(NetSimCost::new(&cluster));
+            render_analysis(&contended, &wl, top);
+        }
+        other => bail!("unknown cost backend {other:?} (analytic | netsim)"),
     }
     Ok(())
 }
@@ -100,12 +115,23 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
     let rate = args.f64_or("rate", 4.0);
     let duration = args.f64_or("duration", 60.0);
+    let skew = args.f64_or("skew", 0.0);
     println!(
-        "simulating {} on {} at {rate} req/s for {duration}s",
-        model.name, cluster.name
+        "simulating {} on {} at {rate} req/s for {duration}s{}",
+        model.name,
+        cluster.name,
+        if skew > 0.0 {
+            format!(" (load-aware λ at gate skew {skew})")
+        } else {
+            String::new()
+        }
     );
     for sys in all_systems(&cluster) {
-        let rep = run_rate(&model, &cluster, &sys.strategy, sys.mode, rate, duration, 7);
+        let rep = if skew > 0.0 {
+            run_rate_skewed(&model, &cluster, &sys.strategy, sys.mode, rate, duration, 7, skew)
+        } else {
+            run_rate(&model, &cluster, &sys.strategy, sys.mode, rate, duration, 7)
+        };
         println!("{}", rep.metrics.report(&format!("{:<22}", sys.label)));
     }
     Ok(())
@@ -242,7 +268,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let budget = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
     let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
     let rate = args.f64_or("rate", 8.0);
-    let planner = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(rate));
+    let skew = args.f64_or("skew", 0.0);
+    let planner = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(rate))
+        .with_skew(skew);
     print!("{}", planner.render(rate));
     if let Some(best) = planner.best(rate) {
         println!(
@@ -311,14 +339,17 @@ fn main() -> Result<()> {
                  usage: mixserve <command> [--options]\n\n\
                  commands:\n\
                  \x20 analyze   [--model M] [--cluster C] [--rate R] [--top N]\n\
+                 \x20           [--skew Z] [--cost analytic|netsim]\n\
+                 \x20           (Z > 0 prices λ at the hot rank's measured load)\n\
                  \x20 serve     [--artifacts DIR] [--model tiny] [--rate R] [--duration S]\n\
                  \x20           [--queue-cap N]\n\
                  \x20 simulate  [--model M] [--cluster C] [--rate R] [--duration S]\n\
+                 \x20           [--skew Z]\n\
                  \x20 fleet     [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
                  \x20           [--duration S] [--pattern poisson|bursty|diurnal]\n\
                  \x20           [--slo-ttft S] [--strategy \"TP=8 + DP=4, TP=8 + EP=4\"]\n\
                  \x20           (each replica runs on its own POD-shaped device pool)\n\
-                 \x20 plan      [--model M] [--cluster BUDGET] [--rate R]\n\
+                 \x20 plan      [--model M] [--cluster BUDGET] [--rate R] [--skew Z]\n\
                  \x20           (carve one device budget into replicas x strategy)\n\
                  \x20 fleetsweep  [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
                  \x20 fig3|fig4|fig10|fig11|fig12|table1   regenerate paper artifacts\n\n\

@@ -6,6 +6,7 @@
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig};
 use crate::netsim::NetSim;
+use crate::timing::CommCost;
 
 pub struct Fig3Row {
     pub model: String,

@@ -1,9 +1,16 @@
 //! Fig. 4 — Gantt comparison of pure EP vs hybrid TP+EP for a single MoE
 //! block (DeepSeek-R1 layer on the 4×8 Ascend cluster).
+//!
+//! The hybrid's dispatch/combine lanes come straight from the shared
+//! schedule IR (`timing::schedule`) — the same round structures the
+//! latency model prices and `comm::fused` executes — played at absolute
+//! offsets to compose dispatch → compute → combine into one chart.
 
 use crate::comm::cost::{CollectiveCost, CommDomain};
 use crate::config::{ClusterConfig, MoEModelConfig};
 use crate::gantt::{Lane, Trace};
+use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir};
+use crate::timing::CommCost;
 
 pub struct Fig4Result {
     pub ep_trace: Trace,
@@ -30,44 +37,32 @@ pub fn build(cluster: &ClusterConfig, model: &MoEModelConfig, batch: usize, seq:
     ep.push(Lane::Compute(0), "Experts", ar + a2a, ar + a2a + comp);
     ep.push(Lane::Inter(0), "Combine", ar + a2a + comp, ar + 2.0 * a2a + comp);
 
-    // ---- hybrid TP+EP (Eq. 13 with fusion): intra RS/AG overlap inter A2A
-    let mut hy = Trace::default();
+    // ---- hybrid TP+EP (Eq. 13 with fusion): intra RS/AG overlap inter
+    // pairwise sends — Algorithms 1–2 from the shared IR, node 0's lanes.
     let vol = global * k / n as f64;
     let blk = vol / n as f64;
-    let rs_t = cost.reduce_scatter(blk, m, CommDomain::IntraNode);
-    let ag_blk = cost.all_gather(blk, m, CommDomain::IntraNode);
-    let send_t = cost.round(blk, CommDomain::InterNode);
-    let ag_out = cost.all_gather(global / n as f64, m, CommDomain::IntraNode);
+    let mut hy = Trace::default();
     // dispatch: n-1 rounds, AG_i overlaps send_{i+1}
-    let mut inter_free = 0.0f64;
-    let mut intra_free = 0.0f64;
-    for i in 1..n {
-        let s = inter_free;
-        hy.push(Lane::Inter(0), format!("S{i}"), s, s + send_t);
-        inter_free = s + send_t;
-        let a = intra_free.max(inter_free);
-        hy.push(Lane::Intra(0), format!("AG{i}"), a, a + ag_blk);
-        intra_free = a + ag_blk;
+    let disp = ag_dispatch_ir(1, n, m, blk, blk, CommDomain::IntraNode).play(&cost);
+    for s in &disp.trace.spans {
+        hy.push(s.lane.clone(), s.label.clone(), s.start, s.end);
     }
-    let disp_done = intra_free.max(inter_free);
+    let disp_done = disp.makespan();
     let comp_h = expert_compute(cluster, model, batch * seq, n * m);
     hy.push(Lane::Compute(0), "Experts", disp_done, disp_done + comp_h);
-    // combine: n RS rounds overlap n-1 sends, then AG
-    let base = disp_done + comp_h;
-    let mut intra_free = base;
-    let mut inter_free = base;
-    for i in 0..n {
-        let s = intra_free;
-        hy.push(Lane::Intra(0), format!("RS{i}"), s, s + rs_t);
-        intra_free = s + rs_t;
-        if i >= 1 {
-            let ss = inter_free.max(intra_free);
-            hy.push(Lane::Inter(0), format!("C{i}"), ss, ss + send_t);
-            inter_free = ss + send_t;
-        }
+    // combine: n RS rounds overlap n-1 sends, then the output AG
+    let comb = rs_combine_ir(1, n, m, blk, global / n as f64, CommDomain::IntraNode)
+        .play_at(&cost, disp_done + comp_h);
+    for s in &comb.trace.spans {
+        // relabel combine-phase sends C{i} so the chart keeps the
+        // dispatch-vs-combine distinction on the inter lane
+        let label = if matches!(s.lane, Lane::Inter(_)) {
+            s.label.replacen('S', "C", 1)
+        } else {
+            s.label.clone()
+        };
+        hy.push(s.lane.clone(), label, s.start, s.end);
     }
-    let ag_s = intra_free.max(inter_free);
-    hy.push(Lane::Intra(0), "AG", ag_s, ag_s + ag_out);
 
     Fig4Result {
         ep_total_ms: ep.makespan() * 1e3,

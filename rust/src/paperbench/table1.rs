@@ -4,6 +4,7 @@
 
 use crate::comm::cost::{CollectiveCost, CommDomain};
 use crate::config::ClusterConfig;
+use crate::timing::CommCost;
 
 pub struct Table1Row {
     pub block: &'static str,

@@ -28,17 +28,33 @@ pub enum Shard {
 }
 
 /// A (tensor name, shard) assignment for one rank.
+///
+/// Built via [`RankPlan::new`], which indexes the assignments by tensor
+/// name — plans are queried per-tensor per-rank in the runtime path, so
+/// [`RankPlan::shard_of`] must not scan.
 #[derive(Debug, Clone)]
 pub struct RankPlan {
     pub rank: usize,
     pub node: usize,
     pub tp: usize,
     pub assignments: Vec<(String, Shard)>,
+    index: std::collections::HashMap<String, usize>,
 }
 
 impl RankPlan {
+    pub fn new(rank: usize, node: usize, tp: usize, assignments: Vec<(String, Shard)>) -> Self {
+        let index = assignments
+            .iter()
+            .enumerate()
+            .map(|(i, (name, _))| (name.clone(), i))
+            .collect();
+        Self { rank, node, tp, assignments, index }
+    }
+
+    /// Map-backed lookup (O(1); the runtime path queries every tensor of
+    /// every rank when loading shards).
     pub fn shard_of(&self, tensor: &str) -> Option<&Shard> {
-        self.assignments.iter().find(|(n, _)| n == tensor).map(|(_, s)| s)
+        self.index.get(tensor).map(|&i| &self.assignments[i].1)
     }
 }
 
@@ -97,7 +113,7 @@ pub fn plan_hybrid(
             a.push((p("sd"), Shard::Slice { dim: 0, index: mi, of: moe_tp }));
         }
         a.push(("ln_f".into(), Shard::Replicated));
-        ranks.push(RankPlan { rank: r.0, node, tp, assignments: a });
+        ranks.push(RankPlan::new(r.0, node, tp, a));
     }
     PartitionPlan { strategy: *strategy, ranks }
 }
@@ -269,6 +285,18 @@ mod tests {
         // replication means the grid holds more elements than one copy
         let grid: u64 = per.iter().sum();
         assert!(grid > total);
+    }
+
+    #[test]
+    fn shard_of_indexed_lookup_matches_scan() {
+        let (m, s, w) = setup();
+        let plan = plan_hybrid(&m, &s, &w);
+        for r in &plan.ranks {
+            for (name, shard) in &r.assignments {
+                assert_eq!(r.shard_of(name), Some(shard), "{name}");
+            }
+            assert_eq!(r.shard_of("no.such.tensor"), None);
+        }
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! The engine loop itself lives in `cluster::replica::ReplicaSim`
 //! (an explicit `step(now) -> next_event_time` machine, so the fleet
 //! simulator can interleave many replicas); this module drives a single
-//! replica over a trace and keeps the historical entry points.
+//! replica over a trace and keeps the historical entry points.  The
+//! `*_skewed` variants thread a gate-skew exponent through to the
+//! load-aware replica, so the measured imbalance re-prices λ every
+//! iteration (the skew→λ pipeline's simulation end).
 
 pub use crate::cluster::replica::GATE_SKEW;
 
@@ -19,6 +22,7 @@ use crate::analyzer::latency::CommMode;
 use crate::cluster::replica::ReplicaSim;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::serving::metrics::ServingMetrics;
+use crate::timing::CommCost;
 use crate::workload::{Request, TraceGen};
 
 /// Result of one simulated serving run.
@@ -32,17 +36,9 @@ pub struct SimReport {
     pub mean_imbalance: f64,
 }
 
-/// Run the continuous-batching loop over `trace` on one replica.
-pub fn simulate_serving(
-    model: &MoEModelConfig,
-    cluster: &ClusterConfig,
-    strategy: &ParallelStrategy,
-    serving: &ServingConfig,
-    mode: CommMode,
-    trace: &[Request],
-    seed: u64,
-) -> SimReport {
-    let mut replica = ReplicaSim::new(model, cluster, strategy, serving, mode, seed, 0);
+/// Drive one replica over a sorted-by-us arrival list until drained;
+/// returns the final clock.
+fn drive<C: CommCost>(replica: &mut ReplicaSim<C>, trace: &[Request]) -> f64 {
     let mut arrivals = trace.to_vec();
     arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
 
@@ -66,16 +62,54 @@ pub fn simulate_serving(
         }
         now = t;
     }
+    now
+}
 
+fn report<C: CommCost>(replica: ReplicaSim<C>, now: f64, mode: CommMode) -> SimReport {
     let mut metrics = replica.metrics.clone();
     metrics.duration = now.max(1e-9);
     SimReport {
-        strategy: *strategy,
+        strategy: *replica.strategy(),
         mode,
         metrics,
         iterations: replica.iterations,
         mean_imbalance: replica.mean_imbalance(),
     }
+}
+
+/// Run the continuous-batching loop over `trace` on one replica.
+pub fn simulate_serving(
+    model: &MoEModelConfig,
+    cluster: &ClusterConfig,
+    strategy: &ParallelStrategy,
+    serving: &ServingConfig,
+    mode: CommMode,
+    trace: &[Request],
+    seed: u64,
+) -> SimReport {
+    let mut replica = ReplicaSim::new(model, cluster, strategy, serving, mode, seed, 0);
+    let now = drive(&mut replica, trace);
+    report(replica, now, mode)
+}
+
+/// [`simulate_serving`] with a load-aware replica: the router draws at
+/// `skew` and every iteration's measured expert loads re-price λ (the
+/// hot rank's dispatch/combine volume), not just the MoE compute.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_serving_skewed(
+    model: &MoEModelConfig,
+    cluster: &ClusterConfig,
+    strategy: &ParallelStrategy,
+    serving: &ServingConfig,
+    mode: CommMode,
+    trace: &[Request],
+    seed: u64,
+    skew: f64,
+) -> SimReport {
+    let mut replica =
+        ReplicaSim::with_skew(model, cluster, strategy, serving, mode, seed, 0, skew);
+    let now = drive(&mut replica, trace);
+    report(replica, now, mode)
 }
 
 /// Convenience: build a trace and run (the Fig. 10 entry point).
@@ -91,6 +125,23 @@ pub fn run_rate(
     let serving = ServingConfig::paper_eval(rate);
     let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
     simulate_serving(model, cluster, strategy, &serving, mode, &trace, seed)
+}
+
+/// [`run_rate`] with the load-aware replica at gate skew `skew`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rate_skewed(
+    model: &MoEModelConfig,
+    cluster: &ClusterConfig,
+    strategy: &ParallelStrategy,
+    mode: CommMode,
+    rate: f64,
+    duration: f64,
+    seed: u64,
+    skew: f64,
+) -> SimReport {
+    let serving = ServingConfig::paper_eval(rate);
+    let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
+    simulate_serving_skewed(model, cluster, strategy, &serving, mode, &trace, seed, skew)
 }
 
 #[cfg(test)]
@@ -209,6 +260,23 @@ mod tests {
             "decode over a 3k context must be slower than over 64: {} !> {}",
             long.metrics.itl_summary().mean,
             short.metrics.itl_summary().mean
+        );
+    }
+
+    #[test]
+    fn skewed_run_no_faster_than_uniform_pricing() {
+        // same trace, same strategy: re-pricing λ with the measured hot
+        // load can only slow an EP deployment down
+        let model = MoEModelConfig::deepseek_r1();
+        let cluster = ClusterConfig::ascend910b();
+        let s = ParallelStrategy::pure_ep(4, 8);
+        let base = run_rate(&model, &cluster, &s, CommMode::Sync, 2.0, 20.0, 7);
+        let skewed = run_rate_skewed(&model, &cluster, &s, CommMode::Sync, 2.0, 20.0, 7, 1.2);
+        assert!(
+            skewed.metrics.itl_summary().mean >= base.metrics.itl_summary().mean,
+            "skewed {} !>= uniform {}",
+            skewed.metrics.itl_summary().mean,
+            base.metrics.itl_summary().mean
         );
     }
 }

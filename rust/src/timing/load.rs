@@ -1,0 +1,155 @@
+//! Expert-load profiles: the skew→λ pipeline's data carrier.
+//!
+//! EP "tends to suffer from load imbalance, especially when the parallel
+//! degree is high" (§Abstract) — but the analyzer's λ (Eqs. 5/12/13)
+//! historically priced the *uniform-placement mean* volume.  An
+//! [`ExpertLoadProfile`] carries per-expert load shares (measured from
+//! the gate simulator, observed online, or synthetic), from which the
+//! latency model derives the *hot rank's* straggler factor at any EP
+//! grouping — the quantity that actually gates a dispatch/combine.
+
+use crate::moe::router::RouterSim;
+
+/// Per-expert load shares (summing to 1) plus the Zipf exponent that
+/// generated them (0 = uniform, for reporting).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertLoadProfile {
+    pub skew: f64,
+    shares: Vec<f64>,
+}
+
+/// Tokens routed when measuring a profile from the gate simulator —
+/// large enough that the measured hot factor is stable across seeds.
+pub const MEASURE_TOKENS: usize = 8192;
+
+impl ExpertLoadProfile {
+    /// Perfectly balanced experts: every hot factor is exactly 1.
+    pub fn uniform(n_experts: usize) -> Self {
+        let n = n_experts.max(1);
+        Self { skew: 0.0, shares: vec![1.0 / n as f64; n] }
+    }
+
+    /// Normalize arbitrary non-negative shares into a profile.
+    pub fn from_shares(shares: Vec<f64>, skew: f64) -> Self {
+        let total: f64 = shares.iter().sum();
+        if total <= 0.0 || shares.is_empty() {
+            return Self::uniform(shares.len());
+        }
+        Self { skew, shares: shares.iter().map(|s| s / total).collect() }
+    }
+
+    /// Profile from measured per-expert token counts (e.g. one serving
+    /// iteration's router output).
+    pub fn from_loads(loads: &[usize], skew: f64) -> Self {
+        Self::from_shares(loads.iter().map(|&l| l as f64).collect(), skew)
+    }
+
+    /// Measure a profile by routing `tokens` through the gate simulator
+    /// at the given Zipf exponent (deterministic under `seed`).
+    pub fn measured(n_experts: usize, top_k: usize, skew: f64, tokens: usize, seed: u64) -> Self {
+        let mut router = RouterSim::new(n_experts, top_k, skew, seed);
+        Self::from_loads(&router.route_batch(tokens), skew)
+    }
+
+    /// The canonical skew→profile entry point: `skew == 0` yields the
+    /// exact uniform profile (so a skew-aware analyzer at zero skew
+    /// reproduces the uniform-pricing choices bit-for-bit), anything
+    /// else is measured over [`MEASURE_TOKENS`] tokens.
+    pub fn zipf(n_experts: usize, top_k: usize, skew: f64, seed: u64) -> Self {
+        if skew == 0.0 {
+            Self::uniform(n_experts)
+        } else {
+            Self::measured(n_experts, top_k, skew, MEASURE_TOKENS, seed)
+        }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.shares.len()
+    }
+
+    /// Straggler factor of the hottest of `groups` contiguous EP groups:
+    /// max group share / mean group share (≥ 1; exactly 1 when uniform
+    /// and the groups divide evenly).  This is what stretches the EP
+    /// compute *and* the A2A volume of the hot rank.
+    ///
+    /// When `groups` does not divide the expert count, experts are
+    /// placed contiguously with balanced sizes (differing by ≤ 1); the
+    /// residual size imbalance is then genuinely priced — a rank holding
+    /// one extra expert really does receive more traffic.
+    pub fn hot_factor(&self, groups: usize) -> f64 {
+        let n = self.shares.len();
+        if groups <= 1 || groups > n {
+            return 1.0;
+        }
+        let total: f64 = self.shares.iter().sum();
+        let mean = total / groups as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        let (base, rem) = (n / groups, n % groups);
+        let mut max = 0.0f64;
+        let mut idx = 0;
+        for g in 0..groups {
+            let size = base + usize::from(g < rem);
+            let sum: f64 = self.shares[idx..idx + size].iter().sum();
+            idx += size;
+            max = max.max(sum);
+        }
+        (max / mean).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_hot_factor_is_one() {
+        let p = ExpertLoadProfile::uniform(256);
+        for g in [1usize, 2, 4, 8, 16, 32] {
+            assert!((p.hot_factor(g) - 1.0).abs() < 1e-12, "g={g}");
+        }
+    }
+
+    #[test]
+    fn zipf_zero_is_exactly_uniform() {
+        assert_eq!(ExpertLoadProfile::zipf(64, 8, 0.0, 7), ExpertLoadProfile::uniform(64));
+    }
+
+    #[test]
+    fn hot_factor_grows_with_skew_and_groups() {
+        let mild = ExpertLoadProfile::zipf(256, 8, 0.4, 5);
+        let heavy = ExpertLoadProfile::zipf(256, 8, 1.2, 5);
+        assert!(heavy.hot_factor(32) > mild.hot_factor(32));
+        // finer grouping can only concentrate the hot mass further
+        assert!(heavy.hot_factor(32) >= heavy.hot_factor(4));
+        assert!(heavy.hot_factor(4) > 1.5, "zipf 1.2 must be visibly hot");
+    }
+
+    #[test]
+    fn from_loads_matches_router_load_stats() {
+        // the profile's contiguous grouping must agree with
+        // moe::router::LoadStats (same chunking, same max/mean)
+        use crate::moe::router::LoadStats;
+        let mut r = RouterSim::new(32, 2, 0.8, 9);
+        let loads = r.route_batch(2000);
+        let p = ExpertLoadProfile::from_loads(&loads, 0.8);
+        for g in [2usize, 4, 8, 16, 32] {
+            let st = LoadStats::from_loads(&loads, g);
+            assert!(
+                (p.hot_factor(g) - st.imbalance).abs() < 1e-9,
+                "g={g}: {} vs {}",
+                p.hot_factor(g),
+                st.imbalance
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_shares_are_safe() {
+        let p = ExpertLoadProfile::from_shares(vec![], 0.5);
+        assert_eq!(p.hot_factor(4), 1.0);
+        let z = ExpertLoadProfile::from_shares(vec![0.0; 8], 0.5);
+        assert!((z.hot_factor(4) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,213 @@
+//! The unified timing layer: one [`CommCost`] trait behind every
+//! communication time in the system.
+//!
+//! Before this layer existed the analyzer scored strategies with the
+//! closed-form α–β model while the fused schedules, netsim, and the
+//! serving/cluster simulations timed the *same* collectives with their
+//! own hand-rolled span arithmetic — so the "automatic" selector could
+//! disagree with the system it was selecting for.  Now:
+//!
+//! * [`CommCost`] — the single vocabulary of timed communication:
+//!   one primitive (`round_shared`: one pairwise round of `bytes` with
+//!   `sharers` co-located ranks funneling through the lane) plus the
+//!   collectives of Table I / Eqs. (1)–(3) derived from it.  Two
+//!   implementations ship: the analytic [`CollectiveCost`]
+//!   (`comm::cost`, ignores contention — the paper's closed forms) and
+//!   the contention-aware [`NetSimCost`] (backed by `netsim`'s lane
+//!   queueing, charges the NIC for every co-located rank's traffic à la
+//!   MoNTA's per-link traffic accounting).
+//! * [`schedule`] — the typed schedule IR (rounds/steps with lane,
+//!   bytes, and gating) that `comm::fused`, the latency model, and the
+//!   Gantt builders produce/consume instead of hand-rolling span timing.
+//! * [`load`] — [`ExpertLoadProfile`]: measured (or synthetic) expert
+//!   popularity, so λ (Eqs. 5/12/13) prices the *hot rank's* A2A volume
+//!   rather than the uniform-placement mean (EPS-MoE's observation that
+//!   the skewed dispatch/combine path is where the time goes).
+//!
+//! [`CollectiveCost`]: crate::comm::cost::CollectiveCost
+
+pub mod load;
+pub mod netsim_cost;
+pub mod schedule;
+
+pub use load::ExpertLoadProfile;
+pub use netsim_cost::NetSimCost;
+pub use schedule::{ag_dispatch_ir, rs_combine_ir, CollOp, Played, Schedule, Step};
+
+use crate::config::ClusterConfig;
+
+/// Which link class a transfer rides (Fig. 3's two regimes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommDomain {
+    IntraNode,
+    InterNode,
+}
+
+/// Expected number of *distinct* EP groups a token's top-k experts land
+/// in when placed uniformly over `groups` groups:
+/// `E[distinct] = g·(1−(1−1/g)^k)`.
+pub fn expected_distinct_groups(groups: usize, k: usize) -> f64 {
+    if groups == 0 {
+        return 0.0;
+    }
+    let g = groups as f64;
+    g * (1.0 - (1.0 - 1.0 / g).powf(k as f64))
+}
+
+/// Expected activation copies a token ships to *remote* EP groups — the
+/// hybrid sends at most one copy per destination group, of which
+/// `(g−1)/g` are remote (§III-C2's central volume saving).
+pub fn remote_group_copies(groups: usize, k: usize) -> f64 {
+    if groups <= 1 {
+        return 0.0;
+    }
+    expected_distinct_groups(groups, k) * (groups as f64 - 1.0) / groups as f64
+}
+
+/// A communication cost model bound to one cluster.
+///
+/// Everything is derived from one primitive, `round_shared`; no module
+/// outside this layer composes raw α–β times.  Implementations:
+/// `CollectiveCost` (analytic) and [`NetSimCost`] (contention-aware).
+pub trait CommCost: std::fmt::Debug + Clone {
+    /// The cluster this model is bound to.
+    fn cluster(&self) -> &ClusterConfig;
+
+    /// One communication round in which `sharers` co-located ranks each
+    /// move `bytes` through the lane concurrently.  The analytic model
+    /// ignores `sharers` (per-link view); contention-aware models charge
+    /// the shared lane for all of them.
+    fn round_shared(&self, bytes: f64, sharers: usize, domain: CommDomain) -> f64;
+
+    /// The same cost model re-bound to a different cluster (the fleet
+    /// planner re-binds per candidate pod shape).
+    fn rebind(&self, cluster: &ClusterConfig) -> Self;
+
+    /// Domain a node-major communicator of `degree` ranks lives in.
+    fn domain_of(&self, degree: usize) -> CommDomain {
+        if self.cluster().spans_nodes(degree) {
+            CommDomain::InterNode
+        } else {
+            CommDomain::IntraNode
+        }
+    }
+
+    /// Ranks of a node-major communicator of `degree` that share one
+    /// node's NIC (1 for intra-node domains: the fabric is per-link).
+    fn nic_sharers(&self, degree: usize, domain: CommDomain) -> usize {
+        match domain {
+            CommDomain::IntraNode => 1,
+            CommDomain::InterNode => degree.min(self.cluster().gpus_per_node).max(1),
+        }
+    }
+
+    /// Launch overhead (α) of one round in `domain`.
+    fn launch_overhead(&self, domain: CommDomain) -> f64 {
+        match domain {
+            CommDomain::IntraNode => self.cluster().intra_lat,
+            CommDomain::InterNode => self.cluster().inter_lat,
+        }
+    }
+
+    /// Pure wire time of `bytes` (a round minus its launch overhead).
+    fn wire(&self, bytes: f64, sharers: usize, domain: CommDomain) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        (self.round_shared(bytes, sharers, domain) - self.launch_overhead(domain)).max(0.0)
+    }
+
+    /// One lane's time for `rounds` back-to-back pairwise launches
+    /// carrying `bytes` in total (the rank-granular A2A lane model).
+    fn pairwise_rounds(&self, rounds: usize, bytes: f64, sharers: usize, domain: CommDomain) -> f64 {
+        if rounds == 0 {
+            return 0.0;
+        }
+        rounds as f64 * self.launch_overhead(domain) + self.wire(bytes, sharers, domain)
+    }
+
+    /// One α–β round moving `bytes` per rank-pair (no lane sharing).
+    fn round(&self, bytes: f64, domain: CommDomain) -> f64 {
+        self.round_shared(bytes, 1, domain)
+    }
+
+    /// Reduce-Scatter — Eq. (1): RS(size, degree) ∝ size/degree, 1 round.
+    fn reduce_scatter(&self, bytes: f64, degree: usize, domain: CommDomain) -> f64 {
+        if degree <= 1 {
+            return 0.0;
+        }
+        self.round_shared(
+            bytes * (degree as f64 - 1.0) / degree as f64,
+            self.nic_sharers(degree, domain),
+            domain,
+        )
+    }
+
+    /// All-Gather — same cost shape as RS (Eq. 1).
+    fn all_gather(&self, bytes: f64, degree: usize, domain: CommDomain) -> f64 {
+        self.reduce_scatter(bytes, degree, domain)
+    }
+
+    /// All-Reduce — Eq. (2): decomposed RS + AG.
+    fn all_reduce(&self, bytes: f64, degree: usize, domain: CommDomain) -> f64 {
+        self.reduce_scatter(bytes, degree, domain) + self.all_gather(bytes, degree, domain)
+    }
+
+    /// All-To-All, Pairwise — Eq. (3): (degree−1) rounds of size/degree.
+    fn all_to_all(&self, bytes: f64, degree: usize, domain: CommDomain) -> f64 {
+        if degree <= 1 {
+            return 0.0;
+        }
+        (degree as f64 - 1.0) * self.round_shared(
+            bytes / degree as f64,
+            self.nic_sharers(degree, domain),
+            domain,
+        )
+    }
+
+    /// Point-to-point transfer (PP stage boundary).
+    fn p2p(&self, bytes: f64) -> f64 {
+        // PP stages sit on different nodes in every paper configuration.
+        self.round(bytes, CommDomain::InterNode)
+    }
+
+    /// Convenience: AR over a node-major communicator (domain inferred).
+    fn ar_auto(&self, bytes: f64, degree: usize) -> f64 {
+        self.all_reduce(bytes, degree, self.domain_of(degree))
+    }
+
+    /// Convenience: A2A over a node-major communicator (domain inferred).
+    fn a2a_auto(&self, bytes: f64, degree: usize) -> f64 {
+        self.all_to_all(bytes, degree, self.domain_of(degree))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_groups_saturate_at_group_count() {
+        assert!(expected_distinct_groups(4, 1) > 0.99);
+        let d = expected_distinct_groups(4, 64);
+        assert!(d > 3.9 && d <= 4.0, "top-64 over 4 groups hits all: {d}");
+        assert_eq!(expected_distinct_groups(0, 8), 0.0);
+    }
+
+    #[test]
+    fn remote_copies_zero_for_single_group() {
+        assert_eq!(remote_group_copies(1, 8), 0.0);
+        let r = remote_group_copies(32, 8);
+        assert!(r > 0.0 && r < 8.0, "at most k remote copies: {r}");
+    }
+
+    #[test]
+    fn remote_copies_grow_with_groups() {
+        let mut prev = 0.0;
+        for g in [2usize, 4, 8, 16, 32] {
+            let r = remote_group_copies(g, 8);
+            assert!(r > prev, "g={g}: {r} !> {prev}");
+            prev = r;
+        }
+    }
+}

@@ -1,0 +1,347 @@
+//! The typed schedule IR shared by the fused algorithms, the latency
+//! model, and the Gantt builders.
+//!
+//! A [`Schedule`] is a list of [`Step`]s — each a collective or pairwise
+//! round with a lane, a byte count, a domain, and explicit dependency
+//! gates.  The *shape* of a schedule (Algorithms 1–2's round structure)
+//! is built once; *timing* it is a separate act, parameterized by any
+//! [`CommCost`] — the same IR plays back under the analytic α–β model or
+//! the contention-aware NetSim-backed model, and renders to a Gantt
+//! [`Trace`] either way.
+
+use super::{CommCost, CommDomain};
+use crate::gantt::{Lane, Trace};
+
+/// What one step of a schedule does on its lane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CollOp {
+    /// one pairwise round (`sharers` co-located ranks share the lane)
+    Round { sharers: usize },
+    ReduceScatter { degree: usize },
+    AllGather { degree: usize },
+    AllReduce { degree: usize },
+    AllToAll { degree: usize },
+}
+
+/// One timed unit of work: occupies `lane` for the op's duration, may
+/// not start before every step in `deps` has finished.
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub lane: Lane,
+    pub label: String,
+    pub op: CollOp,
+    pub bytes: f64,
+    pub domain: CommDomain,
+    /// indices (into [`Schedule::steps`]) that gate this step
+    pub deps: Vec<usize>,
+}
+
+/// An untimed schedule: round structure + gating, no durations.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub steps: Vec<Step>,
+}
+
+/// A schedule played under a concrete cost model.
+#[derive(Debug, Clone)]
+pub struct Played {
+    pub trace: Trace,
+    /// end time of each step, indexed like [`Schedule::steps`]
+    pub ends: Vec<f64>,
+}
+
+impl Played {
+    pub fn makespan(&self) -> f64 {
+        self.trace.makespan()
+    }
+}
+
+impl Schedule {
+    pub fn push(&mut self, step: Step) -> usize {
+        self.steps.push(step);
+        self.steps.len() - 1
+    }
+
+    /// Duration of one step under `cost`.
+    pub fn step_time<C: CommCost>(&self, cost: &C, i: usize) -> f64 {
+        let s = &self.steps[i];
+        match s.op {
+            CollOp::Round { sharers } => cost.round_shared(s.bytes, sharers, s.domain),
+            CollOp::ReduceScatter { degree } => cost.reduce_scatter(s.bytes, degree, s.domain),
+            CollOp::AllGather { degree } => cost.all_gather(s.bytes, degree, s.domain),
+            CollOp::AllReduce { degree } => cost.all_reduce(s.bytes, degree, s.domain),
+            CollOp::AllToAll { degree } => cost.all_to_all(s.bytes, degree, s.domain),
+        }
+    }
+
+    /// List-schedule the steps from time 0: each step starts when its
+    /// lane is free *and* all its gates have fired (the overlapped /
+    /// async execution).
+    pub fn play<C: CommCost>(&self, cost: &C) -> Played {
+        self.play_at(cost, 0.0)
+    }
+
+    /// [`Schedule::play`] with all lanes busy until `t0` (composing
+    /// phases into one Gantt chart).
+    pub fn play_at<C: CommCost>(&self, cost: &C, t0: f64) -> Played {
+        let mut lane_free: std::collections::HashMap<Lane, f64> = Default::default();
+        let mut ends = vec![0.0f64; self.steps.len()];
+        let mut trace = Trace::default();
+        for (i, s) in self.steps.iter().enumerate() {
+            let dur = self.step_time(cost, i);
+            let mut start = *lane_free.get(&s.lane).unwrap_or(&t0);
+            for &d in &s.deps {
+                start = start.max(ends[d]);
+            }
+            let end = start + dur;
+            trace.push(s.lane.clone(), s.label.clone(), start, end);
+            lane_free.insert(s.lane.clone(), end);
+            ends[i] = end;
+        }
+        Played { trace, ends }
+    }
+
+    /// Makespan of node 0's steps run back-to-back — the sync ablation
+    /// (nodes are symmetric, so one node's serial time is the answer).
+    pub fn sync_time<C: CommCost>(&self, cost: &C) -> f64 {
+        self.steps
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.lane.node() == 0)
+            .map(|(i, _)| self.step_time(cost, i))
+            .sum()
+    }
+
+    /// `(async, sync)` makespans — the pair every CommMode branch wants.
+    ///
+    /// This is the latency model's hot path (called per strategy per
+    /// search step and per simulated serving iteration), so it runs the
+    /// same list-schedule arithmetic as [`Schedule::play`] without
+    /// building a `Trace` or hashing lanes, and times each step once.
+    pub fn makespans<C: CommCost>(&self, cost: &C) -> (f64, f64) {
+        let mut lane_free: Vec<(&Lane, f64)> = Vec::new();
+        let mut ends = vec![0.0f64; self.steps.len()];
+        let mut makespan = 0.0f64;
+        let mut sync = 0.0f64;
+        for (i, s) in self.steps.iter().enumerate() {
+            let dur = self.step_time(cost, i);
+            let pos = lane_free.iter().position(|(l, _)| *l == &s.lane);
+            let mut start = pos.map(|j| lane_free[j].1).unwrap_or(0.0);
+            for &d in &s.deps {
+                start = start.max(ends[d]);
+            }
+            let end = start + dur;
+            match pos {
+                Some(j) => lane_free[j].1 = end,
+                None => lane_free.push((&s.lane, end)),
+            }
+            ends[i] = end;
+            makespan = makespan.max(end);
+            if s.lane.node() == 0 {
+                sync += dur;
+            }
+        }
+        (makespan, sync)
+    }
+}
+
+/// **Algorithm 1 — Fused RS-Combine** round structure over `nodes`
+/// symmetric node lanes: `rounds` intra reduce-scatters of `blk_bytes`
+/// over the `tp`-way group, a pairwise send of each reduced block (gated
+/// on its RS), and a final all-gather of `ag_bytes` gated on the last
+/// send.  `tp_domain` is where the TP group's RS/AG run (oversized TP
+/// groups pay the NIC).
+pub fn rs_combine_ir(
+    nodes: usize,
+    rounds: usize,
+    tp: usize,
+    blk_bytes: f64,
+    ag_bytes: f64,
+    tp_domain: CommDomain,
+) -> Schedule {
+    let mut sched = Schedule::default();
+    for node in 0..nodes {
+        let mut last_send = None;
+        for i in 0..rounds {
+            let rs = sched.push(Step {
+                lane: Lane::Intra(node),
+                label: format!("RS{i}"),
+                op: CollOp::ReduceScatter { degree: tp },
+                bytes: blk_bytes,
+                domain: tp_domain,
+                deps: vec![],
+            });
+            if i >= 1 {
+                last_send = Some(sched.push(Step {
+                    lane: Lane::Inter(node),
+                    label: format!("S{i}"),
+                    op: CollOp::Round { sharers: 1 },
+                    bytes: blk_bytes,
+                    domain: CommDomain::InterNode,
+                    deps: vec![rs],
+                }));
+            }
+        }
+        sched.push(Step {
+            lane: Lane::Intra(node),
+            label: "AG".to_string(),
+            op: CollOp::AllGather { degree: tp },
+            bytes: ag_bytes,
+            domain: tp_domain,
+            deps: last_send.into_iter().collect(),
+        });
+    }
+    sched
+}
+
+/// **Algorithm 2 — Fused AG-Dispatch** round structure over `nodes`
+/// symmetric node lanes: `rounds − 1` pairwise sends of `send_bytes`,
+/// each followed by an intra all-gather of `ag_bytes` over the `tp`-way
+/// group gated on that send (AG of round i overlaps the send of i+1).
+pub fn ag_dispatch_ir(
+    nodes: usize,
+    rounds: usize,
+    tp: usize,
+    send_bytes: f64,
+    ag_bytes: f64,
+    tp_domain: CommDomain,
+) -> Schedule {
+    let mut sched = Schedule::default();
+    for node in 0..nodes {
+        for i in 1..rounds {
+            let send = sched.push(Step {
+                lane: Lane::Inter(node),
+                label: format!("S{i}"),
+                op: CollOp::Round { sharers: 1 },
+                bytes: send_bytes,
+                domain: CommDomain::InterNode,
+                deps: vec![],
+            });
+            sched.push(Step {
+                lane: Lane::Intra(node),
+                label: format!("AG{i}"),
+                op: CollOp::AllGather { degree: tp },
+                bytes: ag_bytes,
+                domain: tp_domain,
+                deps: vec![send],
+            });
+        }
+    }
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::cost::CollectiveCost;
+    use crate::config::ClusterConfig;
+
+    fn cost() -> CollectiveCost {
+        CollectiveCost::new(&ClusterConfig::ascend910b())
+    }
+
+    #[test]
+    fn rs_combine_ir_matches_hand_recurrence() {
+        let c = cost();
+        let (n, m, blk, out) = (4usize, 8usize, 2e6, 8e6);
+        let sched = rs_combine_ir(1, n, m, blk, out, CommDomain::IntraNode);
+        let (async_t, sync_t) = sched.makespans(&c);
+        // hand recurrence (the pre-IR closed form)
+        let rs_t = c.reduce_scatter(blk, m, CommDomain::IntraNode);
+        let send_t = c.round(blk, CommDomain::InterNode);
+        let ag_t = c.all_gather(out, m, CommDomain::IntraNode);
+        let mut intra = 0.0f64;
+        let mut inter = 0.0f64;
+        for i in 0..n {
+            intra += rs_t;
+            if i >= 1 {
+                inter = inter.max(intra) + send_t;
+            }
+        }
+        let want_async = intra.max(inter) + ag_t;
+        let want_sync = n as f64 * rs_t + (n as f64 - 1.0) * send_t + ag_t;
+        assert!((async_t - want_async).abs() < 1e-15, "{async_t} vs {want_async}");
+        assert!((sync_t - want_sync).abs() < 1e-15, "{sync_t} vs {want_sync}");
+    }
+
+    #[test]
+    fn ag_dispatch_ir_matches_hand_recurrence() {
+        let c = cost();
+        let (n, m, send, ag) = (4usize, 8usize, 1e6, 5e5);
+        let sched = ag_dispatch_ir(1, n, m, send, ag, CommDomain::IntraNode);
+        let (async_t, sync_t) = sched.makespans(&c);
+        let send_t = c.round(send, CommDomain::InterNode);
+        let ag_t = c.all_gather(ag, m, CommDomain::IntraNode);
+        let mut inter = 0.0f64;
+        let mut intra = 0.0f64;
+        for _ in 1..n {
+            inter += send_t;
+            intra = intra.max(inter) + ag_t;
+        }
+        assert!((async_t - intra).abs() < 1e-15);
+        let want_sync = (n as f64 - 1.0) * (send_t + ag_t);
+        assert!((sync_t - want_sync).abs() < 1e-15);
+    }
+
+    #[test]
+    fn async_never_slower_than_sync() {
+        let c = cost();
+        for n in [1usize, 2, 3, 4, 8] {
+            let s1 = rs_combine_ir(1, n, 8, 3e6, 6e6, CommDomain::IntraNode);
+            let (a1, y1) = s1.makespans(&c);
+            assert!(a1 <= y1 * (1.0 + 1e-12), "rs n={n}: {a1} > {y1}");
+            let s2 = ag_dispatch_ir(1, n, 8, 3e6, 1e6, CommDomain::IntraNode);
+            let (a2, y2) = s2.makespans(&c);
+            assert!(a2 <= y2 * (1.0 + 1e-12), "ag n={n}: {a2} > {y2}");
+        }
+    }
+
+    #[test]
+    fn degenerate_rounds() {
+        let c = cost();
+        // one round: RS + AG only, no sends; dispatch is empty
+        let s1 = rs_combine_ir(1, 1, 4, 1e6, 1e6, CommDomain::IntraNode);
+        let rs_t = c.reduce_scatter(1e6, 4, CommDomain::IntraNode);
+        let ag_t = c.all_gather(1e6, 4, CommDomain::IntraNode);
+        let (a, y) = s1.makespans(&c);
+        assert!((a - (rs_t + ag_t)).abs() < 1e-15);
+        assert!((y - (rs_t + ag_t)).abs() < 1e-15);
+        let s2 = ag_dispatch_ir(1, 1, 4, 1e6, 1e6, CommDomain::IntraNode);
+        assert_eq!(s2.makespans(&c), (0.0, 0.0));
+    }
+
+    #[test]
+    fn played_lanes_are_serial_and_offset_applies() {
+        let c = cost();
+        let sched = rs_combine_ir(2, 3, 4, 2e6, 2e6, CommDomain::IntraNode);
+        let played = sched.play_at(&c, 1.0);
+        assert!(played.trace.lanes_are_serial());
+        assert!(played.trace.spans.iter().all(|s| s.start >= 1.0));
+        assert!(played.makespan() > 1.0);
+    }
+
+    #[test]
+    fn makespans_fast_path_matches_playback() {
+        let c = cost();
+        for (nodes, rounds, tp) in [(1usize, 4usize, 8usize), (3, 5, 4), (2, 1, 2)] {
+            for sched in [
+                rs_combine_ir(nodes, rounds, tp, 2e6, 5e6, CommDomain::IntraNode),
+                ag_dispatch_ir(nodes, rounds, tp, 3e6, 1e6, CommDomain::InterNode),
+            ] {
+                let (fast_async, fast_sync) = sched.makespans(&c);
+                assert!((fast_async - sched.play(&c).makespan()).abs() < 1e-15);
+                assert!((fast_sync - sched.sync_time(&c)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_node_lanes_are_symmetric() {
+        let c = cost();
+        let sched = rs_combine_ir(3, 4, 8, 2e6, 2e6, CommDomain::IntraNode);
+        let played = sched.play(&c);
+        let b0 = played.trace.busy(&Lane::Intra(0));
+        let b2 = played.trace.busy(&Lane::Intra(2));
+        assert!((b0 - b2).abs() < 1e-15);
+    }
+}

@@ -78,6 +78,58 @@ impl Series {
     }
 }
 
+/// Average ranks of a sample (ties share the mean of their positions).
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+    let mut r = vec![0.0f64; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0;
+        for &k in &idx[i..=j] {
+            r[k] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Pearson correlation of two equal-length samples.  Degenerate inputs
+/// (fewer than two points, or a zero-variance series) return 0.0: a
+/// constant series carries no ordering to agree with, and returning
+/// anything else would let correlation gates pass vacuously.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let (ma, mb) = (
+        a.iter().sum::<f64>() / n as f64,
+        b.iter().sum::<f64>() / n as f64,
+    );
+    let (mut cov, mut va, mut vb) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma).powi(2);
+        vb += (y - mb).powi(2);
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Spearman rank correlation (Pearson on tie-averaged ranks) — the
+/// "do two cost models order strategies the same way" statistic.
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    pearson(&ranks(a), &ranks(b))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +161,28 @@ mod tests {
         }
         assert_eq!(s.len(), 10);
         assert!((s.summary().mean - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_of_monotone_maps_is_one() {
+        let a: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let b: Vec<f64> = a.iter().map(|x| x * x + 3.0).collect();
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+        let rev: Vec<f64> = a.iter().map(|x| -x).collect();
+        assert!((spearman(&a, &rev) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let a = [1.0, 1.0, 2.0, 3.0];
+        let b = [5.0, 5.0, 6.0, 7.0];
+        assert!(spearman(&a, &b) > 0.99);
+    }
+
+    #[test]
+    fn pearson_of_uncorrelated_is_small() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, -1.0, 1.0, -1.0];
+        assert!(pearson(&a, &b).abs() < 0.75);
     }
 }

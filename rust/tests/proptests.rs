@@ -436,6 +436,59 @@ fn prop_pattern_multiplier_mean_preserving() {
 }
 
 #[test]
+fn prop_comm_latency_monotone_in_imbalance() {
+    // ISSUE 2 property: λ is non-decreasing in the imbalance factor at a
+    // fixed strategy.  Profiles interpolate uniform -> one-hot (hot
+    // factor strictly increases in t for every EP grouping), and the
+    // skew-aware λ must never decrease along that path.
+    use mixserve::timing::ExpertLoadProfile;
+    let cluster = ClusterConfig::ascend910b();
+    let model = MoEModelConfig::deepseek_r1();
+    let strategies: Vec<mixserve::config::ParallelStrategy> = enumerate_strategies(&cluster)
+        .into_iter()
+        .filter(|s| s.total_devices() == cluster.total_devices() && s.moe.ep > 1)
+        .collect();
+    forall(
+        "lambda non-decreasing in hot factor",
+        25,
+        61,
+        |r: &mut Rng| {
+            let s = strategies[r.below(strategies.len())];
+            let batch = 1 + r.below(16);
+            let seq = 16 + r.below(2048);
+            let prefill = r.below(2) == 0;
+            (s, batch, seq, prefill)
+        },
+        |&(s, batch, seq, prefill)| {
+            let phase = if prefill { Phase::Prefill } else { Phase::Decode };
+            let e = model.n_experts;
+            let mut prev = -1.0f64;
+            let mut prev_hot = 0.0f64;
+            for step in 0..6 {
+                let t = step as f64 / 6.0;
+                let mut shares = vec![(1.0 - t) / e as f64; e];
+                shares[0] += t;
+                let profile = ExpertLoadProfile::from_shares(shares, t);
+                let hot = profile.hot_factor(s.moe.ep);
+                if hot < prev_hot - 1e-12 {
+                    return Err(format!("hot factor not monotone: {hot} < {prev_hot}"));
+                }
+                prev_hot = hot;
+                let lm = LatencyModel::new(&model, &cluster).with_load(profile);
+                let lambda = lm.comm_latency_layer(&s, batch, seq, phase, CommMode::Sync);
+                if lambda < prev - 1e-15 {
+                    return Err(format!(
+                        "{s} b={batch} s={seq}: λ fell {prev} -> {lambda} at t={t}"
+                    ));
+                }
+                prev = lambda;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_fused_mode_never_slower_in_latency_model() {
     forall(
         "FusedAsync <= Sync for all hybrid strategies",
