@@ -1,7 +1,9 @@
-//! Regenerates Fig. 12: sync vs async fused AR-A2A — Gantt chart plus
-//! end-to-end TTFT / ITL / throughput on DeepSeek-R1 / Ascend 910B.
+//! Regenerates Fig. 12: sync vs async fused AR-A2A — Gantt chart,
+//! end-to-end TTFT / ITL / throughput, and the chunked micro-batch
+//! overlap sweep on DeepSeek-R1 / Ascend 910B.
+use mixserve::config::ClusterConfig;
 use mixserve::paperbench::fig12;
 
 fn main() {
-    print!("{}", fig12::render(60.0, 7));
+    print!("{}", fig12::render(&ClusterConfig::ascend910b(), 60.0, 7));
 }

@@ -2,23 +2,31 @@
 //! unavailable offline).  These are the §Perf profiling entry points:
 //!   * fused RS-Combine / AG-Dispatch data plane (bytes actually moved)
 //!   * unfused RS→A2A→AG baseline pipeline
+//!   * chunked micro-batch pipeline makespan (schedule IR playback)
 //!   * continuous-batching scheduler iteration
 //!   * KV-cache allocator churn
 //!   * analyzer full strategy search
 //!   * discrete-event queue throughput
+//!
+//! Set `BENCH_JSON=<path>` to also write the results as JSON — the CI
+//! bench job compares that file against the committed
+//! `BENCH_baseline.json` and warns on >20% regressions.
 
 use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::latency::{CommMode, LatencyModel, Phase};
 use mixserve::analyzer::search::{Analyzer, Objective};
 use mixserve::comm::cost::CollectiveCost;
 use mixserve::comm::fused::{fused_ag_dispatch, fused_rs_combine, Route};
 use mixserve::comm::primitives::{synth_contrib, unfused_rs_a2a_ag};
 use mixserve::comm::world::{RankWorld, Tensor2};
-use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use mixserve::moe::router::RouterSim;
+use mixserve::pipeline::{HybridStage, MAX_CHUNKS};
 use mixserve::serving::batcher::{Batcher, BatcherConfig};
 use mixserve::serving::kvcache::KvCacheManager;
 use mixserve::simulator::EventQueue;
 use mixserve::testkit::Bench;
+use mixserve::timing::CommDomain;
 use mixserve::workload::Request;
 
 fn main() {
@@ -41,6 +49,35 @@ fn main() {
     let route: Route = (0..4).map(|s| (0..256).map(|t| (s + t) % 4).collect()).collect();
     b.run("fused_ag_dispatch 4x8 256x512", || {
         fused_ag_dispatch(&world, &tokens, &route, &cost).per_node.len()
+    });
+
+    // --- chunked pipeline makespan: the overlap-aware selector's new
+    //     per-candidate cost (schedule IR build + allocation-free play)
+    let stage = HybridStage {
+        nodes: 1,
+        rounds: 4,
+        tp: 8,
+        tp_domain: CommDomain::IntraNode,
+        disp_blk_bytes: 4e6,
+        comb_blk_bytes: 4e6,
+        comb_ag_bytes: 16e6,
+        flops: 2.5e11,
+    };
+    b.run("pipeline makespan K=4 (hybrid stage)", || {
+        stage.makespan(&cost, 4).to_bits()
+    });
+    b.run("pipeline auto-chunk search (K<=8)", || {
+        stage.auto_chunks(&cost, MAX_CHUNKS).0
+    });
+    let lm = LatencyModel::new(&MoEModelConfig::deepseek_r1(), &cluster);
+    let mix = ParallelStrategy::mixserve(4, 8);
+    b.run("moe_pipelined_layer K=4 (deepseek)", || {
+        lm.moe_pipelined_layer(&mix, 16, 1024, Phase::Prefill, 4).to_bits()
+    });
+    b.run("service_latency additive (baseline)", || {
+        lm.service_latency(&mix, 16, 1024, Phase::Prefill, CommMode::FusedAsync)
+            .total()
+            .to_bits()
     });
 
     // --- scheduler iteration at max batch
@@ -116,4 +153,9 @@ fn main() {
     });
 
     println!("\n{} benches complete", b.results().len());
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        std::fs::write(&path, b.to_json()).expect("write BENCH_JSON");
+        println!("wrote {path}");
+    }
 }

@@ -11,7 +11,9 @@
 
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy};
-use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir};
+use crate::gantt::Lane;
+use crate::pipeline::{chunked_pipeline, HybridStage, PipelineCfg};
+use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir, Schedule, Step};
 use crate::timing::{remote_group_copies, CommCost, CommDomain, ExpertLoadProfile};
 
 /// Prefill processes the full prompt; decode one token with a cached
@@ -40,11 +42,14 @@ pub struct LatencyBreakdown {
     pub comm: f64,
     /// PP bubble (Eq. 6 P2P term), seconds
     pub p2p: f64,
+    /// seconds hidden by chunked micro-batch pipelining of the MoE
+    /// block (0 when pipelining is off — today's additive pricing)
+    pub overlap: f64,
 }
 
 impl LatencyBreakdown {
     pub fn total(&self) -> f64 {
-        self.compute + self.comm + self.p2p
+        self.compute + self.comm + self.p2p - self.overlap
     }
 }
 
@@ -56,6 +61,9 @@ pub struct LatencyModel<C: CommCost = CollectiveCost> {
     pub cluster: ClusterConfig,
     pub cost: C,
     pub load: ExpertLoadProfile,
+    /// chunked micro-batch pipelining of the MoE block (default Off:
+    /// the historical additive pricing, bit-for-bit)
+    pub pipeline: PipelineCfg,
 }
 
 impl LatencyModel<CollectiveCost> {
@@ -72,6 +80,7 @@ impl<C: CommCost> LatencyModel<C> {
             cluster: cluster.clone(),
             cost,
             load: ExpertLoadProfile::uniform(model.n_experts),
+            pipeline: PipelineCfg::Off,
         }
     }
 
@@ -79,6 +88,19 @@ impl<C: CommCost> LatencyModel<C> {
     pub fn with_load(mut self, load: ExpertLoadProfile) -> Self {
         self.load = load;
         self
+    }
+
+    /// Price the MoE block under chunked micro-batch pipelining
+    /// (builder style; `PipelineCfg::Off` reproduces the additive
+    /// pricing bit-for-bit).
+    pub fn with_pipeline(mut self, pipeline: PipelineCfg) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+
+    /// Swap the pipeline config in place (the serving simulator's knob).
+    pub fn set_pipeline(&mut self, pipeline: PipelineCfg) {
+        self.pipeline = pipeline;
     }
 
     /// Swap the load profile in place (per-iteration re-pricing in the
@@ -126,14 +148,41 @@ impl<C: CommCost> LatencyModel<C> {
     ) -> f64 {
         let m = &self.model;
         let eff_flops = self.cluster.flops * self.cluster.mfu;
-        let (attn_f, moe_f) = m.flops_per_token_layer(seq);
+        let (attn_f, _) = m.flops_per_token_layer(seq);
         let toks = self.tokens_per_dp(s, batch, seq, phase);
         // attention work is sharded by the attention TP group
         let attn = toks * attn_f / s.attn.tp as f64;
+        let moe_t = self.moe_compute_chunk(s, batch, seq, phase, 1);
+        let layers_total = m.n_layers as f64;
+        (attn / eff_flops + moe_t) * layers_total
+    }
+
+    /// One layer's expert-GEMM time for a 1/`chunks` micro-batch slice —
+    /// Eq. (4)'s MoE term evaluated on the chunk.  `chunks == 1` is the
+    /// exact per-layer MoE compute inside [`LatencyModel::compute_latency`].
+    ///
+    /// The chunking trade-off shows up here: a 1/K slice feeds each
+    /// expert 1/K of the rows, so the GroupGEMM efficiency drops
+    /// (EPS-MoE's reason not to over-chunk), while the HBM
+    /// weight-streaming floor amortizes across the chunks (the expert
+    /// weights stay resident for the iteration).
+    pub fn moe_compute_chunk(
+        &self,
+        s: &ParallelStrategy,
+        batch: usize,
+        seq: usize,
+        phase: Phase,
+        chunks: usize,
+    ) -> f64 {
+        let m = &self.model;
+        let eff_flops = self.cluster.flops * self.cluster.mfu;
+        let (_, moe_f) = m.flops_per_token_layer(seq);
+        let toks = self.tokens_per_dp(s, batch, seq, phase);
+        let k = chunks.max(1) as f64;
         // expert work: the communicator processes d_DP replicas' tokens,
         // spread over the moe.tp × moe.ep grid (Eq. 4's Ψ/(d_TP·d_EP)),
         // derated by the expert-GEMM efficiency.
-        let global_toks = toks * s.attn.dp as f64;
+        let global_toks = toks * s.attn.dp as f64 / k;
         let eff = self.expert_gemm_efficiency(s, global_toks);
         let moe = global_toks * moe_f / (s.moe.tp * s.moe.ep) as f64 / eff.max(1e-3);
         // HBM floor: every activated expert's weights stream from HBM once
@@ -141,15 +190,13 @@ impl<C: CommCost> LatencyModel<C> {
         let experts_per_device =
             (m.n_experts as f64 / s.moe.ep as f64).max(1.0);
         let touched = experts_per_device
-            .min(global_toks * m.top_k as f64 / s.moe.ep as f64)
+            .min(global_toks * k * m.top_k as f64 / s.moe.ep as f64)
             .max(1.0);
         let expert_bytes = 3.0
             * (m.hidden * m.expert_inter * m.dtype_bytes) as f64
             / s.moe.tp as f64;
-        let hbm_floor = touched * expert_bytes / self.cluster.hbm_bw;
-        let moe_t = (moe / eff_flops).max(hbm_floor);
-        let layers_total = m.n_layers as f64;
-        (attn / eff_flops + moe_t) * layers_total
+        let hbm_floor = touched * expert_bytes / self.cluster.hbm_bw / k;
+        (moe / eff_flops).max(hbm_floor)
     }
 
     /// Bytes of one replica's activation tensor (b/d_DP · s · h).
@@ -183,6 +230,40 @@ impl<C: CommCost> LatencyModel<C> {
         // ---- attention block: one AR per layer over the attention TP group
         let attn_ar = c.all_reduce(bytes, s.attn.tp, c.domain_of(s.attn.tp));
 
+        attn_ar + self.moe_comm_layer(s, batch, seq, phase, mode)
+    }
+
+    /// Per-NIC and per-fabric hot-rank lane volumes of the rank-granular
+    /// pure-EP dispatch (the Eq. 12 lane model), shared by the additive
+    /// pricing and the chunked pipeline.
+    fn pure_ep_lane_volumes(&self, ep: usize, global_bytes: f64, hot: f64) -> (f64, f64) {
+        let g = ep as f64;
+        let distinct = crate::timing::expected_distinct_groups(ep, self.model.top_k);
+        let m_node = self.cluster.gpus_per_node.min(ep) as f64;
+        let nodes_spanned = (g / m_node).max(1.0);
+        let off_frac = if ep <= self.cluster.gpus_per_node {
+            0.0
+        } else {
+            (g - m_node) / g
+        };
+        let per_nic = global_bytes * distinct * off_frac / nodes_spanned * hot;
+        let per_fabric = global_bytes * distinct * (1.0 - off_frac) / nodes_spanned * hot;
+        (per_nic, per_fabric)
+    }
+
+    /// The MoE block's share of one layer's λ (everything of
+    /// [`LatencyModel::comm_latency_layer`] except the attention AR).
+    pub fn moe_comm_layer(
+        &self,
+        s: &ParallelStrategy,
+        batch: usize,
+        seq: usize,
+        phase: Phase,
+        mode: CommMode,
+    ) -> f64 {
+        let c = &self.cost;
+        let bytes = self.act_bytes(s, batch, seq, phase);
+
         // ---- MoE block.  The MoE communicator carries the *global* token
         // set of all DP replicas (b·s·h), spread over the moe.tp × moe.ep
         // grid — this is why AR-based pure TP collapses at high degree
@@ -192,7 +273,7 @@ impl<C: CommCost> LatencyModel<C> {
         let global_bytes = bytes * s.attn.dp as f64;
         let (tp, ep) = (s.moe.tp, s.moe.ep);
         let hot = self.load.hot_factor(ep);
-        let moe = if ep == 1 {
+        if ep == 1 {
             // pure TP: every token's FFN sharded over all tp devices; one
             // AR of the full activation volume per layer (skew-immune —
             // every device serves every expert).
@@ -207,21 +288,11 @@ impl<C: CommCost> LatencyModel<C> {
             // pathology at high degree), and the hot rank's inflated
             // share gates both lanes.
             let d = ep;
-            let g = d as f64;
-            let distinct = crate::timing::expected_distinct_groups(d, self.model.top_k);
-            let m_node = self.cluster.gpus_per_node.min(d) as f64;
-            let nodes_spanned = (g / m_node).max(1.0);
-            let off_frac = if d <= self.cluster.gpus_per_node {
-                0.0
-            } else {
-                (g - m_node) / g
-            };
-            let per_nic = global_bytes * distinct * off_frac / nodes_spanned * hot;
-            let per_fabric = global_bytes * distinct * (1.0 - off_frac) / nodes_spanned * hot;
             // per_nic already aggregates every local rank's traffic onto
             // the node's NIC (÷ nodes_spanned, not ÷ ranks), so this lane
             // model is per-link-traffic-aware by construction: sharers = 1
             // or a contention-aware backend would double-count.
+            let (per_nic, per_fabric) = self.pure_ep_lane_volumes(d, global_bytes, hot);
             let t_inter = c.pairwise_rounds(d - 1, per_nic, 1, CommDomain::InterNode);
             let t_intra = c.wire(per_fabric, 1, CommDomain::IntraNode);
             // dispatch + combine; intra and inter lanes progress together
@@ -244,12 +315,125 @@ impl<C: CommCost> LatencyModel<C> {
                 CommMode::Sync => disp_sync + comb_sync,
                 CommMode::FusedAsync => disp_async + comb_async,
             }
+        }
+    }
+
+    /// Overlapped makespan of one layer's MoE block split into `chunks`
+    /// micro-batch chunks: dispatch comm, expert GroupGEMM, and combine
+    /// comm pipelined over the lane/stream resources, so Eq. (13)'s
+    /// pricing becomes max(comm, compute) per pipeline stage instead of
+    /// their sum.  `chunks == 1` reproduces the additive
+    /// `moe_comm_layer + moe_compute_chunk` time (no overlap to exploit
+    /// between dependent stages of one chunk).
+    pub fn moe_pipelined_layer(
+        &self,
+        s: &ParallelStrategy,
+        batch: usize,
+        seq: usize,
+        phase: Phase,
+        chunks: usize,
+    ) -> f64 {
+        let c = &self.cost;
+        let k = chunks.max(1);
+        let (tp, ep) = (s.moe.tp, s.moe.ep);
+        let gemm_chunk = self.moe_compute_chunk(s, batch, seq, phase, k);
+        if ep <= 1 {
+            // pure TP: a single AR, no dispatch/compute/combine chain to
+            // pipeline — additive, chunk-independent
+            return self.moe_comm_layer(s, batch, seq, phase, CommMode::FusedAsync)
+                + self.moe_compute_chunk(s, batch, seq, phase, 1);
+        }
+        let bytes = self.act_bytes(s, batch, seq, phase);
+        let global_bytes = bytes * s.attn.dp as f64;
+        let hot = self.load.hot_factor(ep);
+        if tp == 1 {
+            // rank-granular pure EP: each chunk still pays all d−1 launch
+            // rounds on the NIC lane (only the wire time splits), which is
+            // exactly why low-batch high-degree EP pipelines poorly
+            let (per_nic, per_fabric) = self.pure_ep_lane_volumes(ep, global_bytes, hot);
+            let kf = k as f64;
+            let t_inter = c.pairwise_rounds(ep - 1, per_nic / kf, 1, CommDomain::InterNode);
+            let t_intra = c.wire(per_fabric / kf, 1, CommDomain::IntraNode);
+            let dir = t_inter.max(t_intra);
+            let sched = chunked_pipeline(
+                k,
+                1,
+                |ci| {
+                    let mut sub = Schedule::default();
+                    sub.push(Step::elapsed(Lane::Inter(0), format!("D{ci}"), dir, vec![]));
+                    sub
+                },
+                |ci, node| {
+                    Step::elapsed(Lane::Stream(node, 0), format!("G{ci}"), gemm_chunk, vec![])
+                },
+                |ci| {
+                    let mut sub = Schedule::default();
+                    sub.push(Step::elapsed(Lane::Inter(0), format!("C{ci}"), dir, vec![]));
+                    sub
+                },
+            );
+            return sched.makespans(c).0;
+        }
+        // hybrid TP-EP: Algorithms 1–2 chunked (same blk/AG volumes as
+        // moe_comm_layer, 1/K per chunk), GroupGEMM on the node stream
+        let vol = global_bytes * self.remote_copies(ep).max(1e-9) / ep as f64 * hot;
+        let blk = vol / (ep as f64 - 1.0).max(1.0);
+        let stage = HybridStage {
+            nodes: 1,
+            rounds: ep,
+            tp,
+            tp_domain: c.domain_of(tp),
+            disp_blk_bytes: blk,
+            comb_blk_bytes: blk,
+            comb_ag_bytes: bytes,
+            flops: 0.0, // per-chunk cost passed explicitly below
         };
-        attn_ar + moe
+        let rate = (self.cluster.flops * self.cluster.mfu).max(1.0);
+        stage.schedule_with(k, gemm_chunk * rate).makespans(c).0
+    }
+
+    /// Seconds of one layer's MoE time hidden by chunked micro-batch
+    /// pipelining relative to the additive pricing (negative when a
+    /// forced `--chunks` count genuinely costs time: extra launch rounds
+    /// and a starved GroupGEMM).  Zero when pipelining is off, under
+    /// Sync schedules (nothing overlaps), or without an EP dimension.
+    pub fn overlap_saving_layer(
+        &self,
+        s: &ParallelStrategy,
+        batch: usize,
+        seq: usize,
+        phase: Phase,
+        mode: CommMode,
+    ) -> f64 {
+        if self.pipeline.is_off() || mode != CommMode::FusedAsync || s.moe.ep <= 1 {
+            return 0.0;
+        }
+        let serial = self.moe_comm_layer(s, batch, seq, phase, mode)
+            + self.moe_compute_chunk(s, batch, seq, phase, 1);
+        let mut best = f64::INFINITY;
+        for k in self.pipeline.candidates() {
+            // K = 1 is the additive chain by construction (pinned by
+            // one_chunk_reproduces_additive_moe_pricing): skip the
+            // schedule build on the simulator's per-iteration hot path
+            let t = if k == 1 {
+                serial
+            } else {
+                self.moe_pipelined_layer(s, batch, seq, phase, k)
+            };
+            best = best.min(t);
+        }
+        let saving = serial - best;
+        match self.pipeline {
+            // the auto search includes K = 1 (== serial): clamp float
+            // noise so Auto never prices a loss
+            PipelineCfg::Auto => saving.max(0.0),
+            _ => saving,
+        }
     }
 
     /// Service latency per token — Eq. (6):
-    /// Δt_svc = l·[τ + λ] + (d_PP − 1) · P2P(b/d_DP · s · h).
+    /// Δt_svc = l·[τ + λ] + (d_PP − 1) · P2P(b/d_DP · s · h),
+    /// minus the per-layer pipelining saving when chunking is enabled.
     pub fn service_latency(
         &self,
         s: &ParallelStrategy,
@@ -266,7 +450,9 @@ impl<C: CommCost> LatencyModel<C> {
         } else {
             0.0
         };
-        LatencyBreakdown { compute, comm, p2p }
+        let overlap =
+            self.overlap_saving_layer(s, batch, seq, phase, mode) * self.model.n_layers as f64;
+        LatencyBreakdown { compute, comm, p2p, overlap }
     }
 
     /// The pure-EP deployment's per-layer communication — Eq. (12)
@@ -398,6 +584,104 @@ mod tests {
                 assert_eq!(a, b, "{s}: pure TP is skew-immune");
             }
         }
+    }
+
+    #[test]
+    fn pipeline_off_is_bit_for_bit_identical() {
+        // the default pipeline path with overlap disabled must reproduce
+        // today's latencies exactly (not approximately)
+        let plain = lm();
+        let off = lm().with_pipeline(PipelineCfg::Off);
+        for s in [
+            ParallelStrategy::mixserve(4, 8),
+            ParallelStrategy::pure_ep(4, 8),
+            ParallelStrategy::tp_pp(8, 4),
+        ] {
+            for mode in [CommMode::Sync, CommMode::FusedAsync] {
+                for (b, l) in [(1, 128), (16, 1024)] {
+                    for phase in [Phase::Prefill, Phase::Decode] {
+                        let a = plain.service_latency(&s, b, l, phase, mode);
+                        let o = off.service_latency(&s, b, l, phase, mode);
+                        assert_eq!(a.total(), o.total(), "{s} {mode:?} {phase:?} b={b}");
+                        assert_eq!(o.overlap, 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_pipeline_never_slower_and_helps_hybrid_prefill() {
+        let plain = lm();
+        let auto = lm().with_pipeline(PipelineCfg::Auto);
+        let mut helped = false;
+        for s in [
+            ParallelStrategy::mixserve(4, 8),
+            ParallelStrategy::pure_ep(4, 8),
+            ParallelStrategy::tp_pp(8, 4),
+        ] {
+            for (b, l) in [(1, 64), (16, 1024), (16, 4096)] {
+                let a = plain.service_latency(&s, b, l, Phase::Prefill, CommMode::FusedAsync);
+                let p = auto.service_latency(&s, b, l, Phase::Prefill, CommMode::FusedAsync);
+                assert!(p.total() <= a.total() + 1e-15, "{s} b={b} l={l}");
+                assert!(p.overlap >= 0.0);
+                if s.moe.tp > 1 && s.moe.ep > 1 && p.overlap > 0.0 {
+                    helped = true;
+                }
+            }
+        }
+        assert!(helped, "chunking must pay somewhere on the hybrid");
+    }
+
+    #[test]
+    fn one_chunk_reproduces_additive_moe_pricing() {
+        let m = lm();
+        for s in [ParallelStrategy::mixserve(4, 8), ParallelStrategy::pure_ep(4, 8)] {
+            let serial = m.moe_comm_layer(&s, 16, 1024, Phase::Prefill, CommMode::FusedAsync)
+                + m.moe_compute_chunk(&s, 16, 1024, Phase::Prefill, 1);
+            let piped = m.moe_pipelined_layer(&s, 16, 1024, Phase::Prefill, 1);
+            assert!(
+                (piped - serial).abs() <= serial * 1e-12,
+                "{s}: K=1 {piped} vs additive {serial}"
+            );
+        }
+    }
+
+    #[test]
+    fn sync_mode_and_pure_tp_take_no_overlap() {
+        let auto = lm().with_pipeline(PipelineCfg::Auto);
+        let hybrid = ParallelStrategy::mixserve(4, 8);
+        let sync = auto.service_latency(&hybrid, 16, 1024, Phase::Prefill, CommMode::Sync);
+        assert_eq!(sync.overlap, 0.0, "Sync schedules have no streams to overlap");
+        let tp_only = ParallelStrategy::tp_pp(8, 4);
+        let t = auto.service_latency(&tp_only, 16, 1024, Phase::Prefill, CommMode::FusedAsync);
+        assert_eq!(t.overlap, 0.0, "no EP dimension, nothing to chunk over");
+    }
+
+    #[test]
+    fn low_batch_pure_ep_gains_nothing_from_chunking() {
+        // launch-dominated: every extra chunk repeats the d−1 α rounds,
+        // so the auto search must settle on (effectively) no saving
+        let auto = lm().with_pipeline(PipelineCfg::Auto);
+        let ep = ParallelStrategy::pure_ep(4, 8);
+        let d = auto.service_latency(&ep, 1, 64, Phase::Decode, CommMode::FusedAsync);
+        let serial = auto.moe_comm_layer(&ep, 1, 64, Phase::Decode, CommMode::FusedAsync)
+            + auto.moe_compute_chunk(&ep, 1, 64, Phase::Decode, 1);
+        assert!(
+            d.overlap <= serial * 0.02 * auto.model.n_layers as f64,
+            "low-batch pure EP must not profit from chunking: {} vs serial {serial}",
+            d.overlap
+        );
+    }
+
+    #[test]
+    fn forced_overchunking_can_cost_time() {
+        // --chunks honesty: at tiny batch a forced high chunk count pays
+        // more launches than it hides, so the saving goes negative
+        let forced = lm().with_pipeline(PipelineCfg::Fixed(8));
+        let ep = ParallelStrategy::pure_ep(4, 8);
+        let d = forced.service_latency(&ep, 1, 64, Phase::Decode, CommMode::FusedAsync);
+        assert!(d.overlap < 0.0, "8-way chunking a 1-token decode must cost: {}", d.overlap);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use super::memory::{check_memory, MemoryCheck};
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::grammar::enumerate_strategies;
+use crate::pipeline::PipelineCfg;
 use crate::timing::{CommCost, ExpertLoadProfile};
 
 /// Seed for measured load profiles built via [`Analyzer::with_load_skew`]
@@ -58,6 +59,9 @@ pub struct Analyzer<C: CommCost = CollectiveCost> {
     pub mode: CommMode,
     pub cost: C,
     pub load: ExpertLoadProfile,
+    /// chunked micro-batch pipelining priced into every candidate
+    /// (`Off` reproduces the additive ranking exactly)
+    pub pipeline: PipelineCfg,
 }
 
 impl Analyzer<CollectiveCost> {
@@ -69,6 +73,7 @@ impl Analyzer<CollectiveCost> {
             mode: CommMode::FusedAsync,
             cost: CollectiveCost::new(cluster),
             load: ExpertLoadProfile::uniform(model.n_experts),
+            pipeline: PipelineCfg::Off,
         }
     }
 }
@@ -88,7 +93,16 @@ impl<C: CommCost> Analyzer<C> {
             mode: self.mode,
             cost,
             load: self.load,
+            pipeline: self.pipeline,
         }
+    }
+
+    /// Rank under chunked micro-batch pipelining (overlap-aware
+    /// selection): every candidate's MoE block is priced at its best
+    /// chunk count (`Auto`) or a forced one (`Fixed`).
+    pub fn with_pipeline(mut self, pipeline: PipelineCfg) -> Self {
+        self.pipeline = pipeline;
+        self
     }
 
     /// Select under an explicit expert-load profile.
@@ -112,7 +126,8 @@ impl<C: CommCost> Analyzer<C> {
     /// Evaluate one strategy (memory + indicators).
     pub fn report(&self, s: &ParallelStrategy, wl: &Workload) -> StrategyReport {
         let lm = LatencyModel::with_cost(&self.model, &self.cluster, self.cost.clone())
-            .with_load(self.load.clone());
+            .with_load(self.load.clone())
+            .with_pipeline(self.pipeline);
         let memory = check_memory(
             &self.model,
             &self.cluster,
@@ -229,6 +244,33 @@ mod tests {
         let skewed = a.with_load_skew(0.0).best(&wl, Objective::MaxThroughput).unwrap();
         assert_eq!(plain.strategy, skewed.strategy);
         assert_eq!(plain.indicators.throughput, skewed.indicators.throughput);
+    }
+
+    #[test]
+    fn overlap_aware_search_never_degrades_any_candidate() {
+        // pricing the pipeline (Auto) can only improve each strategy's
+        // indicators, and Off reproduces the plain ranking exactly
+        let a = setup(ClusterConfig::ascend910b());
+        let wl = Workload::sharegpt(4.0);
+        let plain = a.clone().rank(&wl, Objective::MaxThroughput);
+        let off_analyzer = a.clone().with_pipeline(PipelineCfg::Off);
+        let off = off_analyzer.rank(&wl, Objective::MaxThroughput);
+        assert_eq!(plain.len(), off.len());
+        for (p, o) in plain.iter().zip(&off) {
+            assert_eq!(p.strategy, o.strategy);
+            assert_eq!(p.indicators.throughput, o.indicators.throughput);
+        }
+        let auto = a.with_pipeline(PipelineCfg::Auto);
+        for p in &plain {
+            let r = auto.report(&p.strategy, &wl);
+            assert!(
+                r.indicators.ttft <= p.indicators.ttft * (1.0 + 1e-12),
+                "{}: overlap-aware TTFT {} > additive {}",
+                p.strategy,
+                r.indicators.ttft,
+                p.indicators.ttft
+            );
+        }
     }
 
     #[test]

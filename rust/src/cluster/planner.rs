@@ -22,6 +22,7 @@ use crate::analyzer::latency::CommMode;
 use crate::analyzer::search::{objective_key, Analyzer, LOAD_PROFILE_SEED, Objective};
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use crate::pipeline::PipelineCfg;
 use crate::timing::{CommCost, ExpertLoadProfile};
 
 /// One point of the joint search.
@@ -78,6 +79,8 @@ pub struct FleetPlanner<C: CommCost = CollectiveCost> {
     /// gate-skew exponent the per-pod analyzers price λ under (0 =
     /// uniform: the historical planner behavior)
     pub skew: f64,
+    /// chunked micro-batch pipelining priced into every pod's search
+    pub pipeline: PipelineCfg,
 }
 
 impl FleetPlanner<CollectiveCost> {
@@ -89,6 +92,7 @@ impl FleetPlanner<CollectiveCost> {
             mode: CommMode::FusedAsync,
             cost: CollectiveCost::new(budget),
             skew: 0.0,
+            pipeline: PipelineCfg::Off,
         }
     }
 }
@@ -105,6 +109,12 @@ impl<C: CommCost> FleetPlanner<C> {
         self
     }
 
+    /// Re-rank the joint search under chunked micro-batch pipelining.
+    pub fn with_pipeline(mut self, pipeline: PipelineCfg) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+
     /// Swap in a different cost backend (re-bound per candidate pod).
     pub fn with_cost<D: CommCost>(self, cost: D) -> FleetPlanner<D> {
         FleetPlanner {
@@ -114,6 +124,7 @@ impl<C: CommCost> FleetPlanner<C> {
             mode: self.mode,
             cost,
             skew: self.skew,
+            pipeline: self.pipeline,
         }
     }
 
@@ -137,7 +148,8 @@ impl<C: CommCost> FleetPlanner<C> {
                 let analyzer = Analyzer::new(&self.model, &pod, &self.serving)
                     .with_cost(self.cost.rebind(&pod))
                     .with_mode(self.mode)
-                    .with_load(load.clone());
+                    .with_load(load.clone())
+                    .with_pipeline(self.pipeline);
                 let wl = Workload::sharegpt(rate / r as f64);
                 if let Some(best) = analyzer.best(&wl, Objective::MaxThroughput) {
                     out.push(FleetPlan {
@@ -288,6 +300,22 @@ mod tests {
         let s = p.render(8.0);
         assert!(s.contains("fleet plan"));
         assert!(s.contains("fleet tok/s"));
+    }
+
+    #[test]
+    fn overlap_aware_planner_never_promises_less_throughput() {
+        // pipelining only hides time, so the overlap-aware fleet optimum
+        // dominates the additive one
+        let additive = planner(MoEModelConfig::qwen3_235b()).plan(8.0);
+        let piped = planner(MoEModelConfig::qwen3_235b())
+            .with_pipeline(PipelineCfg::Auto)
+            .plan(8.0);
+        let best_a = additive.first().expect("feasible").total_throughput;
+        let best_p = piped.first().expect("feasible").total_throughput;
+        assert!(
+            best_p >= best_a * (1.0 - 1e-12),
+            "overlap-aware optimum {best_p} below additive {best_a}"
+        );
     }
 
     #[test]

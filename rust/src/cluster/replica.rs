@@ -18,6 +18,7 @@ use crate::analyzer::memory::check_memory;
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::moe::router::{LoadStats, RouterSim};
+use crate::pipeline::PipelineCfg;
 use crate::serving::batcher::{Batcher, BatcherConfig};
 use crate::serving::kvcache::KvCacheManager;
 use crate::serving::metrics::ServingMetrics;
@@ -197,6 +198,14 @@ impl<C: CommCost> ReplicaSim<C> {
         }
     }
 
+    /// Enable chunked micro-batch pipelining of the MoE block: every
+    /// iteration's pricing subtracts the overlapped saving (builder
+    /// style; `PipelineCfg::Off` keeps the historical timing exactly).
+    pub fn with_pipeline(mut self, pipeline: PipelineCfg) -> Self {
+        self.lm.set_pipeline(pipeline);
+        self
+    }
+
     pub fn strategy(&self) -> &ParallelStrategy {
         &self.strategy
     }
@@ -246,7 +255,7 @@ impl<C: CommCost> ReplicaSim<C> {
             let imb = self.expert_imbalance(b * maxlen);
             self.imb_sum += imb;
             let lat = self.lm.service_latency(&self.strategy, b, maxlen, Phase::Prefill, self.mode);
-            iter_time += lat.compute * blend(imb) + lat.comm + lat.p2p;
+            iter_time += lat.compute * blend(imb) + lat.comm + lat.p2p - lat.overlap;
         }
         // ---- decode step for running requests
         if !plan.decode.is_empty() {
@@ -257,7 +266,7 @@ impl<C: CommCost> ReplicaSim<C> {
             let imb = self.expert_imbalance(b);
             self.imb_sum += imb;
             let lat = self.lm.service_latency(&self.strategy, b, ctx, Phase::Decode, self.mode);
-            iter_time += lat.compute * blend(imb) + lat.comm + lat.p2p;
+            iter_time += lat.compute * blend(imb) + lat.comm + lat.p2p - lat.overlap;
         }
 
         let finish = start + iter_time;
@@ -389,6 +398,29 @@ mod tests {
         let t2 = r.step(t1 * 0.5).expect("still in flight");
         assert_eq!(t1, t2);
         assert!(r.queue_depth() > 0, "request still in service");
+    }
+
+    #[test]
+    fn pipelined_replica_drains_no_slower_than_additive() {
+        // chunked micro-batch pipelining can only subtract hidden time
+        // from each iteration (Auto includes K = 1)
+        let drain = |pipeline: PipelineCfg| {
+            let mut r = replica(None).with_pipeline(pipeline);
+            for id in 0..16 {
+                r.submit(Request { id, arrival: 0.0, len_in: 1024, len_out: 32 });
+            }
+            let mut now = 0.0;
+            while let Some(t) = r.step(now) {
+                now = t;
+            }
+            now
+        };
+        let additive = drain(PipelineCfg::Off);
+        let piped = drain(PipelineCfg::Auto);
+        assert!(
+            piped <= additive * (1.0 + 1e-12),
+            "pipelining slowed the drain: {piped} !<= {additive}"
+        );
     }
 
     #[test]

@@ -26,7 +26,8 @@
 use super::primitives::combine_reference;
 use super::world::{RankWorld, Tensor2};
 use crate::gantt::Trace;
-use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir};
+use crate::pipeline::chunked_pipeline;
+use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir, Schedule, Step};
 use crate::timing::{CommCost, CommDomain};
 
 /// Result of a fused collective: per-node output tensors plus the timed
@@ -39,6 +40,10 @@ pub struct FusedResult {
     pub trace: Trace,
     /// makespan of the same rounds run back-to-back (sync ablation)
     pub sync_time: f64,
+    /// makespan with chunked micro-batch pipelining of the expert
+    /// compute against the collective; equals the async makespan for
+    /// the unchunked single-shot collectives (K = 1, no compute)
+    pub pipelined_time: f64,
 }
 
 impl FusedResult {
@@ -104,8 +109,75 @@ pub fn fused_rs_combine<C: CommCost>(
     let sched = rs_combine_ir(n, n, m, blk_bytes, blk_bytes, CommDomain::IntraNode);
     let trace = sched.play(cost).trace;
     let sync_time = sched.sync_time(cost);
+    let pipelined_time = trace.makespan();
 
-    FusedResult { per_node, trace, sync_time }
+    FusedResult { per_node, trace, sync_time, pipelined_time }
+}
+
+/// [`fused_rs_combine`] with the expert GroupGEMM that *produces* the
+/// contributions pipelined against the combine in `chunks` micro-batch
+/// chunks (EPS-MoE): chunk i's combine rounds ride the comm lanes while
+/// chunk i+1's GEMM runs on the node's compute stream.  The data plane
+/// really runs chunk-by-chunk — each chunk accumulates its own row
+/// slice of every destination block — and is verified bit-identical to
+/// the unchunked path in tests.  `pipelined_time` carries the
+/// overlapped makespan and `trace` the chunked Gantt (Fig. 12's
+/// pipeline view); `sync_time` stays the comm-only back-to-back
+/// ablation of the chunked rounds (comparable with the other
+/// constructors — compute is never part of that field).
+pub fn fused_rs_combine_chunked<C: CommCost>(
+    world: &RankWorld,
+    contrib: &[Vec<Tensor2>],
+    cost: &C,
+    chunks: usize,
+    gemm_flops: f64,
+) -> FusedResult {
+    let (n, m) = (world.n_nodes, world.m_per_node);
+    let h = contrib[0][0].cols;
+    let t_total = contrib[0][0].rows;
+    assert!(t_total % n == 0, "rows must stack n destination blocks");
+    let t_loc = t_total / n;
+    let k = chunks.max(1);
+
+    // --- data plane: per source node, TP-sum once, then ship each
+    // destination block one micro-batch row-slice at a time
+    let mut per_node: Vec<Tensor2> = (0..n).map(|_| Tensor2::zeros(t_loc, h)).collect();
+    let mut sum = Tensor2::zeros(t_total, h);
+    for node_bufs in contrib.iter().take(n) {
+        sum.data.copy_from_slice(&node_bufs[0].data);
+        for b in &node_bufs[1..] {
+            sum.add_assign(b);
+        }
+        for (dst, out) in per_node.iter_mut().enumerate() {
+            for ci in 0..k {
+                let (lo, hi) = (ci * t_loc / k, (ci + 1) * t_loc / k);
+                let blk = &sum.data[(dst * t_loc + lo) * h..(dst * t_loc + hi) * h];
+                for (a, b) in out.data[lo * h..hi * h].iter_mut().zip(blk) {
+                    *a += *b;
+                }
+            }
+        }
+    }
+
+    // --- time plane: the K-chunk pipeline schedule
+    let kf = k as f64;
+    let blk_bytes = (t_loc * h * 4) as f64 / kf;
+    let comb_ir = || rs_combine_ir(n, n, m, blk_bytes, blk_bytes, CommDomain::IntraNode);
+    let sched = chunked_pipeline(
+        k,
+        n,
+        |_| Schedule::default(), // no dispatch stage: GEMM feeds combine
+        |c, node| Step::compute(node, 0, format!("G{c}"), gemm_flops / kf, vec![]),
+        |_| comb_ir(),
+    );
+    let played = sched.play(cost);
+    let pipelined_time = played.makespan();
+    FusedResult {
+        per_node,
+        trace: played.trace,
+        sync_time: kf * comb_ir().sync_time(cost),
+        pipelined_time,
+    }
 }
 
 /// Routing plan for dispatch: `route[src][tok]` = destination node of each
@@ -172,8 +244,9 @@ pub fn fused_ag_dispatch<C: CommCost>(
     let sched = ag_dispatch_ir(n, n, m, send_bytes, ag_bytes, CommDomain::IntraNode);
     let trace = sched.play(cost).trace;
     let sync_time = sched.sync_time(cost);
+    let pipelined_time = trace.makespan();
 
-    FusedResult { per_node, trace, sync_time }
+    FusedResult { per_node, trace, sync_time, pipelined_time }
 }
 
 /// Unfused dispatch reference: every destination's rows with full hidden.
@@ -262,6 +335,44 @@ mod tests {
             res.trace.spans.iter().filter(|s| s.lane == Lane::Inter(0)).count();
         assert_eq!(n0_intra, 3 + 1); // n RS rounds + AG
         assert_eq!(n0_inter, 2); // n-1 pairwise sends
+    }
+
+    #[test]
+    fn chunked_combine_keeps_numerics_and_overlaps_gemm() {
+        let world = RankWorld::new(4, 8);
+        let contrib = synth_contrib(&world, 64, 128, 1);
+        let c = cost();
+        let base = fused_rs_combine(&world, &contrib, &c);
+        // a GEMM 4x the combine time: chunk i's combine hides fully
+        // inside chunk i+1's GEMM window, so the pipeline must beat the
+        // serial chain even though the small blocks are launch-dominated
+        let cl = ClusterConfig::ascend910b();
+        let gemm_flops = 4.0 * base.async_time() * cl.flops * cl.mfu;
+        let chunked = fused_rs_combine_chunked(&world, &contrib, &c, 4, gemm_flops);
+        // data plane: bit-identical outputs (chunking is associative)
+        for (a, b) in chunked.per_node.iter().zip(&base.per_node) {
+            assert!(a.approx_eq(b, 0.0), "chunking must not change the data");
+        }
+        // time plane: the pipelined makespan beats GEMM-then-combine
+        let serial_chain = c.compute_time(gemm_flops) + base.async_time();
+        assert!(
+            chunked.pipelined_time < serial_chain,
+            "pipelined {} !< serial chain {serial_chain}",
+            chunked.pipelined_time
+        );
+        assert!(chunked.trace.lanes_are_serial());
+        assert!(
+            chunked.trace.spans.iter().any(|s| matches!(s.lane, Lane::Stream(_, 0))),
+            "chunked trace must show the compute stream"
+        );
+    }
+
+    #[test]
+    fn unchunked_pipelined_time_equals_async() {
+        let world = RankWorld::new(2, 4);
+        let contrib = synth_contrib(&world, 4, 8, 3);
+        let res = fused_rs_combine(&world, &contrib, &cost());
+        assert_eq!(res.pipelined_time, res.async_time());
     }
 
     #[test]

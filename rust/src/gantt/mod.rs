@@ -11,6 +11,10 @@ pub enum Lane {
     Inter(usize),
     /// compute stream of one node (expert MLP, top-k weighting, ...)
     Compute(usize),
+    /// numbered compute stream `(node, stream)` — the multi-stream
+    /// execution resource of the chunked pipeline: work on one stream
+    /// serializes, work on different streams of the same node overlaps
+    Stream(usize, usize),
 }
 
 impl Lane {
@@ -19,12 +23,24 @@ impl Lane {
             Lane::Intra(n) => format!("node{n}/intra"),
             Lane::Inter(n) => format!("node{n}/inter"),
             Lane::Compute(n) => format!("node{n}/comp"),
+            Lane::Stream(n, s) => format!("node{n}/s{s}"),
         }
     }
 
     pub fn node(&self) -> usize {
         match self {
-            Lane::Intra(n) | Lane::Inter(n) | Lane::Compute(n) => *n,
+            Lane::Intra(n) | Lane::Inter(n) | Lane::Compute(n) | Lane::Stream(n, _) => *n,
+        }
+    }
+
+    /// Ordering rank used to group a node's lanes in renders:
+    /// fabric, NIC, then compute streams.
+    fn class(&self) -> (usize, usize) {
+        match self {
+            Lane::Intra(_) => (0, 0),
+            Lane::Inter(_) => (1, 0),
+            Lane::Compute(_) => (2, 0),
+            Lane::Stream(_, s) => (3, *s),
         }
     }
 }
@@ -91,7 +107,7 @@ impl Trace {
                 lanes.push(s.lane.clone());
             }
         }
-        lanes.sort_by_key(|l| (l.node(), matches!(l, Lane::Inter(_)), matches!(l, Lane::Compute(_))));
+        lanes.sort_by_key(|l| (l.node(), l.class()));
         let mut out = String::new();
         out.push_str(&format!("makespan: {:.3} ms\n", total * 1e3));
         for lane in &lanes {
@@ -151,6 +167,18 @@ mod tests {
         assert!(s.contains("node0/intra"));
         assert!(s.contains("node0/inter"));
         assert!(s.contains("makespan"));
+    }
+
+    #[test]
+    fn stream_lanes_are_distinct_resources() {
+        let mut t = Trace::default();
+        t.push(Lane::Stream(0, 0), "G0", 0.0, 1.0);
+        t.push(Lane::Stream(0, 1), "G1", 0.5, 1.5); // other stream: overlap OK
+        assert!(t.lanes_are_serial());
+        t.push(Lane::Stream(0, 0), "G2", 0.5, 2.0); // same stream: conflict
+        assert!(!t.lanes_are_serial());
+        assert_eq!(Lane::Stream(3, 1).node(), 3);
+        assert_eq!(Lane::Stream(3, 1).label(), "node3/s1");
     }
 
     #[test]

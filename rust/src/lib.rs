@@ -17,6 +17,7 @@ pub mod moe;
 pub mod netsim;
 pub mod partitioner;
 pub mod paperbench;
+pub mod pipeline;
 pub mod runtime;
 pub mod serving;
 pub mod simulator;

@@ -8,6 +8,14 @@
 //!   plan      joint (replica count x strategy) search under a device budget
 //!   fleetsweep  routing policy x traffic pattern comparison table
 //!   fig3|fig4|fig10|fig11|fig12|table1   regenerate a paper artifact
+//!
+//! Overlap flags (analyze / simulate / plan):
+//!   --overlap     price chunked micro-batch pipelining of the MoE block,
+//!                 auto-searching the chunk count K per strategy (the
+//!                 EPS-MoE overlap priced into selection à la MoNTA)
+//!   --chunks K    force exactly K micro-batch chunks instead of the
+//!                 auto search (K=0 disables; an ill-chosen K genuinely
+//!                 costs time — the launch-overhead trade-off is modeled)
 
 use anyhow::{bail, Result};
 use mixserve::analyzer::indicators::Workload;
@@ -18,9 +26,10 @@ use mixserve::cluster::{simulate_fleet, FleetConfig, FleetPlanner, RoutingPolicy
 use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
 use mixserve::grammar::parse_strategy;
 use mixserve::paperbench::{fig10, fig11, fig12, fig3, fig4, table1};
+use mixserve::pipeline::PipelineCfg;
 use mixserve::runtime::Engine;
 use mixserve::serving::engine::RealEngine;
-use mixserve::serving::sim::{run_rate, run_rate_skewed};
+use mixserve::serving::sim::run_rate_configured;
 use mixserve::timing::{CommCost, NetSimCost};
 use mixserve::util::cli::Args;
 use mixserve::workload::{ArrivalPattern, TraceGen};
@@ -64,19 +73,44 @@ fn render_analysis<C: CommCost>(analyzer: &Analyzer<C>, wl: &Workload, top: usiz
     }
 }
 
+/// `--chunks K` / `--overlap` → the pipeline pricing config.  A present
+/// but unparseable `--chunks` is an error, not a silent fallback.
+fn pipeline_from_args(args: &Args) -> Result<PipelineCfg> {
+    let chunks = match args.get("chunks") {
+        Some(s) => Some(
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--chunks expects a non-negative integer, got {s:?}"))?,
+        ),
+        None => None,
+    };
+    Ok(PipelineCfg::from_flags(chunks, args.has_flag("overlap")))
+}
+
+fn pipeline_note(pipeline: PipelineCfg) -> String {
+    match pipeline {
+        PipelineCfg::Off => String::new(),
+        PipelineCfg::Fixed(k) => format!(", {k}-chunk pipeline"),
+        PipelineCfg::Auto => ", auto-chunked pipeline".to_string(),
+    }
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let cluster = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
     let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
     let rate = args.f64_or("rate", 4.0);
     let top = args.usize_or("top", 10);
     let skew = args.f64_or("skew", 0.0);
+    let pipeline = pipeline_from_args(args)?;
     let analyzer = Analyzer::new(&model, &cluster, &ServingConfig::paper_eval(rate))
-        .with_load_skew(skew);
+        .with_load_skew(skew)
+        .with_pipeline(pipeline);
     let wl = Workload::sharegpt(rate);
     let backend = args.get_or("cost", "analytic");
     println!(
-        "MixServe automatic analyzer — {} on {} @ {rate} req/s (skew {skew}, {backend} cost)",
-        model.name, cluster.name
+        "MixServe automatic analyzer — {} on {} @ {rate} req/s (skew {skew}, {backend} cost{})",
+        model.name,
+        cluster.name,
+        pipeline_note(pipeline)
     );
     match backend.as_str() {
         "analytic" => render_analysis(&analyzer, &wl, top),
@@ -116,22 +150,32 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let rate = args.f64_or("rate", 4.0);
     let duration = args.f64_or("duration", 60.0);
     let skew = args.f64_or("skew", 0.0);
+    let pipeline = pipeline_from_args(args)?;
     println!(
-        "simulating {} on {} at {rate} req/s for {duration}s{}",
+        "simulating {} on {} at {rate} req/s for {duration}s{}{}",
         model.name,
         cluster.name,
         if skew > 0.0 {
             format!(" (load-aware λ at gate skew {skew})")
         } else {
             String::new()
-        }
+        },
+        pipeline_note(pipeline)
     );
+    // run_rate_configured subsumes run_rate (skew 0, pipeline Off) and
+    // run_rate_skewed (skew > 0) — one entry point, no mode dispatch
     for sys in all_systems(&cluster) {
-        let rep = if skew > 0.0 {
-            run_rate_skewed(&model, &cluster, &sys.strategy, sys.mode, rate, duration, 7, skew)
-        } else {
-            run_rate(&model, &cluster, &sys.strategy, sys.mode, rate, duration, 7)
-        };
+        let rep = run_rate_configured(
+            &model,
+            &cluster,
+            &sys.strategy,
+            sys.mode,
+            rate,
+            duration,
+            7,
+            skew,
+            pipeline,
+        );
         println!("{}", rep.metrics.report(&format!("{:<22}", sys.label)));
     }
     Ok(())
@@ -270,7 +314,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let rate = args.f64_or("rate", 8.0);
     let skew = args.f64_or("skew", 0.0);
     let planner = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(rate))
-        .with_skew(skew);
+        .with_skew(skew)
+        .with_pipeline(pipeline_from_args(args)?);
     print!("{}", planner.render(rate));
     if let Some(best) = planner.best(rate) {
         println!(
@@ -326,7 +371,10 @@ fn main() -> Result<()> {
             let rows = fig11::sweep(args.f64_or("duration", 60.0), 7);
             print!("{}", fig11::render(&rows));
         }
-        "fig12" => print!("{}", fig12::render(args.f64_or("duration", 60.0), 7)),
+        "fig12" => {
+            let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+            print!("{}", fig12::render(&c, args.f64_or("duration", 60.0), 7));
+        }
         "table1" => {
             let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
             print!("{}", table1::render(&c));
@@ -339,17 +387,19 @@ fn main() -> Result<()> {
                  usage: mixserve <command> [--options]\n\n\
                  commands:\n\
                  \x20 analyze   [--model M] [--cluster C] [--rate R] [--top N]\n\
-                 \x20           [--skew Z] [--cost analytic|netsim]\n\
-                 \x20           (Z > 0 prices λ at the hot rank's measured load)\n\
+                 \x20           [--skew Z] [--cost analytic|netsim] [--overlap | --chunks K]\n\
+                 \x20           (Z > 0 prices λ at the hot rank's measured load;\n\
+                 \x20            --overlap prices chunked micro-batch pipelining)\n\
                  \x20 serve     [--artifacts DIR] [--model tiny] [--rate R] [--duration S]\n\
                  \x20           [--queue-cap N]\n\
                  \x20 simulate  [--model M] [--cluster C] [--rate R] [--duration S]\n\
-                 \x20           [--skew Z]\n\
+                 \x20           [--skew Z] [--overlap | --chunks K]\n\
                  \x20 fleet     [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
                  \x20           [--duration S] [--pattern poisson|bursty|diurnal]\n\
                  \x20           [--slo-ttft S] [--strategy \"TP=8 + DP=4, TP=8 + EP=4\"]\n\
                  \x20           (each replica runs on its own POD-shaped device pool)\n\
                  \x20 plan      [--model M] [--cluster BUDGET] [--rate R] [--skew Z]\n\
+                 \x20           [--overlap | --chunks K]\n\
                  \x20           (carve one device budget into replicas x strategy)\n\
                  \x20 fleetsweep  [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
                  \x20 fig3|fig4|fig10|fig11|fig12|table1   regenerate paper artifacts\n\n\

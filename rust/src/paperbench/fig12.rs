@@ -1,14 +1,17 @@
-//! Fig. 12 — impact of overlapping communication (sync vs async fused
-//! AR-A2A), on the Ascend 910B cluster with DeepSeek-R1: Gantt chart +
-//! end-to-end TTFT / ITL / throughput.
+//! Fig. 12 — impact of overlapping communication: (a) the fused
+//! RS-Combine Gantt, (b) sync vs async vs chunk-pipelined end-to-end
+//! TTFT / ITL / throughput, (c) the chunked micro-batch overlap sweep
+//! (pipelined makespan and overlap efficiency vs chunk count K).
 
-use crate::analyzer::latency::CommMode;
+use crate::analyzer::latency::{CommMode, LatencyModel, Phase};
 use crate::comm::cost::CollectiveCost;
-use crate::comm::fused::fused_rs_combine;
+use crate::comm::fused::{fused_rs_combine, fused_rs_combine_chunked};
 use crate::comm::primitives::synth_contrib;
 use crate::comm::world::RankWorld;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy};
-use crate::serving::sim::run_rate;
+use crate::pipeline::{PipelineCfg, MAX_CHUNKS};
+use crate::serving::sim::run_rate_configured;
+use crate::timing::CommCost;
 
 pub struct Fig12Perf {
     pub mode: &'static str,
@@ -17,54 +20,112 @@ pub struct Fig12Perf {
     pub throughput: f64,
 }
 
+/// One row of the chunk sweep: per-layer MoE time of the paper's hybrid
+/// strategy at chunk count `k`, and the speedup over K = 1.
+pub struct Fig12Chunk {
+    pub k: usize,
+    pub moe_ms: f64,
+    pub efficiency: f64,
+}
+
 /// (a) Gantt chart of the fused RS-Combine schedule — data-level, so the
-/// same run also re-verifies numerics.
+/// same run also re-verifies numerics.  A second panel shows the same
+/// combine chunk-pipelined against the expert GroupGEMM.
 pub fn gantt(cluster: &ClusterConfig) -> String {
     let world = RankWorld::new(cluster.n_nodes, cluster.gpus_per_node);
     let cost = CollectiveCost::new(cluster);
     // a DeepSeek-R1-shaped block scaled to stay data-level-tractable
     let contrib = synth_contrib(&world, 64, 256, 42);
     let res = fused_rs_combine(&world, &contrib, &cost);
+    let gemm_flops = res.async_time() * cluster.flops * cluster.mfu;
+    let chunked = fused_rs_combine_chunked(&world, &contrib, &cost, 4, gemm_flops);
     format!(
-        "Fig. 12a — fused RS-Combine schedule [{}]\n{}\nasync {:.3} ms vs sync {:.3} ms — overlap hides {:.0}% of intra time\n",
+        "Fig. 12a — fused RS-Combine schedule [{}]\n{}\nasync {:.3} ms vs sync {:.3} ms — overlap hides {:.0}% of intra time\n\
+         \nFig. 12a' — the same combine pipelined against the expert GEMM (K=4)\n{}\npipelined {:.3} ms vs GEMM-then-combine {:.3} ms\n",
         cluster.name,
         res.trace.render_ascii(72),
         res.async_time() * 1e3,
         res.sync_time * 1e3,
-        (1.0 - res.async_time() / res.sync_time) * 100.0
+        (1.0 - res.async_time() / res.sync_time) * 100.0,
+        chunked.trace.render_ascii(72),
+        chunked.pipelined_time * 1e3,
+        (cost.compute_time(gemm_flops) + res.async_time()) * 1e3,
     )
 }
 
-/// (b) end-to-end sync vs async on the serving simulator.
-pub fn perf(duration: f64, seed: u64) -> Vec<Fig12Perf> {
-    let cluster = ClusterConfig::ascend910b();
+/// (b) end-to-end sync vs async vs chunk-pipelined on the serving
+/// simulator.
+pub fn perf(cluster: &ClusterConfig, duration: f64, seed: u64) -> Vec<Fig12Perf> {
     let model = MoEModelConfig::deepseek_r1();
     let strat = ParallelStrategy::mixserve(cluster.n_nodes, cluster.gpus_per_node);
-    [("Sync", CommMode::Sync), ("Async (fused)", CommMode::FusedAsync)]
-        .into_iter()
-        .map(|(label, mode)| {
-            let rep = run_rate(&model, &cluster, &strat, mode, 4.0, duration, seed);
-            Fig12Perf {
-                mode: label,
-                ttft_ms: rep.metrics.ttft_summary().mean * 1e3,
-                itl_ms: rep.metrics.itl_summary().mean * 1e3,
-                throughput: rep.metrics.throughput(),
-            }
+    [
+        ("Sync", CommMode::Sync, PipelineCfg::Off),
+        ("Async (fused)", CommMode::FusedAsync, PipelineCfg::Off),
+        ("Async + chunks", CommMode::FusedAsync, PipelineCfg::Auto),
+    ]
+    .into_iter()
+    .map(|(label, mode, pipeline)| {
+        let rep = run_rate_configured(
+            &model,
+            cluster,
+            &strat,
+            mode,
+            4.0,
+            duration,
+            seed,
+            0.0,
+            pipeline,
+        );
+        Fig12Perf {
+            mode: label,
+            ttft_ms: rep.metrics.ttft_summary().mean * 1e3,
+            itl_ms: rep.metrics.itl_summary().mean * 1e3,
+            throughput: rep.metrics.throughput(),
+        }
+    })
+    .collect()
+}
+
+/// (c) the overlap sweep: the hybrid strategy's per-layer MoE time as
+/// the chunk count grows — rises again once the per-chunk launch
+/// overheads and the starved GroupGEMM outweigh the hidden time.
+pub fn chunk_sweep(cluster: &ClusterConfig) -> Vec<Fig12Chunk> {
+    let model = MoEModelConfig::deepseek_r1();
+    let lm = LatencyModel::new(&model, cluster);
+    let strat = ParallelStrategy::mixserve(cluster.n_nodes, cluster.gpus_per_node);
+    let base = lm.moe_pipelined_layer(&strat, 16, 1024, Phase::Prefill, 1);
+    (1..=MAX_CHUNKS)
+        .map(|k| {
+            let t = lm.moe_pipelined_layer(&strat, 16, 1024, Phase::Prefill, k);
+            Fig12Chunk { k, moe_ms: t * 1e3, efficiency: base / t.max(1e-30) }
         })
         .collect()
 }
 
-pub fn render(duration: f64, seed: u64) -> String {
-    let mut out = gantt(&ClusterConfig::ascend910b());
-    out.push_str("\nFig. 12b — sync vs async end-to-end (DeepSeek-R1, 4 req/s)\n");
+pub fn render(cluster: &ClusterConfig, duration: f64, seed: u64) -> String {
+    let mut out = gantt(cluster);
+    out.push_str(&format!(
+        "\nFig. 12b — sync vs async vs chunk-pipelined end-to-end (DeepSeek-R1, 4 req/s, {})\n",
+        cluster.name
+    ));
     out.push_str(&format!(
         "{:<16} {:>10} {:>9} {:>10}\n",
         "mode", "TTFT(ms)", "ITL(ms)", "tok/s"
     ));
-    for p in perf(duration, seed) {
+    for p in perf(cluster, duration, seed) {
         out.push_str(&format!(
             "{:<16} {:>10.1} {:>9.2} {:>10.1}\n",
             p.mode, p.ttft_ms, p.itl_ms, p.throughput
+        ));
+    }
+    out.push_str(
+        "\nFig. 12c — chunked micro-batch overlap sweep (hybrid MoE layer, prefill b=16 s=1024)\n",
+    );
+    out.push_str(&format!("{:<6} {:>12} {:>12}\n", "K", "MoE(ms)", "speedup"));
+    for row in chunk_sweep(cluster) {
+        out.push_str(&format!(
+            "{:<6} {:>12.3} {:>11.2}x\n",
+            row.k, row.moe_ms, row.efficiency
         ));
     }
     out
@@ -76,12 +137,13 @@ mod tests {
 
     #[test]
     fn async_never_worse() {
-        let p = perf(15.0, 5);
-        assert_eq!(p.len(), 2);
-        let (sync, fused) = (&p[0], &p[1]);
+        let p = perf(&ClusterConfig::ascend910b(), 15.0, 5);
+        assert_eq!(p.len(), 3);
+        let (sync, fused, piped) = (&p[0], &p[1], &p[2]);
         assert!(fused.ttft_ms <= sync.ttft_ms * 1.02);
         assert!(fused.itl_ms <= sync.itl_ms * 1.02);
         assert!(fused.throughput >= sync.throughput * 0.98);
+        assert!(piped.itl_ms <= fused.itl_ms * 1.02, "chunking must not hurt");
     }
 
     #[test]
@@ -89,5 +151,15 @@ mod tests {
         let g = gantt(&ClusterConfig::ascend910b());
         assert!(g.contains("async"));
         assert!(g.contains("sync"));
+        assert!(g.contains("pipelined"));
+    }
+
+    #[test]
+    fn chunk_sweep_starts_at_one() {
+        let rows = chunk_sweep(&ClusterConfig::ascend910b());
+        assert_eq!(rows[0].k, 1);
+        assert!((rows[0].efficiency - 1.0).abs() < 1e-12, "K=1 speedup is 1.0");
+        assert!(rows.iter().any(|r| r.efficiency > 1.0), "some K must pay on the hybrid");
+        assert_eq!(rows.last().unwrap().k, MAX_CHUNKS);
     }
 }

@@ -21,6 +21,7 @@ pub use crate::cluster::replica::GATE_SKEW;
 use crate::analyzer::latency::CommMode;
 use crate::cluster::replica::ReplicaSim;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use crate::pipeline::PipelineCfg;
 use crate::serving::metrics::ServingMetrics;
 use crate::timing::CommCost;
 use crate::workload::{Request, TraceGen};
@@ -112,7 +113,8 @@ pub fn simulate_serving_skewed(
     report(replica, now, mode)
 }
 
-/// Convenience: build a trace and run (the Fig. 10 entry point).
+/// Convenience: build a trace and run (the Fig. 10 entry point) — the
+/// uniform-λ, unpipelined special case of [`run_rate_configured`].
 pub fn run_rate(
     model: &MoEModelConfig,
     cluster: &ClusterConfig,
@@ -122,9 +124,45 @@ pub fn run_rate(
     duration: f64,
     seed: u64,
 ) -> SimReport {
+    run_rate_configured(
+        model,
+        cluster,
+        strategy,
+        mode,
+        rate,
+        duration,
+        seed,
+        0.0,
+        PipelineCfg::Off,
+    )
+}
+
+/// The fully-configured single-replica run: optional load-aware λ
+/// re-pricing at gate skew `skew` (0 keeps the uniform pricing) and
+/// optional chunked micro-batch pipelining of the MoE block.  With
+/// `skew == 0` and `PipelineCfg::Off` this is exactly [`run_rate`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_rate_configured(
+    model: &MoEModelConfig,
+    cluster: &ClusterConfig,
+    strategy: &ParallelStrategy,
+    mode: CommMode,
+    rate: f64,
+    duration: f64,
+    seed: u64,
+    skew: f64,
+    pipeline: PipelineCfg,
+) -> SimReport {
     let serving = ServingConfig::paper_eval(rate);
     let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
-    simulate_serving(model, cluster, strategy, &serving, mode, &trace, seed)
+    let mut replica = if skew > 0.0 {
+        ReplicaSim::with_skew(model, cluster, strategy, &serving, mode, seed, 0, skew)
+    } else {
+        ReplicaSim::new(model, cluster, strategy, &serving, mode, seed, 0)
+    }
+    .with_pipeline(pipeline);
+    let now = drive(&mut replica, &trace);
+    report(replica, now, mode)
 }
 
 /// [`run_rate`] with the load-aware replica at gate skew `skew`.
@@ -261,6 +299,51 @@ mod tests {
             long.metrics.itl_summary().mean,
             short.metrics.itl_summary().mean
         );
+    }
+
+    #[test]
+    fn configured_run_reduces_to_simulate_serving() {
+        // skew 0 + pipeline off must reproduce the historical primitive
+        // sample-for-sample (same trace seed, same timing path)
+        let model = MoEModelConfig::deepseek_r1();
+        let cluster = ClusterConfig::ascend910b();
+        let s = ParallelStrategy::mixserve(4, 8);
+        let serving = ServingConfig::paper_eval(2.0);
+        let trace = TraceGen::sharegpt(2.0, serving.max_seq, 7).generate(20.0);
+        let a = simulate_serving(&model, &cluster, &s, &serving, CommMode::FusedAsync, &trace, 7);
+        let b = run_rate(&model, &cluster, &s, CommMode::FusedAsync, 2.0, 20.0, 7);
+        assert_eq!(a.metrics.completed, b.metrics.completed);
+        assert_eq!(a.metrics.ttft_summary().mean, b.metrics.ttft_summary().mean);
+        assert_eq!(a.metrics.itl_summary().mean, b.metrics.itl_summary().mean);
+    }
+
+    #[test]
+    fn pipelined_serving_no_slower_end_to_end() {
+        let model = MoEModelConfig::deepseek_r1();
+        let cluster = ClusterConfig::ascend910b();
+        let s = ParallelStrategy::mixserve(4, 8);
+        let run = |pipeline: PipelineCfg| {
+            run_rate_configured(
+                &model,
+                &cluster,
+                &s,
+                CommMode::FusedAsync,
+                4.0,
+                30.0,
+                7,
+                0.0,
+                pipeline,
+            )
+        };
+        let off = run(PipelineCfg::Off);
+        let auto = run(PipelineCfg::Auto);
+        assert!(
+            auto.metrics.itl_summary().p50 <= off.metrics.itl_summary().p50 * 1.001,
+            "pipelined p50 ITL {} !<= additive {}",
+            auto.metrics.itl_summary().p50,
+            off.metrics.itl_summary().p50
+        );
+        assert!(auto.metrics.throughput() >= off.metrics.throughput() * 0.999);
     }
 
     #[test]

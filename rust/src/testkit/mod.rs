@@ -95,6 +95,26 @@ impl Bench {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Results as a JSON object `{"<name>": {"mean_us": .., "p50_us": ..,
+    /// "p99_us": ..}, ..}` — the CI bench-regression gate's exchange
+    /// format (`BENCH_pr.json` vs the committed `BENCH_baseline.json`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        for (i, r) in self.results.iter().enumerate() {
+            let s = &r.summary;
+            let sep = if i + 1 == self.results.len() { "" } else { "," };
+            out.push_str(&format!(
+                "  \"{}\": {{\"mean_us\": {:.3}, \"p50_us\": {:.3}, \"p99_us\": {:.3}}}{sep}\n",
+                r.name,
+                s.mean * 1e6,
+                s.p50 * 1e6,
+                s.p99 * 1e6
+            ));
+        }
+        out.push_str("}\n");
+        out
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +148,18 @@ mod tests {
             |r| r.below(10),
             |&x| if x < 9 { Ok(()) } else { Err(format!("x = {x}")) },
         );
+    }
+
+    #[test]
+    fn bench_json_is_well_formed() {
+        let mut b = Bench::new(0, 2);
+        b.run("alpha beta", || 1 + 1);
+        b.run("gamma", || 2 + 2);
+        let j = b.to_json();
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        assert!(j.contains("\"alpha beta\""));
+        assert!(j.contains("\"mean_us\""));
+        assert!(j.matches(',').count() >= 1, "two entries need a separator");
     }
 
     #[test]

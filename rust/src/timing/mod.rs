@@ -165,6 +165,15 @@ pub trait CommCost: std::fmt::Debug + Clone {
         )
     }
 
+    /// Duration of `flops` of dense work on one device of the bound
+    /// cluster (MFU-derated peak) — times the schedule IR's
+    /// `CollOp::Compute` steps, so compute and communication play back
+    /// under one cost model.
+    fn compute_time(&self, flops: f64) -> f64 {
+        let c = self.cluster();
+        flops.max(0.0) / (c.flops * c.mfu).max(1.0)
+    }
+
     /// Point-to-point transfer (PP stage boundary).
     fn p2p(&self, bytes: f64) -> f64 {
         // PP stages sit on different nodes in every paper configuration.

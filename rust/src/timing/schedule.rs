@@ -21,6 +21,12 @@ pub enum CollOp {
     AllGather { degree: usize },
     AllReduce { degree: usize },
     AllToAll { degree: usize },
+    /// dense device work (expert GroupGEMM) on a compute stream —
+    /// timed as `flops` over the cluster's MFU-derated peak
+    Compute { flops: f64 },
+    /// a precomputed duration (composed / measured sub-schedules);
+    /// backend-independent
+    Elapsed { secs: f64 },
 }
 
 /// One timed unit of work: occupies `lane` for the op's duration, may
@@ -34,6 +40,41 @@ pub struct Step {
     pub domain: CommDomain,
     /// indices (into [`Schedule::steps`]) that gate this step
     pub deps: Vec<usize>,
+}
+
+impl Step {
+    /// A compute step of `flops` on stream `stream` of `node`
+    /// (`Lane::Stream`): serializes with other work on that stream,
+    /// overlaps with the node's communication lanes and other streams.
+    pub fn compute(
+        node: usize,
+        stream: usize,
+        label: impl Into<String>,
+        flops: f64,
+        deps: Vec<usize>,
+    ) -> Self {
+        Step {
+            lane: Lane::Stream(node, stream),
+            label: label.into(),
+            op: CollOp::Compute { flops },
+            bytes: 0.0,
+            domain: CommDomain::IntraNode,
+            deps,
+        }
+    }
+
+    /// A step of a known duration on an arbitrary lane — the glue for
+    /// composing precomputed stage times into one playable schedule.
+    pub fn elapsed(lane: Lane, label: impl Into<String>, secs: f64, deps: Vec<usize>) -> Self {
+        Step {
+            lane,
+            label: label.into(),
+            op: CollOp::Elapsed { secs },
+            bytes: 0.0,
+            domain: CommDomain::IntraNode,
+            deps,
+        }
+    }
 }
 
 /// An untimed schedule: round structure + gating, no durations.
@@ -71,6 +112,8 @@ impl Schedule {
             CollOp::AllGather { degree } => cost.all_gather(s.bytes, degree, s.domain),
             CollOp::AllReduce { degree } => cost.all_reduce(s.bytes, degree, s.domain),
             CollOp::AllToAll { degree } => cost.all_to_all(s.bytes, degree, s.domain),
+            CollOp::Compute { flops } => cost.compute_time(flops),
+            CollOp::Elapsed { secs } => secs.max(0.0),
         }
     }
 
@@ -333,6 +376,98 @@ mod tests {
                 assert!((fast_sync - sched.sync_time(&c)).abs() < 1e-15);
             }
         }
+    }
+
+    #[test]
+    fn empty_schedule_is_zero_everywhere() {
+        let c = cost();
+        let s = Schedule::default();
+        assert_eq!(s.makespans(&c), (0.0, 0.0));
+        assert_eq!(s.sync_time(&c), 0.0);
+        let played = s.play(&c);
+        assert!(played.trace.spans.is_empty());
+        assert_eq!(played.makespan(), 0.0);
+        assert!(played.ends.is_empty());
+    }
+
+    #[test]
+    fn single_step_schedule_times_that_step() {
+        let c = cost();
+        for step in [
+            Step {
+                lane: Lane::Intra(0),
+                label: "RS".into(),
+                op: CollOp::ReduceScatter { degree: 8 },
+                bytes: 2e6,
+                domain: CommDomain::IntraNode,
+                deps: vec![],
+            },
+            Step::compute(0, 0, "G", 1e12, vec![]),
+            Step::elapsed(Lane::Inter(0), "X", 3.5e-3, vec![]),
+        ] {
+            let mut s = Schedule::default();
+            s.push(step);
+            let dur = s.step_time(&c, 0);
+            assert!(dur > 0.0);
+            let (a, y) = s.makespans(&c);
+            assert!((a - dur).abs() < 1e-18 && (y - dur).abs() < 1e-18);
+            assert_eq!(s.play(&c).ends, vec![dur]);
+        }
+    }
+
+    #[test]
+    fn play_at_is_monotone_in_t0() {
+        // shifting the start can never pull any span (or the makespan)
+        // earlier, and a pure offset shifts every span by exactly t0
+        let c = cost();
+        let sched = rs_combine_ir(2, 4, 8, 2e6, 4e6, CommDomain::IntraNode);
+        let base = sched.play(&c);
+        let mut prev = base.makespan();
+        for t0 in [1e-6, 1e-3, 0.5, 2.0] {
+            let shifted = sched.play_at(&c, t0);
+            let m = shifted.makespan();
+            assert!(m >= prev - 1e-15, "t0={t0}: {m} < {prev}");
+            prev = m;
+            assert!((m - (base.makespan() + t0)).abs() < 1e-12, "pure offset");
+            for (a, b) in shifted.trace.spans.iter().zip(&base.trace.spans) {
+                assert!((a.start - (b.start + t0)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn compute_and_elapsed_steps_play_like_makespans() {
+        // the allocation-free fast path must agree with full playback on
+        // schedules mixing comm rounds, compute streams, and elapsed glue
+        let c = cost();
+        let mut s = ag_dispatch_ir(2, 4, 8, 1e6, 5e5, CommDomain::IntraNode);
+        let n = s.steps.len();
+        let g0 = s.push(Step::compute(0, 0, "G0", 2e12, vec![n - 1]));
+        let g1 = s.push(Step::compute(0, 1, "G1", 1e12, vec![n - 1]));
+        s.push(Step::elapsed(Lane::Inter(0), "flush", 1e-4, vec![g0, g1]));
+        let (fast_async, fast_sync) = s.makespans(&c);
+        assert!((fast_async - s.play(&c).makespan()).abs() < 1e-15);
+        assert!((fast_sync - s.sync_time(&c)).abs() < 1e-15);
+        assert!(fast_async <= fast_sync * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn streams_serialize_within_and_overlap_across() {
+        // two chains on distinct streams of one node overlap; the same
+        // chain forced onto one stream serializes
+        let c = cost();
+        let mut two = Schedule::default();
+        two.push(Step::compute(0, 0, "A", 1e12, vec![]));
+        two.push(Step::compute(0, 1, "B", 1e12, vec![]));
+        let mut one = Schedule::default();
+        one.push(Step::compute(0, 0, "A", 1e12, vec![]));
+        one.push(Step::compute(0, 0, "B", 1e12, vec![]));
+        let t = c.compute_time(1e12);
+        let (a2, _) = two.makespans(&c);
+        let (a1, _) = one.makespans(&c);
+        assert!((a2 - t).abs() < 1e-15, "streams overlap: {a2} vs {t}");
+        assert!((a1 - 2.0 * t).abs() < 1e-15, "one stream serializes");
+        assert!(two.play(&c).trace.lanes_are_serial());
     }
 
     #[test]

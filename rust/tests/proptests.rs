@@ -518,3 +518,98 @@ fn prop_fused_mode_never_slower_in_latency_model() {
         },
     );
 }
+
+#[test]
+fn prop_chunked_pipeline_schedules_are_sound() {
+    // for random stage shapes and chunk counts: the pipelined makespan
+    // never beats the busiest single resource, never loses to the serial
+    // chain, the fast path matches full playback, and no lane/stream
+    // double-books
+    use mixserve::pipeline::HybridStage;
+    use mixserve::timing::CommDomain;
+    forall(
+        "chunked pipeline invariants",
+        30,
+        53,
+        |r: &mut Rng| {
+            let rounds = 2 + r.below(7);
+            let tp = [2usize, 4, 8][r.below(3)];
+            let blk = 1e4 * 10f64.powi(r.below(3) as i32);
+            let flops = 1e9 * 10f64.powi(r.below(4) as i32);
+            let chunks = 1 + r.below(8);
+            (rounds, tp, blk, flops, chunks)
+        },
+        |&(rounds, tp, blk, flops, chunks)| {
+            let stage = HybridStage {
+                nodes: 1,
+                rounds,
+                tp,
+                tp_domain: CommDomain::IntraNode,
+                disp_blk_bytes: blk,
+                comb_blk_bytes: blk,
+                comb_ag_bytes: 4.0 * blk,
+                flops,
+            };
+            let c = cost();
+            let sched = stage.schedule(chunks);
+            let (fast, sync) = sched.makespans(&c);
+            let played = sched.play(&c);
+            if (fast - played.makespan()).abs() > 1e-12 {
+                return Err(format!("fast {fast} != played {}", played.makespan()));
+            }
+            if !played.trace.lanes_are_serial() {
+                return Err("a lane double-booked".into());
+            }
+            if fast > sync * (1.0 + 1e-9) {
+                return Err(format!("async {fast} > sync {sync}"));
+            }
+            let eff = stage.overlap_efficiency(&c, chunks);
+            if chunks == 1 && eff != 1.0 {
+                return Err(format!("efficiency at K=1 must be exactly 1.0, got {eff}"));
+            }
+            if eff <= 0.0 {
+                return Err(format!("efficiency must be positive, got {eff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_overlap_saving_bounded_by_moe_time() {
+    // Auto pipelining can hide at most the whole MoE block, never more
+    use mixserve::pipeline::PipelineCfg;
+    let model = MoEModelConfig::deepseek_r1();
+    let cluster = ClusterConfig::ascend910b();
+    forall(
+        "0 <= saving <= moe comm + moe compute",
+        20,
+        71,
+        |r: &mut Rng| {
+            let batch = 1 + r.below(16);
+            let seq = 16 + r.below(2048);
+            let prefill = r.below(2) == 0;
+            let hybrid = r.below(2) == 0;
+            (batch, seq, prefill, hybrid)
+        },
+        |&(batch, seq, prefill, hybrid)| {
+            let lm = LatencyModel::new(&model, &cluster).with_pipeline(PipelineCfg::Auto);
+            let s = if hybrid {
+                mixserve::config::ParallelStrategy::mixserve(4, 8)
+            } else {
+                mixserve::config::ParallelStrategy::pure_ep(4, 8)
+            };
+            let phase = if prefill { Phase::Prefill } else { Phase::Decode };
+            let saving = lm.overlap_saving_layer(&s, batch, seq, phase, CommMode::FusedAsync);
+            let ceiling = lm.moe_comm_layer(&s, batch, seq, phase, CommMode::FusedAsync)
+                + lm.moe_compute_chunk(&s, batch, seq, phase, 1);
+            if saving < 0.0 {
+                return Err(format!("Auto saving negative: {saving}"));
+            }
+            if saving > ceiling * (1.0 + 1e-9) {
+                return Err(format!("saving {saving} exceeds MoE ceiling {ceiling}"));
+            }
+            Ok(())
+        },
+    );
+}
