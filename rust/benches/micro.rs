@@ -26,7 +26,7 @@ use mixserve::serving::batcher::{Batcher, BatcherConfig};
 use mixserve::serving::kvcache::KvCacheManager;
 use mixserve::simulator::EventQueue;
 use mixserve::testkit::Bench;
-use mixserve::timing::CommDomain;
+use mixserve::timing::{kv_handoff_secs, CommDomain};
 use mixserve::workload::Request;
 
 fn main() {
@@ -103,6 +103,16 @@ fn main() {
             }
         }
         done
+    });
+
+    // --- P/D disaggregation: per-request KV handoff pricing (the fleet
+    //     loop pays this once per prefill completion)
+    let ds_model = MoEModelConfig::deepseek_r1();
+    b.run("kv_handoff pricing x1000", || {
+        (0..1000usize)
+            .map(|i| kv_handoff_secs(&cost, &ds_model, 128 + i))
+            .sum::<f64>()
+            .to_bits()
     });
 
     // --- KV allocator churn

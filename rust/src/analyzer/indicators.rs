@@ -1,5 +1,8 @@
 //! Theoretical performance indicators — §III-B5, Eqs. (9)–(11):
-//! TTFT, ITL, and service-level throughput Θ.
+//! TTFT, ITL, and service-level throughput Θ — plus their phase-split
+//! form for P/D-disaggregated pools (a prefill pool's server drains
+//! prompts at μ = b/Δt_prf; a decode pool's drains generations at
+//! μ = b/(L_out·Δt_dec)).
 
 use super::latency::{CommMode, LatencyModel, Phase};
 use super::queueing::{wait_with_overload, EVAL_HORIZON_S};
@@ -89,6 +92,56 @@ pub fn evaluate<C: CommCost>(
     Indicators { ttft, itl, throughput: theta, queue_wait: wq, rho }
 }
 
+/// Evaluate one *phase pool* of a P/D-disaggregated deployment.
+///
+/// The colocated [`evaluate`] drains whole requests; a disaggregated
+/// pool only serves its phase, so its M/M/1 server rate and queue wait
+/// change while the per-iteration latencies (Eqs. 12–13) stay the same:
+///
+/// * `Phase::Prefill` — μ = b/Δt_prf; `ttft` = W_q + Δt_prf is the
+///   pool's contribution to the fleet TTFT (`queue_wait` = W_q).
+/// * `Phase::Decode` — μ = b/(L_out·Δt_dec); `itl` = Δt_dec; the
+///   request's wait for a decode slot lands in `queue_wait` (it delays
+///   the *second* token, never the first — that already left the
+///   prefill pool).
+///
+/// `throughput` is the pool's sustainable token capacity
+/// μ·(L_in + L_out); the fleet planner takes the bottleneck stage's
+/// minimum and caps by demand.
+pub fn evaluate_phase<C: CommCost>(
+    lm: &LatencyModel<C>,
+    strategy: &ParallelStrategy,
+    serving: &ServingConfig,
+    wl: &Workload,
+    mode: CommMode,
+    phase: Phase,
+) -> Indicators {
+    let batch = serving.max_batch;
+    let prf = lm
+        .service_latency(strategy, batch, wl.len_in, Phase::Prefill, mode)
+        .total();
+    let ctx = wl.len_in + wl.len_out / 2;
+    let dec = lm
+        .service_latency(strategy, batch, ctx, Phase::Decode, mode)
+        .total();
+
+    let service = match phase {
+        Phase::Prefill => prf,
+        Phase::Decode => wl.len_out as f64 * dec,
+    };
+    let mu = batch as f64 / service.max(1e-9);
+    let wq = wait_with_overload(wl.rate, mu, EVAL_HORIZON_S);
+    let rho = wl.rate / mu;
+    let ttft = match phase {
+        Phase::Prefill => wq + prf,
+        // a decode pool never serves a first token; report the service
+        // half so the field stays meaningful in rendered tables
+        Phase::Decode => prf,
+    };
+    let theta = mu * (wl.len_in + wl.len_out) as f64;
+    Indicators { ttft, itl: dec, throughput: theta, queue_wait: wq, rho }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +183,42 @@ mod tests {
         assert!(fused.ttft <= sync.ttft);
         assert!(fused.itl <= sync.itl);
         assert!(fused.throughput >= sync.throughput);
+    }
+
+    #[test]
+    fn phase_split_pools_drain_faster_than_colocated() {
+        // a pool serving only one phase has a strictly higher service
+        // rate than the whole-request server, so its queue wait at the
+        // same arrival rate can only shrink
+        let (lm, sc) = setup();
+        let s = ParallelStrategy::mixserve(4, 8);
+        let wl = Workload::sharegpt(4.0);
+        let full = evaluate(&lm, &s, &sc, &wl, CommMode::FusedAsync);
+        let pre = evaluate_phase(&lm, &s, &sc, &wl, CommMode::FusedAsync, Phase::Prefill);
+        let dec = evaluate_phase(&lm, &s, &sc, &wl, CommMode::FusedAsync, Phase::Decode);
+        assert!(pre.queue_wait <= full.queue_wait);
+        assert!(dec.queue_wait <= full.queue_wait);
+        assert!(pre.rho < full.rho && dec.rho < full.rho);
+        // the per-iteration latencies are phase-split, not re-derived
+        assert_eq!(dec.itl, full.itl);
+        assert!(pre.ttft <= full.ttft);
+    }
+
+    #[test]
+    fn prefill_pool_capacity_exceeds_decode_pool_capacity_per_replica() {
+        // one prompt is one iteration; one generation is L_out of them —
+        // the asymmetry the planner's pool-size search trades off
+        let (lm, sc) = setup();
+        let s = ParallelStrategy::mixserve(4, 8);
+        let wl = Workload::sharegpt(2.0);
+        let pre = evaluate_phase(&lm, &s, &sc, &wl, CommMode::FusedAsync, Phase::Prefill);
+        let dec = evaluate_phase(&lm, &s, &sc, &wl, CommMode::FusedAsync, Phase::Decode);
+        assert!(
+            pre.throughput > dec.throughput,
+            "prefill capacity {} must exceed decode capacity {}",
+            pre.throughput,
+            dec.throughput
+        );
     }
 
     #[test]

@@ -8,14 +8,14 @@
 //! an [`ExpertLoadProfile`], so the search prices the hot rank's A2A
 //! volume under measured gate skew instead of the uniform mean.
 
-use super::indicators::{evaluate, Indicators, Workload};
-use super::latency::{CommMode, LatencyModel};
+use super::indicators::{evaluate, evaluate_phase, Indicators, Workload};
+use super::latency::{CommMode, LatencyModel, Phase};
 use super::memory::{check_memory, MemoryCheck};
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::grammar::enumerate_strategies;
 use crate::pipeline::PipelineCfg;
-use crate::timing::{CommCost, ExpertLoadProfile};
+use crate::timing::{kv_handoff_secs, CommCost, ExpertLoadProfile};
 
 /// Seed for measured load profiles built via [`Analyzer::with_load_skew`]
 /// (deterministic selection runs).
@@ -37,6 +37,19 @@ pub struct StrategyReport {
     pub strategy: ParallelStrategy,
     pub indicators: Indicators,
     pub memory: MemoryCheck,
+}
+
+/// The per-phase selection of a P/D-disaggregated deployment: the
+/// prefill pool's strategy minimizes TTFT (Eq. 12 priced at s = L_in),
+/// the decode pool's minimizes ITL (Eq. 13 at s = 1 over the cached
+/// context), searched independently over the same feasible set, plus
+/// the CommCost-priced KV handoff that glues the pools together.
+#[derive(Debug, Clone)]
+pub struct PhasePair {
+    pub prefill: StrategyReport,
+    pub decode: StrategyReport,
+    /// seconds to hand one mean prompt's KV cache across the pools
+    pub handoff_secs: f64,
 }
 
 /// Scalarize indicators for ranking under an objective (lower is better).
@@ -156,6 +169,55 @@ impl<C: CommCost> Analyzer<C> {
     pub fn best(&self, wl: &Workload, objective: Objective) -> Option<StrategyReport> {
         self.rank(wl, objective).into_iter().next()
     }
+
+    /// All feasible strategies for one phase pool of a disaggregated
+    /// deployment, ranked best-first: prefill pools by TTFT, decode
+    /// pools by ITL (the per-phase objective is implied by the phase —
+    /// exactly the asymmetry of Eqs. (12)–(13)).
+    pub fn rank_phase(&self, wl: &Workload, phase: Phase) -> Vec<StrategyReport> {
+        let lm = LatencyModel::with_cost(&self.model, &self.cluster, self.cost.clone())
+            .with_load(self.load.clone())
+            .with_pipeline(self.pipeline);
+        let objective = match phase {
+            Phase::Prefill => Objective::MinTtft,
+            Phase::Decode => Objective::MinItl,
+        };
+        let mut reports: Vec<StrategyReport> = enumerate_strategies(&self.cluster)
+            .iter()
+            .filter(|s| s.total_devices() == self.cluster.total_devices())
+            .map(|s| {
+                let memory = check_memory(
+                    &self.model,
+                    &self.cluster,
+                    s,
+                    self.serving.max_batch,
+                    self.serving.max_seq,
+                );
+                let indicators = evaluate_phase(&lm, s, &self.serving, wl, self.mode, phase);
+                StrategyReport { strategy: *s, indicators, memory }
+            })
+            .filter(|r| r.memory.feasible() && r.indicators.ttft.is_finite())
+            .collect();
+        let key = |r: &StrategyReport| objective_key(objective, &r.indicators);
+        reports.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap());
+        reports
+    }
+
+    /// The per-phase optimum for one pool.
+    pub fn best_phase(&self, wl: &Workload, phase: Phase) -> Option<StrategyReport> {
+        self.rank_phase(wl, phase).into_iter().next()
+    }
+
+    /// The per-phase strategy pair for a P/D-disaggregated deployment on
+    /// this cluster shape, with the prefill→decode KV handoff priced
+    /// through the bound cost backend (the mean prompt's KV crossing the
+    /// inter-pool NIC).
+    pub fn best_disagg(&self, wl: &Workload) -> Option<PhasePair> {
+        let prefill = self.best_phase(wl, Phase::Prefill)?;
+        let decode = self.best_phase(wl, Phase::Decode)?;
+        let handoff_secs = kv_handoff_secs(&self.cost, &self.model, wl.len_in);
+        Some(PhasePair { prefill, decode, handoff_secs })
+    }
 }
 
 #[cfg(test)]
@@ -270,6 +332,42 @@ mod tests {
                 r.indicators.ttft,
                 p.indicators.ttft
             );
+        }
+    }
+
+    #[test]
+    fn phase_search_optimizes_each_phase_independently() {
+        let a = setup(ClusterConfig::ascend910b());
+        let wl = Workload::sharegpt(4.0);
+        let pair = a.best_disagg(&wl).expect("910B grid must be feasible");
+        // each pick is the argmin of its own phase objective over the
+        // same feasible set — so it weakly dominates the other pick too
+        for r in a.rank_phase(&wl, Phase::Prefill) {
+            assert!(pair.prefill.indicators.ttft <= r.indicators.ttft * (1.0 + 1e-12));
+        }
+        for r in a.rank_phase(&wl, Phase::Decode) {
+            assert!(pair.decode.indicators.itl <= r.indicators.itl * (1.0 + 1e-12));
+        }
+        assert!(pair.decode.indicators.itl <= pair.prefill.indicators.itl * (1.0 + 1e-12));
+        assert!(pair.handoff_secs > 0.0, "KV handoff must be priced, not free");
+    }
+
+    #[test]
+    fn phase_rankings_are_sorted_and_feasible() {
+        let a = setup(ClusterConfig::h20());
+        let wl = Workload::sharegpt(2.0);
+        for phase in [Phase::Prefill, Phase::Decode] {
+            let ranked = a.rank_phase(&wl, phase);
+            assert!(!ranked.is_empty(), "{phase:?}");
+            for r in &ranked {
+                assert!(r.memory.feasible());
+            }
+            for w in ranked.windows(2) {
+                match phase {
+                    Phase::Prefill => assert!(w[0].indicators.ttft <= w[1].indicators.ttft),
+                    Phase::Decode => assert!(w[0].indicators.itl <= w[1].indicators.itl),
+                }
+            }
         }
     }
 

@@ -3,10 +3,13 @@
 //! The dispatcher is the fleet's front door: every arrival is assigned to
 //! exactly one replica before admission control sees it.  Policies range
 //! from oblivious (round-robin) to load-aware (join-shortest-queue,
-//! least-outstanding-tokens) to role-aware (a prefill/decode pool split —
-//! the disaggregation substitute described in DESIGN.md §Cluster).
+//! least-outstanding-tokens) to the static prefill/decode pool split.
+//! Fleets with true phase roles (DESIGN.md §Disaggregation) bypass the
+//! policy split: [`Dispatcher::route_arrival`] sends prompts to the
+//! `Role::Prefill` pool and [`Dispatcher::route_handoff`] sends
+//! transferred KV to the `Role::Decode` pool, each JSQ within the pool.
 
-use super::replica::ReplicaSim;
+use super::replica::{ReplicaSim, Role};
 use crate::workload::Request;
 
 /// How the fleet routes arrivals to replicas.
@@ -83,17 +86,51 @@ impl Dispatcher {
                 argmin(0..n, |i| replicas[i].outstanding_tokens())
             }
             RoutingPolicy::PrefillDecodeDisagg => {
-                if n == 1 {
-                    return 0;
-                }
-                let split = n / 2;
-                // prompt-dominant work to the prefill pool [0, split),
-                // generation-dominant work to the decode pool [split, n)
-                let (lo, hi) = if req.len_in >= req.len_out { (0, split) } else { (split, n) };
+                // prompt-dominant work to the prefill pool, generation-
+                // dominant work to the decode pool (JSQ within each).
+                // Odd fleets share the middle replica between the pools
+                // — `n / 2` used to floor the prefill pool (3 replicas →
+                // a fixed 1/2 split whatever the mix) and `n == 1`
+                // returned early, skipping queue-depth accounting; both
+                // pools now always cover ⌈n/2⌉ replicas and route
+                // through the same deterministic argmin.
+                let (lo, hi) =
+                    if req.len_in >= req.len_out { (0, n.div_ceil(2)) } else { (n / 2, n) };
                 argmin(lo..hi, |i| replicas[i].queue_depth())
             }
         }
     }
+
+    /// Role-aware front door for phase-disaggregated fleets: a fresh
+    /// arrival (its prompt still to prefill) goes to the `Role::Prefill`
+    /// pool, JSQ within it.  Fleets without a prefill pool fall back to
+    /// the configured policy over the whole fleet.
+    pub fn route_arrival(&mut self, req: &Request, replicas: &[ReplicaSim]) -> usize {
+        match pool_argmin(replicas, Role::Prefill) {
+            Some(i) => i,
+            None => self.route(req, replicas),
+        }
+    }
+
+    /// Route a handed-off (already-prefilled) request to the
+    /// `Role::Decode` pool, JSQ within it.  Panics when the fleet has no
+    /// decode pool — a prefill pool without a decode pool is a
+    /// configuration error the fleet builder must reject.
+    pub fn route_handoff(&mut self, _req: &Request, replicas: &[ReplicaSim]) -> usize {
+        pool_argmin(replicas, Role::Decode)
+            .expect("disaggregated fleet must have at least one Role::Decode replica")
+    }
+}
+
+/// Shortest-queue member of the `role` pool (ties to the lowest index —
+/// deterministic); None when the pool is empty.
+fn pool_argmin(replicas: &[ReplicaSim], role: Role) -> Option<usize> {
+    replicas
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.role() == role)
+        .min_by_key(|(i, r)| (r.queue_depth(), *i))
+        .map(|(i, _)| i)
 }
 
 /// Index minimizing `key` over a non-empty range; earliest wins ties.
@@ -182,6 +219,79 @@ mod tests {
             let mut d = Dispatcher::new(policy);
             assert_eq!(d.route(&req(0, 10, 500), &replicas), 0, "{policy}");
         }
+    }
+
+    #[test]
+    fn pd_split_on_odd_fleet_shares_the_middle_replica() {
+        // regression: `n / 2` floored the prefill pool — 3 replicas gave
+        // a fixed {0} / {1, 2} split whatever the workload mix.  Both
+        // pools now span ⌈n/2⌉ replicas, sharing the middle one.
+        let mut replicas = fleet(3);
+        let mut d = Dispatcher::new(RoutingPolicy::PrefillDecodeDisagg);
+        // prefill pool is {0, 1}: with 0 loaded, prompt work goes to 1
+        for id in 0..3 {
+            replicas[0].submit(req(id, 100, 10));
+        }
+        assert_eq!(d.route(&req(10, 2000, 50), &replicas), 1);
+        // decode pool is {1, 2}: with 1 now shorter-queued than 2? both
+        // empty except 1 — decode work prefers the emptier member 2
+        replicas[1].submit(req(11, 100, 10));
+        assert_eq!(d.route(&req(12, 50, 2000), &replicas), 2);
+    }
+
+    #[test]
+    fn pd_split_n1_routes_through_queue_accounting() {
+        // regression: the n == 1 early-return skipped the argmin (and
+        // with it the queue-depth accounting); both mixes must route
+        // through the same deterministic path
+        let replicas = fleet(1);
+        let mut d = Dispatcher::new(RoutingPolicy::PrefillDecodeDisagg);
+        assert_eq!(d.route(&req(0, 2000, 50), &replicas), 0);
+        assert_eq!(d.route(&req(1, 50, 2000), &replicas), 0);
+    }
+
+    #[test]
+    fn ties_break_to_the_lowest_index_deterministically() {
+        let replicas = fleet(4); // all queues empty: every policy ties
+        for policy in [
+            RoutingPolicy::JoinShortestQueue,
+            RoutingPolicy::LeastOutstandingTokens,
+            RoutingPolicy::PrefillDecodeDisagg,
+        ] {
+            let mut d = Dispatcher::new(policy);
+            let picks: Vec<usize> =
+                (0..3).map(|i| d.route(&req(i, 100, 50), &replicas)).collect();
+            assert_eq!(picks, vec![0, 0, 0], "{policy}: ties must be deterministic");
+        }
+    }
+
+    fn role_fleet(prefill: usize, decode: usize) -> Vec<ReplicaSim> {
+        fleet(prefill + decode)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.with_role(if i < prefill { Role::Prefill } else { Role::Decode }))
+            .collect()
+    }
+
+    #[test]
+    fn role_aware_routing_respects_pools() {
+        let mut replicas = role_fleet(2, 2);
+        let mut d = Dispatcher::new(RoutingPolicy::JoinShortestQueue);
+        // arrivals only ever land in the prefill pool {0, 1}
+        replicas[0].submit(req(0, 100, 100));
+        assert_eq!(d.route_arrival(&req(1, 100, 100), &replicas), 1);
+        // handoffs only ever land in the decode pool {2, 3}
+        replicas[2].submit_prefilled(req(2, 100, 100));
+        assert_eq!(d.route_handoff(&req(3, 100, 100), &replicas), 3);
+    }
+
+    #[test]
+    fn colocated_fleet_falls_back_to_policy_routing() {
+        let replicas = fleet(3);
+        let mut d = Dispatcher::new(RoutingPolicy::RoundRobin);
+        let picks: Vec<usize> =
+            (0..3).map(|i| d.route_arrival(&req(i, 100, 100), &replicas)).collect();
+        assert_eq!(picks, vec![0, 1, 2], "no prefill pool: policy applies");
     }
 
     #[test]

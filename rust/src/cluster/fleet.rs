@@ -5,18 +5,39 @@
 //! production regime.  Each replica is a full serving engine on its own
 //! device pod ([`ReplicaSim`]); the fleet loop advances whichever event
 //! is earliest: the next trace arrival (routed, admission-checked, and
-//! enqueued) or the next replica iteration completion.
+//! enqueued), the next replica iteration completion, or — in a
+//! phase-disaggregated fleet ([`DisaggConfig`]) — the next KV-handoff
+//! delivery: a request finishing prefill releases its blocks on the
+//! prefill side, rides the CommCost-priced inter-pool transfer, and
+//! joins a decode replica's queue when the transfer lands.
 
 use super::admission::{AdmissionController, SloPolicy};
 use super::dispatch::{Dispatcher, RoutingPolicy};
-use super::replica::ReplicaSim;
+use super::replica::{ReplicaSim, Role};
 use crate::analyzer::indicators::Workload;
 use crate::analyzer::latency::CommMode;
+use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::serving::metrics::ServingMetrics;
+use crate::timing::kv_handoff_secs;
+use crate::util::stats::Series;
 use crate::workload::Request;
 
-/// One fleet deployment: `replicas` copies of a pod running `strategy`.
+/// Phase-disaggregated fleet topology: a prefill pool and a decode pool
+/// of replicas (each on a `replica_cluster`-shaped pod) with the KV
+/// handoff between them modeled as a timed event on the inter-pool NIC.
+#[derive(Debug, Clone)]
+pub struct DisaggConfig {
+    pub prefill_replicas: usize,
+    pub decode_replicas: usize,
+    pub prefill_strategy: ParallelStrategy,
+    pub decode_strategy: ParallelStrategy,
+}
+
+/// One fleet deployment: `replicas` copies of a pod running `strategy`,
+/// or — when `disagg` is set — a prefill pool and a decode pool with a
+/// timed KV handoff between them (`replicas`/`strategy` are then
+/// superseded by the pools).
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
     pub replicas: usize,
@@ -25,6 +46,9 @@ pub struct FleetConfig {
     pub mode: CommMode,
     /// SLO admission gate; None admits everything the queues can hold
     pub slo: Option<SloPolicy>,
+    /// P/D disaggregation topology; None keeps the colocated fleet
+    /// (the historical behavior, bit-for-bit)
+    pub disagg: Option<DisaggConfig>,
 }
 
 /// Result of one fleet run.
@@ -39,6 +63,9 @@ pub struct FleetReport {
     pub per_replica: Vec<ServingMetrics>,
     /// iteration-weighted mean EP straggler factor across replicas
     pub mean_imbalance: f64,
+    /// per-request prefill→decode KV transfer delays (empty when the
+    /// fleet is colocated) — the handoff's visible share of the budget
+    pub kv_handoff: Series,
 }
 
 /// Mean request shape of a trace (drives the admission predictor).
@@ -54,10 +81,13 @@ pub fn trace_workload(trace: &[Request], duration: f64) -> Workload {
     }
 }
 
-/// Run `trace` through a fleet of `cfg.replicas` pods, each shaped like
+/// Run `trace` through a fleet of pods, each shaped like
 /// `replica_cluster`.  The trace is shared — arrivals are routed by the
 /// dispatcher, possibly shed by admission, and the loop runs until every
-/// admitted request completes.
+/// admitted request completes.  With `cfg.disagg` set the fleet runs
+/// role-split: arrivals go to the prefill pool, finished prefills ride a
+/// [`kv_handoff_secs`]-timed transfer, and decode replicas pick them up
+/// when the KV lands.
 pub fn simulate_fleet(
     model: &MoEModelConfig,
     replica_cluster: &ClusterConfig,
@@ -66,30 +96,53 @@ pub fn simulate_fleet(
     trace: &[Request],
     seed: u64,
 ) -> FleetReport {
-    assert!(cfg.replicas > 0, "fleet needs at least one replica");
-    let mut replicas: Vec<ReplicaSim> = (0..cfg.replicas)
-        .map(|i| {
-            ReplicaSim::new(
-                model,
-                replica_cluster,
-                &cfg.strategy,
-                serving,
-                cfg.mode,
-                seed.wrapping_add(0x9e37_79b9 * (i as u64 + 1)),
-                i,
-            )
-        })
-        .collect();
+    let mk_replica = |i: usize, strategy: &ParallelStrategy| {
+        ReplicaSim::new(
+            model,
+            replica_cluster,
+            strategy,
+            serving,
+            cfg.mode,
+            seed.wrapping_add(0x9e37_79b9 * (i as u64 + 1)),
+            i,
+        )
+    };
+    let (mut replicas, admission_strategy): (Vec<ReplicaSim>, ParallelStrategy) =
+        match &cfg.disagg {
+            None => {
+                assert!(cfg.replicas > 0, "fleet needs at least one replica");
+                ((0..cfg.replicas).map(|i| mk_replica(i, &cfg.strategy)).collect(), cfg.strategy)
+            }
+            Some(d) => {
+                assert!(
+                    d.prefill_replicas > 0 && d.decode_replicas > 0,
+                    "a disaggregated fleet needs both pools"
+                );
+                let mut v = Vec::with_capacity(d.prefill_replicas + d.decode_replicas);
+                for i in 0..d.prefill_replicas {
+                    v.push(mk_replica(i, &d.prefill_strategy).with_role(Role::Prefill));
+                }
+                for j in 0..d.decode_replicas {
+                    let i = d.prefill_replicas + j;
+                    v.push(mk_replica(i, &d.decode_strategy).with_role(Role::Decode));
+                }
+                (v, d.prefill_strategy)
+            }
+        };
+    let n_replicas = replicas.len();
     let mut dispatcher = Dispatcher::new(cfg.policy);
+    // the handoff rides the prefill pod's NIC(s); colocated fleets never
+    // consult this
+    let handoff_cost = CollectiveCost::new(replica_cluster);
 
     let mut arrivals = trace.to_vec();
-    arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    crate::workload::sort_by_arrival(&mut arrivals);
     let span = arrivals.last().map(|r| r.arrival).unwrap_or(0.0).max(1e-9);
     let admission = cfg.slo.map(|slo| {
         AdmissionController::new(
             model,
             replica_cluster,
-            &cfg.strategy,
+            &admission_strategy,
             serving,
             &trace_workload(&arrivals, span),
             cfg.mode,
@@ -98,6 +151,9 @@ pub fn simulate_fleet(
     });
 
     let mut shed_front_door = 0usize;
+    let mut kv_handoff = Series::new();
+    // KV transfers in flight: (delivery time, request), insertion-ordered
+    let mut transit: Vec<(f64, Request)> = Vec::new();
     let mut next = 0usize;
     let mut now = 0.0f64;
     loop {
@@ -105,7 +161,7 @@ pub fn simulate_fleet(
         while next < arrivals.len() && arrivals[next].arrival <= now {
             let req = arrivals[next].clone();
             next += 1;
-            let target = dispatcher.route(&req, &replicas);
+            let target = dispatcher.route_arrival(&req, &replicas);
             let admitted = match &admission {
                 Some(ac) => ac.admit(replicas[target].queue_depth()),
                 None => true,
@@ -118,12 +174,32 @@ pub fn simulate_fleet(
             }
         }
 
-        // earliest next event across replicas and the arrival stream
+        // deliver KV transfers that landed by `now` (insertion order —
+        // deterministic under equal delivery times)
+        if !transit.is_empty() {
+            let (ready, pending): (Vec<_>, Vec<_>) =
+                std::mem::take(&mut transit).into_iter().partition(|(t, _)| *t <= now);
+            transit = pending;
+            for (_, req) in ready {
+                let target = dispatcher.route_handoff(&req, &replicas);
+                replicas[target].submit_prefilled(req);
+            }
+        }
+
+        // earliest next event across replicas, transfers, and arrivals
         let mut next_t = f64::INFINITY;
         for r in replicas.iter_mut() {
             if let Some(t) = r.step(now) {
                 next_t = next_t.min(t);
             }
+            for req in r.take_handoffs() {
+                let delay = kv_handoff_secs(&handoff_cost, model, req.len_in);
+                kv_handoff.push(delay);
+                transit.push((now + delay, req));
+            }
+        }
+        for (t, _) in &transit {
+            next_t = next_t.min(*t);
         }
         if next < arrivals.len() {
             next_t = next_t.min(arrivals[next].arrival);
@@ -151,11 +227,12 @@ pub fn simulate_fleet(
     agg.duration = now.max(1e-9);
     FleetReport {
         policy: cfg.policy,
-        replicas: cfg.replicas,
+        replicas: n_replicas,
         strategy: cfg.strategy,
         metrics: agg,
         per_replica,
         mean_imbalance: if iters > 0 { imb_weighted / iters as f64 } else { 1.0 },
+        kv_handoff,
     }
 }
 
@@ -185,6 +262,7 @@ mod tests {
             policy,
             mode: CommMode::FusedAsync,
             slo,
+            disagg: None,
         }
     }
 
@@ -226,6 +304,51 @@ mod tests {
             four.metrics.ttft_summary().mean,
             one.metrics.ttft_summary().mean
         );
+    }
+
+    #[test]
+    fn colocated_fleet_records_no_handoffs() {
+        let model = MoEModelConfig::deepseek_r1();
+        let pod = ClusterConfig::ascend910b();
+        let rep = run_fleet_rate(
+            &model, &pod, &cfg(2, RoutingPolicy::JoinShortestQueue, None), 4.0, 10.0, 7,
+        );
+        assert!(rep.kv_handoff.is_empty(), "no disagg, no KV transfers");
+    }
+
+    #[test]
+    fn disagg_fleet_drains_with_timed_handoffs() {
+        let model = MoEModelConfig::deepseek_r1();
+        let pod = ClusterConfig::ascend910b();
+        let serving = ServingConfig::paper_eval(6.0);
+        let trace = crate::workload::TraceGen::sharegpt(6.0, 4096, 11).generate(15.0);
+        let n = trace.len();
+        let cfg = FleetConfig {
+            replicas: 2,
+            strategy: ParallelStrategy::mixserve(4, 8),
+            policy: RoutingPolicy::JoinShortestQueue,
+            mode: CommMode::FusedAsync,
+            slo: None,
+            disagg: Some(DisaggConfig {
+                prefill_replicas: 1,
+                decode_replicas: 1,
+                prefill_strategy: ParallelStrategy::mixserve(4, 8),
+                decode_strategy: ParallelStrategy::pure_ep(4, 8),
+            }),
+        };
+        let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 11);
+        assert_eq!(rep.metrics.completed, n, "every request finishes its decode");
+        assert_eq!(rep.metrics.rejected, 0);
+        assert_eq!(rep.kv_handoff.len(), n, "one timed KV transfer per request");
+        assert!(rep.kv_handoff.summary().mean > 0.0, "the handoff is never free");
+        assert_eq!(rep.metrics.ttft.len(), n, "TTFT recorded on the prefill side");
+        assert_eq!(rep.per_replica.len(), 2);
+        assert_eq!(
+            rep.per_replica[0].completed, 0,
+            "the prefill pool completes nothing itself"
+        );
+        assert_eq!(rep.per_replica[1].completed, n, "the decode pool owns completion");
+        assert!(rep.metrics.itl_summary().mean > 0.0);
     }
 
     #[test]

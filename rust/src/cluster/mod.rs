@@ -10,12 +10,18 @@
 //!   ([`replica::ReplicaSim`]), the refactored core of `serving/sim.rs`;
 //! * [`dispatch`] — the fleet's front-door router
 //!   ([`dispatch::RoutingPolicy`]: round-robin, join-shortest-queue,
-//!   least-outstanding-tokens, prefill/decode pool split);
+//!   least-outstanding-tokens, prefill/decode pool split) plus the
+//!   role-aware arrival/handoff routing of disaggregated fleets;
 //! * [`admission`] — SLO-aware shedding from predicted TTFT
 //!   (latency model + queueing backlog drain);
 //! * [`fleet`] — the discrete-event loop interleaving all replicas;
+//!   with [`fleet::DisaggConfig`] it runs true P/D disaggregation:
+//!   role-split pools and a CommCost-priced KV handoff between them
+//!   (DESIGN.md §Disaggregation);
 //! * [`planner`] — joint (replica count × strategy) search under a
-//!   device budget, extending `analyzer::search` one level up;
+//!   device budget, extending `analyzer::search` one level up; its
+//!   [`planner::FleetPlanner::plan_disagg`] searches (prefill pool ×
+//!   decode pool × per-phase strategy) against the colocated plans;
 //! * [`sweep`] — the paperbench-style policy × traffic-pattern table.
 
 pub mod admission;
@@ -27,6 +33,6 @@ pub mod sweep;
 
 pub use admission::{AdmissionController, SloPolicy};
 pub use dispatch::{Dispatcher, RoutingPolicy};
-pub use fleet::{run_fleet_rate, simulate_fleet, FleetConfig, FleetReport};
-pub use planner::{carve_replicas, FleetPlan, FleetPlanner};
-pub use replica::ReplicaSim;
+pub use fleet::{run_fleet_rate, simulate_fleet, DisaggConfig, FleetConfig, FleetReport};
+pub use planner::{carve_replicas, DisaggPlan, FleetPlan, FleetPlanner};
+pub use replica::{ReplicaSim, Role};

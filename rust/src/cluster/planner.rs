@@ -18,12 +18,14 @@
 //! points under measured expert-load skew.
 
 use crate::analyzer::indicators::{Indicators, Workload};
-use crate::analyzer::latency::CommMode;
-use crate::analyzer::search::{objective_key, Analyzer, LOAD_PROFILE_SEED, Objective};
+use crate::analyzer::latency::{CommMode, Phase};
+use crate::analyzer::search::{
+    objective_key, Analyzer, Objective, StrategyReport, LOAD_PROFILE_SEED,
+};
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::pipeline::PipelineCfg;
-use crate::timing::{CommCost, ExpertLoadProfile};
+use crate::timing::{kv_handoff_secs, CommCost, ExpertLoadProfile};
 
 /// One point of the joint search.
 #[derive(Debug, Clone)]
@@ -36,6 +38,36 @@ pub struct FleetPlan {
     pub indicators: Indicators,
     /// fleet-level tokens/s: replicas × per-replica Θ
     pub total_throughput: f64,
+}
+
+/// One phase-disaggregated fleet plan: a prefill pool and a decode pool
+/// (each a replica count × pod shape × per-phase strategy) carved from
+/// one device budget, with the prefill→decode KV handoff priced on the
+/// prefill pod's NIC as first-class traffic.
+#[derive(Debug, Clone)]
+pub struct DisaggPlan {
+    pub prefill_replicas: usize,
+    pub prefill_cluster: ClusterConfig,
+    pub prefill_strategy: ParallelStrategy,
+    /// phase indicators of one prefill replica at rate/prefill_replicas
+    pub prefill_indicators: Indicators,
+    pub decode_replicas: usize,
+    pub decode_cluster: ClusterConfig,
+    pub decode_strategy: ParallelStrategy,
+    /// phase indicators of one decode replica at rate/decode_replicas
+    pub decode_indicators: Indicators,
+    /// per-request KV handoff between the pools, seconds
+    pub handoff_secs: f64,
+    /// fleet TTFT: prefill-pool queue wait + prefill service
+    pub ttft: f64,
+    /// fleet ITL: the decode pool's per-token latency
+    pub itl: f64,
+    /// sustainable fleet tokens/s — the bottleneck stage's capacity,
+    /// demand-capped like the colocated [`FleetPlan`]
+    pub total_throughput: f64,
+    /// mean end-to-end request latency incl. the handoff and the wait
+    /// for a decode slot — the ranking key
+    pub request_latency: f64,
 }
 
 /// Carve the budget cluster into `r` equal replica pods.  Splits along
@@ -183,6 +215,169 @@ impl<C: CommCost> FleetPlanner<C> {
         self.plan(rate).into_iter().next()
     }
 
+    /// All feasible phase-disaggregated plans for `rate`: split the
+    /// budget along node boundaries into a prefill and a decode
+    /// sub-budget, carve each into equal pods (powers of two, via
+    /// [`carve_replicas`]), pick each pool's per-phase optimum
+    /// (prefill by TTFT, decode by ITL), price the inter-pool KV
+    /// handoff on the prefill pod's NIC, and rank by mean end-to-end
+    /// request latency (tie-broken by fleet throughput).  Empty when
+    /// the budget has fewer than two nodes — each pool needs its own.
+    pub fn plan_disagg(&self, rate: f64) -> Vec<DisaggPlan> {
+        let load = ExpertLoadProfile::zipf(
+            self.model.n_experts,
+            self.model.top_k,
+            self.skew,
+            LOAD_PROFILE_SEED,
+        );
+        let base = Workload::sharegpt(rate);
+        let mut out = Vec::new();
+        for prefill_nodes in 1..self.budget.n_nodes {
+            let p_budget = phase_sub_budget(&self.budget, prefill_nodes, "P");
+            let d_budget =
+                phase_sub_budget(&self.budget, self.budget.n_nodes - prefill_nodes, "D");
+            let prefills = self.pool_candidates(&p_budget, rate, Phase::Prefill, &load, &base);
+            let decodes = self.pool_candidates(&d_budget, rate, Phase::Decode, &load, &base);
+            for (r_p, p_pod, p_best) in &prefills {
+                for (r_d, d_pod, d_best) in &decodes {
+                    let handoff_secs = kv_handoff_secs(
+                        &self.cost.rebind(p_pod),
+                        &self.model,
+                        base.len_in,
+                    );
+                    let ttft = p_best.indicators.ttft;
+                    let itl = d_best.indicators.itl;
+                    let tokens_per_req = (base.len_in + base.len_out) as f64;
+                    let capacity = (p_best.indicators.throughput * *r_p as f64)
+                        .min(d_best.indicators.throughput * *r_d as f64);
+                    let total_throughput = capacity.min(rate * tokens_per_req);
+                    let request_latency = ttft
+                        + handoff_secs
+                        + d_best.indicators.queue_wait
+                        + base.len_out as f64 * itl;
+                    out.push(DisaggPlan {
+                        prefill_replicas: *r_p,
+                        prefill_cluster: p_pod.clone(),
+                        prefill_strategy: p_best.strategy,
+                        prefill_indicators: p_best.indicators,
+                        decode_replicas: *r_d,
+                        decode_cluster: d_pod.clone(),
+                        decode_strategy: d_best.strategy,
+                        decode_indicators: d_best.indicators,
+                        handoff_secs,
+                        ttft,
+                        itl,
+                        total_throughput,
+                        request_latency,
+                    });
+                }
+            }
+        }
+        out.sort_by(|a, b| {
+            a.request_latency
+                .partial_cmp(&b.request_latency)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| {
+                    b.total_throughput
+                        .partial_cmp(&a.total_throughput)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+        });
+        out
+    }
+
+    /// The winning disaggregated plan, if the budget can host two pools.
+    pub fn best_disagg(&self, rate: f64) -> Option<DisaggPlan> {
+        self.plan_disagg(rate).into_iter().next()
+    }
+
+    /// Per-phase pool candidates within one sub-budget: every replica
+    /// count the carve admits, paired with that pod shape's per-phase
+    /// optimum at its rate share.
+    fn pool_candidates(
+        &self,
+        budget: &ClusterConfig,
+        rate: f64,
+        phase: Phase,
+        load: &ExpertLoadProfile,
+        base: &Workload,
+    ) -> Vec<(usize, ClusterConfig, StrategyReport)> {
+        let mut out = Vec::new();
+        let mut r = 1usize;
+        while r <= budget.total_devices() {
+            if let Some(pod) = carve_replicas(budget, r) {
+                let analyzer = Analyzer::new(&self.model, &pod, &self.serving)
+                    .with_cost(self.cost.rebind(&pod))
+                    .with_mode(self.mode)
+                    .with_load(load.clone())
+                    .with_pipeline(self.pipeline);
+                let wl = Workload { rate: rate / r as f64, ..*base };
+                if let Some(best) = analyzer.best_phase(&wl, phase) {
+                    out.push((r, pod, best));
+                }
+            }
+            r *= 2;
+        }
+        out
+    }
+
+    /// Render the ranked disaggregated plans, with the best colocated
+    /// plan appended for comparison on the same ranking key (the CLI's
+    /// `plan --disagg` output).
+    pub fn render_disagg(&self, rate: f64) -> String {
+        let plans = self.plan_disagg(rate);
+        let wl = Workload::sharegpt(rate);
+        let mut out = format!(
+            "disagg fleet plan — {} under a {}-device budget ({}) @ {rate} req/s\n\
+             {:<26} {:<26} {:>10} {:>9} {:>11} {:>12} {:>10}\n",
+            self.model.name,
+            self.budget.total_devices(),
+            self.budget.name,
+            "prefill pool",
+            "decode pool",
+            "TTFT(ms)",
+            "ITL(ms)",
+            "handoff(ms)",
+            "fleet tok/s",
+            "req lat(s)"
+        );
+        for p in plans.iter().take(8) {
+            let pool = |r: usize, c: &ClusterConfig, s: &ParallelStrategy| {
+                format!("{r}x{}x{} {s}", c.n_nodes, c.gpus_per_node)
+            };
+            out.push_str(&format!(
+                "{:<26} {:<26} {:>10.1} {:>9.2} {:>11.2} {:>12.1} {:>10.2}\n",
+                pool(p.prefill_replicas, &p.prefill_cluster, &p.prefill_strategy),
+                pool(p.decode_replicas, &p.decode_cluster, &p.decode_strategy),
+                p.ttft * 1e3,
+                p.itl * 1e3,
+                p.handoff_secs * 1e3,
+                p.total_throughput,
+                p.request_latency
+            ));
+        }
+        if plans.is_empty() {
+            out.push_str(
+                "(no feasible disaggregated split: each pool needs its own node(s) \
+                 and a pod shape the model fits)\n",
+            );
+        }
+        if let Some(colo) = self.best(rate) {
+            let colo_latency = colo.indicators.ttft + wl.len_out as f64 * colo.indicators.itl;
+            out.push_str(&format!(
+                "colocated best: {} x ({}) — TTFT {:.1}ms, ITL {:.2}ms, {:.1} tok/s, \
+                 req lat {:.2}s\n",
+                colo.replicas,
+                colo.strategy,
+                colo.indicators.ttft * 1e3,
+                colo.indicators.itl * 1e3,
+                colo.total_throughput,
+                colo_latency
+            ));
+        }
+        out
+    }
+
     /// Render the ranked plan as a table (CLI + fleet sweep output).
     pub fn render(&self, rate: f64) -> String {
         let plans = self.plan(rate);
@@ -215,6 +410,16 @@ impl<C: CommCost> FleetPlanner<C> {
             out.push_str("(no feasible pod shape under this budget)\n");
         }
         out
+    }
+}
+
+/// A sub-budget covering `nodes` whole nodes of `budget` (the node-
+/// boundary split between the prefill and decode pools).
+fn phase_sub_budget(budget: &ClusterConfig, nodes: usize, tag: &str) -> ClusterConfig {
+    ClusterConfig {
+        name: format!("{}/{tag}{nodes}", budget.name),
+        n_nodes: nodes,
+        ..budget.clone()
     }
 }
 
@@ -316,6 +521,78 @@ mod tests {
             best_p >= best_a * (1.0 - 1e-12),
             "overlap-aware optimum {best_p} below additive {best_a}"
         );
+    }
+
+    #[test]
+    fn disagg_plans_exist_and_conserve_the_budget() {
+        // qwen3 fits one-node (h20) / two-node (910b) pools; deepseek
+        // needs the whole 4x8 budget and is covered by the empty case
+        for (model, budget) in [
+            (MoEModelConfig::qwen3_235b(), ClusterConfig::h20()),
+            (MoEModelConfig::qwen3_235b(), ClusterConfig::ascend910b()),
+        ] {
+            let p = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(8.0));
+            let plans = p.plan_disagg(8.0);
+            assert!(!plans.is_empty(), "{} on {}: no disagg split", model.name, budget.name);
+            for pl in &plans {
+                assert_eq!(
+                    pl.prefill_replicas * pl.prefill_cluster.total_devices()
+                        + pl.decode_replicas * pl.decode_cluster.total_devices(),
+                    budget.total_devices(),
+                    "device budget must be conserved"
+                );
+                assert!(pl.handoff_secs > 0.0, "KV handoff priced on every plan");
+                assert!(pl.total_throughput > 0.0);
+                assert!(
+                    pl.request_latency >= pl.ttft + pl.handoff_secs,
+                    "end-to-end latency includes the handoff"
+                );
+            }
+            for w in plans.windows(2) {
+                assert!(w[0].request_latency <= w[1].request_latency, "ranked ascending");
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_budget_has_no_disagg_split() {
+        let mut budget = ClusterConfig::h20();
+        budget.n_nodes = 1;
+        let p = FleetPlanner::new(
+            &MoEModelConfig::qwen3_235b(),
+            &budget,
+            &ServingConfig::paper_eval(4.0),
+        );
+        assert!(p.plan_disagg(4.0).is_empty());
+        assert!(p.best_disagg(4.0).is_none());
+        assert!(p.render_disagg(4.0).contains("no feasible disaggregated split"));
+    }
+
+    #[test]
+    fn model_too_big_for_any_sub_budget_yields_no_disagg_plans() {
+        // deepseek needs the whole 4x8 ascend budget: every sub-budget
+        // pool is memory-infeasible, so the disagg search comes up empty
+        // rather than fabricating an impossible pool
+        let p = FleetPlanner::new(
+            &MoEModelConfig::deepseek_r1(),
+            &ClusterConfig::ascend910b(),
+            &ServingConfig::paper_eval(8.0),
+        );
+        assert!(p.plan_disagg(8.0).is_empty());
+        assert!(p.render_disagg(8.0).contains("no feasible disaggregated split"));
+    }
+
+    #[test]
+    fn render_disagg_lists_pools_and_colocated_reference() {
+        let p = FleetPlanner::new(
+            &MoEModelConfig::qwen3_235b(),
+            &ClusterConfig::h20(),
+            &ServingConfig::paper_eval(8.0),
+        );
+        let s = p.render_disagg(8.0);
+        assert!(s.contains("disagg fleet plan"));
+        assert!(s.contains("handoff(ms)"));
+        assert!(s.contains("colocated best"));
     }
 
     #[test]

@@ -28,6 +28,32 @@ use crate::workload::Request;
 /// Degree of gate skew used in the evaluation (mild, ShareGPT-like).
 pub const GATE_SKEW: f64 = 0.4;
 
+/// Which serving phase(s) this replica owns — the P/D disaggregation
+/// axis.  `Colocated` (the default) is the historical behavior,
+/// bit-for-bit: both phases on one engine.  A `Prefill` replica
+/// finishes a request once its prompt is prefilled (first token
+/// emitted, KV blocks released) and hands it to the fleet loop for the
+/// timed KV transfer; a `Decode` replica accepts handed-off requests
+/// via [`ReplicaSim::submit_prefilled`], re-acquires KV for the full
+/// context, and runs generation to completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Role {
+    #[default]
+    Colocated,
+    Prefill,
+    Decode,
+}
+
+impl Role {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Role::Colocated => "colocated",
+            Role::Prefill => "prefill",
+            Role::Decode => "decode",
+        }
+    }
+}
+
 /// An engine iteration currently executing on the replica.
 #[derive(Debug, Clone)]
 struct InFlight {
@@ -60,6 +86,12 @@ pub struct ReplicaSim<C: CommCost = CollectiveCost> {
     clock: f64,
     pub iterations: usize,
     imb_sum: f64,
+    /// serving phase(s) this replica owns (Colocated by default)
+    role: Role,
+    /// requests whose prefill finished on this (Prefill-role) replica,
+    /// awaiting the fleet loop's KV handoff — drained by
+    /// [`ReplicaSim::take_handoffs`]
+    handoffs: Vec<Request>,
 }
 
 impl ReplicaSim<CollectiveCost> {
@@ -160,7 +192,36 @@ impl<C: CommCost> ReplicaSim<C> {
             clock: 0.0,
             iterations: 0,
             imb_sum: 0.0,
+            role: Role::Colocated,
+            handoffs: Vec::new(),
         }
+    }
+
+    /// Assign this replica a P/D disaggregation role (builder style;
+    /// `Role::Colocated` keeps the historical behavior exactly).
+    pub fn with_role(mut self, role: Role) -> Self {
+        self.role = role;
+        self
+    }
+
+    pub fn role(&self) -> Role {
+        self.role
+    }
+
+    /// Hand an already-prefilled request to this (Decode-role) replica:
+    /// it re-acquires KV blocks on admission and resumes generation.
+    /// Never shed: the admission cap applies at the fleet front door,
+    /// before the prefill pool invested work in the request.
+    pub fn submit_prefilled(&mut self, req: Request) {
+        self.batcher.submit_prefilled(req);
+    }
+
+    /// Drain the requests whose prefill completed here since the last
+    /// call (Prefill-role replicas only; always empty otherwise).  The
+    /// fleet loop prices their KV transfer and re-submits them to the
+    /// decode pool.
+    pub fn take_handoffs(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.handoffs)
     }
 
     /// Hand a request to this replica.  Returns false when the batcher's
@@ -281,19 +342,30 @@ impl<C: CommCost> ReplicaSim<C> {
     }
 
     /// Bookkeeping at iteration end: first tokens and decode tokens land
-    /// at `finish`; finished requests retire and release KV blocks.
+    /// at `finish`; finished requests retire and release KV blocks.  On
+    /// a Prefill-role replica a request is finished once its prompt is
+    /// prefilled: its blocks release here and it moves to `handoffs` for
+    /// the fleet loop's timed KV transfer (completion is recorded by the
+    /// decode pool, so fleet-level `completed` counts each request once).
     fn finish_iteration(&mut self, p: &InFlight) {
         for id in &p.prefill {
             let arrival = self.batcher.get(*id).unwrap().req.arrival;
             self.batcher.complete_prefill(*id, p.finish);
             self.metrics.record_first_token(p.finish - arrival);
+            if self.role == Role::Prefill {
+                self.batcher.finish_now(*id);
+            }
         }
         for id in &p.decode {
             self.metrics.record_inter_token(p.iter_time);
             self.batcher.complete_decode_token(*id, p.finish);
         }
         for done in self.batcher.retire(&mut self.kv) {
-            self.metrics.record_completion(done.req.len_in, done.req.len_out);
+            if self.role == Role::Prefill {
+                self.handoffs.push(done.req.clone());
+            } else {
+                self.metrics.record_completion(done.req.len_in, done.req.len_out);
+            }
         }
         self.clock = p.finish;
     }
@@ -421,6 +493,63 @@ mod tests {
             piped <= additive * (1.0 + 1e-12),
             "pipelining slowed the drain: {piped} !<= {additive}"
         );
+    }
+
+    #[test]
+    fn prefill_role_hands_off_instead_of_completing() {
+        let mut r = replica(None).with_role(Role::Prefill);
+        for id in 0..4 {
+            r.submit(Request { id, arrival: 0.0, len_in: 256, len_out: 64 });
+        }
+        let mut now = 0.0;
+        while let Some(t) = r.step(now) {
+            now = t;
+        }
+        let handed = r.take_handoffs();
+        assert_eq!(handed.len(), 4, "every prefilled request handed off");
+        assert_eq!(r.metrics.ttft.len(), 4, "TTFT recorded at prefill finish");
+        assert_eq!(r.metrics.completed, 0, "completion belongs to the decode pool");
+        assert_eq!(r.metrics.itl.len(), 0, "a prefill pool never decodes");
+        assert!(r.is_idle(), "slots and KV recycle after the handoff");
+        assert!(r.take_handoffs().is_empty(), "drain is one-shot");
+    }
+
+    #[test]
+    fn decode_role_finishes_handed_off_requests() {
+        let mut r = replica(None).with_role(Role::Decode);
+        for id in 0..3 {
+            r.submit_prefilled(Request { id, arrival: 0.0, len_in: 256, len_out: 8 });
+        }
+        let mut now = 0.0;
+        while let Some(t) = r.step(now) {
+            now = t;
+        }
+        assert_eq!(r.metrics.completed, 3);
+        assert_eq!(r.metrics.ttft.len(), 0, "first tokens were the prefill pool's");
+        assert!(r.metrics.itl.len() >= 3, "decode steps recorded");
+        assert!(r.take_handoffs().is_empty(), "decode replicas never hand off");
+        assert!(r.is_idle());
+    }
+
+    #[test]
+    fn colocated_role_is_the_default_and_identical() {
+        // the explicit Colocated role must not perturb the historical
+        // single-engine behavior in any way
+        let run = |explicit: bool| {
+            let mut r = replica(None);
+            if explicit {
+                r = r.with_role(Role::Colocated);
+            }
+            for id in 0..6 {
+                r.submit(Request { id, arrival: 0.0, len_in: 128, len_out: 16 });
+            }
+            let mut now = 0.0;
+            while let Some(t) = r.step(now) {
+                now = t;
+            }
+            (now, r.metrics.completed, r.metrics.ttft_summary().mean)
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

@@ -70,6 +70,7 @@ pub fn policy_sweep(
                 policy,
                 mode: CommMode::FusedAsync,
                 slo,
+                disagg: None,
             };
             let rep = simulate_fleet(model, replica_cluster, &cfg, &serving, &trace, seed);
             let t = rep.metrics.ttft_summary();

@@ -7,7 +7,14 @@
 //!   fleet     multi-replica DP serving: per-policy TTFT/ITL/throughput/shed
 //!   plan      joint (replica count x strategy) search under a device budget
 //!   fleetsweep  routing policy x traffic pattern comparison table
+//!   disagg    colocated vs P/D-disaggregated fleet over arrival rate
 //!   fig3|fig4|fig10|fig11|fig12|table1   regenerate a paper artifact
+//!
+//! Disaggregation flags (simulate / fleet / plan):
+//!   --disagg      phase-disaggregate: a prefill pool and a decode pool
+//!                 with per-phase strategies (Eqs. 12-13 scored
+//!                 independently) and the KV handoff priced through the
+//!                 CommCost backend as first-class NIC traffic
 //!
 //! Overlap flags (analyze / simulate / plan):
 //!   --overlap     price chunked micro-batch pipelining of the MoE block,
@@ -19,13 +26,16 @@
 
 use anyhow::{bail, Result};
 use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::latency::Phase;
 use mixserve::analyzer::search::{Analyzer, Objective};
 use mixserve::baselines::all_systems;
 use mixserve::cluster::sweep::{policy_sweep, render as render_sweep};
-use mixserve::cluster::{simulate_fleet, FleetConfig, FleetPlanner, RoutingPolicy, SloPolicy};
-use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use mixserve::cluster::{
+    simulate_fleet, DisaggConfig, FleetConfig, FleetPlanner, RoutingPolicy, SloPolicy,
+};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use mixserve::grammar::parse_strategy;
-use mixserve::paperbench::{fig10, fig11, fig12, fig3, fig4, table1};
+use mixserve::paperbench::{disagg, fig10, fig11, fig12, fig3, fig4, table1};
 use mixserve::pipeline::PipelineCfg;
 use mixserve::runtime::Engine;
 use mixserve::serving::engine::RealEngine;
@@ -151,6 +161,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let duration = args.f64_or("duration", 60.0);
     let skew = args.f64_or("skew", 0.0);
     let pipeline = pipeline_from_args(args)?;
+    if args.has_flag("disagg") {
+        // the fleet replicas behind the sweep price uniform λ and the
+        // additive MoE block: refuse to silently drop the other knobs
+        if skew > 0.0 || !pipeline.is_off() {
+            bail!(
+                "--disagg does not compose with --skew/--overlap/--chunks yet \
+                 (the disagg fleet prices uniform λ, additive MoE; see ROADMAP)"
+            );
+        }
+        // colocated vs phase-disaggregated on 2 pods, same trace
+        let rows = disagg::sweep(&model, &cluster, &[rate], duration, 7);
+        print!("{}", disagg::render(&model, &cluster, &rows));
+        return Ok(());
+    }
     println!(
         "simulating {} on {} at {rate} req/s for {duration}s{}{}",
         model.name,
@@ -264,12 +288,90 @@ fn fleet_strategy(
         })
 }
 
+/// `fleet --disagg`: role-split pools (prefill/decode replica counts and
+/// per-phase strategies from the analyzer unless overridden) vs the
+/// colocated JSQ fleet of the same size, on the same trace.
+fn cmd_fleet_disagg(
+    args: &Args,
+    fa: &FleetArgs,
+    trace: &[mixserve::workload::Request],
+) -> Result<()> {
+    let prefill_replicas = args.usize_or("prefill-replicas", (fa.replicas / 2).max(1));
+    let decode_replicas =
+        args.usize_or("decode-replicas", fa.replicas.saturating_sub(prefill_replicas));
+    if prefill_replicas == 0 || decode_replicas == 0 {
+        bail!(
+            "--disagg needs at least one replica in each pool \
+             (got {prefill_replicas} prefill + {decode_replicas} decode; raise --replicas \
+             or set --prefill-replicas/--decode-replicas explicitly)"
+        );
+    }
+    // the colocated reference runs on the same total pod count, so the
+    // side-by-side report compares equal hardware
+    let total_replicas = prefill_replicas + decode_replicas;
+    let analyzer = Analyzer::new(&fa.model, &fa.pod, &fa.serving);
+    let base = Workload::sharegpt(fa.rate);
+    let phase_strategy = |key: &str, phase: Phase, pool: usize| -> Result<ParallelStrategy> {
+        if let Some(s) = args.get(key) {
+            return parse_strategy(s).map_err(|e| anyhow::anyhow!(e));
+        }
+        let wl = Workload { rate: fa.rate / pool as f64, ..base };
+        analyzer
+            .best_phase(&wl, phase)
+            .map(|r| r.strategy)
+            .ok_or_else(|| anyhow::anyhow!("no feasible {phase:?} strategy on {}", fa.pod.name))
+    };
+    let prefill_strategy = phase_strategy("prefill-strategy", Phase::Prefill, prefill_replicas)?;
+    let decode_strategy = phase_strategy("decode-strategy", Phase::Decode, decode_replicas)?;
+    let mk = |disagg: Option<DisaggConfig>| FleetConfig {
+        replicas: total_replicas,
+        strategy: fa.strategy,
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: mixserve::analyzer::latency::CommMode::FusedAsync,
+        slo: fa.slo,
+        disagg,
+    };
+    println!(
+        "disagg fleet: {prefill_replicas} prefill x ({prefill_strategy}) + \
+         {decode_replicas} decode x ({decode_strategy}) on {} pods",
+        fa.pod.name
+    );
+    let dis = simulate_fleet(
+        &fa.model,
+        &fa.pod,
+        &mk(Some(DisaggConfig {
+            prefill_replicas,
+            decode_replicas,
+            prefill_strategy,
+            decode_strategy,
+        })),
+        &fa.serving,
+        trace,
+        fa.seed,
+    );
+    let colo = simulate_fleet(&fa.model, &fa.pod, &mk(None), &fa.serving, trace, fa.seed);
+    println!("{}", dis.metrics.report("disagg (1 KV hop)   "));
+    let h = dis.kv_handoff.summary();
+    println!(
+        "kv handoff: {} transfers | {:.2}±{:.2}ms (p99 {:.2})",
+        dis.kv_handoff.len(),
+        h.mean * 1e3,
+        h.std * 1e3,
+        h.p99 * 1e3
+    );
+    println!("{}", colo.metrics.report("colocated JSQ       "));
+    Ok(())
+}
+
 fn cmd_fleet(args: &Args) -> Result<()> {
     let fa = fleet_args(args, 32.0)?;
     let pattern = pattern_from_args(args, fa.duration)?;
     let trace = TraceGen::sharegpt(fa.rate, fa.serving.max_seq, fa.seed)
         .with_pattern(pattern)
         .generate(fa.duration);
+    if args.has_flag("disagg") {
+        return cmd_fleet_disagg(args, &fa, &trace);
+    }
 
     println!(
         "fleet: {} x {} pods of {}, {} per replica\n\
@@ -291,6 +393,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             policy,
             mode: mixserve::analyzer::latency::CommMode::FusedAsync,
             slo: fa.slo,
+            disagg: None,
         };
         let rep = simulate_fleet(&fa.model, &fa.pod, &cfg, &fa.serving, &trace, fa.seed);
         let t = rep.metrics.ttft_summary();
@@ -316,6 +419,21 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let planner = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(rate))
         .with_skew(skew)
         .with_pipeline(pipeline_from_args(args)?);
+    if args.has_flag("disagg") {
+        print!("{}", planner.render_disagg(rate));
+        if let Some(best) = planner.best_disagg(rate) {
+            println!(
+                "\noptimal disagg fleet: {} prefill x ({}) + {} decode x ({}), \
+                 KV handoff {:.2}ms/req",
+                best.prefill_replicas,
+                best.prefill_strategy,
+                best.decode_replicas,
+                best.decode_strategy,
+                best.handoff_secs * 1e3
+            );
+        }
+        return Ok(());
+    }
     print!("{}", planner.render(rate));
     if let Some(best) = planner.best(rate) {
         println!(
@@ -354,6 +472,13 @@ fn main() -> Result<()> {
         "fleet" => cmd_fleet(&args)?,
         "plan" => cmd_plan(&args)?,
         "fleetsweep" => cmd_fleetsweep(&args)?,
+        "disagg" => {
+            let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+            let m = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+            let duration = args.f64_or("duration", 30.0);
+            let rows = disagg::sweep(&m, &c, &[2.0, 4.0, 8.0], duration, 7);
+            print!("{}", disagg::render(&m, &c, &rows));
+        }
         "fig3" => {
             let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
             print!("{}", fig3::run(&c));
@@ -393,15 +518,22 @@ fn main() -> Result<()> {
                  \x20 serve     [--artifacts DIR] [--model tiny] [--rate R] [--duration S]\n\
                  \x20           [--queue-cap N]\n\
                  \x20 simulate  [--model M] [--cluster C] [--rate R] [--duration S]\n\
-                 \x20           [--skew Z] [--overlap | --chunks K]\n\
+                 \x20           [--skew Z] [--overlap | --chunks K] [--disagg]\n\
+                 \x20           (--disagg compares colocated vs P/D pools on 2 pods)\n\
                  \x20 fleet     [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
                  \x20           [--duration S] [--pattern poisson|bursty|diurnal]\n\
                  \x20           [--slo-ttft S] [--strategy \"TP=8 + DP=4, TP=8 + EP=4\"]\n\
-                 \x20           (each replica runs on its own POD-shaped device pool)\n\
+                 \x20           [--disagg [--prefill-replicas P] [--decode-replicas D]\n\
+                 \x20            [--prefill-strategy S] [--decode-strategy S]]\n\
+                 \x20           (each replica runs on its own POD-shaped device pool;\n\
+                 \x20            --disagg role-splits the fleet with a timed KV handoff)\n\
                  \x20 plan      [--model M] [--cluster BUDGET] [--rate R] [--skew Z]\n\
-                 \x20           [--overlap | --chunks K]\n\
-                 \x20           (carve one device budget into replicas x strategy)\n\
+                 \x20           [--overlap | --chunks K] [--disagg]\n\
+                 \x20           (carve one device budget into replicas x strategy;\n\
+                 \x20            --disagg searches prefill pool x decode pool instead)\n\
                  \x20 fleetsweep  [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
+                 \x20 disagg    [--model M] [--cluster POD] [--duration S]\n\
+                 \x20           (colocated vs disagg TTFT/ITL/tok-s over arrival rate)\n\
                  \x20 fig3|fig4|fig10|fig11|fig12|table1   regenerate paper artifacts\n\n\
                  models: deepseek-r1 qwen3 tiny | clusters: h20 ascend910b localhost"
             );

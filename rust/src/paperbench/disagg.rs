@@ -1,0 +1,155 @@
+//! Disaggregation sweep (beyond the paper's figures): colocated vs
+//! phase-disaggregated fleets over arrival rate, on one pod shape.
+//!
+//! Both fleets see the identical trace and device count (two pods):
+//! the colocated fleet runs 2 data-parallel replicas of the analyzer's
+//! throughput optimum behind JSQ; the disaggregated fleet runs one
+//! prefill pool + one decode pool with the per-phase strategy pair of
+//! `Analyzer::best_disagg` and the CommCost-priced KV handoff between
+//! them.  The table reports TTFT / ITL / throughput per rate plus the
+//! mean handoff — the disaggregation trade-off made visible: prefill
+//! slots recycle immediately (TTFT), while every request pays one KV
+//! transfer before its second token.
+
+use crate::analyzer::indicators::Workload;
+use crate::analyzer::latency::CommMode;
+use crate::analyzer::search::{Analyzer, Objective};
+use crate::cluster::{simulate_fleet, DisaggConfig, FleetConfig, RoutingPolicy};
+use crate::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use crate::workload::TraceGen;
+
+/// One (rate × architecture) comparison row.
+#[derive(Debug, Clone)]
+pub struct DisaggRow {
+    pub rate: f64,
+    pub colo_ttft_ms: f64,
+    pub colo_ttft_p99_ms: f64,
+    pub colo_itl_ms: f64,
+    pub colo_tok_s: f64,
+    pub dis_ttft_ms: f64,
+    pub dis_ttft_p99_ms: f64,
+    pub dis_itl_ms: f64,
+    pub dis_tok_s: f64,
+    /// mean prefill→decode KV transfer, ms
+    pub handoff_ms: f64,
+}
+
+/// Run the colocated-vs-disagg comparison at each rate.  Rates where
+/// the pod has no feasible strategy are skipped (never fabricated).
+pub fn sweep(
+    model: &MoEModelConfig,
+    pod: &ClusterConfig,
+    rates: &[f64],
+    duration: f64,
+    seed: u64,
+) -> Vec<DisaggRow> {
+    let mut rows = Vec::new();
+    for &rate in rates {
+        let serving = ServingConfig::paper_eval(rate);
+        let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
+        let analyzer = Analyzer::new(model, pod, &serving);
+        // the colocated fleet splits arrivals over its 2 replicas; in
+        // the 1P+1D fleet every request passes through BOTH pools, so
+        // each per-phase pick is scored at the full arrival rate
+        let colo_wl = Workload { rate: rate / 2.0, ..Workload::sharegpt(rate) };
+        let dis_wl = Workload::sharegpt(rate);
+        let (Some(colo_best), Some(pair)) =
+            (analyzer.best(&colo_wl, Objective::MaxThroughput), analyzer.best_disagg(&dis_wl))
+        else {
+            continue;
+        };
+        let colo_cfg = FleetConfig {
+            replicas: 2,
+            strategy: colo_best.strategy,
+            policy: RoutingPolicy::JoinShortestQueue,
+            mode: CommMode::FusedAsync,
+            slo: None,
+            disagg: None,
+        };
+        let dis_cfg = FleetConfig {
+            disagg: Some(DisaggConfig {
+                prefill_replicas: 1,
+                decode_replicas: 1,
+                prefill_strategy: pair.prefill.strategy,
+                decode_strategy: pair.decode.strategy,
+            }),
+            ..colo_cfg.clone()
+        };
+        let colo = simulate_fleet(model, pod, &colo_cfg, &serving, &trace, seed);
+        let dis = simulate_fleet(model, pod, &dis_cfg, &serving, &trace, seed);
+        let (ct, ci) = (colo.metrics.ttft_summary(), colo.metrics.itl_summary());
+        let (dt, di) = (dis.metrics.ttft_summary(), dis.metrics.itl_summary());
+        rows.push(DisaggRow {
+            rate,
+            colo_ttft_ms: ct.mean * 1e3,
+            colo_ttft_p99_ms: ct.p99 * 1e3,
+            colo_itl_ms: ci.mean * 1e3,
+            colo_tok_s: colo.metrics.throughput(),
+            dis_ttft_ms: dt.mean * 1e3,
+            dis_ttft_p99_ms: dt.p99 * 1e3,
+            dis_itl_ms: di.mean * 1e3,
+            dis_tok_s: dis.metrics.throughput(),
+            handoff_ms: dis.kv_handoff.summary().mean * 1e3,
+        });
+    }
+    rows
+}
+
+/// Render the sweep as the paperbench-style comparison table.
+pub fn render(model: &MoEModelConfig, pod: &ClusterConfig, rows: &[DisaggRow]) -> String {
+    let mut out = format!(
+        "Disagg sweep — {} on 2 x {} pods (colocated JSQ vs 1P+1D with timed KV handoff)\n\
+         {:>5} | {:>10} {:>10} {:>9} {:>9} | {:>10} {:>10} {:>9} {:>9} {:>11}\n",
+        model.name,
+        pod.name,
+        "req/s",
+        "co TTFT",
+        "co p99",
+        "co ITL",
+        "co tok/s",
+        "dis TTFT",
+        "dis p99",
+        "dis ITL",
+        "dis tok/s",
+        "handoff(ms)"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:>5} | {:>10.1} {:>10.1} {:>9.2} {:>9.1} | {:>10.1} {:>10.1} {:>9.2} {:>9.1} {:>11.2}\n",
+            r.rate,
+            r.colo_ttft_ms,
+            r.colo_ttft_p99_ms,
+            r.colo_itl_ms,
+            r.colo_tok_s,
+            r.dis_ttft_ms,
+            r.dis_ttft_p99_ms,
+            r.dis_itl_ms,
+            r.dis_tok_s,
+            r.handoff_ms
+        ));
+    }
+    if rows.is_empty() {
+        out.push_str("(no feasible strategy on this pod shape)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_runs_on_the_localhost_grid() {
+        // the CI smoke shape: tiny model on the 2-node localhost grid
+        let model = MoEModelConfig::tiny();
+        let pod = ClusterConfig::localhost(2, 4);
+        let rows = sweep(&model, &pod, &[4.0], 5.0, 7);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.colo_tok_s > 0.0 && r.dis_tok_s > 0.0);
+        assert!(r.handoff_ms > 0.0, "handoff must be visibly accounted");
+        let rendered = render(&model, &pod, &rows);
+        assert!(rendered.contains("handoff(ms)"));
+        assert!(rendered.contains("Disagg sweep"));
+    }
+}

@@ -34,6 +34,9 @@ pub enum ReqPhase {
 pub struct TrackedRequest {
     pub req: Request,
     pub phase: ReqPhase,
+    /// prompt already prefilled elsewhere (P/D disaggregation handoff):
+    /// admission skips the prefill group and resumes decode directly
+    pub prefilled: bool,
     /// engine-time when admitted to its first prefill
     pub admitted_at: Option<f64>,
     pub first_token_at: Option<f64>,
@@ -69,14 +72,30 @@ impl Batcher {
                 return false;
             }
         }
+        self.enqueue(req, false);
+        true
+    }
+
+    /// Enqueue a request whose prompt was prefilled on another replica
+    /// (the P/D disaggregation handoff): on admission it acquires KV
+    /// blocks for its full context and joins the decode group directly,
+    /// its first token already emitted on the prefill side.  The
+    /// `max_waiting` cap does NOT apply — it gates *new* arrivals at the
+    /// front door, and a handed-off request was already admitted there;
+    /// dropping its delivered KV mid-flight would lose the request.
+    pub fn submit_prefilled(&mut self, req: Request) {
+        self.enqueue(req, true);
+    }
+
+    fn enqueue(&mut self, req: Request, prefilled: bool) {
         self.waiting.push_back(TrackedRequest {
             req,
             phase: ReqPhase::Waiting,
+            prefilled,
             admitted_at: None,
             first_token_at: None,
             last_token_at: None,
         });
-        true
     }
 
     pub fn waiting_len(&self) -> usize {
@@ -115,7 +134,9 @@ impl Batcher {
     pub fn outstanding_tokens(&self) -> usize {
         let mut total = 0usize;
         for t in &self.waiting {
-            total += t.req.len_in + t.req.len_out;
+            // a handed-off request's prompt is already prefilled: it
+            // only owes its generation budget
+            total += if t.prefilled { t.req.len_out } else { t.req.len_in + t.req.len_out };
         }
         for t in &self.running {
             total += match &t.phase {
@@ -149,9 +170,16 @@ impl Batcher {
             }
             let mut t = self.waiting.pop_front().unwrap();
             kv.grow_to(t.req.id, worst).expect("checked can_grow_to");
-            t.phase = ReqPhase::Prefilling;
             t.admitted_at = Some(now);
-            plan.prefill.push(t.req.id);
+            if t.prefilled {
+                // handoff admission: KV blocks acquired here, decode
+                // resumes at once (first token emitted on the prefill
+                // side — it joins this iteration's decode group below)
+                t.phase = ReqPhase::Decoding { generated: 1 };
+            } else {
+                t.phase = ReqPhase::Prefilling;
+                plan.prefill.push(t.req.id);
+            }
             self.running.push(t);
         }
         // 2) decode group: everyone already past prefill
@@ -161,6 +189,16 @@ impl Batcher {
             }
         }
         plan
+    }
+
+    /// Force a running request straight to Done (a prefill-pool replica
+    /// is finished with a request once its prompt is prefilled — the KV
+    /// handoff to a decode replica is the fleet loop's job).  The next
+    /// `retire` releases its blocks.
+    pub fn finish_now(&mut self, id: usize) {
+        if let Some(t) = self.get_mut(id) {
+            t.phase = ReqPhase::Done;
+        }
     }
 
     /// Mark prefill completion (first token emitted) at `now`.
@@ -315,6 +353,63 @@ mod tests {
         assert_eq!(b.outstanding_tokens(), 3);
         b.complete_decode_token(0, 2.0);
         assert_eq!(b.outstanding_tokens(), 2);
+    }
+
+    #[test]
+    fn prefilled_submission_skips_prefill_group() {
+        let (mut b, mut kv) = setup(64);
+        b.submit_prefilled(req(7, 16, 4));
+        let plan = b.plan(0.0, &mut kv);
+        assert!(plan.prefill.is_empty(), "handoffs never re-prefill");
+        assert_eq!(plan.decode, vec![7], "decode resumes in the same pass");
+        assert_eq!(kv.holds(7), 2, "KV for the full context acquired on admission");
+        // first token came from the prefill side: only len_out - 1 owed
+        assert_eq!(b.outstanding_tokens(), 3);
+        for _ in 0..3 {
+            b.complete_decode_token(7, 1.0);
+        }
+        let done = b.retire(&mut kv);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].prefilled);
+        assert_eq!(kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn prefilled_waiting_owes_only_generation() {
+        let (mut b, _) = setup(64);
+        b.submit(req(0, 100, 10));
+        b.submit_prefilled(req(1, 100, 10));
+        assert_eq!(b.outstanding_tokens(), 110 + 10);
+    }
+
+    #[test]
+    fn queue_cap_never_sheds_a_delivered_handoff() {
+        // the admission cap gates the front door; a handed-off request
+        // was admitted there already and must never vanish mid-flight
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 2,
+            max_seq: 64,
+            max_waiting: Some(1),
+        });
+        assert!(b.submit(req(0, 8, 4)));
+        assert!(!b.submit(req(1, 8, 4)), "cap sheds fresh arrivals");
+        b.submit_prefilled(req(2, 8, 4));
+        assert_eq!(b.waiting_len(), 2, "the handoff bypasses the cap");
+    }
+
+    #[test]
+    fn finish_now_retires_after_prefill() {
+        let (mut b, mut kv) = setup(64);
+        b.submit(req(0, 16, 32));
+        let plan = b.plan(0.0, &mut kv);
+        assert_eq!(plan.prefill, vec![0]);
+        b.complete_prefill(0, 1.0);
+        b.finish_now(0);
+        let done = b.retire(&mut kv);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].first_token_at, Some(1.0));
+        assert_eq!(kv.used_blocks(), 0, "handoff releases the prefill-side blocks");
+        assert!(b.is_idle());
     }
 
     #[test]

@@ -64,7 +64,7 @@ impl<'a> RealEngine<'a> {
         let headroom = self.runner.max_seq.saturating_sub(max_prompt).max(1);
 
         let mut arrivals = trace.to_vec();
-        arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        crate::workload::sort_by_arrival(&mut arrivals);
 
         loop {
             let now = t0.elapsed().as_secs_f64();

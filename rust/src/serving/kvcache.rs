@@ -142,5 +142,37 @@ mod tests {
         let mut m = KvCacheManager::new(4, 4);
         assert_eq!(m.release(99), 0);
         m.check_invariants().unwrap();
+        // releasing an unknown id next to live allocations must not
+        // disturb them (the disagg handoff can race a shed request)
+        m.grow_to(1, 8).unwrap();
+        assert_eq!(m.release(77), 0);
+        assert_eq!(m.holds(1), 2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn grow_to_zero_tokens_allocates_nothing() {
+        let mut m = KvCacheManager::new(4, 4);
+        assert!(m.can_grow_to(5, 0));
+        assert_eq!(m.grow_to(5, 0), Some(0));
+        assert_eq!(m.holds(5), 0, "zero tokens need zero blocks");
+        assert_eq!(m.free_blocks(), 4);
+        // a later real grow for the same id starts from scratch
+        assert_eq!(m.grow_to(5, 4), Some(1));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn can_grow_to_at_exact_capacity() {
+        let mut m = KvCacheManager::new(8, 4); // 32 tokens total
+        assert!(m.can_grow_to(1, 32), "exactly-full must be admissible");
+        assert!(!m.can_grow_to(1, 33), "one token over must not");
+        assert_eq!(m.grow_to(1, 32), Some(8));
+        assert_eq!(m.free_blocks(), 0);
+        // at zero free blocks, growth within the held blocks still works
+        assert!(m.can_grow_to(1, 32));
+        assert_eq!(m.grow_to(1, 32), Some(0));
+        assert!(!m.can_grow_to(2, 1), "pool exhausted for everyone else");
+        m.check_invariants().unwrap();
     }
 }

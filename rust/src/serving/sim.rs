@@ -41,7 +41,7 @@ pub struct SimReport {
 /// returns the final clock.
 fn drive<C: CommCost>(replica: &mut ReplicaSim<C>, trace: &[Request]) -> f64 {
     let mut arrivals = trace.to_vec();
-    arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    crate::workload::sort_by_arrival(&mut arrivals);
 
     let mut next = 0usize;
     let mut now = 0.0f64;

@@ -64,6 +64,23 @@ pub fn remote_group_copies(groups: usize, k: usize) -> f64 {
     expected_distinct_groups(groups, k) * (groups as f64 - 1.0) / groups as f64
 }
 
+/// Seconds to hand one request's KV cache (`tokens` of context) from a
+/// prefill pool to a decode pool under `cost`.  The sending pod's nodes
+/// stream their layer-sharded KV pages concurrently, so each NIC
+/// carries its node's share of the total; the per-node share is already
+/// aggregated onto the NIC (sharers = 1 — a contention-aware backend
+/// charging per-rank traffic on top would double-count, the same rule
+/// as the pure-EP lane model in `analyzer::latency`).
+pub fn kv_handoff_secs<C: CommCost>(
+    cost: &C,
+    model: &crate::config::MoEModelConfig,
+    tokens: usize,
+) -> f64 {
+    let bytes = (tokens as u64).saturating_mul(model.kv_bytes_per_token()) as f64;
+    let nodes = cost.cluster().n_nodes.max(1) as f64;
+    cost.kv_transfer(bytes / nodes, 1)
+}
+
 /// A communication cost model bound to one cluster.
 ///
 /// Everything is derived from one primitive, `round_shared`; no module
@@ -180,6 +197,20 @@ pub trait CommCost: std::fmt::Debug + Clone {
         self.round(bytes, CommDomain::InterNode)
     }
 
+    /// KV-cache handoff between a prefill and a decode pool (P/D
+    /// disaggregation): `bytes` of paged KV stream over the inter-node
+    /// NIC.  `sharers` co-located ranks funnel their shards through one
+    /// NIC — the analytic backend keeps its optimistic per-link view,
+    /// the contention-aware one charges the shared lane, exactly as for
+    /// dispatch/combine traffic (the transfer is first-class traffic on
+    /// the same contended resource, not a free side channel).
+    fn kv_transfer(&self, bytes: f64, sharers: usize) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        self.round_shared(bytes, sharers, CommDomain::InterNode)
+    }
+
     /// Convenience: AR over a node-major communicator (domain inferred).
     fn ar_auto(&self, bytes: f64, degree: usize) -> f64 {
         self.all_reduce(bytes, degree, self.domain_of(degree))
@@ -218,5 +249,30 @@ mod tests {
             assert!(r > prev, "g={g}: {r} !> {prev}");
             prev = r;
         }
+    }
+
+    #[test]
+    fn kv_transfer_rides_the_inter_node_nic() {
+        use crate::comm::cost::CollectiveCost;
+        let cluster = ClusterConfig::ascend910b();
+        let c = CollectiveCost::new(&cluster);
+        let t = c.kv_transfer(1e8, 1);
+        assert!((t - c.round(1e8, CommDomain::InterNode)).abs() < 1e-15);
+        assert_eq!(c.kv_transfer(0.0, 8), 0.0, "empty handoff is free");
+        assert!(c.kv_transfer(2e8, 1) > t, "monotone in bytes");
+    }
+
+    #[test]
+    fn kv_handoff_scales_with_context_and_contends_under_netsim() {
+        use crate::comm::cost::CollectiveCost;
+        let cluster = ClusterConfig::ascend910b();
+        let model = crate::config::MoEModelConfig::deepseek_r1();
+        let a = CollectiveCost::new(&cluster);
+        let short = kv_handoff_secs(&a, &model, 128);
+        let long = kv_handoff_secs(&a, &model, 4096);
+        assert!(short > 0.0 && long > 8.0 * short, "{short} vs {long}");
+        // the contention-aware backend never undercuts the analytic one
+        let n = NetSimCost::new(&cluster);
+        assert!(kv_handoff_secs(&n, &model, 4096) >= long * (1.0 - 1e-12));
     }
 }

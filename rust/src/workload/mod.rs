@@ -188,6 +188,16 @@ impl TraceGen {
     }
 }
 
+/// Sort requests by arrival time, NaN-safely.  Every arrival-ordered
+/// driver (`serving/sim.rs`, `serving/engine.rs`, `cluster/fleet.rs`)
+/// funnels through this one helper: `f64::total_cmp` gives a total
+/// order, so a trace carrying NaN timestamps (a corrupted or
+/// hand-edited trace file) sorts deterministically — NaNs land at the
+/// back — instead of panicking mid-`sort_by` on `partial_cmp().unwrap()`.
+pub fn sort_by_arrival(reqs: &mut [Request]) {
+    reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+}
+
 /// Deterministic batch-count sampler for benches that only need counts
 /// per scheduling tick.
 pub fn poisson_counts(rate_per_tick: f64, ticks: usize, seed: u64) -> Vec<usize> {
@@ -228,6 +238,32 @@ mod tests {
         let a = TraceGen::sharegpt(2.0, 2048, 9).generate(100.0);
         let b = TraceGen::sharegpt(2.0, 2048, 9).generate(100.0);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sort_by_arrival_orders_and_survives_nan() {
+        // regression: the old per-call-site `partial_cmp().unwrap()`
+        // panicked on NaN timestamps; the shared helper must not
+        let mut reqs = vec![
+            Request { id: 0, arrival: 3.0, len_in: 1, len_out: 1 },
+            Request { id: 1, arrival: f64::NAN, len_in: 1, len_out: 1 },
+            Request { id: 2, arrival: 1.0, len_in: 1, len_out: 1 },
+            Request { id: 3, arrival: 2.0, len_in: 1, len_out: 1 },
+        ];
+        sort_by_arrival(&mut reqs);
+        let ids: Vec<usize> = reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3, 0, 1], "NaN sorts last, rest ascending");
+        assert!(reqs[3].arrival.is_nan());
+    }
+
+    #[test]
+    fn sort_by_arrival_is_stable_on_ties() {
+        let mut reqs: Vec<Request> = (0..6)
+            .map(|id| Request { id, arrival: (id % 2) as f64, len_in: 1, len_out: 1 })
+            .collect();
+        sort_by_arrival(&mut reqs);
+        let ids: Vec<usize> = reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2, 4, 1, 3, 5], "equal arrivals keep submit order");
     }
 
     #[test]

@@ -20,6 +20,7 @@ fn fleet_cfg(replicas: usize, policy: RoutingPolicy, slo: Option<SloPolicy>) -> 
         policy,
         mode: CommMode::FusedAsync,
         slo,
+        disagg: None,
     }
 }
 

@@ -162,6 +162,74 @@ fn prop_kvcache_invariants_under_random_ops() {
 }
 
 #[test]
+fn prop_pd_handoff_conserves_blocks_across_pools() {
+    // the disaggregation invariant the fleet loop leans on: a
+    // prefill→decode handoff releases every block on the prefill side
+    // and re-acquires on the decode side — no leak, no double-own, and
+    // the two pools' books always balance
+    forall(
+        "P/D handoff conserves KV blocks",
+        40,
+        23,
+        |r: &mut Rng| {
+            let cap = 32 + r.below(96);
+            let reqs: Vec<(usize, usize)> =
+                (0..24).map(|id| (id, 1 + r.below(300))).collect();
+            (cap, reqs)
+        },
+        |(cap, reqs)| {
+            let mut prefill = KvCacheManager::new(*cap, 8);
+            let mut decode = KvCacheManager::new(*cap, 8);
+            let mut in_decode: Vec<(usize, usize)> = Vec::new();
+            for (id, toks) in reqs {
+                // prefill side admits if it can, else skips (queue)
+                if prefill.grow_to(*id, *toks).is_none() {
+                    continue;
+                }
+                prefill.check_invariants()?;
+                // handoff: release on the prefill side...
+                let released = prefill.release(*id);
+                if released != prefill.blocks_for_tokens(*toks) {
+                    return Err(format!(
+                        "req {id}: released {released} != needed {}",
+                        prefill.blocks_for_tokens(*toks)
+                    ));
+                }
+                // ...and acquire on the decode side (or stay in transit)
+                if decode.grow_to(*id, *toks).is_some() {
+                    in_decode.push((*id, *toks));
+                }
+                prefill.check_invariants()?;
+                decode.check_invariants()?;
+                if prefill.used_blocks() != 0 {
+                    return Err(format!(
+                        "prefill pool leaked {} blocks",
+                        prefill.used_blocks()
+                    ));
+                }
+                let owed: usize =
+                    in_decode.iter().map(|(_, t)| decode.blocks_for_tokens(*t)).sum();
+                if decode.used_blocks() != owed {
+                    return Err(format!(
+                        "decode pool books off: used {} != owed {owed}",
+                        decode.used_blocks()
+                    ));
+                }
+            }
+            // retire everything: both pools must drain to empty
+            for (id, _) in &in_decode {
+                decode.release(*id);
+            }
+            decode.check_invariants()?;
+            if decode.used_blocks() != 0 {
+                return Err("decode pool did not drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_batcher_conserves_and_never_exceeds_batch() {
     forall(
         "batcher: all requests finish exactly once, batch bounded",
