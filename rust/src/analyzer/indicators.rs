@@ -4,9 +4,10 @@
 //! prompts at μ = b/Δt_prf; a decode pool's drains generations at
 //! μ = b/(L_out·Δt_dec)).
 
-use super::latency::{CommMode, LatencyModel, Phase};
+use super::latency::{CommMode, LatencyModel, MixedIter, Phase};
 use super::queueing::{wait_with_overload, EVAL_HORIZON_S};
 use crate::config::{ParallelStrategy, ServingConfig};
+use crate::serving::scheduler::SchedPolicy;
 use crate::timing::CommCost;
 
 /// A request-population description (ShareGPT-like averages).
@@ -90,6 +91,123 @@ pub fn evaluate<C: CommCost>(
     let theta = theta_demand.min(theta_capacity);
 
     Indicators { ttft, itl, throughput: theta, queue_wait: wq, rho }
+}
+
+/// Mean end-to-end request latency implied by a set of indicators —
+/// the common ranking key of the three-architecture search (colocated
+/// FCFS / chunked prefill / disagg all reduce to "how long until the
+/// last token", whatever their internal structure).
+pub fn request_latency(wl: &Workload, ind: &Indicators) -> f64 {
+    ind.ttft + wl.len_out as f64 * ind.itl
+}
+
+/// Evaluate a strategy under an explicit iteration scheduler — the
+/// *serving-composition-aware* indicators.
+///
+/// The legacy [`evaluate`] prices the phases in isolation: its ITL is the
+/// pure decode pass, even though a colocated FCFS engine's decode tokens
+/// share iterations with arriving prompts' prefill passes (the serving
+/// sim charges exactly that — `ReplicaSim` records the whole mixed
+/// iteration as each token's ITL).  This evaluation makes the scheduler
+/// visible:
+///
+/// * `SchedPolicy::Fcfs` — prefill interference priced into ITL: per
+///   wall-clock second the engine spends `λ·Δt_prf/b` seconds prefilling
+///   arrivals, so decode iterations stretch by the leftover share
+///   (clamped so an overloaded engine prices a finite stall).
+/// * `SchedPolicy::Chunked` — the engine runs mixed iterations (Eq. 13
+///   on the combined batch): the steady-state prompt-token load per
+///   iteration is the demand-limited fixed point capped by the quantum,
+///   ITL is the mixed iteration time, and a prompt's prefill spreads
+///   over ⌈L_in/quantum⌉ such iterations.
+pub fn evaluate_sched<C: CommCost>(
+    lm: &LatencyModel<C>,
+    strategy: &ParallelStrategy,
+    serving: &ServingConfig,
+    wl: &Workload,
+    mode: CommMode,
+    sched: SchedPolicy,
+) -> Indicators {
+    let batch = serving.max_batch;
+    let ctx = wl.len_in + wl.len_out / 2;
+    let prf = lm
+        .service_latency(strategy, batch, wl.len_in, Phase::Prefill, mode)
+        .total();
+    let dec = lm
+        .service_latency(strategy, batch, ctx, Phase::Decode, mode)
+        .total();
+    match sched {
+        SchedPolicy::Fcfs => {
+            // engine share spent prefilling arrivals (per request the
+            // full-batch pass amortizes to prf/b); the clamp keeps an
+            // overloaded engine's stall finite, like EVAL_HORIZON_S does
+            // for the queue
+            let rho_p = (wl.rate * prf / batch as f64).min(0.95);
+            let itl = dec / (1.0 - rho_p);
+            let req_service = prf + wl.len_out as f64 * itl;
+            let mu = batch as f64 / req_service.max(1e-9);
+            let wq = wait_with_overload(wl.rate, mu, EVAL_HORIZON_S);
+            let rho = wl.rate / mu;
+            let ttft = wq + prf;
+            let theta_demand = (wl.len_in + wl.len_out) as f64 / (wq + req_service).max(1e-9)
+                * batch as f64;
+            let theta = theta_demand.min(mu * (wl.len_in + wl.len_out) as f64);
+            Indicators { ttft, itl, throughput: theta, queue_wait: wq, rho }
+        }
+        SchedPolicy::Chunked { quantum } => {
+            let q = quantum.max(1);
+            let iter = |p_tokens: f64| -> f64 {
+                let p_tok = p_tokens.round() as usize;
+                if p_tok == 0 {
+                    return dec;
+                }
+                let p_reqs = p_tok.div_ceil(wl.len_in.max(1)).max(1);
+                lm.mixed_iteration(
+                    strategy,
+                    &MixedIter {
+                        prefill_reqs: p_reqs,
+                        prefill_tokens: p_tok,
+                        // slices attend over the whole prompt prefix on
+                        // average — no discount for being mid-prompt
+                        prefill_seq: wl.len_in,
+                        decode_reqs: batch,
+                        decode_ctx: ctx,
+                    },
+                    mode,
+                )
+                .total()
+            };
+            // steady-state prompt tokens per iteration: the demand-
+            // limited fixed point p = min(q, λ·L_in·t(p)), iterated from
+            // the quantum (t monotone in p → monotone convergence)
+            let mut p = q as f64;
+            let mut t_iter = iter(p);
+            for _ in 0..6 {
+                p = (wl.rate * wl.len_in as f64 * t_iter).min(q as f64);
+                t_iter = iter(p);
+            }
+            // a backlogged engine fills the whole quantum: the prefill
+            // stage's capacity and a prompt's own chunk cadence both see
+            // saturated iterations
+            let t_sat = iter(q as f64);
+            let full_chunks = wl.len_in / q;
+            let tail = wl.len_in % q;
+            let prefill_time =
+                full_chunks as f64 * t_sat + if tail > 0 { iter(tail as f64) } else { 0.0 };
+            let mu_pre = q as f64 / (wl.len_in as f64 * t_sat).max(1e-9);
+            let mu_dec = batch as f64 / (wl.len_out as f64 * t_iter).max(1e-9);
+            let mu = mu_pre.min(mu_dec);
+            let wq = wait_with_overload(wl.rate, mu, EVAL_HORIZON_S);
+            let rho = wl.rate / mu;
+            let ttft = wq + prefill_time;
+            let itl = t_iter;
+            let theta_demand = (wl.len_in + wl.len_out) as f64
+                / (wq + prefill_time + wl.len_out as f64 * itl).max(1e-9)
+                * batch as f64;
+            let theta = theta_demand.min(mu * (wl.len_in + wl.len_out) as f64);
+            Indicators { ttft, itl, throughput: theta, queue_wait: wq, rho }
+        }
+    }
 }
 
 /// Evaluate one *phase pool* of a P/D-disaggregated deployment.
@@ -218,6 +336,76 @@ mod tests {
             "prefill capacity {} must exceed decode capacity {}",
             pre.throughput,
             dec.throughput
+        );
+    }
+
+    #[test]
+    fn fcfs_sched_prices_prefill_interference_into_itl() {
+        let (lm, sc) = setup();
+        let s = ParallelStrategy::mixserve(4, 8);
+        let wl = Workload::sharegpt(4.0);
+        let isolated = evaluate(&lm, &s, &sc, &wl, CommMode::FusedAsync);
+        let aware = evaluate_sched(&lm, &s, &sc, &wl, CommMode::FusedAsync, SchedPolicy::Fcfs);
+        assert!(
+            aware.itl >= isolated.itl,
+            "interference can only stretch ITL: {} !>= {}",
+            aware.itl,
+            isolated.itl
+        );
+        let (a_prf, i_prf) =
+            (aware.ttft - aware.queue_wait, isolated.ttft - isolated.queue_wait);
+        assert!(
+            (a_prf - i_prf).abs() <= i_prf.abs() * 1e-9,
+            "the prefill pass itself is unchanged: {a_prf} vs {i_prf}"
+        );
+        // interference grows with the arrival rate
+        let hot = evaluate_sched(
+            &lm, &s, &sc, &Workload::sharegpt(16.0), CommMode::FusedAsync, SchedPolicy::Fcfs,
+        );
+        assert!(hot.itl >= aware.itl);
+    }
+
+    #[test]
+    fn chunked_quantum_trades_itl_against_ttft() {
+        let (lm, sc) = setup();
+        let s = ParallelStrategy::mixserve(4, 8);
+        // saturating prompt load: the engine fills whatever quantum it has
+        let wl = Workload { len_in: 2048, len_out: 256, rate: 8.0 };
+        let small = evaluate_sched(
+            &lm, &s, &sc, &wl, CommMode::FusedAsync, SchedPolicy::Chunked { quantum: 128 },
+        );
+        let large = evaluate_sched(
+            &lm, &s, &sc, &wl, CommMode::FusedAsync, SchedPolicy::Chunked { quantum: 2048 },
+        );
+        assert!(
+            small.itl <= large.itl,
+            "a smaller quantum must bound the mixed iteration: {} !<= {}",
+            small.itl,
+            large.itl
+        );
+        assert!(
+            small.ttft - small.queue_wait >= large.ttft - large.queue_wait,
+            "slicing a prompt over more iterations stretches its prefill: {} !>= {}",
+            small.ttft - small.queue_wait,
+            large.ttft - large.queue_wait
+        );
+    }
+
+    #[test]
+    fn chunked_itl_approaches_the_decode_pass_at_light_load() {
+        let (lm, sc) = setup();
+        let s = ParallelStrategy::mixserve(4, 8);
+        let wl = Workload { rate: 0.05, ..Workload::sharegpt(0.05) };
+        let ind = evaluate_sched(
+            &lm, &s, &sc, &wl, CommMode::FusedAsync, SchedPolicy::Chunked { quantum: 256 },
+        );
+        let dec = evaluate(&lm, &s, &sc, &wl, CommMode::FusedAsync).itl;
+        assert!(ind.itl >= dec, "mixed iterations never beat a pure decode pass");
+        assert!(
+            ind.itl <= dec * 3.0,
+            "at 0.05 req/s the prompt load per iteration is tiny: {} vs {}",
+            ind.itl,
+            dec
         );
     }
 

@@ -33,6 +33,25 @@ pub enum CommMode {
     FusedAsync,
 }
 
+/// Composition of one mixed serving iteration (a chunked-prefill
+/// engine's unit of work): prompt-slice tokens riding the same forward
+/// pass as the running decodes.  Priced by
+/// [`LatencyModel::mixed_iteration`].
+#[derive(Debug, Clone, Copy)]
+pub struct MixedIter {
+    /// prompt slices in the iteration
+    pub prefill_reqs: usize,
+    /// total prompt tokens across the slices
+    pub prefill_tokens: usize,
+    /// attention prefix of the deepest slice (its tokens attend over
+    /// this much context)
+    pub prefill_seq: usize,
+    /// running decode requests (one token each)
+    pub decode_reqs: usize,
+    /// mean cached context of the decoding requests
+    pub decode_ctx: usize,
+}
+
 /// Per-token latency breakdown of one decoder layer set.
 #[derive(Debug, Clone, Copy)]
 pub struct LatencyBreakdown {
@@ -174,10 +193,26 @@ impl<C: CommCost> LatencyModel<C> {
         phase: Phase,
         chunks: usize,
     ) -> f64 {
+        let (_, moe_f) = self.model.flops_per_token_layer(seq);
+        let toks = self.tokens_per_dp(s, batch, seq, phase);
+        self.moe_compute_tokens(s, toks, moe_f, chunks)
+    }
+
+    /// The MoE-compute core of [`LatencyModel::moe_compute_chunk`],
+    /// parameterized by the raw per-DP-replica token count — shared with
+    /// the mixed-iteration pricing, where the token set is a composition
+    /// of prefill-chunk and decode tokens rather than one (batch, seq,
+    /// phase) group.  `chunks == 1` with `toks = tokens_per_dp(...)`
+    /// reproduces the historical arithmetic exactly.
+    pub fn moe_compute_tokens(
+        &self,
+        s: &ParallelStrategy,
+        toks: f64,
+        moe_f: f64,
+        chunks: usize,
+    ) -> f64 {
         let m = &self.model;
         let eff_flops = self.cluster.flops * self.cluster.mfu;
-        let (_, moe_f) = m.flops_per_token_layer(seq);
-        let toks = self.tokens_per_dp(s, batch, seq, phase);
         let k = chunks.max(1) as f64;
         // expert work: the communicator processes d_DP replicas' tokens,
         // spread over the moe.tp × moe.ep grid (Eq. 4's Ψ/(d_TP·d_EP)),
@@ -261,8 +296,15 @@ impl<C: CommCost> LatencyModel<C> {
         phase: Phase,
         mode: CommMode,
     ) -> f64 {
+        self.moe_comm_bytes(s, self.act_bytes(s, batch, seq, phase), mode)
+    }
+
+    /// The MoE-communication core of [`LatencyModel::moe_comm_layer`],
+    /// parameterized by the raw per-replica activation bytes — shared
+    /// with the mixed-iteration pricing, which routes the *combined*
+    /// prefill-chunk + decode volume through one Eq. (12)/(13) pass.
+    pub fn moe_comm_bytes(&self, s: &ParallelStrategy, bytes: f64, mode: CommMode) -> f64 {
         let c = &self.cost;
-        let bytes = self.act_bytes(s, batch, seq, phase);
 
         // ---- MoE block.  The MoE communicator carries the *global* token
         // set of all DP replicas (b·s·h), spread over the moe.tp × moe.ep
@@ -429,6 +471,65 @@ impl<C: CommCost> LatencyModel<C> {
             PipelineCfg::Auto => saving.max(0.0),
             _ => saving,
         }
+    }
+
+    /// Price one *mixed* serving iteration — Eqs. (12)–(13) evaluated on
+    /// the combined batch of a chunked-prefill engine: `prefill_tokens`
+    /// prompt-slice tokens and `decode_reqs` decode tokens share one
+    /// forward pass per layer, so the iteration pays ONE attention
+    /// all-reduce, ONE dispatch/combine at the combined activation
+    /// volume, ONE GroupGEMM over the combined token set (the chunk
+    /// tokens top up the decode batch's starved experts — the EPS-MoE
+    /// argument), and ONE expert-weight stream from HBM — where the
+    /// historical engine runs the prefill and decode groups as two
+    /// passes and pays each fixed cost twice.  With no prefill component
+    /// this reproduces the decode-phase [`LatencyModel::service_latency`]
+    /// (pipelining off); the micro-chunk overlap saving is not priced on
+    /// mixed iterations (the composition already interleaves at the
+    /// scheduler level).
+    pub fn mixed_iteration(
+        &self,
+        s: &ParallelStrategy,
+        mix: &MixedIter,
+        mode: CommMode,
+    ) -> LatencyBreakdown {
+        let m = &self.model;
+        let eff_flops = self.cluster.flops * self.cluster.mfu;
+        let dp = s.attn.dp as f64;
+        // per-DP-replica token load of each component, with the same
+        // floor-at-one-row guard as `tokens_per_dp`
+        let p_toks = if mix.prefill_reqs == 0 {
+            0.0
+        } else {
+            (mix.prefill_reqs as f64 / dp).max(1.0) * mix.prefill_tokens as f64
+                / mix.prefill_reqs as f64
+        };
+        let d_toks = if mix.decode_reqs == 0 {
+            0.0
+        } else {
+            (mix.decode_reqs as f64 / dp).max(1.0)
+        };
+        let toks = p_toks + d_toks;
+        if toks <= 0.0 {
+            return LatencyBreakdown { compute: 0.0, comm: 0.0, p2p: 0.0, overlap: 0.0 };
+        }
+        // attention compute stays per-component: slice tokens attend over
+        // their prompt prefix, decode rows over the cached context
+        let (attn_p, moe_f) = m.flops_per_token_layer(mix.prefill_seq.max(1));
+        let (attn_d, _) = m.flops_per_token_layer(mix.decode_ctx.max(1));
+        let attn = (p_toks * attn_p + d_toks * attn_d) / s.attn.tp as f64;
+        let moe_t = self.moe_compute_tokens(s, toks, moe_f, 1);
+        let compute = (attn / eff_flops + moe_t) * m.n_layers as f64;
+        // one collective pass per layer over the combined volume
+        let bytes = toks * (m.hidden * m.dtype_bytes) as f64;
+        let attn_ar = self.cost.all_reduce(bytes, s.attn.tp, self.cost.domain_of(s.attn.tp));
+        let comm = (attn_ar + self.moe_comm_bytes(s, bytes, mode)) * m.n_layers as f64;
+        let p2p = if s.pp > 1 {
+            (s.pp as f64 - 1.0) * self.cost.p2p(bytes)
+        } else {
+            0.0
+        };
+        LatencyBreakdown { compute, comm, p2p, overlap: 0.0 }
     }
 
     /// Service latency per token — Eq. (6):
@@ -682,6 +783,83 @@ mod tests {
         let ep = ParallelStrategy::pure_ep(4, 8);
         let d = forced.service_latency(&ep, 1, 64, Phase::Decode, CommMode::FusedAsync);
         assert!(d.overlap < 0.0, "8-way chunking a 1-token decode must cost: {}", d.overlap);
+    }
+
+    #[test]
+    fn mixed_iteration_with_no_prefill_is_the_decode_pass() {
+        // the mixed pricing must degenerate to the decode-phase service
+        // latency when no prompt slice rides the iteration
+        let m = lm();
+        for s in [
+            ParallelStrategy::mixserve(4, 8),
+            ParallelStrategy::pure_ep(4, 8),
+            ParallelStrategy::tp_pp(8, 4),
+        ] {
+            for mode in [CommMode::Sync, CommMode::FusedAsync] {
+                let mix = MixedIter {
+                    prefill_reqs: 0,
+                    prefill_tokens: 0,
+                    prefill_seq: 0,
+                    decode_reqs: 16,
+                    decode_ctx: 512,
+                };
+                let a = m.mixed_iteration(&s, &mix, mode).total();
+                let b = m.service_latency(&s, 16, 512, Phase::Decode, mode).total();
+                assert!(
+                    (a - b).abs() <= b * 1e-12,
+                    "{s} {mode:?}: mixed-no-prefill {a} != decode pass {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_iteration_subadditive_vs_two_passes() {
+        // the fused mixed pass can never cost more than running the
+        // prefill group and the decode group as two passes — every cost
+        // component (affine comm, saturating-efficiency GEMM, capped HBM
+        // stream) is subadditive in the token volume.  This is the
+        // mechanism that makes chunked-prefill competitive.
+        let m = lm();
+        for s in [ParallelStrategy::mixserve(4, 8), ParallelStrategy::pure_ep(4, 8)] {
+            for (p_reqs, p_tok, d_reqs) in [(1usize, 256usize, 16usize), (4, 512, 8), (2, 64, 16)]
+            {
+                let seq = p_tok / p_reqs;
+                let mix = MixedIter {
+                    prefill_reqs: p_reqs,
+                    prefill_tokens: p_tok,
+                    prefill_seq: seq,
+                    decode_reqs: d_reqs,
+                    decode_ctx: 512,
+                };
+                let fused = m.mixed_iteration(&s, &mix, CommMode::FusedAsync).total();
+                let two_pass = m
+                    .service_latency(&s, p_reqs, seq, Phase::Prefill, CommMode::FusedAsync)
+                    .total()
+                    + m.service_latency(&s, d_reqs, 512, Phase::Decode, CommMode::FusedAsync)
+                        .total();
+                assert!(
+                    fused <= two_pass * (1.0 + 1e-9),
+                    "{s} p={p_tok} d={d_reqs}: fused {fused} > two passes {two_pass}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_iteration_monotone_in_prefill_tokens() {
+        let m = lm();
+        let s = ParallelStrategy::mixserve(4, 8);
+        let mk = |p_tok: usize| MixedIter {
+            prefill_reqs: 1,
+            prefill_tokens: p_tok,
+            prefill_seq: p_tok,
+            decode_reqs: 16,
+            decode_ctx: 512,
+        };
+        let t64 = m.mixed_iteration(&s, &mk(64), CommMode::FusedAsync).total();
+        let t1024 = m.mixed_iteration(&s, &mk(1024), CommMode::FusedAsync).total();
+        assert!(t1024 > t64, "more chunk tokens must cost more: {t1024} !> {t64}");
     }
 
     #[test]

@@ -111,7 +111,7 @@ pub fn calibrate(model: &MoEModelConfig, obs: &[Observation]) -> Calibration {
             flops / o.latency
         })
         .collect();
-    rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::util::stats::sort_f64(&mut rates);
     let eff = if rates.is_empty() { 0.0 } else { rates[rates.len() / 2] };
     Calibration { eff_flops: eff, n_obs: rates.len() }
 }

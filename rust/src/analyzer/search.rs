@@ -8,13 +8,16 @@
 //! an [`ExpertLoadProfile`], so the search prices the hot rank's A2A
 //! volume under measured gate skew instead of the uniform mean.
 
-use super::indicators::{evaluate, evaluate_phase, Indicators, Workload};
+use super::indicators::{
+    evaluate, evaluate_phase, evaluate_sched, request_latency, Indicators, Workload,
+};
 use super::latency::{CommMode, LatencyModel, Phase};
 use super::memory::{check_memory, MemoryCheck};
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::grammar::enumerate_strategies;
 use crate::pipeline::PipelineCfg;
+use crate::serving::scheduler::SchedPolicy;
 use crate::timing::{kv_handoff_secs, CommCost, ExpertLoadProfile};
 
 /// Seed for measured load profiles built via [`Analyzer::with_load_skew`]
@@ -152,36 +155,19 @@ impl<C: CommCost> Analyzer<C> {
         StrategyReport { strategy: *s, indicators, memory }
     }
 
-    /// All feasible strategies, ranked best-first by `objective`.
-    pub fn rank(&self, wl: &Workload, objective: Objective) -> Vec<StrategyReport> {
-        let mut reports: Vec<StrategyReport> = enumerate_strategies(&self.cluster)
-            .iter()
-            .filter(|s| s.total_devices() == self.cluster.total_devices())
-            .map(|s| self.report(s, wl))
-            .filter(|r| r.memory.feasible() && r.indicators.ttft.is_finite())
-            .collect();
-        let key = |r: &StrategyReport| objective_key(objective, &r.indicators);
-        reports.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap());
-        reports
-    }
-
-    /// The optimum (§III-A: "derive the optimal parallelism strategy").
-    pub fn best(&self, wl: &Workload, objective: Objective) -> Option<StrategyReport> {
-        self.rank(wl, objective).into_iter().next()
-    }
-
-    /// All feasible strategies for one phase pool of a disaggregated
-    /// deployment, ranked best-first: prefill pools by TTFT, decode
-    /// pools by ITL (the per-phase objective is implied by the phase —
-    /// exactly the asymmetry of Eqs. (12)–(13)).
-    pub fn rank_phase(&self, wl: &Workload, phase: Phase) -> Vec<StrategyReport> {
+    /// The candidate pipeline every search entry point shares: enumerate
+    /// the grammar, keep full-budget shapes, attach the memory check,
+    /// price with `indicators`, drop infeasible/degenerate candidates,
+    /// and sort ascending by `key` (`f64::total_cmp` — a NaN indicator
+    /// ranks last instead of panicking the whole search).
+    fn rank_by(
+        &self,
+        indicators: impl Fn(&LatencyModel<C>, &ParallelStrategy) -> Indicators,
+        key: impl Fn(&StrategyReport) -> f64,
+    ) -> Vec<StrategyReport> {
         let lm = LatencyModel::with_cost(&self.model, &self.cluster, self.cost.clone())
             .with_load(self.load.clone())
             .with_pipeline(self.pipeline);
-        let objective = match phase {
-            Phase::Prefill => Objective::MinTtft,
-            Phase::Decode => Objective::MinItl,
-        };
         let mut reports: Vec<StrategyReport> = enumerate_strategies(&self.cluster)
             .iter()
             .filter(|s| s.total_devices() == self.cluster.total_devices())
@@ -193,14 +179,58 @@ impl<C: CommCost> Analyzer<C> {
                     self.serving.max_batch,
                     self.serving.max_seq,
                 );
-                let indicators = evaluate_phase(&lm, s, &self.serving, wl, self.mode, phase);
-                StrategyReport { strategy: *s, indicators, memory }
+                StrategyReport { strategy: *s, indicators: indicators(&lm, s), memory }
             })
             .filter(|r| r.memory.feasible() && r.indicators.ttft.is_finite())
             .collect();
-        let key = |r: &StrategyReport| objective_key(objective, &r.indicators);
-        reports.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap());
+        reports.sort_by(|a, b| key(a).total_cmp(&key(b)));
         reports
+    }
+
+    /// All feasible strategies, ranked best-first by `objective`.
+    pub fn rank(&self, wl: &Workload, objective: Objective) -> Vec<StrategyReport> {
+        self.rank_by(
+            |lm, s| evaluate(lm, s, &self.serving, wl, self.mode),
+            |r| objective_key(objective, &r.indicators),
+        )
+    }
+
+    /// The optimum (§III-A: "derive the optimal parallelism strategy").
+    pub fn best(&self, wl: &Workload, objective: Objective) -> Option<StrategyReport> {
+        self.rank(wl, objective).into_iter().next()
+    }
+
+    /// All feasible strategies under an explicit iteration scheduler,
+    /// ranked best-first by mean end-to-end request latency — the
+    /// three-architecture search's per-pod leg.  The indicators are the
+    /// serving-composition-aware ones ([`evaluate_sched`]): FCFS pays its
+    /// prefill–decode interference, chunked prefill its quantum-bounded
+    /// mixed iterations.
+    pub fn rank_sched(&self, wl: &Workload, sched: SchedPolicy) -> Vec<StrategyReport> {
+        self.rank_by(
+            |lm, s| evaluate_sched(lm, s, &self.serving, wl, self.mode, sched),
+            |r| request_latency(wl, &r.indicators),
+        )
+    }
+
+    /// The scheduler-aware optimum for one pod shape.
+    pub fn best_sched(&self, wl: &Workload, sched: SchedPolicy) -> Option<StrategyReport> {
+        self.rank_sched(wl, sched).into_iter().next()
+    }
+
+    /// All feasible strategies for one phase pool of a disaggregated
+    /// deployment, ranked best-first: prefill pools by TTFT, decode
+    /// pools by ITL (the per-phase objective is implied by the phase —
+    /// exactly the asymmetry of Eqs. (12)–(13)).
+    pub fn rank_phase(&self, wl: &Workload, phase: Phase) -> Vec<StrategyReport> {
+        let objective = match phase {
+            Phase::Prefill => Objective::MinTtft,
+            Phase::Decode => Objective::MinItl,
+        };
+        self.rank_by(
+            |lm, s| evaluate_phase(lm, s, &self.serving, wl, self.mode, phase),
+            |r| objective_key(objective, &r.indicators),
+        )
     }
 
     /// The per-phase optimum for one pool.
@@ -369,6 +399,38 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sched_rankings_are_sorted_by_request_latency() {
+        let a = setup(ClusterConfig::ascend910b());
+        let wl = Workload::sharegpt(4.0);
+        for sched in [SchedPolicy::Fcfs, SchedPolicy::Chunked { quantum: 256 }] {
+            let ranked = a.rank_sched(&wl, sched);
+            assert!(!ranked.is_empty(), "{sched:?}");
+            for r in &ranked {
+                assert!(r.memory.feasible());
+            }
+            for w in ranked.windows(2) {
+                assert!(
+                    request_latency(&wl, &w[0].indicators)
+                        <= request_latency(&wl, &w[1].indicators),
+                    "{sched:?}: ranking must ascend"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fcfs_sched_optimum_never_beats_the_isolated_itl() {
+        // the composition-aware FCFS pricing only ADDS interference, so
+        // its best request latency cannot undercut the phase-isolated
+        // evaluation of the same strategy
+        let a = setup(ClusterConfig::ascend910b());
+        let wl = Workload::sharegpt(4.0);
+        let best = a.best_sched(&wl, SchedPolicy::Fcfs).expect("feasible");
+        let isolated = a.report(&best.strategy, &wl);
+        assert!(best.indicators.itl >= isolated.indicators.itl * (1.0 - 1e-12));
     }
 
     #[test]

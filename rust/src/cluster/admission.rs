@@ -9,6 +9,15 @@
 //! requests waits ≈ q/μ before its own prefill.  Shedding early keeps the
 //! served requests' tail latency bounded instead of letting every request
 //! time out under overload.
+//!
+//! For a P/D-disaggregated fleet the gate is **two-stage**
+//! ([`AdmissionController::with_decode_stage`]): stage 1 re-keys the
+//! front-door replica's drain rate to its *prefill-only* service (a
+//! prefill-pool replica retires a request at prefill completion, not
+//! after L_out decode steps), and stage 2 adds the predicted decode-slot
+//! wait from the decode pool's own strategy and backlog — so a
+//! decode-bound overload sheds at the front door instead of piling
+//! handed-off KV behind a saturated decode pool.
 
 use crate::analyzer::indicators::Workload;
 use crate::analyzer::latency::{CommMode, LatencyModel, Phase};
@@ -22,14 +31,24 @@ pub struct SloPolicy {
     pub ttft_deadline: f64,
 }
 
+/// Decode-pool predictor of a two-stage (disaggregated) gate.
+#[derive(Debug, Clone, Copy)]
+struct DecodeStage {
+    /// whole-generation service rate of one decode replica, req/s
+    mu: f64,
+}
+
 /// Backlog-aware TTFT predictor + shedding decision.
 #[derive(Debug, Clone)]
 pub struct AdmissionController {
     pub slo: SloPolicy,
-    /// whole-request service rate of one replica, req/s
+    /// service rate of the front-door replica, req/s: whole-request for
+    /// a colocated fleet, prefill-only once a decode stage is attached
     mu: f64,
     /// prefill latency of a mean-length prompt at full batch, s
     prefill_base: f64,
+    /// decode-pool stage of a disaggregated fleet (None = single-stage)
+    decode: Option<DecodeStage>,
 }
 
 impl AdmissionController {
@@ -52,7 +71,55 @@ impl AdmissionController {
             .total();
         let req_service = prf + wl.len_out as f64 * dec;
         let mu = serving.max_batch as f64 / req_service.max(1e-9);
-        Self { slo, mu, prefill_base: prf }
+        Self { slo, mu, prefill_base: prf, decode: None }
+    }
+
+    /// Attach the decode-pool stage (builder style): stage 1 becomes the
+    /// prefill pool's *prefill-only* drain rate, stage 2 predicts the
+    /// decode-slot wait from `decode_strategy` priced on the same pod
+    /// shape — the two-stage gate of a disaggregated fleet.
+    pub fn with_decode_stage(
+        mut self,
+        model: &MoEModelConfig,
+        replica_cluster: &ClusterConfig,
+        decode_strategy: &ParallelStrategy,
+        serving: &ServingConfig,
+        wl: &Workload,
+        mode: CommMode,
+    ) -> Self {
+        // a prefill-pool replica retires a request at prefill completion
+        self.mu = serving.max_batch as f64 / self.prefill_base.max(1e-9);
+        let lm = LatencyModel::new(model, replica_cluster);
+        let ctx = wl.len_in + wl.len_out / 2;
+        let dec = lm
+            .service_latency(decode_strategy, serving.max_batch, ctx, Phase::Decode, mode)
+            .total();
+        let mu_d = serving.max_batch as f64 / (wl.len_out as f64 * dec).max(1e-9);
+        self.decode = Some(DecodeStage { mu: mu_d });
+        self
+    }
+
+    /// True when the gate predicts through both pools.
+    pub fn is_two_stage(&self) -> bool {
+        self.decode.is_some()
+    }
+
+    /// Predicted wait for a decode slot behind `backlog` requests in the
+    /// decode pool (0 without a decode stage).
+    pub fn predicted_decode_wait(&self, backlog: usize) -> f64 {
+        match &self.decode {
+            Some(d) => backlog as f64 / d.mu.max(1e-12),
+            None => 0.0,
+        }
+    }
+
+    /// Two-stage admission: predicted prefill TTFT on the front-door
+    /// replica plus the predicted decode-slot wait must meet the
+    /// deadline.  With no decode stage this is exactly
+    /// [`AdmissionController::admit`].
+    pub fn admit_two_stage(&self, prefill_backlog: usize, decode_backlog: usize) -> bool {
+        self.predicted_ttft(prefill_backlog) + self.predicted_decode_wait(decode_backlog)
+            <= self.slo.ttft_deadline
     }
 
     /// Estimated whole-request service rate of the replica, req/s.
@@ -139,6 +206,53 @@ mod tests {
         let ac = controller(1e-9);
         assert!(!ac.admit(0));
         assert_eq!(ac.max_admissible_backlog(), 0);
+    }
+
+    #[test]
+    fn decode_stage_rekeys_prefill_drain_and_adds_slot_wait() {
+        let single = controller(30.0);
+        let two = controller(30.0).with_decode_stage(
+            &MoEModelConfig::deepseek_r1(),
+            &ClusterConfig::ascend910b(),
+            &ParallelStrategy::pure_ep(4, 8),
+            &ServingConfig::paper_eval(4.0),
+            &Workload::sharegpt(4.0),
+            CommMode::FusedAsync,
+        );
+        assert!(!single.is_two_stage());
+        assert!(two.is_two_stage());
+        // prefill-only drain is much faster than whole-request drain
+        assert!(two.mu() > single.mu() * 5.0, "{} !>> {}", two.mu(), single.mu());
+        assert_eq!(single.predicted_decode_wait(64), 0.0);
+        assert!(two.predicted_decode_wait(64) > 0.0);
+        // the same prefill backlog now predicts a smaller stage-1 wait
+        assert!(two.predicted_ttft(32) < single.predicted_ttft(32));
+    }
+
+    #[test]
+    fn two_stage_gate_sheds_under_decode_backlog_alone() {
+        // an empty prefill pool must still shed when the decode pool is
+        // drowning — the exact blind spot of the single-stage predictor
+        let two = controller(30.0).with_decode_stage(
+            &MoEModelConfig::deepseek_r1(),
+            &ClusterConfig::ascend910b(),
+            &ParallelStrategy::pure_ep(4, 8),
+            &ServingConfig::paper_eval(4.0),
+            &Workload::sharegpt(4.0),
+            CommMode::FusedAsync,
+        );
+        assert!(two.admit_two_stage(0, 0), "idle fleet admits");
+        // find a decode backlog the deadline cannot absorb
+        let mut backlog = 1usize;
+        while two.admit_two_stage(0, backlog) && backlog < 1 << 24 {
+            backlog *= 2;
+        }
+        assert!(
+            !two.admit_two_stage(0, backlog),
+            "a deep enough decode backlog must shed (reached {backlog})"
+        );
+        // single-stage view of the same fleet state would admit
+        assert!(two.admit(0));
     }
 
     #[test]

@@ -133,6 +133,18 @@ fn pool_argmin(replicas: &[ReplicaSim], role: Role) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
+/// Queue depth of the least-loaded member of the `role` pool — the
+/// backlog a JSQ-routed request would actually join; None when the fleet
+/// has no such pool.  The fleet loop feeds this to the two-stage SLO
+/// gate as the decode-pool backlog.
+pub fn pool_min_depth(replicas: &[ReplicaSim], role: Role) -> Option<usize> {
+    replicas
+        .iter()
+        .filter(|r| r.role() == role)
+        .map(|r| r.queue_depth())
+        .min()
+}
+
 /// Index minimizing `key` over a non-empty range; earliest wins ties.
 fn argmin(range: std::ops::Range<usize>, key: impl Fn(usize) -> usize) -> usize {
     range

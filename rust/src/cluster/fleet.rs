@@ -12,13 +12,14 @@
 //! joins a decode replica's queue when the transfer lands.
 
 use super::admission::{AdmissionController, SloPolicy};
-use super::dispatch::{Dispatcher, RoutingPolicy};
+use super::dispatch::{pool_min_depth, Dispatcher, RoutingPolicy};
 use super::replica::{ReplicaSim, Role};
 use crate::analyzer::indicators::Workload;
 use crate::analyzer::latency::CommMode;
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::serving::metrics::ServingMetrics;
+use crate::serving::scheduler::SchedPolicy;
 use crate::timing::kv_handoff_secs;
 use crate::util::stats::Series;
 use crate::workload::Request;
@@ -49,6 +50,10 @@ pub struct FleetConfig {
     /// P/D disaggregation topology; None keeps the colocated fleet
     /// (the historical behavior, bit-for-bit)
     pub disagg: Option<DisaggConfig>,
+    /// iteration scheduler for colocated replicas (`Fcfs` is the
+    /// historical behavior, bit-for-bit; disaggregated pools run their
+    /// role schedulers and require `Fcfs` here)
+    pub sched: SchedPolicy,
 }
 
 /// Result of one fleet run.
@@ -111,12 +116,22 @@ pub fn simulate_fleet(
         match &cfg.disagg {
             None => {
                 assert!(cfg.replicas > 0, "fleet needs at least one replica");
-                ((0..cfg.replicas).map(|i| mk_replica(i, &cfg.strategy)).collect(), cfg.strategy)
+                (
+                    (0..cfg.replicas)
+                        .map(|i| mk_replica(i, &cfg.strategy).with_sched(cfg.sched))
+                        .collect(),
+                    cfg.strategy,
+                )
             }
             Some(d) => {
                 assert!(
                     d.prefill_replicas > 0 && d.decode_replicas > 0,
                     "a disaggregated fleet needs both pools"
+                );
+                assert!(
+                    cfg.sched == SchedPolicy::Fcfs,
+                    "disaggregated pools run their role schedulers; \
+                     cfg.sched must be Fcfs"
                 );
                 let mut v = Vec::with_capacity(d.prefill_replicas + d.decode_replicas);
                 for i in 0..d.prefill_replicas {
@@ -139,15 +154,29 @@ pub fn simulate_fleet(
     crate::workload::sort_by_arrival(&mut arrivals);
     let span = arrivals.last().map(|r| r.arrival).unwrap_or(0.0).max(1e-9);
     let admission = cfg.slo.map(|slo| {
-        AdmissionController::new(
+        let wl = trace_workload(&arrivals, span);
+        let ac = AdmissionController::new(
             model,
             replica_cluster,
             &admission_strategy,
             serving,
-            &trace_workload(&arrivals, span),
+            &wl,
             cfg.mode,
             slo,
-        )
+        );
+        match &cfg.disagg {
+            // disaggregated fleets gate two-stage: predicted prefill
+            // TTFT plus the decode pool's predicted slot wait
+            Some(d) => ac.with_decode_stage(
+                model,
+                replica_cluster,
+                &d.decode_strategy,
+                serving,
+                &wl,
+                cfg.mode,
+            ),
+            None => ac,
+        }
     });
 
     let mut shed_front_door = 0usize;
@@ -163,6 +192,10 @@ pub fn simulate_fleet(
             next += 1;
             let target = dispatcher.route_arrival(&req, &replicas);
             let admitted = match &admission {
+                Some(ac) if ac.is_two_stage() => {
+                    let decode_backlog = pool_min_depth(&replicas, Role::Decode).unwrap_or(0);
+                    ac.admit_two_stage(replicas[target].queue_depth(), decode_backlog)
+                }
                 Some(ac) => ac.admit(replicas[target].queue_depth()),
                 None => true,
             };
@@ -263,6 +296,7 @@ mod tests {
             mode: CommMode::FusedAsync,
             slo,
             disagg: None,
+            sched: SchedPolicy::Fcfs,
         }
     }
 
@@ -335,6 +369,7 @@ mod tests {
                 prefill_strategy: ParallelStrategy::mixserve(4, 8),
                 decode_strategy: ParallelStrategy::pure_ep(4, 8),
             }),
+            sched: SchedPolicy::Fcfs,
         };
         let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 11);
         assert_eq!(rep.metrics.completed, n, "every request finishes its decode");

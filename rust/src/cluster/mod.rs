@@ -34,5 +34,7 @@ pub mod sweep;
 pub use admission::{AdmissionController, SloPolicy};
 pub use dispatch::{Dispatcher, RoutingPolicy};
 pub use fleet::{run_fleet_rate, simulate_fleet, DisaggConfig, FleetConfig, FleetReport};
-pub use planner::{carve_replicas, DisaggPlan, FleetPlan, FleetPlanner};
+pub use planner::{
+    carve_replicas, ArchPlan, DisaggPlan, FleetPlan, FleetPlanner, SchedPlan, DEFAULT_QUANTA,
+};
 pub use replica::{ReplicaSim, Role};

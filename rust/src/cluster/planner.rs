@@ -17,7 +17,7 @@
 //! carries a gate-skew exponent, so the fleet re-ranks (r × strategy)
 //! points under measured expert-load skew.
 
-use crate::analyzer::indicators::{Indicators, Workload};
+use crate::analyzer::indicators::{request_latency, Indicators, Workload};
 use crate::analyzer::latency::{CommMode, Phase};
 use crate::analyzer::search::{
     objective_key, Analyzer, Objective, StrategyReport, LOAD_PROFILE_SEED,
@@ -25,7 +25,13 @@ use crate::analyzer::search::{
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::pipeline::PipelineCfg;
+use crate::serving::scheduler::SchedPolicy;
 use crate::timing::{kv_handoff_secs, CommCost, ExpertLoadProfile};
+
+/// Default scheduler-quantum candidates of the three-architecture search
+/// (`FleetPlanner::plan_arch`): token budgets from fine-grained
+/// interleaving to whole-ShareGPT-prompt chunks.
+pub const DEFAULT_QUANTA: &[usize] = &[128, 256, 512, 1024];
 
 /// One point of the joint search.
 #[derive(Debug, Clone)]
@@ -68,6 +74,66 @@ pub struct DisaggPlan {
     /// mean end-to-end request latency incl. the handoff and the wait
     /// for a decode slot — the ranking key
     pub request_latency: f64,
+}
+
+/// One scheduler-aware colocated fleet point: `replicas` pods, each
+/// running `strategy` under `sched` (FCFS with its prefill interference
+/// priced, or chunked prefill at a quantum), scored by the
+/// serving-composition-aware indicators.
+#[derive(Debug, Clone)]
+pub struct SchedPlan {
+    pub replicas: usize,
+    pub replica_cluster: ClusterConfig,
+    pub strategy: ParallelStrategy,
+    pub sched: SchedPolicy,
+    /// per-replica composition-aware indicators at rate/replicas
+    pub indicators: Indicators,
+    /// fleet-level tokens/s: replicas × per-replica Θ
+    pub total_throughput: f64,
+    /// mean end-to-end request latency — the architecture ranking key
+    pub request_latency: f64,
+}
+
+/// One point of the three-architecture search: the same device budget
+/// spent as a colocated FCFS fleet, a chunked-prefill fleet, or a
+/// P/D-disaggregated pool pair — ranked on one key (mean end-to-end
+/// request latency, throughput as the tie-break).
+#[derive(Debug, Clone)]
+pub enum ArchPlan {
+    Colocated(SchedPlan),
+    Chunked(SchedPlan),
+    Disagg(DisaggPlan),
+}
+
+impl ArchPlan {
+    pub fn request_latency(&self) -> f64 {
+        match self {
+            ArchPlan::Colocated(p) | ArchPlan::Chunked(p) => p.request_latency,
+            ArchPlan::Disagg(p) => p.request_latency,
+        }
+    }
+
+    pub fn total_throughput(&self) -> f64 {
+        match self {
+            ArchPlan::Colocated(p) | ArchPlan::Chunked(p) => p.total_throughput,
+            ArchPlan::Disagg(p) => p.total_throughput,
+        }
+    }
+
+    /// Architecture tag for tables and tests.
+    pub fn label(&self) -> String {
+        match self {
+            ArchPlan::Colocated(p) => format!("colocated r={}", p.replicas),
+            ArchPlan::Chunked(p) => format!("{} r={}", p.sched.label(), p.replicas),
+            ArchPlan::Disagg(p) => {
+                format!("disagg {}P+{}D", p.prefill_replicas, p.decode_replicas)
+            }
+        }
+    }
+
+    pub fn is_chunked(&self) -> bool {
+        matches!(self, ArchPlan::Chunked(_))
+    }
 }
 
 /// Carve the budget cluster into `r` equal replica pods.  Splits along
@@ -113,6 +179,9 @@ pub struct FleetPlanner<C: CommCost = CollectiveCost> {
     pub skew: f64,
     /// chunked micro-batch pipelining priced into every pod's search
     pub pipeline: PipelineCfg,
+    /// request-shape override `(len_in, len_out)` for every search;
+    /// None = the ShareGPT averages (the historical behavior)
+    pub shape: Option<(usize, usize)>,
 }
 
 impl FleetPlanner<CollectiveCost> {
@@ -125,6 +194,7 @@ impl FleetPlanner<CollectiveCost> {
             cost: CollectiveCost::new(budget),
             skew: 0.0,
             pipeline: PipelineCfg::Off,
+            shape: None,
         }
     }
 }
@@ -147,6 +217,22 @@ impl<C: CommCost> FleetPlanner<C> {
         self
     }
 
+    /// Search for a specific request shape instead of the ShareGPT
+    /// averages (builder style) — how a prompt- or decode-heavy mix is
+    /// fed to the architecture search.
+    pub fn with_shape(mut self, len_in: usize, len_out: usize) -> Self {
+        self.shape = Some((len_in.max(1), len_out.max(1)));
+        self
+    }
+
+    /// The search workload at `rate` under the configured shape.
+    fn workload(&self, rate: f64) -> Workload {
+        match self.shape {
+            Some((len_in, len_out)) => Workload { len_in, len_out, rate },
+            None => Workload::sharegpt(rate),
+        }
+    }
+
     /// Swap in a different cost backend (re-bound per candidate pod).
     pub fn with_cost<D: CommCost>(self, cost: D) -> FleetPlanner<D> {
         FleetPlanner {
@@ -157,6 +243,7 @@ impl<C: CommCost> FleetPlanner<C> {
             cost,
             skew: self.skew,
             pipeline: self.pipeline,
+            shape: self.shape,
         }
     }
 
@@ -182,7 +269,7 @@ impl<C: CommCost> FleetPlanner<C> {
                     .with_mode(self.mode)
                     .with_load(load.clone())
                     .with_pipeline(self.pipeline);
-                let wl = Workload::sharegpt(rate / r as f64);
+                let wl = self.workload(rate / r as f64);
                 if let Some(best) = analyzer.best(&wl, Objective::MaxThroughput) {
                     out.push(FleetPlan {
                         replicas: r,
@@ -230,7 +317,7 @@ impl<C: CommCost> FleetPlanner<C> {
             self.skew,
             LOAD_PROFILE_SEED,
         );
-        let base = Workload::sharegpt(rate);
+        let base = self.workload(rate);
         let mut out = Vec::new();
         for prefill_nodes in 1..self.budget.n_nodes {
             let p_budget = phase_sub_budget(&self.budget, prefill_nodes, "P");
@@ -291,6 +378,117 @@ impl<C: CommCost> FleetPlanner<C> {
         self.plan_disagg(rate).into_iter().next()
     }
 
+    /// All feasible scheduler-aware colocated points for `rate` under
+    /// `sched`: every replica carve, each pod's best strategy by the
+    /// composition-aware request latency, ranked ascending.
+    pub fn plan_sched(&self, rate: f64, sched: SchedPolicy) -> Vec<SchedPlan> {
+        let load = ExpertLoadProfile::zipf(
+            self.model.n_experts,
+            self.model.top_k,
+            self.skew,
+            LOAD_PROFILE_SEED,
+        );
+        let mut out = Vec::new();
+        let mut r = 1usize;
+        while r <= self.budget.total_devices() {
+            if let Some(pod) = carve_replicas(&self.budget, r) {
+                let analyzer = Analyzer::new(&self.model, &pod, &self.serving)
+                    .with_cost(self.cost.rebind(&pod))
+                    .with_mode(self.mode)
+                    .with_load(load.clone())
+                    .with_pipeline(self.pipeline);
+                let wl = self.workload(rate / r as f64);
+                if let Some(best) = analyzer.best_sched(&wl, sched) {
+                    out.push(SchedPlan {
+                        replicas: r,
+                        replica_cluster: pod,
+                        strategy: best.strategy,
+                        sched,
+                        request_latency: request_latency(&wl, &best.indicators),
+                        total_throughput: best.indicators.throughput * r as f64,
+                        indicators: best.indicators,
+                    });
+                }
+            }
+            r *= 2;
+        }
+        out.sort_by(|a, b| a.request_latency.total_cmp(&b.request_latency));
+        out
+    }
+
+    /// Rank ALL THREE serving architectures under one device budget:
+    /// colocated FCFS (with its prefill–decode interference priced),
+    /// chunked-prefill colocation at each quantum in `quanta`, and the
+    /// P/D-disaggregated pool split — one ranking key (mean end-to-end
+    /// request latency, throughput tie-break), so the scheduler is a
+    /// searchable dimension exactly like the parallelism strategy.
+    pub fn plan_arch(&self, rate: f64, quanta: &[usize]) -> Vec<ArchPlan> {
+        let mut out: Vec<ArchPlan> = Vec::new();
+        out.extend(self.plan_sched(rate, SchedPolicy::Fcfs).into_iter().map(ArchPlan::Colocated));
+        for &q in quanta {
+            out.extend(
+                self.plan_sched(rate, SchedPolicy::Chunked { quantum: q })
+                    .into_iter()
+                    .map(ArchPlan::Chunked),
+            );
+        }
+        out.extend(self.plan_disagg(rate).into_iter().map(ArchPlan::Disagg));
+        out.sort_by(|a, b| {
+            a.request_latency()
+                .total_cmp(&b.request_latency())
+                .then_with(|| b.total_throughput().total_cmp(&a.total_throughput()))
+        });
+        out
+    }
+
+    /// The winning architecture point, if any is feasible.
+    pub fn best_arch(&self, rate: f64, quanta: &[usize]) -> Option<ArchPlan> {
+        self.plan_arch(rate, quanta).into_iter().next()
+    }
+
+    /// Render the three-architecture ranking (the CLI's `plan --arch`).
+    pub fn render_arch(&self, rate: f64, quanta: &[usize]) -> String {
+        let plans = self.plan_arch(rate, quanta);
+        let mut out = format!(
+            "architecture plan — {} under a {}-device budget ({}) @ {rate} req/s\n\
+             {:<24} {:<36} {:>10} {:>9} {:>12} {:>10}\n",
+            self.model.name,
+            self.budget.total_devices(),
+            self.budget.name,
+            "architecture",
+            "strategy",
+            "TTFT(ms)",
+            "ITL(ms)",
+            "fleet tok/s",
+            "req lat(s)"
+        );
+        for p in plans.iter().take(12) {
+            let (strategy, ttft, itl) = match p {
+                ArchPlan::Colocated(sp) | ArchPlan::Chunked(sp) => {
+                    (sp.strategy.to_string(), sp.indicators.ttft, sp.indicators.itl)
+                }
+                ArchPlan::Disagg(dp) => (
+                    format!("{} | {}", dp.prefill_strategy, dp.decode_strategy),
+                    dp.ttft,
+                    dp.itl,
+                ),
+            };
+            out.push_str(&format!(
+                "{:<24} {:<36} {:>10.1} {:>9.2} {:>12.1} {:>10.2}\n",
+                p.label(),
+                strategy,
+                ttft * 1e3,
+                itl * 1e3,
+                p.total_throughput(),
+                p.request_latency()
+            ));
+        }
+        if plans.is_empty() {
+            out.push_str("(no feasible architecture under this budget)\n");
+        }
+        out
+    }
+
     /// Per-phase pool candidates within one sub-budget: every replica
     /// count the carve admits, paired with that pod shape's per-phase
     /// optimum at its rate share.
@@ -326,7 +524,7 @@ impl<C: CommCost> FleetPlanner<C> {
     /// `plan --disagg` output).
     pub fn render_disagg(&self, rate: f64) -> String {
         let plans = self.plan_disagg(rate);
-        let wl = Workload::sharegpt(rate);
+        let wl = self.workload(rate);
         let mut out = format!(
             "disagg fleet plan — {} under a {}-device budget ({}) @ {rate} req/s\n\
              {:<26} {:<26} {:>10} {:>9} {:>11} {:>12} {:>10}\n",
@@ -593,6 +791,61 @@ mod tests {
         assert!(s.contains("disagg fleet plan"));
         assert!(s.contains("handoff(ms)"));
         assert!(s.contains("colocated best"));
+    }
+
+    #[test]
+    fn sched_plans_rank_ascending_for_both_policies() {
+        let p = planner(MoEModelConfig::qwen3_235b());
+        for sched in [SchedPolicy::Fcfs, SchedPolicy::Chunked { quantum: 256 }] {
+            let plans = p.plan_sched(8.0, sched);
+            assert!(!plans.is_empty(), "{sched:?}: no feasible point");
+            for w in plans.windows(2) {
+                assert!(w[0].request_latency <= w[1].request_latency);
+            }
+            for pl in &plans {
+                assert_eq!(pl.sched, sched);
+                assert!(pl.total_throughput > 0.0);
+                assert!(pl.request_latency.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn arch_search_spans_all_three_architectures() {
+        // qwen3 on the 4x8 budget: colocated, chunked, and disagg points
+        // must all appear in one ranking, sorted on one key
+        let p = planner(MoEModelConfig::qwen3_235b());
+        let plans = p.plan_arch(8.0, DEFAULT_QUANTA);
+        assert!(plans.iter().any(|a| matches!(a, ArchPlan::Colocated(_))));
+        assert!(plans.iter().any(|a| matches!(a, ArchPlan::Chunked(_))));
+        assert!(plans.iter().any(|a| matches!(a, ArchPlan::Disagg(_))));
+        for w in plans.windows(2) {
+            assert!(w[0].request_latency() <= w[1].request_latency());
+        }
+        let best = p.best_arch(8.0, DEFAULT_QUANTA).expect("feasible");
+        assert!(best.request_latency() <= plans.last().unwrap().request_latency());
+        let rendered = p.render_arch(8.0, DEFAULT_QUANTA);
+        assert!(rendered.contains("architecture plan"));
+        assert!(rendered.contains("req lat(s)"));
+    }
+
+    #[test]
+    fn shape_override_reaches_the_search() {
+        // a decode-heavy shape must not silently fall back to ShareGPT:
+        // the longer generation stretches every request's latency
+        let p = planner(MoEModelConfig::qwen3_235b());
+        let sharegpt = p.plan_sched(4.0, SchedPolicy::Fcfs);
+        let heavy = p
+            .clone()
+            .with_shape(128, 1200)
+            .plan_sched(4.0, SchedPolicy::Fcfs);
+        assert!(!sharegpt.is_empty() && !heavy.is_empty());
+        assert!(
+            heavy[0].request_latency > sharegpt[0].request_latency,
+            "1200 generated tokens must cost more than 200: {} !> {}",
+            heavy[0].request_latency,
+            sharegpt[0].request_latency
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! iteration's router output re-prices the hot rank's dispatch/combine
 //! volume before the iteration is timed.
 
-use crate::analyzer::latency::{CommMode, LatencyModel, Phase};
+use crate::analyzer::latency::{CommMode, LatencyModel, MixedIter, Phase};
 use crate::analyzer::memory::check_memory;
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
@@ -22,6 +22,10 @@ use crate::pipeline::PipelineCfg;
 use crate::serving::batcher::{Batcher, BatcherConfig};
 use crate::serving::kvcache::KvCacheManager;
 use crate::serving::metrics::ServingMetrics;
+use crate::serving::scheduler::{
+    DisaggPrefill, FcfsColocated, IterPlan, PrefillChunk, PromptDisposition, SchedPolicy,
+    Scheduler,
+};
 use crate::timing::{CommCost, ExpertLoadProfile};
 use crate::workload::Request;
 
@@ -57,7 +61,7 @@ impl Role {
 /// An engine iteration currently executing on the replica.
 #[derive(Debug, Clone)]
 struct InFlight {
-    prefill: Vec<usize>,
+    prefill: Vec<PrefillChunk>,
     decode: Vec<usize>,
     finish: f64,
     iter_time: f64,
@@ -88,6 +92,10 @@ pub struct ReplicaSim<C: CommCost = CollectiveCost> {
     imb_sum: f64,
     /// serving phase(s) this replica owns (Colocated by default)
     role: Role,
+    /// per-iteration batch composition policy (DESIGN.md §Scheduling):
+    /// FCFS by default; `with_sched` installs chunked prefill, and
+    /// `with_role(Role::Prefill)` installs the handoff-disposition FCFS
+    scheduler: Box<dyn Scheduler>,
     /// requests whose prefill finished on this (Prefill-role) replica,
     /// awaiting the fleet loop's KV handoff — drained by
     /// [`ReplicaSim::take_handoffs`]
@@ -193,15 +201,43 @@ impl<C: CommCost> ReplicaSim<C> {
             iterations: 0,
             imb_sum: 0.0,
             role: Role::Colocated,
+            scheduler: Box::new(FcfsColocated),
             handoffs: Vec::new(),
         }
     }
 
     /// Assign this replica a P/D disaggregation role (builder style;
-    /// `Role::Colocated` keeps the historical behavior exactly).
+    /// `Role::Colocated` keeps the historical behavior exactly).  The
+    /// role picks the scheduler: a prefill pool runs the FCFS
+    /// composition with the handoff disposition; a decode pool runs
+    /// plain FCFS (its arrivals are already past prefill); `Colocated`
+    /// keeps whatever scheduler is installed.
     pub fn with_role(mut self, role: Role) -> Self {
         self.role = role;
+        match role {
+            Role::Prefill => self.scheduler = Box::new(DisaggPrefill),
+            Role::Decode => self.scheduler = Box::new(FcfsColocated),
+            Role::Colocated => {}
+        }
         self
+    }
+
+    /// Install an iteration scheduler (builder style; `SchedPolicy::Fcfs`
+    /// keeps the historical behavior exactly).  Colocated replicas only —
+    /// role schedulers are owned by [`ReplicaSim::with_role`].
+    pub fn with_sched(mut self, sched: SchedPolicy) -> Self {
+        debug_assert_eq!(
+            self.role,
+            Role::Colocated,
+            "scheduler policy applies to colocated replicas; roles pick their own"
+        );
+        self.scheduler = sched.build();
+        self
+    }
+
+    /// The installed scheduler's label (for reports).
+    pub fn sched_label(&self) -> &'static str {
+        self.scheduler.label()
     }
 
     pub fn role(&self) -> Role {
@@ -295,22 +331,44 @@ impl<C: CommCost> ReplicaSim<C> {
         }
 
         let start = self.clock.max(now);
-        let plan = self.batcher.plan(start, &mut self.kv);
-        if plan.prefill.is_empty() && plan.decode.is_empty() {
+        let plan = self.scheduler.plan(&mut self.batcher, start, &mut self.kv);
+        if plan.is_empty() {
             // nothing runnable (KV exhausted): wait for retirement next tick
             return Some(start + 1e-3);
         }
 
+        // An all-whole-prompt composition is exactly what the historical
+        // engine formed: price it through the two-group path, bit-for-bit
+        // (this is what pins FCFS — and chunked prefill at an
+        // inexhaustible quantum — to the pre-refactor outputs).  A
+        // composition containing prompt *slices* runs as one fused pass,
+        // priced by Eq. (13) on the combined batch.
+        let iter_time = if plan.is_legacy_composition() {
+            self.price_groups(&plan)
+        } else {
+            self.price_mixed(&plan)
+        };
+
+        let finish = start + iter_time;
+        self.in_flight = Some(InFlight {
+            prefill: plan.prefill,
+            decode: plan.decode,
+            finish,
+            iter_time,
+        });
+        self.iterations += 1;
+        Some(finish)
+    }
+
+    /// The historical two-group pricing: a prefill pass over the whole
+    /// prompts plus a decode pass over the running requests, each with
+    /// its own gate-load draw.
+    fn price_groups(&mut self, plan: &IterPlan) -> f64 {
         let mut iter_time = 0.0f64;
-        // ---- prefill chunk
+        // ---- prefill group
         if !plan.prefill.is_empty() {
             let b = plan.prefill.len();
-            let maxlen = plan
-                .prefill
-                .iter()
-                .map(|id| self.batcher.get(*id).unwrap().req.len_in)
-                .max()
-                .unwrap();
+            let maxlen = plan.prefill.iter().map(|c| c.tokens).max().unwrap();
             // measure this iteration's gate load first: it re-prices λ
             // (when load-aware) and stretches the MoE compute
             let imb = self.expert_imbalance(b * maxlen);
@@ -329,16 +387,26 @@ impl<C: CommCost> ReplicaSim<C> {
             let lat = self.lm.service_latency(&self.strategy, b, ctx, Phase::Decode, self.mode);
             iter_time += lat.compute * blend(imb) + lat.comm + lat.p2p - lat.overlap;
         }
+        iter_time
+    }
 
-        let finish = start + iter_time;
-        self.in_flight = Some(InFlight {
-            prefill: plan.prefill,
-            decode: plan.decode,
-            finish,
-            iter_time,
-        });
-        self.iterations += 1;
-        Some(finish)
+    /// Mixed-iteration pricing: prompt slices and decode tokens share
+    /// one fused pass per layer (`LatencyModel::mixed_iteration`), with
+    /// one gate-load draw over the combined token set.
+    fn price_mixed(&mut self, plan: &IterPlan) -> f64 {
+        let p_tokens = plan.prefill_tokens();
+        let d_reqs = plan.decode.len();
+        let mix = MixedIter {
+            prefill_reqs: plan.prefill.len(),
+            prefill_tokens: p_tokens,
+            prefill_seq: plan.max_prefill_prefix(),
+            decode_reqs: d_reqs,
+            decode_ctx: self.batcher.mean_decode_context().max(1),
+        };
+        let imb = self.expert_imbalance(p_tokens + d_reqs);
+        self.imb_sum += imb;
+        let lat = self.lm.mixed_iteration(&self.strategy, &mix, self.mode);
+        lat.compute * blend(imb) + lat.comm + lat.p2p - lat.overlap
     }
 
     /// Bookkeeping at iteration end: first tokens and decode tokens land
@@ -348,12 +416,15 @@ impl<C: CommCost> ReplicaSim<C> {
     /// the fleet loop's timed KV transfer (completion is recorded by the
     /// decode pool, so fleet-level `completed` counts each request once).
     fn finish_iteration(&mut self, p: &InFlight) {
-        for id in &p.prefill {
-            let arrival = self.batcher.get(*id).unwrap().req.arrival;
-            self.batcher.complete_prefill(*id, p.finish);
-            self.metrics.record_first_token(p.finish - arrival);
-            if self.role == Role::Prefill {
-                self.batcher.finish_now(*id);
+        let handoff = self.scheduler.prompt_done() == PromptDisposition::FinishAndHandoff;
+        for c in &p.prefill {
+            let arrival = self.batcher.get(c.id).unwrap().req.arrival;
+            if self.batcher.advance_prefill(c.id, c.tokens, p.finish) {
+                // the completing chunk emits the first token
+                self.metrics.record_first_token(p.finish - arrival);
+                if handoff {
+                    self.batcher.finish_now(c.id);
+                }
             }
         }
         for id in &p.decode {
@@ -361,7 +432,7 @@ impl<C: CommCost> ReplicaSim<C> {
             self.batcher.complete_decode_token(*id, p.finish);
         }
         for done in self.batcher.retire(&mut self.kv) {
-            if self.role == Role::Prefill {
+            if handoff {
                 self.handoffs.push(done.req.clone());
             } else {
                 self.metrics.record_completion(done.req.len_in, done.req.len_out);
@@ -550,6 +621,78 @@ mod tests {
             (now, r.metrics.completed, r.metrics.ttft_summary().mean)
         };
         assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn explicit_fcfs_scheduler_is_the_default_exactly() {
+        let run = |explicit: bool| {
+            let mut r = replica(None);
+            if explicit {
+                r = r.with_sched(SchedPolicy::Fcfs);
+            }
+            for id in 0..6 {
+                r.submit(Request { id, arrival: 0.0, len_in: 700, len_out: 12 });
+            }
+            let mut now = 0.0;
+            while let Some(t) = r.step(now) {
+                now = t;
+            }
+            (now, r.metrics.completed, r.metrics.ttft_summary().mean, r.iterations)
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn chunked_replica_drains_and_interleaves() {
+        let mut r = replica(None).with_sched(SchedPolicy::Chunked { quantum: 256 });
+        for id in 0..6 {
+            r.submit(Request { id, arrival: 0.0, len_in: 1000, len_out: 16 });
+        }
+        let mut now = 0.0;
+        let mut guard = 0;
+        while let Some(t) = r.step(now) {
+            assert!(t > now, "monotonic progress: {t} !> {now}");
+            now = t;
+            guard += 1;
+            assert!(guard < 100_000, "runaway chunked stepper");
+        }
+        assert!(r.is_idle());
+        assert_eq!(r.metrics.completed, 6);
+        assert_eq!(r.metrics.ttft.len(), 6);
+        // 6 x 1000 prompt tokens at a 256-token quantum need > 23 chunk
+        // iterations; FCFS would have prefilled all six in one
+        assert!(r.iterations > 23, "only {} iterations", r.iterations);
+        assert_eq!(r.sched_label(), "chunked");
+    }
+
+    #[test]
+    fn quantum_bounds_iteration_time_under_long_prompts() {
+        // the chunked engine's longest iteration must be shorter than the
+        // FCFS engine's (which prefills a 3000-token prompt in one go,
+        // stalling every running decode for that long)
+        let drain = |sched: SchedPolicy| -> f64 {
+            let mut r = replica(None).with_sched(sched);
+            // a decode-heavy resident request...
+            r.submit(Request { id: 0, arrival: 0.0, len_in: 64, len_out: 64 });
+            let mut now = r.step(0.0).expect("prefill started");
+            // ...then a huge prompt lands while it decodes: FCFS stalls
+            // every decode token behind the 3000-token prefill pass
+            r.submit(Request { id: 1, arrival: now, len_in: 3000, len_out: 8 });
+            while let Some(t) = r.step(now) {
+                now = t;
+            }
+            let mut max_itl: f64 = 0.0;
+            for &x in r.metrics.itl.values() {
+                max_itl = max_itl.max(x);
+            }
+            max_itl
+        };
+        let fcfs = drain(SchedPolicy::Fcfs);
+        let chunked = drain(SchedPolicy::Chunked { quantum: 128 });
+        assert!(
+            chunked < fcfs,
+            "quantum must bound the worst decode stall: chunked {chunked} !< fcfs {fcfs}"
+        );
     }
 
     #[test]

@@ -11,6 +11,7 @@ use super::dispatch::RoutingPolicy;
 use super::fleet::{simulate_fleet, FleetConfig};
 use crate::analyzer::latency::CommMode;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use crate::serving::scheduler::SchedPolicy;
 use crate::workload::{Request, TraceGen};
 
 /// One (pattern × policy) measurement.
@@ -71,6 +72,7 @@ pub fn policy_sweep(
                 mode: CommMode::FusedAsync,
                 slo,
                 disagg: None,
+                sched: SchedPolicy::Fcfs,
             };
             let rep = simulate_fleet(model, replica_cluster, &cfg, &serving, &trace, seed);
             let t = rep.metrics.ttft_summary();

@@ -88,7 +88,8 @@ impl Trace {
             by_lane.entry(&s.lane).or_default().push((s.start, s.end));
         }
         for spans in by_lane.values_mut() {
-            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // total_cmp: a NaN span start must not panic the check
+            spans.sort_by(|a, b| a.0.total_cmp(&b.0));
             for w in spans.windows(2) {
                 if w[1].0 < w[0].1 - 1e-12 {
                     return false;
@@ -156,6 +157,28 @@ mod tests {
         t.push(Lane::Inter(0), "a", 0.0, 2.0);
         t.push(Lane::Inter(0), "b", 1.0, 3.0);
         assert!(!t.lanes_are_serial());
+    }
+
+    #[test]
+    fn lane_check_survives_nan_spans() {
+        // regression (NaN-safety sweep): a NaN span start used to panic
+        // the overlap check mid-sort via `partial_cmp().unwrap()`; it
+        // must now run to a verdict (NaN sorts last under total_cmp)
+        let mut t = Trace::default();
+        t.push(Lane::Inter(0), "a", 0.0, 1.0);
+        t.spans.push(Span {
+            lane: Lane::Inter(0),
+            label: "nan".into(),
+            start: f64::NAN,
+            end: f64::NAN,
+        });
+        t.push(Lane::Inter(0), "b", 2.0, 3.0);
+        let _ = t.lanes_are_serial(); // must not panic
+        // the finite spans alone are still judged correctly
+        let mut clean = Trace::default();
+        clean.push(Lane::Inter(0), "a", 0.0, 1.0);
+        clean.push(Lane::Inter(0), "b", 2.0, 3.0);
+        assert!(clean.lanes_are_serial());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //!   plan      joint (replica count x strategy) search under a device budget
 //!   fleetsweep  routing policy x traffic pattern comparison table
 //!   disagg    colocated vs P/D-disaggregated fleet over arrival rate
+//!   chunked   TTFT/ITL vs scheduler quantum (prompt-/decode-heavy traces)
 //!   fig3|fig4|fig10|fig11|fig12|table1   regenerate a paper artifact
 //!
 //! Disaggregation flags (simulate / fleet / plan):
@@ -15,6 +16,17 @@
 //!                 with per-phase strategies (Eqs. 12-13 scored
 //!                 independently) and the KV handoff priced through the
 //!                 CommCost backend as first-class NIC traffic
+//!
+//! Scheduler flags (simulate / fleet / plan):
+//!   --sched S     iteration scheduler: fcfs (default, the historical
+//!                 engine) or chunked (prompts sliced into quantum-sized
+//!                 chunks interleaved with decode steps; mixed
+//!                 iterations priced via Eq. 13 on the combined batch)
+//!   --quantum N   chunked scheduler's per-iteration prompt-token budget
+//!                 (default 256)
+//!   --arch        (plan only) rank ALL THREE architectures — colocated
+//!                 FCFS, chunked prefill per quantum, P/D disagg — under
+//!                 one device budget on one request-latency key
 //!
 //! Overlap flags (analyze / simulate / plan):
 //!   --overlap     price chunked micro-batch pipelining of the MoE block,
@@ -35,11 +47,12 @@ use mixserve::cluster::{
 };
 use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use mixserve::grammar::parse_strategy;
-use mixserve::paperbench::{disagg, fig10, fig11, fig12, fig3, fig4, table1};
+use mixserve::paperbench::{chunked, disagg, fig10, fig11, fig12, fig3, fig4, table1};
 use mixserve::pipeline::PipelineCfg;
 use mixserve::runtime::Engine;
 use mixserve::serving::engine::RealEngine;
-use mixserve::serving::sim::run_rate_configured;
+use mixserve::serving::scheduler::SchedPolicy;
+use mixserve::serving::sim::run_rate_sched;
 use mixserve::timing::{CommCost, NetSimCost};
 use mixserve::util::cli::Args;
 use mixserve::workload::{ArrivalPattern, TraceGen};
@@ -104,6 +117,15 @@ fn pipeline_note(pipeline: PipelineCfg) -> String {
     }
 }
 
+/// `--sched S [--quantum N]` → the iteration-scheduler policy.  An
+/// unknown scheduler name is an error, not a silent fallback.
+fn sched_from_args(args: &Args) -> Result<SchedPolicy> {
+    let name = args.get_or("sched", "fcfs");
+    let quantum = args.usize_or("quantum", 256);
+    SchedPolicy::parse(&name, quantum)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheduler {name:?} (fcfs | chunked)"))
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let cluster = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
     let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
@@ -161,13 +183,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let duration = args.f64_or("duration", 60.0);
     let skew = args.f64_or("skew", 0.0);
     let pipeline = pipeline_from_args(args)?;
+    let sched = sched_from_args(args)?;
     if args.has_flag("disagg") {
         // the fleet replicas behind the sweep price uniform λ and the
         // additive MoE block: refuse to silently drop the other knobs
-        if skew > 0.0 || !pipeline.is_off() {
+        if skew > 0.0 || !pipeline.is_off() || sched != SchedPolicy::Fcfs {
             bail!(
-                "--disagg does not compose with --skew/--overlap/--chunks yet \
-                 (the disagg fleet prices uniform λ, additive MoE; see ROADMAP)"
+                "--disagg does not compose with --skew/--overlap/--chunks/--sched yet \
+                 (the disagg fleet prices uniform λ, additive MoE, role schedulers; \
+                 see ROADMAP)"
             );
         }
         // colocated vs phase-disaggregated on 2 pods, same trace
@@ -176,7 +200,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!(
-        "simulating {} on {} at {rate} req/s for {duration}s{}{}",
+        "simulating {} on {} at {rate} req/s for {duration}s{}{}{}",
         model.name,
         cluster.name,
         if skew > 0.0 {
@@ -184,12 +208,17 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         } else {
             String::new()
         },
-        pipeline_note(pipeline)
+        pipeline_note(pipeline),
+        match sched {
+            SchedPolicy::Fcfs => String::new(),
+            s => format!(", {} scheduler", s.label()),
+        }
     );
-    // run_rate_configured subsumes run_rate (skew 0, pipeline Off) and
-    // run_rate_skewed (skew > 0) — one entry point, no mode dispatch
+    // run_rate_sched subsumes run_rate (skew 0, pipeline Off, fcfs),
+    // run_rate_skewed (skew > 0), and the chunked-prefill engine — one
+    // entry point, no mode dispatch
     for sys in all_systems(&cluster) {
-        let rep = run_rate_configured(
+        let rep = run_rate_sched(
             &model,
             &cluster,
             &sys.strategy,
@@ -199,6 +228,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             7,
             skew,
             pipeline,
+            sched,
         );
         println!("{}", rep.metrics.report(&format!("{:<22}", sys.label)));
     }
@@ -330,6 +360,7 @@ fn cmd_fleet_disagg(
         mode: mixserve::analyzer::latency::CommMode::FusedAsync,
         slo: fa.slo,
         disagg,
+        sched: SchedPolicy::Fcfs,
     };
     println!(
         "disagg fleet: {prefill_replicas} prefill x ({prefill_strategy}) + \
@@ -365,21 +396,26 @@ fn cmd_fleet_disagg(
 
 fn cmd_fleet(args: &Args) -> Result<()> {
     let fa = fleet_args(args, 32.0)?;
+    let sched = sched_from_args(args)?;
     let pattern = pattern_from_args(args, fa.duration)?;
     let trace = TraceGen::sharegpt(fa.rate, fa.serving.max_seq, fa.seed)
         .with_pattern(pattern)
         .generate(fa.duration);
     if args.has_flag("disagg") {
+        if sched != SchedPolicy::Fcfs {
+            bail!("--disagg pools run their role schedulers; drop --sched");
+        }
         return cmd_fleet_disagg(args, &fa, &trace);
     }
 
     println!(
-        "fleet: {} x {} pods of {}, {} per replica\n\
+        "fleet: {} x {} pods of {}, {} per replica ({} scheduler)\n\
          {} requests @ {} req/s over {}s ({:?}){}",
         fa.replicas,
         fa.pod.name,
         fa.model.name,
         fa.strategy,
+        sched.label(),
         trace.len(),
         fa.rate,
         fa.duration,
@@ -394,6 +430,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             mode: mixserve::analyzer::latency::CommMode::FusedAsync,
             slo: fa.slo,
             disagg: None,
+            sched,
         };
         let rep = simulate_fleet(&fa.model, &fa.pod, &cfg, &fa.serving, &trace, fa.seed);
         let t = rep.metrics.ttft_summary();
@@ -419,6 +456,62 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let planner = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(rate))
         .with_skew(skew)
         .with_pipeline(pipeline_from_args(args)?);
+    // validate --sched before any branch returns: an unknown scheduler
+    // name (or a conflicting flag combination) must error, never be
+    // silently ignored
+    let sched = sched_from_args(args)?;
+    if sched != SchedPolicy::Fcfs && args.has_flag("disagg") {
+        bail!("--disagg pools run their role schedulers; drop --sched (or use --arch)");
+    }
+    if args.has_flag("arch") {
+        if sched != SchedPolicy::Fcfs {
+            bail!("--arch already searches every scheduler; drop --sched");
+        }
+        // rank colocated FCFS vs chunked prefill vs P/D disagg on one key
+        print!("{}", planner.render_arch(rate, mixserve::cluster::DEFAULT_QUANTA));
+        if let Some(best) = planner.best_arch(rate, mixserve::cluster::DEFAULT_QUANTA) {
+            println!(
+                "\noptimal architecture: {} — req lat {:.2}s, {:.1} tok/s",
+                best.label(),
+                best.request_latency(),
+                best.total_throughput()
+            );
+        }
+        return Ok(());
+    }
+    if let SchedPolicy::Chunked { quantum } = sched {
+        // the chunked-prefill leg of the architecture search on its own
+        let plans = planner.plan_sched(rate, SchedPolicy::Chunked { quantum });
+        println!(
+            "chunked-prefill plan — {} under a {}-device budget ({}) @ {rate} req/s, \
+             quantum {quantum}",
+            model.name,
+            budget.total_devices(),
+            budget.name
+        );
+        println!(
+            "{:<4} {:<14} {:<36} {:>10} {:>9} {:>12} {:>10}",
+            "R", "pod", "per-replica strategy", "TTFT(ms)", "ITL(ms)", "fleet tok/s",
+            "req lat(s)"
+        );
+        for p in &plans {
+            let pod = format!("{}x{}", p.replica_cluster.n_nodes, p.replica_cluster.gpus_per_node);
+            println!(
+                "{:<4} {:<14} {:<36} {:>10.1} {:>9.2} {:>12.1} {:>10.2}",
+                p.replicas,
+                pod,
+                p.strategy,
+                p.indicators.ttft * 1e3,
+                p.indicators.itl * 1e3,
+                p.total_throughput,
+                p.request_latency
+            );
+        }
+        if plans.is_empty() {
+            println!("(no feasible pod shape under this budget)");
+        }
+        return Ok(());
+    }
     if args.has_flag("disagg") {
         print!("{}", planner.render_disagg(rate));
         if let Some(best) = planner.best_disagg(rate) {
@@ -479,6 +572,15 @@ fn main() -> Result<()> {
             let rows = disagg::sweep(&m, &c, &[2.0, 4.0, 8.0], duration, 7);
             print!("{}", disagg::render(&m, &c, &rows));
         }
+        "chunked" => {
+            // TTFT/ITL vs scheduler quantum on a prompt-heavy and a
+            // decode-heavy trace (the chunked-prefill paperbench sweep)
+            let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+            let m = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+            let duration = args.f64_or("duration", 30.0);
+            let rows = chunked::sweep(&m, &c, duration, 7);
+            print!("{}", chunked::render(&m, &c, &rows));
+        }
         "fig3" => {
             let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
             print!("{}", fig3::run(&c));
@@ -519,7 +621,9 @@ fn main() -> Result<()> {
                  \x20           [--queue-cap N]\n\
                  \x20 simulate  [--model M] [--cluster C] [--rate R] [--duration S]\n\
                  \x20           [--skew Z] [--overlap | --chunks K] [--disagg]\n\
-                 \x20           (--disagg compares colocated vs P/D pools on 2 pods)\n\
+                 \x20           [--sched fcfs|chunked [--quantum N]]\n\
+                 \x20           (--disagg compares colocated vs P/D pools on 2 pods;\n\
+                 \x20            --sched chunked slices prompts at the quantum)\n\
                  \x20 fleet     [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
                  \x20           [--duration S] [--pattern poisson|bursty|diurnal]\n\
                  \x20           [--slo-ttft S] [--strategy \"TP=8 + DP=4, TP=8 + EP=4\"]\n\
@@ -528,12 +632,17 @@ fn main() -> Result<()> {
                  \x20           (each replica runs on its own POD-shaped device pool;\n\
                  \x20            --disagg role-splits the fleet with a timed KV handoff)\n\
                  \x20 plan      [--model M] [--cluster BUDGET] [--rate R] [--skew Z]\n\
-                 \x20           [--overlap | --chunks K] [--disagg]\n\
+                 \x20           [--overlap | --chunks K] [--disagg] [--arch]\n\
+                 \x20           [--sched fcfs|chunked [--quantum N]]\n\
                  \x20           (carve one device budget into replicas x strategy;\n\
-                 \x20            --disagg searches prefill pool x decode pool instead)\n\
+                 \x20            --disagg searches prefill pool x decode pool instead;\n\
+                 \x20            --arch ranks colocated vs chunked vs disagg on one key)\n\
                  \x20 fleetsweep  [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
                  \x20 disagg    [--model M] [--cluster POD] [--duration S]\n\
                  \x20           (colocated vs disagg TTFT/ITL/tok-s over arrival rate)\n\
+                 \x20 chunked   [--model M] [--cluster POD] [--duration S]\n\
+                 \x20           (TTFT/ITL vs scheduler quantum, prompt- and\n\
+                 \x20            decode-heavy traces)\n\
                  \x20 fig3|fig4|fig10|fig11|fig12|table1   regenerate paper artifacts\n\n\
                  models: deepseek-r1 qwen3 tiny | clusters: h20 ascend910b localhost"
             );

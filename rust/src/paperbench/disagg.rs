@@ -16,6 +16,7 @@ use crate::analyzer::latency::CommMode;
 use crate::analyzer::search::{Analyzer, Objective};
 use crate::cluster::{simulate_fleet, DisaggConfig, FleetConfig, RoutingPolicy};
 use crate::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use crate::serving::scheduler::SchedPolicy;
 use crate::workload::TraceGen;
 
 /// One (rate × architecture) comparison row.
@@ -65,6 +66,7 @@ pub fn sweep(
             mode: CommMode::FusedAsync,
             slo: None,
             disagg: None,
+            sched: SchedPolicy::Fcfs,
         };
         let dis_cfg = FleetConfig {
             disagg: Some(DisaggConfig {

@@ -1,11 +1,14 @@
 //! Continuous (iteration-level) batcher — Orca-style scheduling as used
 //! by vLLM and adopted by MixServe's online stage.
 //!
-//! Each engine iteration the batcher:
-//!   1. admits waiting requests (FIFO) while batch + KV budget allow,
-//!   2. emits a prefill group (newly admitted) and a decode group
-//!      (running requests),
-//!   3. retires finished requests, releasing their KV blocks.
+//! Since the Scheduler extraction (DESIGN.md §Scheduling) the batcher
+//! owns request *state* and the admission/bookkeeping primitives —
+//! FIFO + KV-budget admission ([`Batcher::admit`]), per-request prefill
+//! progress ([`Batcher::advance_prefill`]), decode completion and
+//! retirement — while per-iteration batch *composition* lives behind
+//! `serving::scheduler::Scheduler`.  [`Batcher::plan`] keeps the
+//! historical FCFS composition (admit, whole-prompt prefill group,
+//! decode group) as the legacy entry point, bit-for-bit.
 
 use super::kvcache::KvCacheManager;
 use crate::workload::Request;
@@ -37,6 +40,9 @@ pub struct TrackedRequest {
     /// prompt already prefilled elsewhere (P/D disaggregation handoff):
     /// admission skips the prefill group and resumes decode directly
     pub prefilled: bool,
+    /// prompt tokens prefilled so far (chunked-prefill progress; jumps
+    /// straight to `len_in` on the historical whole-prompt path)
+    pub prefill_done: usize,
     /// engine-time when admitted to its first prefill
     pub admitted_at: Option<f64>,
     pub first_token_at: Option<f64>,
@@ -88,10 +94,12 @@ impl Batcher {
     }
 
     fn enqueue(&mut self, req: Request, prefilled: bool) {
+        let prefill_done = if prefilled { req.len_in } else { 0 };
         self.waiting.push_back(TrackedRequest {
             req,
             phase: ReqPhase::Waiting,
             prefilled,
+            prefill_done,
             admitted_at: None,
             first_token_at: None,
             last_token_at: None,
@@ -140,7 +148,13 @@ impl Batcher {
         }
         for t in &self.running {
             total += match &t.phase {
-                ReqPhase::Waiting | ReqPhase::Prefilling => t.req.len_in + t.req.len_out,
+                ReqPhase::Waiting => t.req.len_in + t.req.len_out,
+                // mid-prefill (chunked) requests owe only the un-prefilled
+                // tail; the historical whole-prompt path never observes a
+                // nonzero prefill_done here, so its accounting is unchanged
+                ReqPhase::Prefilling => {
+                    t.req.len_in.saturating_sub(t.prefill_done) + t.req.len_out
+                }
                 ReqPhase::Decoding { generated } => t.req.len_out.saturating_sub(*generated),
                 ReqPhase::Done => 0,
             };
@@ -156,12 +170,19 @@ impl Batcher {
         self.running.iter_mut().find(|t| t.req.id == id)
     }
 
-    /// Form this iteration's plan at engine time `now`.  Admission is
-    /// FIFO and KV-budget-aware: a request is admitted only if its full
-    /// context (prompt + max generation) can be granted blocks.
+    /// Form this iteration's plan at engine time `now` — the historical
+    /// FCFS composition (`scheduler::FcfsColocated` routes through the
+    /// same primitives): admit, whole-prompt prefill group, decode group.
     pub fn plan(&mut self, now: f64, kv: &mut KvCacheManager) -> IterationPlan {
-        let mut plan = IterationPlan::default();
-        // 1) admit
+        IterationPlan { prefill: self.admit(now, kv), decode: self.decoding_ids() }
+    }
+
+    /// FIFO + KV-budget admission: a request is admitted only if its full
+    /// context (prompt + max generation) can be granted blocks.  Returns
+    /// the ids entering prefill this call (handed-off requests join the
+    /// decode group directly and are not listed).
+    pub fn admit(&mut self, now: f64, kv: &mut KvCacheManager) -> Vec<usize> {
+        let mut admitted = Vec::new();
         while self.running.len() < self.cfg.max_batch {
             let Some(front) = self.waiting.front() else { break };
             let worst = (front.req.len_in + front.req.len_out).min(self.cfg.max_seq);
@@ -174,21 +195,64 @@ impl Batcher {
             if t.prefilled {
                 // handoff admission: KV blocks acquired here, decode
                 // resumes at once (first token emitted on the prefill
-                // side — it joins this iteration's decode group below)
+                // side — it joins this iteration's decode group)
                 t.phase = ReqPhase::Decoding { generated: 1 };
             } else {
                 t.phase = ReqPhase::Prefilling;
-                plan.prefill.push(t.req.id);
+                admitted.push(t.req.id);
             }
             self.running.push(t);
         }
-        // 2) decode group: everyone already past prefill
-        for t in &self.running {
-            if matches!(t.phase, ReqPhase::Decoding { .. }) {
-                plan.decode.push(t.req.id);
-            }
+        admitted
+    }
+
+    /// Ids of every running request past prefill (one decode step each),
+    /// in admission order.
+    pub fn decoding_ids(&self) -> Vec<usize> {
+        self.running
+            .iter()
+            .filter(|t| matches!(t.phase, ReqPhase::Decoding { .. }))
+            .map(|t| t.req.id)
+            .collect()
+    }
+
+    /// `(id, tokens already prefilled, prompt length)` of every request
+    /// currently mid-prefill, in admission (FIFO) order — the chunked
+    /// scheduler's slicing input.
+    pub fn prefilling(&self) -> Vec<(usize, usize, usize)> {
+        self.running
+            .iter()
+            .filter(|t| t.phase == ReqPhase::Prefilling)
+            .map(|t| (t.req.id, t.prefill_done, t.req.len_in))
+            .collect()
+    }
+
+    /// Prompt tokens a running request still has to prefill (0 for
+    /// unknown ids or requests past prefill).
+    pub fn remaining_prompt(&self, id: usize) -> usize {
+        self.get(id)
+            .filter(|t| t.phase == ReqPhase::Prefilling)
+            .map(|t| t.req.len_in.saturating_sub(t.prefill_done))
+            .unwrap_or(0)
+    }
+
+    /// Advance a mid-prefill request by `tokens` prompt tokens landing at
+    /// `now`; returns true when the prompt just completed — the request
+    /// enters decode with its first token emitted at `now` (exactly
+    /// [`Batcher::complete_prefill`] for a whole-prompt chunk).
+    pub fn advance_prefill(&mut self, id: usize, tokens: usize, now: f64) -> bool {
+        let Some(t) = self.get_mut(id) else { return false };
+        if t.phase != ReqPhase::Prefilling {
+            return false;
         }
-        plan
+        t.prefill_done = (t.prefill_done + tokens).min(t.req.len_in);
+        if t.prefill_done >= t.req.len_in {
+            t.phase = ReqPhase::Decoding { generated: 1 };
+            t.first_token_at = Some(now);
+            t.last_token_at = Some(now);
+            return true;
+        }
+        false
     }
 
     /// Force a running request straight to Done (a prefill-pool replica
@@ -204,6 +268,7 @@ impl Batcher {
     /// Mark prefill completion (first token emitted) at `now`.
     pub fn complete_prefill(&mut self, id: usize, now: f64) {
         if let Some(t) = self.get_mut(id) {
+            t.prefill_done = t.req.len_in;
             t.phase = ReqPhase::Decoding { generated: 1 };
             t.first_token_at = Some(now);
             t.last_token_at = Some(now);
@@ -410,6 +475,37 @@ mod tests {
         assert_eq!(done[0].first_token_at, Some(1.0));
         assert_eq!(kv.used_blocks(), 0, "handoff releases the prefill-side blocks");
         assert!(b.is_idle());
+    }
+
+    #[test]
+    fn advance_prefill_tracks_progress_and_completes_once() {
+        let (mut b, mut kv) = setup(64);
+        b.submit(req(0, 40, 4));
+        let plan = b.plan(0.0, &mut kv);
+        assert_eq!(plan.prefill, vec![0]);
+        assert_eq!(b.remaining_prompt(0), 40);
+        assert!(!b.advance_prefill(0, 16, 1.0));
+        assert_eq!(b.remaining_prompt(0), 24);
+        // mid-prefill: outstanding counts only the un-prefilled tail
+        assert_eq!(b.outstanding_tokens(), 24 + 4);
+        assert!(b.advance_prefill(0, 24, 2.0), "final chunk completes");
+        assert_eq!(b.remaining_prompt(0), 0, "past prefill owes no prompt");
+        assert_eq!(b.get(0).unwrap().first_token_at, Some(2.0));
+        assert!(!b.advance_prefill(0, 8, 3.0), "no double completion");
+        assert_eq!(b.decoding_ids(), vec![0]);
+    }
+
+    #[test]
+    fn prefilling_lists_fifo_progress() {
+        let (mut b, mut kv) = setup(64);
+        b.submit(req(0, 30, 2));
+        b.submit(req(1, 50, 2));
+        b.plan(0.0, &mut kv);
+        assert_eq!(b.prefilling(), vec![(0, 0, 30), (1, 0, 50)]);
+        b.advance_prefill(0, 30, 1.0);
+        b.advance_prefill(1, 20, 1.0);
+        assert_eq!(b.prefilling(), vec![(1, 20, 50)]);
+        assert_eq!(b.decoding_ids(), vec![0]);
     }
 
     #[test]

@@ -2,15 +2,25 @@
 //! on top of either the *analytic* cluster simulation (paper-scale
 //! models, Figs. 10–12) or the *real* PJRT runtime (tiny model,
 //! examples/serve_e2e).
+//!
+//! Iteration composition is a first-class policy ([`scheduler`]): the
+//! batcher owns request state and admission, while a [`Scheduler`]
+//! decides what each iteration runs — FCFS whole-prompt batching,
+//! chunked-prefill colocation, or a disaggregation pool's phase view.
 
 pub mod batcher;
 pub mod engine;
 pub mod kvcache;
 pub mod metrics;
+pub mod scheduler;
 pub mod sim;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use engine::RealEngine;
 pub use kvcache::KvCacheManager;
 pub use metrics::ServingMetrics;
+pub use scheduler::{
+    ChunkedPrefill, DisaggPrefill, FcfsColocated, IterPlan, PrefillChunk, PromptDisposition,
+    SchedPolicy, Scheduler,
+};
 pub use sim::{simulate_serving, SimReport};

@@ -1,0 +1,398 @@
+//! First-class iteration scheduling — the policy that composes each
+//! engine iteration (which requests run, how many prefill tokens vs
+//! decode slots), extracted from `Batcher::plan` so the planner can
+//! search over it (DESIGN.md §Scheduling).
+//!
+//! Three policies implement the [`Scheduler`] trait:
+//!
+//! * [`FcfsColocated`] — the historical continuous-batching behavior,
+//!   bit-for-bit: newly admitted prompts prefill whole in their admission
+//!   iteration, running requests each decode one token.
+//! * [`ChunkedPrefill`] — chunked-prefill colocation: prompts are sliced
+//!   into scheduler-quantum token chunks and interleaved with the running
+//!   decodes, so no iteration carries more than `quantum` prompt tokens.
+//!   The quantum is the TTFT-vs-ITL knob: small quanta bound every
+//!   iteration (decode tokens never stall behind a long prompt), at the
+//!   price of spreading that prompt's prefill over several iterations.
+//! * [`DisaggPrefill`] — a P/D-disaggregation prefill pool's view of the
+//!   same FCFS composition: identical batching, but a completed prompt is
+//!   finished here (KV released, request handed to the fleet loop for the
+//!   timed transfer) instead of entering decode.
+//!
+//! The scheduler owns *composition only*.  Admission (FIFO + KV budget),
+//! request state, and token bookkeeping stay in the [`Batcher`]; timing
+//! stays in the replica, which prices an all-whole-prompt composition
+//! through the historical two-group path and a genuinely chunked one
+//! through `LatencyModel::mixed_iteration` (Eq. 13 on the combined
+//! batch).
+
+use super::batcher::Batcher;
+use super::kvcache::KvCacheManager;
+
+/// One prompt slice scheduled into an iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillChunk {
+    pub id: usize,
+    /// prompt tokens already prefilled before this chunk (the slice's
+    /// starting offset — its attention prefix)
+    pub offset: usize,
+    /// prompt tokens this iteration processes for the request
+    pub tokens: usize,
+    /// true when this chunk finishes the prompt (the first token is
+    /// emitted when the iteration completes)
+    pub completes: bool,
+}
+
+impl PrefillChunk {
+    /// A chunk covering the entire prompt in one shot — the only kind the
+    /// FCFS scheduler emits.  An iteration whose prefill group is all
+    /// whole prompts is priced through the historical two-group path.
+    pub fn is_whole_prompt(&self) -> bool {
+        self.offset == 0 && self.completes
+    }
+}
+
+/// One iteration's composition as the scheduler decides it.
+#[derive(Debug, Clone, Default)]
+pub struct IterPlan {
+    /// prompt slices to process this iteration
+    pub prefill: Vec<PrefillChunk>,
+    /// request ids doing one decode step
+    pub decode: Vec<usize>,
+}
+
+impl IterPlan {
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decode.is_empty()
+    }
+
+    /// Total prompt tokens scheduled this iteration.
+    pub fn prefill_tokens(&self) -> usize {
+        self.prefill.iter().map(|c| c.tokens).sum()
+    }
+
+    /// True when the composition is exactly what the FCFS engine would
+    /// form: every prefill entry a whole prompt.  Such iterations are
+    /// priced through the historical two-group path, which pins
+    /// `ChunkedPrefill` with an inexhaustible quantum to `FcfsColocated`
+    /// sample-for-sample.
+    pub fn is_legacy_composition(&self) -> bool {
+        self.prefill.iter().all(PrefillChunk::is_whole_prompt)
+    }
+
+    /// Attention prefix of the deepest slice (what the mixed pricing
+    /// charges slice attention at); 0 with no prefill work.
+    pub fn max_prefill_prefix(&self) -> usize {
+        self.prefill.iter().map(|c| c.offset + c.tokens).max().unwrap_or(0)
+    }
+}
+
+/// What a prompt does once its final prefill chunk lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PromptDisposition {
+    /// enter the decode group (colocated engines)
+    Decode,
+    /// finish here — the fleet loop ships the KV to a decode pool
+    /// (a `Role::Prefill` replica)
+    FinishAndHandoff,
+}
+
+/// Per-iteration batch composition policy.  `plan` may mutate the
+/// batcher only through its admission primitive; all other state changes
+/// (prefill progress, decode completion, retirement) happen at iteration
+/// end, driven by the replica.
+pub trait Scheduler: std::fmt::Debug + Send {
+    /// Compose the next iteration at engine time `now`.
+    fn plan(&mut self, b: &mut Batcher, now: f64, kv: &mut KvCacheManager) -> IterPlan;
+
+    /// Disposition of a prompt whose prefill just completed.
+    fn prompt_done(&self) -> PromptDisposition {
+        PromptDisposition::Decode
+    }
+
+    fn label(&self) -> &'static str;
+}
+
+/// Scheduler selection as configuration (CLI / fleet / planner plumbing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// FCFS continuous batching (the historical engine)
+    Fcfs,
+    /// chunked-prefill colocation at a per-iteration prompt-token budget
+    Chunked { quantum: usize },
+}
+
+impl SchedPolicy {
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            SchedPolicy::Fcfs => Box::new(FcfsColocated),
+            SchedPolicy::Chunked { quantum } => {
+                Box::new(ChunkedPrefill { quantum: (*quantum).max(1) })
+            }
+        }
+    }
+
+    /// Parse a `--sched` value, pairing `chunked` with the `--quantum`
+    /// token budget.
+    pub fn parse(s: &str, quantum: usize) -> Option<SchedPolicy> {
+        match s {
+            "fcfs" => Some(SchedPolicy::Fcfs),
+            "chunked" => Some(SchedPolicy::Chunked { quantum: quantum.max(1) }),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SchedPolicy::Fcfs => "fcfs".to_string(),
+            SchedPolicy::Chunked { quantum } => format!("chunked(q={quantum})"),
+        }
+    }
+}
+
+/// The historical composition: admit FIFO under batch + KV budget, whole
+/// prompts prefill in their admission iteration, everyone past prefill
+/// decodes one token.  Exactly `Batcher::plan`, lifted behind the trait.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FcfsColocated;
+
+/// The shared FCFS composition (also the prefill-pool scheduler's plan).
+fn fcfs_plan(b: &mut Batcher, now: f64, kv: &mut KvCacheManager) -> IterPlan {
+    let mut plan = IterPlan::default();
+    for id in b.admit(now, kv) {
+        let tokens = b.remaining_prompt(id);
+        plan.prefill.push(PrefillChunk { id, offset: 0, tokens, completes: true });
+    }
+    plan.decode = b.decoding_ids();
+    plan
+}
+
+impl Scheduler for FcfsColocated {
+    fn plan(&mut self, b: &mut Batcher, now: f64, kv: &mut KvCacheManager) -> IterPlan {
+        fcfs_plan(b, now, kv)
+    }
+
+    fn label(&self) -> &'static str {
+        "fcfs"
+    }
+}
+
+/// Chunked-prefill colocation: same FIFO + KV admission, but each
+/// iteration spends at most `quantum` prompt tokens, sliced FIFO across
+/// the mid-prefill requests, while every running decode still advances.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkedPrefill {
+    /// per-iteration prompt-token budget (≥ 1)
+    pub quantum: usize,
+}
+
+impl Scheduler for ChunkedPrefill {
+    fn plan(&mut self, b: &mut Batcher, now: f64, kv: &mut KvCacheManager) -> IterPlan {
+        let mut plan = IterPlan::default();
+        b.admit(now, kv);
+        let mut budget = self.quantum.max(1);
+        for (id, done, len_in) in b.prefilling() {
+            if budget == 0 {
+                break;
+            }
+            let remaining = len_in - done;
+            // a zero-length prompt emits a completing zero-token chunk
+            // (exactly what the FCFS path does) rather than being
+            // silently skipped and livelocking mid-Prefilling
+            let take = remaining.min(budget);
+            budget -= take;
+            plan.prefill.push(PrefillChunk {
+                id,
+                offset: done,
+                tokens: take,
+                completes: take == remaining,
+            });
+        }
+        plan.decode = b.decoding_ids();
+        plan
+    }
+
+    fn label(&self) -> &'static str {
+        "chunked"
+    }
+}
+
+/// A P/D prefill pool's scheduler: FCFS composition, handoff disposition.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DisaggPrefill;
+
+impl Scheduler for DisaggPrefill {
+    fn plan(&mut self, b: &mut Batcher, now: f64, kv: &mut KvCacheManager) -> IterPlan {
+        fcfs_plan(b, now, kv)
+    }
+
+    fn prompt_done(&self) -> PromptDisposition {
+        PromptDisposition::FinishAndHandoff
+    }
+
+    fn label(&self) -> &'static str {
+        "disagg-prefill"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::batcher::BatcherConfig;
+    use crate::workload::Request;
+
+    fn req(id: usize, len_in: usize, len_out: usize) -> Request {
+        Request { id, arrival: 0.0, len_in, len_out }
+    }
+
+    fn setup() -> (Batcher, KvCacheManager) {
+        (
+            Batcher::new(BatcherConfig { max_batch: 4, max_seq: 4096, max_waiting: None }),
+            KvCacheManager::new(4096, 16),
+        )
+    }
+
+    #[test]
+    fn fcfs_scheduler_matches_batcher_plan() {
+        let (mut b, mut kv) = setup();
+        let (mut b2, mut kv2) = setup();
+        for i in 0..6 {
+            b.submit(req(i, 100, 8));
+            b2.submit(req(i, 100, 8));
+        }
+        let legacy = b.plan(0.0, &mut kv);
+        let mut s = FcfsColocated;
+        let plan = s.plan(&mut b2, 0.0, &mut kv2);
+        assert_eq!(
+            plan.prefill.iter().map(|c| c.id).collect::<Vec<_>>(),
+            legacy.prefill
+        );
+        assert_eq!(plan.decode, legacy.decode);
+        assert!(plan.is_legacy_composition());
+        assert!(plan.prefill.iter().all(|c| c.tokens == 100 && c.completes));
+    }
+
+    #[test]
+    fn chunked_respects_the_quantum_budget() {
+        let (mut b, mut kv) = setup();
+        for i in 0..3 {
+            b.submit(req(i, 500, 8));
+        }
+        let mut s = ChunkedPrefill { quantum: 256 };
+        let plan = s.plan(&mut b, 0.0, &mut kv);
+        assert!(plan.prefill_tokens() <= 256);
+        // FIFO: request 0 gets the whole budget first
+        assert_eq!(plan.prefill[0].id, 0);
+        assert_eq!(plan.prefill[0].tokens, 256);
+        assert!(!plan.prefill[0].completes);
+        assert!(!plan.is_legacy_composition());
+    }
+
+    #[test]
+    fn chunked_slices_span_iterations_and_complete_exactly() {
+        let (mut b, mut kv) = setup();
+        b.submit(req(0, 500, 4));
+        let mut s = ChunkedPrefill { quantum: 200 };
+        let mut total = 0usize;
+        let mut completions = 0usize;
+        for step in 0..10 {
+            let plan = s.plan(&mut b, step as f64, &mut kv);
+            if plan.prefill.is_empty() {
+                break;
+            }
+            for c in &plan.prefill {
+                assert_eq!(c.offset, total, "chunks are contiguous");
+                total += c.tokens;
+                if b.advance_prefill(c.id, c.tokens, step as f64) {
+                    completions += 1;
+                }
+            }
+        }
+        assert_eq!(total, 500, "prompt tokens conserved across chunks");
+        assert_eq!(completions, 1);
+    }
+
+    #[test]
+    fn chunked_interleaves_decodes_with_pending_chunks() {
+        let (mut b, mut kv) = setup();
+        b.submit(req(0, 64, 8));
+        b.submit(req(1, 600, 8));
+        let mut s = ChunkedPrefill { quantum: 128 };
+        // iteration 1: r0 whole (64) + r1's first 64-token slice
+        let p1 = s.plan(&mut b, 0.0, &mut kv);
+        assert_eq!(p1.prefill.len(), 2);
+        assert_eq!(p1.prefill_tokens(), 128);
+        for c in &p1.prefill {
+            b.advance_prefill(c.id, c.tokens, 1.0);
+        }
+        // iteration 2: r0 decodes while r1 keeps chunking
+        let p2 = s.plan(&mut b, 2.0, &mut kv);
+        assert_eq!(p2.decode, vec![0], "finished prompt decodes alongside chunks");
+        assert_eq!(p2.prefill.len(), 1);
+        assert_eq!(p2.prefill[0].id, 1);
+        assert_eq!(p2.prefill[0].offset, 64);
+        assert_eq!(p2.prefill_tokens(), 128);
+    }
+
+    #[test]
+    fn huge_quantum_reproduces_the_fcfs_composition() {
+        let (mut b, mut kv) = setup();
+        let (mut b2, mut kv2) = setup();
+        for i in 0..5 {
+            b.submit(req(i, 300, 4));
+            b2.submit(req(i, 300, 4));
+        }
+        let mut fcfs = FcfsColocated;
+        let mut chunked = ChunkedPrefill { quantum: 4096 * 4 };
+        let a = fcfs.plan(&mut b, 0.0, &mut kv);
+        let c = chunked.plan(&mut b2, 0.0, &mut kv2);
+        assert_eq!(a.prefill, c.prefill);
+        assert_eq!(a.decode, c.decode);
+        assert!(c.is_legacy_composition());
+    }
+
+    #[test]
+    fn zero_length_prompt_completes_instead_of_livelocking() {
+        // regression: a len_in == 0 request used to be skipped by the
+        // chunk loop forever; it must emit a completing zero-token chunk
+        // exactly like the FCFS path
+        let (mut b, mut kv) = setup();
+        b.submit(req(0, 0, 4));
+        let mut s = ChunkedPrefill { quantum: 64 };
+        let plan = s.plan(&mut b, 0.0, &mut kv);
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].tokens, 0);
+        assert!(plan.prefill[0].completes);
+        assert!(b.advance_prefill(0, 0, 1.0), "empty prompt completes at once");
+        assert_eq!(b.decoding_ids(), vec![0]);
+    }
+
+    #[test]
+    fn dispositions_route_prompts() {
+        assert_eq!(FcfsColocated.prompt_done(), PromptDisposition::Decode);
+        assert_eq!(
+            ChunkedPrefill { quantum: 64 }.prompt_done(),
+            PromptDisposition::Decode
+        );
+        assert_eq!(
+            DisaggPrefill.prompt_done(),
+            PromptDisposition::FinishAndHandoff
+        );
+    }
+
+    #[test]
+    fn policy_parse_and_build_roundtrip() {
+        assert_eq!(SchedPolicy::parse("fcfs", 0), Some(SchedPolicy::Fcfs));
+        assert_eq!(
+            SchedPolicy::parse("chunked", 256),
+            Some(SchedPolicy::Chunked { quantum: 256 })
+        );
+        assert_eq!(SchedPolicy::parse("nope", 1), None);
+        assert_eq!(SchedPolicy::Fcfs.build().label(), "fcfs");
+        assert_eq!(
+            SchedPolicy::Chunked { quantum: 128 }.build().label(),
+            "chunked"
+        );
+        assert_eq!(SchedPolicy::Chunked { quantum: 9 }.label(), "chunked(q=9)");
+    }
+}

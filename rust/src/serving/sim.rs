@@ -23,6 +23,7 @@ use crate::cluster::replica::ReplicaSim;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::pipeline::PipelineCfg;
 use crate::serving::metrics::ServingMetrics;
+use crate::serving::scheduler::SchedPolicy;
 use crate::timing::CommCost;
 use crate::workload::{Request, TraceGen};
 
@@ -93,6 +94,28 @@ pub fn simulate_serving(
     report(replica, now, mode)
 }
 
+/// [`simulate_serving`] under an explicit iteration scheduler.
+/// `SchedPolicy::Fcfs` reproduces the historical run sample-for-sample;
+/// `SchedPolicy::Chunked` slices prompts into quantum-bounded chunks
+/// interleaved with the running decodes (mixed iterations priced via
+/// Eq. 13 on the combined batch).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_serving_sched(
+    model: &MoEModelConfig,
+    cluster: &ClusterConfig,
+    strategy: &ParallelStrategy,
+    serving: &ServingConfig,
+    mode: CommMode,
+    trace: &[Request],
+    seed: u64,
+    sched: SchedPolicy,
+) -> SimReport {
+    let mut replica =
+        ReplicaSim::new(model, cluster, strategy, serving, mode, seed, 0).with_sched(sched);
+    let now = drive(&mut replica, trace);
+    report(replica, now, mode)
+}
+
 /// [`simulate_serving`] with a load-aware replica: the router draws at
 /// `skew` and every iteration's measured expert loads re-price λ (the
 /// hot rank's dispatch/combine volume), not just the MoE compute.
@@ -153,6 +176,36 @@ pub fn run_rate_configured(
     skew: f64,
     pipeline: PipelineCfg,
 ) -> SimReport {
+    run_rate_sched(
+        model,
+        cluster,
+        strategy,
+        mode,
+        rate,
+        duration,
+        seed,
+        skew,
+        pipeline,
+        SchedPolicy::Fcfs,
+    )
+}
+
+/// [`run_rate_configured`] plus the iteration-scheduler dimension.
+/// `SchedPolicy::Fcfs` is exactly the historical run; `Chunked` slices
+/// prompts at the quantum and interleaves them with decode steps.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rate_sched(
+    model: &MoEModelConfig,
+    cluster: &ClusterConfig,
+    strategy: &ParallelStrategy,
+    mode: CommMode,
+    rate: f64,
+    duration: f64,
+    seed: u64,
+    skew: f64,
+    pipeline: PipelineCfg,
+    sched: SchedPolicy,
+) -> SimReport {
     let serving = ServingConfig::paper_eval(rate);
     let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
     let mut replica = if skew > 0.0 {
@@ -160,7 +213,8 @@ pub fn run_rate_configured(
     } else {
         ReplicaSim::new(model, cluster, strategy, &serving, mode, seed, 0)
     }
-    .with_pipeline(pipeline);
+    .with_pipeline(pipeline)
+    .with_sched(sched);
     let now = drive(&mut replica, &trace);
     report(replica, now, mode)
 }
@@ -344,6 +398,56 @@ mod tests {
             off.metrics.itl_summary().p50
         );
         assert!(auto.metrics.throughput() >= off.metrics.throughput() * 0.999);
+    }
+
+    #[test]
+    fn fcfs_sched_is_the_identity_on_the_configured_run() {
+        let model = MoEModelConfig::deepseek_r1();
+        let cluster = ClusterConfig::ascend910b();
+        let s = ParallelStrategy::mixserve(4, 8);
+        let a = run_rate(&model, &cluster, &s, CommMode::FusedAsync, 2.0, 20.0, 7);
+        let b = run_rate_sched(
+            &model,
+            &cluster,
+            &s,
+            CommMode::FusedAsync,
+            2.0,
+            20.0,
+            7,
+            0.0,
+            PipelineCfg::Off,
+            SchedPolicy::Fcfs,
+        );
+        assert_eq!(a.metrics.completed, b.metrics.completed);
+        assert_eq!(a.metrics.ttft_summary().mean, b.metrics.ttft_summary().mean);
+        assert_eq!(a.metrics.itl_summary().mean, b.metrics.itl_summary().mean);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn chunked_sched_completes_the_same_requests() {
+        let model = MoEModelConfig::deepseek_r1();
+        let cluster = ClusterConfig::ascend910b();
+        let s = ParallelStrategy::mixserve(4, 8);
+        let run = |sched: SchedPolicy| {
+            run_rate_sched(
+                &model,
+                &cluster,
+                &s,
+                CommMode::FusedAsync,
+                2.0,
+                20.0,
+                7,
+                0.0,
+                PipelineCfg::Off,
+                sched,
+            )
+        };
+        let fcfs = run(SchedPolicy::Fcfs);
+        let chunked = run(SchedPolicy::Chunked { quantum: 256 });
+        assert_eq!(chunked.metrics.completed, fcfs.metrics.completed);
+        assert_eq!(chunked.metrics.ttft.len(), fcfs.metrics.ttft.len());
+        assert!(chunked.iterations >= fcfs.iterations, "slicing adds iterations");
     }
 
     #[test]

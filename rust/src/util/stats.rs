@@ -1,6 +1,14 @@
 //! Descriptive statistics: mean/std/percentiles for latency series
 //! (the paper reports averages with std error bars plus P99).
 
+/// Total-order ascending sort of f64 samples: NaN sorts to the end
+/// (after +∞) instead of panicking the way per-call-site
+/// `partial_cmp().unwrap()` did — the shared helper of the NaN-safety
+/// sweep (report sorting, calibration medians, Gantt lane checks).
+pub fn sort_f64(xs: &mut [f64]) {
+    xs.sort_by(f64::total_cmp);
+}
+
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Summary {
     pub n: usize,
@@ -22,7 +30,7 @@ impl Summary {
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sort_f64(&mut sorted);
         let pct = |p: f64| -> f64 {
             let idx = ((n as f64 - 1.0) * p).round() as usize;
             sorted[idx.min(n - 1)]
@@ -81,7 +89,7 @@ impl Series {
 /// Average ranks of a sample (ties share the mean of their positions).
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+    idx.sort_by(|&i, &j| xs[i].total_cmp(&xs[j]));
     let mut r = vec![0.0f64; xs.len()];
     let mut i = 0;
     while i < idx.len() {
@@ -184,5 +192,28 @@ mod tests {
         let a = [1.0, 2.0, 3.0, 4.0];
         let b = [1.0, -1.0, 1.0, -1.0];
         assert!(pearson(&a, &b).abs() < 0.75);
+    }
+
+    #[test]
+    fn sort_f64_orders_and_survives_nan() {
+        // regression: `partial_cmp().unwrap()` panicked on NaN mid-sort;
+        // total_cmp ranks NaN after +inf and keeps the finite prefix
+        // correctly ordered
+        let mut xs = vec![3.0, f64::NAN, 1.0, 2.0, f64::INFINITY];
+        sort_f64(&mut xs);
+        assert_eq!(&xs[..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(xs[3], f64::INFINITY);
+        assert!(xs[4].is_nan());
+    }
+
+    #[test]
+    fn summary_of_series_with_nan_does_not_panic() {
+        // the report-sorting path: a NaN sample (degenerate latency)
+        // must not take the whole metrics summary down
+        let s = Summary::of(&[0.5, f64::NAN, 0.25]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 0.25);
+        assert!(s.max.is_nan(), "NaN sorts last, so it lands in max");
+        assert_eq!(s.p50, 0.5);
     }
 }

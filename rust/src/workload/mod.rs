@@ -198,6 +198,23 @@ pub fn sort_by_arrival(reqs: &mut [Request]) {
     reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
 }
 
+/// Deterministic fixed-shape trace: evenly spaced arrivals of identical
+/// `len_in`/`len_out` requests — the controlled input of the
+/// chunked-prefill paperbench sweep and the scheduler integration
+/// tests, where the TTFT/ITL trade must be attributable to the
+/// scheduler alone, not to length-distribution noise.
+pub fn fixed_shape_trace(
+    rate: f64,
+    duration: f64,
+    len_in: usize,
+    len_out: usize,
+) -> Vec<Request> {
+    let n = (rate * duration).round().max(1.0) as usize;
+    (0..n)
+        .map(|id| Request { id, arrival: id as f64 / rate, len_in, len_out })
+        .collect()
+}
+
 /// Deterministic batch-count sampler for benches that only need counts
 /// per scheduling tick.
 pub fn poisson_counts(rate_per_tick: f64, ticks: usize, seed: u64) -> Vec<usize> {

@@ -11,6 +11,7 @@ use mixserve::cluster::{
 };
 use mixserve::cluster::sweep::policy_sweep;
 use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use mixserve::serving::scheduler::SchedPolicy;
 use mixserve::workload::TraceGen;
 
 fn fleet_cfg(replicas: usize, policy: RoutingPolicy, slo: Option<SloPolicy>) -> FleetConfig {
@@ -21,6 +22,7 @@ fn fleet_cfg(replicas: usize, policy: RoutingPolicy, slo: Option<SloPolicy>) -> 
         mode: CommMode::FusedAsync,
         slo,
         disagg: None,
+        sched: SchedPolicy::Fcfs,
     }
 }
 

@@ -10,6 +10,7 @@ use mixserve::cluster::{
     simulate_fleet, DisaggConfig, FleetConfig, FleetPlanner, RoutingPolicy,
 };
 use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use mixserve::serving::scheduler::SchedPolicy;
 use mixserve::serving::sim::simulate_serving;
 use mixserve::workload::{Request, TraceGen};
 
@@ -101,6 +102,7 @@ fn disagg_beats_colocated_ttft_p99_under_prompt_heavy_load() {
         mode: CommMode::FusedAsync,
         slo: None,
         disagg: None,
+        sched: SchedPolicy::Fcfs,
     };
     let colo = simulate_fleet(&model, &pod, &base, &serving, &trace, 17);
     let dis_cfg = FleetConfig {
@@ -168,6 +170,7 @@ fn one_replica_colocated_fleet_reproduces_the_serving_sim_exactly() {
             mode: CommMode::FusedAsync,
             slo: None,
             disagg: None,
+            sched: SchedPolicy::Fcfs,
         },
         &serving,
         &trace,
@@ -201,6 +204,7 @@ fn disagg_fleet_is_deterministic() {
             prefill_strategy: mixserve::config::ParallelStrategy::mixserve(2, 8),
             decode_strategy: mixserve::config::ParallelStrategy::mixserve(2, 8),
         }),
+        sched: SchedPolicy::Fcfs,
     };
     let a = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 5);
     let b = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 5);

@@ -16,6 +16,7 @@ use mixserve::grammar::{enumerate_strategies, parse_strategy};
 use mixserve::moe::router::{LoadStats, RouterSim};
 use mixserve::serving::batcher::{Batcher, BatcherConfig};
 use mixserve::serving::kvcache::KvCacheManager;
+use mixserve::serving::scheduler::{ChunkedPrefill, SchedPolicy, Scheduler};
 use mixserve::testkit::forall;
 use mixserve::util::rng::Rng;
 use mixserve::workload::{ArrivalPattern, Request, TraceGen};
@@ -277,6 +278,140 @@ fn prop_batcher_conserves_and_never_exceeds_batch() {
             kv.check_invariants()?;
             if kv.used_blocks() != 0 {
                 return Err("blocks leaked after drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chunked_scheduler_budget_and_token_conservation() {
+    // scheduler invariants (DESIGN.md §Scheduling): no iteration ever
+    // schedules more than `quantum` prompt tokens, every prompt's chunks
+    // are contiguous and sum exactly to len_in, and every request still
+    // finishes exactly once with no KV leak
+    forall(
+        "chunked: quantum bound + per-request prefill conservation",
+        20,
+        31,
+        |r: &mut Rng| {
+            let n_req = 1 + r.below(20);
+            let quantum = 1 + r.below(200);
+            let max_batch = 1 + r.below(8);
+            let reqs: Vec<(usize, usize)> =
+                (0..n_req).map(|_| (1 + r.below(300), 1 + r.below(12))).collect();
+            (quantum, max_batch, reqs)
+        },
+        |(quantum, max_batch, reqs)| {
+            let mut b = Batcher::new(BatcherConfig {
+                max_batch: *max_batch,
+                max_seq: 512,
+                max_waiting: None,
+            });
+            let mut kv = KvCacheManager::new(100_000, 16);
+            let mut sched = ChunkedPrefill { quantum: *quantum };
+            for (i, (li, lo)) in reqs.iter().enumerate() {
+                b.submit(Request { id: i, arrival: 0.0, len_in: *li, len_out: *lo });
+            }
+            let mut prefilled = vec![0usize; reqs.len()];
+            let mut finished = vec![0usize; reqs.len()];
+            for step in 0..200_000 {
+                let plan = sched.plan(&mut b, step as f64, &mut kv);
+                if plan.prefill_tokens() > *quantum {
+                    return Err(format!(
+                        "iteration scheduled {} > quantum {}",
+                        plan.prefill_tokens(),
+                        quantum
+                    ));
+                }
+                for c in &plan.prefill {
+                    if c.offset != prefilled[c.id] {
+                        return Err(format!(
+                            "req {} chunk offset {} != progress {}",
+                            c.id, c.offset, prefilled[c.id]
+                        ));
+                    }
+                    prefilled[c.id] += c.tokens;
+                    b.advance_prefill(c.id, c.tokens, step as f64);
+                }
+                for id in plan.decode {
+                    b.complete_decode_token(id, step as f64);
+                }
+                for t in b.retire(&mut kv) {
+                    finished[t.req.id] += 1;
+                }
+                if b.is_idle() {
+                    break;
+                }
+            }
+            for (i, (li, _)) in reqs.iter().enumerate() {
+                if prefilled[i] != *li {
+                    return Err(format!("req {i}: {} of {li} prompt tokens", prefilled[i]));
+                }
+                if finished[i] != 1 {
+                    return Err(format!("req {i} finished {} times", finished[i]));
+                }
+            }
+            kv.check_invariants()?;
+            if kv.used_blocks() != 0 {
+                return Err("blocks leaked after drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chunked_replica_with_inexhaustible_quantum_matches_fcfs() {
+    // sample-for-sample: a quantum no iteration can exhaust makes the
+    // chunked engine form exactly the FCFS compositions, which route
+    // through the same two-group pricing — the sim outputs must be
+    // bit-identical, trace for trace
+    use mixserve::analyzer::latency::CommMode;
+    use mixserve::config::ParallelStrategy;
+    use mixserve::serving::sim::run_rate_sched;
+    forall(
+        "chunked(q=inf) == fcfs, sample-for-sample",
+        6,
+        37,
+        |r: &mut Rng| (1.0 + r.below(4) as f64, 8.0 + r.below(8) as f64, r.next_u64() % 1000),
+        |&(rate, duration, seed)| {
+            let model = MoEModelConfig::deepseek_r1();
+            let cluster = ClusterConfig::ascend910b();
+            let strategy = ParallelStrategy::mixserve(4, 8);
+            let serving = ServingConfig::paper_eval(rate);
+            // a quantum larger than every possible iteration's prompt load
+            let inexhaustible = serving.max_batch * serving.max_seq;
+            let run = |sched: SchedPolicy| {
+                run_rate_sched(
+                    &model,
+                    &cluster,
+                    &strategy,
+                    CommMode::FusedAsync,
+                    rate,
+                    duration,
+                    seed,
+                    0.0,
+                    mixserve::pipeline::PipelineCfg::Off,
+                    sched,
+                )
+            };
+            let fcfs = run(SchedPolicy::Fcfs);
+            let chunked = run(SchedPolicy::Chunked { quantum: inexhaustible });
+            if fcfs.metrics.completed != chunked.metrics.completed {
+                return Err("completed diverged".into());
+            }
+            if fcfs.iterations != chunked.iterations {
+                return Err(format!(
+                    "iterations diverged: {} vs {}",
+                    fcfs.iterations, chunked.iterations
+                ));
+            }
+            if fcfs.metrics.ttft.values() != chunked.metrics.ttft.values() {
+                return Err("TTFT series diverged".into());
+            }
+            if fcfs.metrics.itl.values() != chunked.metrics.itl.values() {
+                return Err("ITL series diverged".into());
             }
             Ok(())
         },

@@ -1,0 +1,212 @@
+//! Iteration-scheduler integration: the FCFS pin (pre-refactor serving
+//! sim and fleet outputs, sample-for-sample), the chunked-prefill
+//! TTFT-vs-ITL trade in the sim, the three-architecture planner search
+//! choosing chunked prefill on a mixed trace, and the chunked fleet
+//! end-to-end.
+
+use mixserve::analyzer::latency::CommMode;
+use mixserve::cluster::{
+    simulate_fleet, ArchPlan, DisaggConfig, FleetConfig, FleetPlanner, RoutingPolicy,
+    SloPolicy, DEFAULT_QUANTA,
+};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use mixserve::serving::scheduler::SchedPolicy;
+use mixserve::serving::sim::{simulate_serving, simulate_serving_sched};
+use mixserve::workload::{fixed_shape_trace, TraceGen};
+
+/// The pin: the Scheduler extraction must leave the FCFS serving sim
+/// bit-for-bit — same completion counts, same TTFT/ITL sample series,
+/// same clock — on a real ShareGPT trace.
+#[test]
+fn fcfs_scheduler_pins_the_pre_refactor_serving_sim() {
+    let model = MoEModelConfig::deepseek_r1();
+    let cluster = ClusterConfig::ascend910b();
+    let strategy = ParallelStrategy::mixserve(4, 8);
+    let serving = ServingConfig::paper_eval(4.0);
+    let trace = TraceGen::sharegpt(4.0, serving.max_seq, 13).generate(25.0);
+    let legacy = simulate_serving(
+        &model, &cluster, &strategy, &serving, CommMode::FusedAsync, &trace, 13,
+    );
+    let sched = simulate_serving_sched(
+        &model,
+        &cluster,
+        &strategy,
+        &serving,
+        CommMode::FusedAsync,
+        &trace,
+        13,
+        SchedPolicy::Fcfs,
+    );
+    assert_eq!(legacy.metrics.completed, sched.metrics.completed);
+    assert_eq!(legacy.metrics.rejected, sched.metrics.rejected);
+    assert_eq!(legacy.iterations, sched.iterations);
+    assert_eq!(legacy.metrics.ttft.values(), sched.metrics.ttft.values());
+    assert_eq!(legacy.metrics.itl.values(), sched.metrics.itl.values());
+    assert_eq!(legacy.metrics.duration, sched.metrics.duration);
+}
+
+/// The sim-level trade the quantum controls: on a prompt-heavy trace a
+/// small quantum buys ITL (mean and p99 drop — decode tokens stop
+/// stalling behind kilotoken prefill passes) and pays TTFT p99 (each
+/// prompt's prefill spreads over many iterations).
+#[test]
+fn sim_confirms_the_ttft_p99_vs_itl_trade() {
+    let model = MoEModelConfig::deepseek_r1();
+    let cluster = ClusterConfig::ascend910b();
+    let strategy = ParallelStrategy::mixserve(4, 8);
+    let serving = ServingConfig::paper_eval(4.0);
+    let trace = fixed_shape_trace(4.0, 20.0, 2000, 96);
+    let run = |sched: SchedPolicy| {
+        simulate_serving_sched(
+            &model,
+            &cluster,
+            &strategy,
+            &serving,
+            CommMode::FusedAsync,
+            &trace,
+            7,
+            sched,
+        )
+    };
+    let fine = run(SchedPolicy::Chunked { quantum: 128 });
+    let coarse = run(SchedPolicy::Chunked { quantum: 4096 * 16 });
+    assert_eq!(fine.metrics.completed, trace.len());
+    assert_eq!(coarse.metrics.completed, trace.len());
+    let (ft, fi) = (fine.metrics.ttft_summary(), fine.metrics.itl_summary());
+    let (ct, ci) = (coarse.metrics.ttft_summary(), coarse.metrics.itl_summary());
+    assert!(
+        fi.p99 < ci.p99,
+        "128-token quantum must bound the decode stall: {} !< {}",
+        fi.p99,
+        ci.p99
+    );
+    assert!(
+        fi.p50 <= ci.p50 * 1.0001,
+        "median ITL must not worsen under the fine quantum: {} !<= {}",
+        fi.p50,
+        ci.p50
+    );
+    assert!(
+        ft.p99 > ct.p99,
+        "slicing 2000-token prompts must stretch the TTFT tail: {} !> {}",
+        ft.p99,
+        ct.p99
+    );
+}
+
+/// Acceptance: the three-architecture planner chooses chunked prefill
+/// over BOTH colocated FCFS and P/D disaggregation on at least one
+/// mixed prompt/decode workload — at a point where both competitors are
+/// genuinely feasible (the disagg search returns plans, the FCFS search
+/// returns plans).
+#[test]
+fn planner_chooses_chunked_over_colocated_and_disagg_on_a_mixed_trace() {
+    let model = MoEModelConfig::qwen3_235b();
+    let mut found = None;
+    let mut log = Vec::new();
+    'outer: for budget in [ClusterConfig::ascend910b(), ClusterConfig::h20()] {
+        for (len_in, len_out) in [(64usize, 512usize), (128, 1024), (230, 600)] {
+            for rate in [2.0, 4.0, 8.0, 16.0, 24.0, 32.0, 48.0] {
+                let p = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(rate))
+                    .with_shape(len_in, len_out);
+                let disagg_feasible = !p.plan_disagg(rate).is_empty();
+                let colo_feasible = !p.plan_sched(rate, SchedPolicy::Fcfs).is_empty();
+                if !disagg_feasible || !colo_feasible {
+                    continue;
+                }
+                let best = p.best_arch(rate, DEFAULT_QUANTA).expect("feasible points exist");
+                log.push(format!(
+                    "{} in={len_in} out={len_out} rate={rate}: {}",
+                    budget.name,
+                    best.label()
+                ));
+                if best.is_chunked() {
+                    found = Some((budget.clone(), len_in, len_out, rate, best));
+                    break 'outer;
+                }
+            }
+        }
+    }
+    let (budget, len_in, len_out, rate, best) = found.unwrap_or_else(|| {
+        panic!("no mixed workload made chunked the optimum; saw:\n{}", log.join("\n"))
+    });
+    // the win is on the shared key against the best of each competitor
+    let p = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(rate))
+        .with_shape(len_in, len_out);
+    let colo_plans = p.plan_sched(rate, SchedPolicy::Fcfs);
+    let disagg_plans = p.plan_disagg(rate);
+    assert!(best.request_latency() <= colo_plans[0].request_latency);
+    assert!(best.request_latency() <= disagg_plans[0].request_latency);
+    // and the ranking actually contained all three shapes
+    let all = p.plan_arch(rate, DEFAULT_QUANTA);
+    assert!(all.iter().any(|a| matches!(a, ArchPlan::Colocated(_))));
+    assert!(all.iter().any(|a| matches!(a, ArchPlan::Disagg(_))));
+}
+
+/// A chunked fleet runs end-to-end behind the dispatcher: every request
+/// completes, sample counts stay consistent, and the run is
+/// deterministic.
+#[test]
+fn chunked_fleet_drains_deterministically() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let serving = ServingConfig::paper_eval(6.0);
+    let trace = TraceGen::sharegpt(6.0, serving.max_seq, 19).generate(15.0);
+    let n = trace.len();
+    let cfg = FleetConfig {
+        replicas: 2,
+        strategy: ParallelStrategy::mixserve(4, 8),
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: None,
+        disagg: None,
+        sched: SchedPolicy::Chunked { quantum: 256 },
+    };
+    let a = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 19);
+    let b = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 19);
+    assert_eq!(a.metrics.completed, n);
+    assert_eq!(a.metrics.ttft.len(), n);
+    assert_eq!(a.metrics.completed, b.metrics.completed);
+    assert_eq!(a.metrics.ttft.values(), b.metrics.ttft.values());
+    assert_eq!(a.metrics.itl.values(), b.metrics.itl.values());
+}
+
+/// Decode-pool admission end-to-end: under a decode-bound overload the
+/// two-stage gate sheds requests the single-stage (prefill-only-blind)
+/// prediction would admit, and the books still balance.
+#[test]
+fn two_stage_admission_sheds_under_decode_bound_overload() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let (rate, duration) = (10.0, 25.0);
+    let serving = ServingConfig::paper_eval(rate);
+    // short prompts, long generations: the prefill pool coasts while the
+    // decode pool drowns
+    let trace = fixed_shape_trace(rate, duration, 64, 1500);
+    let n = trace.len();
+    let cfg = FleetConfig {
+        replicas: 2,
+        strategy: ParallelStrategy::mixserve(4, 8),
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: Some(SloPolicy { ttft_deadline: 20.0 }),
+        disagg: Some(DisaggConfig {
+            prefill_replicas: 1,
+            decode_replicas: 1,
+            prefill_strategy: ParallelStrategy::mixserve(4, 8),
+            decode_strategy: ParallelStrategy::mixserve(4, 8),
+        }),
+        sched: SchedPolicy::Fcfs,
+    };
+    let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 3);
+    assert_eq!(rep.metrics.completed + rep.metrics.rejected, n, "books balance");
+    assert!(
+        rep.metrics.rejected > 0,
+        "a decode-bound overload must shed at the two-stage gate"
+    );
+    assert_eq!(
+        rep.metrics.ttft.len(),
+        rep.metrics.completed,
+        "shed requests never get a first token"
+    );
+}
