@@ -18,6 +18,7 @@ use crate::analyzer::indicators::Workload;
 use crate::analyzer::latency::CommMode;
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use crate::obs::{self, FleetTelemetry, ObsConfig, ReplicaSnapshot, SpanKind, TelemetryBuilder};
 use crate::serving::metrics::ServingMetrics;
 use crate::serving::scheduler::SchedPolicy;
 use crate::timing::kv_handoff_secs;
@@ -54,6 +55,10 @@ pub struct FleetConfig {
     /// historical behavior, bit-for-bit; disaggregated pools run their
     /// role schedulers and require `Fcfs` here)
     pub sched: SchedPolicy,
+    /// observability: span tracing and windowed telemetry.  The default
+    /// is fully off — simulation results are bit-for-bit identical to a
+    /// fleet run without the field (pinned by `obs_integration`).
+    pub obs: ObsConfig,
 }
 
 /// Result of one fleet run.
@@ -71,6 +76,10 @@ pub struct FleetReport {
     /// per-request prefill→decode KV transfer delays (empty when the
     /// fleet is colocated) — the handoff's visible share of the budget
     pub kv_handoff: Series,
+    /// recorded spans + lifecycle marks (None unless `cfg.obs.trace`)
+    pub trace: Option<obs::Trace>,
+    /// windowed fleet telemetry (None unless `cfg.obs.window` is set)
+    pub telemetry: Option<FleetTelemetry>,
 }
 
 /// Mean request shape of a trace (drives the admission predictor).
@@ -102,7 +111,7 @@ pub fn simulate_fleet(
     seed: u64,
 ) -> FleetReport {
     let mk_replica = |i: usize, strategy: &ParallelStrategy| {
-        ReplicaSim::new(
+        let r = ReplicaSim::new(
             model,
             replica_cluster,
             strategy,
@@ -111,6 +120,12 @@ pub fn simulate_fleet(
             seed.wrapping_add(0x9e37_79b9 * (i as u64 + 1)),
             i,
         )
+        .with_slo_deadline(cfg.slo.map(|s| s.ttft_deadline));
+        if cfg.obs.trace {
+            r.with_tracing()
+        } else {
+            r
+        }
     };
     let (mut replicas, admission_strategy): (Vec<ReplicaSim>, ParallelStrategy) =
         match &cfg.disagg {
@@ -181,6 +196,27 @@ pub fn simulate_fleet(
 
     let mut shed_front_door = 0usize;
     let mut kv_handoff = Series::new();
+    // fleet-level span recorder: owns the KvHandoff spans (the handoff
+    // happens between replicas) and absorbs each replica's trace at the
+    // end of the run
+    let mut fleet_trace = if cfg.obs.trace { Some(obs::Trace::new()) } else { None };
+    let mut telemetry = cfg.obs.window.map(|w| {
+        TelemetryBuilder::new(
+            w,
+            replicas.iter().map(|r| r.role().label()).collect(),
+            cfg.slo.is_some(),
+        )
+    });
+    let snapshot = |r: &ReplicaSim| ReplicaSnapshot {
+        queue_depth: r.queue_depth(),
+        running: r.running_len(),
+        tokens: r.metrics.tokens_in + r.metrics.tokens_out,
+        completed: r.metrics.completed,
+        submitted: r.metrics.submitted,
+        rejected: r.metrics.rejected,
+        ttft_n: r.metrics.ttft.len(),
+        ttft_ok: r.metrics.ttft_ok,
+    };
     // KV transfers in flight: (delivery time, request), insertion-ordered
     let mut transit: Vec<(f64, Request)> = Vec::new();
     let mut next = 0usize;
@@ -228,6 +264,12 @@ pub fn simulate_fleet(
             for req in r.take_handoffs() {
                 let delay = kv_handoff_secs(&handoff_cost, model, req.len_in);
                 kv_handoff.push(delay);
+                if let Some(t) = fleet_trace.as_mut() {
+                    // the span lives on the prefill replica's timeline;
+                    // handoffs drain at now == prefill finish, so the
+                    // span abuts the PrefillChunk that produced it
+                    t.span(req.id, r.id, SpanKind::KvHandoff, now, now + delay);
+                }
                 transit.push((now + delay, req));
             }
         }
@@ -240,8 +282,29 @@ pub fn simulate_fleet(
         if !next_t.is_finite() {
             break; // fully drained, no arrivals left
         }
+        // close any window boundaries the clock is about to cross,
+        // using the pre-boundary state (counters are constant between
+        // events, so this is the value *at* each boundary)
+        if let Some(tb) = telemetry.as_mut() {
+            if tb.pending(next_t) {
+                let snaps: Vec<ReplicaSnapshot> = replicas.iter().map(snapshot).collect();
+                let per_tok = model.kv_bytes_per_token() as f64;
+                let in_flight: f64 =
+                    transit.iter().map(|(_, req)| req.len_in as f64 * per_tok).sum();
+                tb.roll(next_t, &snaps, in_flight, shed_front_door);
+            }
+        }
         debug_assert!(next_t > now, "fleet clock must advance: {next_t} !> {now}");
         now = next_t;
+    }
+
+    // fold each replica's recorded spans into the fleet trace
+    if let Some(ft) = fleet_trace.as_mut() {
+        for r in replicas.iter_mut() {
+            if let Some(t) = r.take_trace() {
+                ft.absorb(t);
+            }
+        }
     }
 
     // aggregate
@@ -256,6 +319,9 @@ pub fn simulate_fleet(
         iters += r.iterations;
         per_replica.push(m);
     }
+    // front-door sheds were offered to the fleet too: keep
+    // `rejection_rate()` = shed / offered across both gates
+    agg.submitted += shed_front_door;
     agg.rejected += shed_front_door;
     agg.duration = now.max(1e-9);
     FleetReport {
@@ -266,6 +332,8 @@ pub fn simulate_fleet(
         per_replica,
         mean_imbalance: if iters > 0 { imb_weighted / iters as f64 } else { 1.0 },
         kv_handoff,
+        trace: fleet_trace,
+        telemetry: telemetry.map(|tb| tb.finish()),
     }
 }
 
@@ -297,6 +365,7 @@ mod tests {
             slo,
             disagg: None,
             sched: SchedPolicy::Fcfs,
+            obs: ObsConfig::default(),
         }
     }
 
@@ -370,6 +439,7 @@ mod tests {
                 decode_strategy: ParallelStrategy::pure_ep(4, 8),
             }),
             sched: SchedPolicy::Fcfs,
+            obs: ObsConfig::default(),
         };
         let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 11);
         assert_eq!(rep.metrics.completed, n, "every request finishes its decode");
@@ -384,6 +454,24 @@ mod tests {
         );
         assert_eq!(rep.per_replica[1].completed, n, "the decode pool owns completion");
         assert!(rep.metrics.itl_summary().mean > 0.0);
+    }
+
+    #[test]
+    fn traced_fleet_attaches_spans_and_windowed_telemetry() {
+        let model = MoEModelConfig::deepseek_r1();
+        let pod = ClusterConfig::ascend910b();
+        let mut c = cfg(2, RoutingPolicy::JoinShortestQueue, None);
+        c.obs = ObsConfig::full(1.0);
+        let rep = run_fleet_rate(&model, &pod, &c, 4.0, 10.0, 7);
+        let trace = rep.trace.expect("obs.trace attaches a span trace");
+        assert_eq!(trace.requests_completed(), rep.metrics.completed);
+        let att = trace.attribution();
+        assert!(att.max_abs_residual < 1e-9, "spans partition latency");
+        let tel = rep.telemetry.expect("obs.window attaches telemetry");
+        assert!(tel.windows() >= 9, "a 10s trace closes at least 9 full 1s windows");
+        assert_eq!(tel.replicas.len(), 2);
+        let offered: usize = tel.fleet.iter().map(|w| w.offered).sum();
+        assert!(offered > 0 && offered <= rep.metrics.offered());
     }
 
     #[test]

@@ -23,6 +23,10 @@
 //!   [`planner::FleetPlanner::plan_disagg`] searches (prefill pool ×
 //!   decode pool × per-phase strategy) against the colocated plans;
 //! * [`sweep`] — the paperbench-style policy × traffic-pattern table.
+//!
+//! Observability rides along: `FleetConfig::obs` ([`crate::obs::ObsConfig`])
+//! turns on per-request span tracing and windowed fleet telemetry, both
+//! off by default and free when disabled (DESIGN.md §Observability).
 
 pub mod admission;
 pub mod dispatch;
@@ -37,4 +41,5 @@ pub use fleet::{run_fleet_rate, simulate_fleet, DisaggConfig, FleetConfig, Fleet
 pub use planner::{
     carve_replicas, ArchPlan, DisaggPlan, FleetPlan, FleetPlanner, SchedPlan, DEFAULT_QUANTA,
 };
+pub use crate::obs::ObsConfig;
 pub use replica::{ReplicaSim, Role};

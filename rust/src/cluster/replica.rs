@@ -18,6 +18,7 @@ use crate::analyzer::memory::check_memory;
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::moe::router::{LoadStats, RouterSim};
+use crate::obs::{self, SpanKind};
 use crate::pipeline::PipelineCfg;
 use crate::serving::batcher::{Batcher, BatcherConfig};
 use crate::serving::kvcache::KvCacheManager;
@@ -63,6 +64,7 @@ impl Role {
 struct InFlight {
     prefill: Vec<PrefillChunk>,
     decode: Vec<usize>,
+    start: f64,
     finish: f64,
     iter_time: f64,
 }
@@ -100,6 +102,12 @@ pub struct ReplicaSim<C: CommCost = CollectiveCost> {
     /// awaiting the fleet loop's KV handoff — drained by
     /// [`ReplicaSim::take_handoffs`]
     handoffs: Vec<Request>,
+    /// per-request span recorder (None = tracing off, the default; the
+    /// event loop, timings, and metrics are bit-for-bit unaffected)
+    trace: Option<obs::Trace>,
+    /// TTFT deadline whose attainment `metrics.ttft_ok` counts (the
+    /// telemetry SLO signal); counting never perturbs timing
+    slo_deadline: Option<f64>,
 }
 
 impl ReplicaSim<CollectiveCost> {
@@ -203,7 +211,31 @@ impl<C: CommCost> ReplicaSim<C> {
             role: Role::Colocated,
             scheduler: Box::new(FcfsColocated),
             handoffs: Vec::new(),
+            trace: None,
+            slo_deadline: None,
         }
+    }
+
+    /// Enable per-request span tracing (builder style; off by default).
+    /// The recorder only observes times the engine already computed, so
+    /// enabling it never changes what the sim does — only what it
+    /// remembers.
+    pub fn with_tracing(mut self) -> Self {
+        self.trace = Some(obs::Trace::new());
+        self
+    }
+
+    /// Install the TTFT deadline that `metrics.ttft_ok` counts against
+    /// (builder style; `None` leaves the counter at zero).
+    pub fn with_slo_deadline(mut self, deadline: Option<f64>) -> Self {
+        self.slo_deadline = deadline;
+        self
+    }
+
+    /// Take the recorded span trace (None when tracing is off).  The
+    /// fleet loop absorbs per-replica traces into one fleet trace.
+    pub fn take_trace(&mut self) -> Option<obs::Trace> {
+        self.trace.take()
     }
 
     /// Assign this replica a P/D disaggregation role (builder style;
@@ -249,6 +281,11 @@ impl<C: CommCost> ReplicaSim<C> {
     /// Never shed: the admission cap applies at the fleet front door,
     /// before the prefill pool invested work in the request.
     pub fn submit_prefilled(&mut self, req: Request) {
+        if let Some(t) = self.trace.as_mut() {
+            // first writer wins: the prefill pool already stamped this
+            // arrival, so a merged fleet trace keeps one mark per request
+            t.arrival(req.id, req.arrival);
+        }
         self.batcher.submit_prefilled(req);
     }
 
@@ -263,9 +300,13 @@ impl<C: CommCost> ReplicaSim<C> {
     /// Hand a request to this replica.  Returns false when the batcher's
     /// admission cap sheds it; the shed is recorded in `metrics.rejected`.
     pub fn submit(&mut self, req: Request) -> bool {
+        self.metrics.submitted += 1;
+        let (id, arrival) = (req.id, req.arrival);
         let accepted = self.batcher.submit(req);
         if !accepted {
             self.metrics.rejected += 1;
+        } else if let Some(t) = self.trace.as_mut() {
+            t.arrival(id, arrival);
         }
         accepted
     }
@@ -273,6 +314,11 @@ impl<C: CommCost> ReplicaSim<C> {
     /// Requests queued or in service — the join-shortest-queue signal.
     pub fn queue_depth(&self) -> usize {
         self.batcher.waiting_len() + self.batcher.running_len()
+    }
+
+    /// Requests in the running batch — the telemetry occupancy gauge.
+    pub fn running_len(&self) -> usize {
+        self.batcher.running_len()
     }
 
     /// Tokens still owed to queued + running requests — the
@@ -353,6 +399,7 @@ impl<C: CommCost> ReplicaSim<C> {
         self.in_flight = Some(InFlight {
             prefill: plan.prefill,
             decode: plan.decode,
+            start,
             finish,
             iter_time,
         });
@@ -419,9 +466,19 @@ impl<C: CommCost> ReplicaSim<C> {
         let handoff = self.scheduler.prompt_done() == PromptDisposition::FinishAndHandoff;
         for c in &p.prefill {
             let arrival = self.batcher.get(c.id).unwrap().req.arrival;
+            if let Some(t) = self.trace.as_mut() {
+                t.span(c.id, self.id, SpanKind::PrefillChunk, p.start, p.finish);
+            }
             if self.batcher.advance_prefill(c.id, c.tokens, p.finish) {
                 // the completing chunk emits the first token
-                self.metrics.record_first_token(p.finish - arrival);
+                let ttft = p.finish - arrival;
+                self.metrics.record_first_token(ttft);
+                if self.slo_deadline.is_some_and(|d| ttft <= d) {
+                    self.metrics.ttft_ok += 1;
+                }
+                if let Some(t) = self.trace.as_mut() {
+                    t.first_token(c.id, p.finish);
+                }
                 if handoff {
                     self.batcher.finish_now(c.id);
                 }
@@ -430,12 +487,18 @@ impl<C: CommCost> ReplicaSim<C> {
         for id in &p.decode {
             self.metrics.record_inter_token(p.iter_time);
             self.batcher.complete_decode_token(*id, p.finish);
+            if let Some(t) = self.trace.as_mut() {
+                t.span(*id, self.id, SpanKind::DecodeIter, p.start, p.finish);
+            }
         }
         for done in self.batcher.retire(&mut self.kv) {
             if handoff {
                 self.handoffs.push(done.req.clone());
             } else {
                 self.metrics.record_completion(done.req.len_in, done.req.len_out);
+                if let Some(t) = self.trace.as_mut() {
+                    t.completion(done.req.id, p.finish);
+                }
             }
         }
         self.clock = p.finish;
@@ -693,6 +756,48 @@ mod tests {
             chunked < fcfs,
             "quantum must bound the worst decode stall: chunked {chunked} !< fcfs {fcfs}"
         );
+    }
+
+    #[test]
+    fn traced_replica_partitions_latency_and_changes_nothing() {
+        let run = |traced: bool| {
+            let mut r = replica(None);
+            if traced {
+                r = r.with_tracing();
+            }
+            for id in 0..6 {
+                r.submit(Request { id, arrival: 0.0, len_in: 300, len_out: 12 });
+            }
+            let mut now = 0.0;
+            while let Some(t) = r.step(now) {
+                now = t;
+            }
+            let trace = r.take_trace();
+            (now, r.metrics.completed, r.metrics.ttft_summary().mean, trace)
+        };
+        let (t0, c0, m0, none) = run(false);
+        let (t1, c1, m1, some) = run(true);
+        assert!(none.is_none(), "tracing is off by default");
+        assert_eq!((t0, c0, m0), (t1, c1, m1), "tracing must not perturb the sim");
+        let trace = some.expect("trace recorded");
+        assert_eq!(trace.requests_completed(), 6);
+        for row in trace.rollup() {
+            assert!(row.residual.abs() < 1e-9, "req {}: residual {}", row.req, row.residual);
+        }
+    }
+
+    #[test]
+    fn slo_deadline_counts_attaining_first_tokens() {
+        let mut r = replica(None).with_slo_deadline(Some(1e9));
+        for id in 0..4 {
+            r.submit(Request { id, arrival: 0.0, len_in: 128, len_out: 4 });
+        }
+        let mut now = 0.0;
+        while let Some(t) = r.step(now) {
+            now = t;
+        }
+        assert_eq!(r.metrics.ttft_ok, 4, "an infinite deadline admits every first token");
+        assert_eq!(r.metrics.submitted, 4);
     }
 
     #[test]

@@ -73,6 +73,7 @@ pub fn policy_sweep(
                 slo,
                 disagg: None,
                 sched: SchedPolicy::Fcfs,
+                obs: crate::obs::ObsConfig::default(),
             };
             let rep = simulate_fleet(model, replica_cluster, &cfg, &serving, &trace, seed);
             let t = rep.metrics.ttft_summary();

@@ -15,6 +15,7 @@ pub mod gantt;
 pub mod grammar;
 pub mod moe;
 pub mod netsim;
+pub mod obs;
 pub mod partitioner;
 pub mod paperbench;
 pub mod pipeline;

@@ -9,7 +9,14 @@
 //!   fleetsweep  routing policy x traffic pattern comparison table
 //!   disagg    colocated vs P/D-disaggregated fleet over arrival rate
 //!   chunked   TTFT/ITL vs scheduler quantum (prompt-/decode-heavy traces)
+//!   trace     latency-attribution table; --out exports Chrome-trace JSON,
+//!             --check validates an existing export
 //!   fig3|fig4|fig10|fig11|fig12|table1   regenerate a paper artifact
+//!
+//! Observability flags (simulate / fleet / disagg):
+//!   --trace PATH  re-run the primary configuration with span tracing
+//!                 (and, on fleets, 1s-windowed telemetry) and write the
+//!                 validated Chrome-trace JSON to PATH
 //!
 //! Disaggregation flags (simulate / fleet / plan):
 //!   --disagg      phase-disaggregate: a prefill pool and a decode pool
@@ -38,21 +45,22 @@
 
 use anyhow::{bail, Result};
 use mixserve::analyzer::indicators::Workload;
-use mixserve::analyzer::latency::Phase;
+use mixserve::analyzer::latency::{CommMode, Phase};
 use mixserve::analyzer::search::{Analyzer, Objective};
 use mixserve::baselines::all_systems;
 use mixserve::cluster::sweep::{policy_sweep, render as render_sweep};
 use mixserve::cluster::{
-    simulate_fleet, DisaggConfig, FleetConfig, FleetPlanner, RoutingPolicy, SloPolicy,
+    simulate_fleet, DisaggConfig, FleetConfig, FleetPlanner, ObsConfig, RoutingPolicy, SloPolicy,
 };
 use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use mixserve::grammar::parse_strategy;
-use mixserve::paperbench::{chunked, disagg, fig10, fig11, fig12, fig3, fig4, table1};
+use mixserve::obs;
+use mixserve::paperbench::{attribution, chunked, disagg, fig10, fig11, fig12, fig3, fig4, table1};
 use mixserve::pipeline::PipelineCfg;
 use mixserve::runtime::Engine;
 use mixserve::serving::engine::RealEngine;
 use mixserve::serving::scheduler::SchedPolicy;
-use mixserve::serving::sim::run_rate_sched;
+use mixserve::serving::sim::{run_rate_sched, run_rate_traced};
 use mixserve::timing::{CommCost, NetSimCost};
 use mixserve::util::cli::Args;
 use mixserve::workload::{ArrivalPattern, TraceGen};
@@ -126,6 +134,87 @@ fn sched_from_args(args: &Args) -> Result<SchedPolicy> {
         .ok_or_else(|| anyhow::anyhow!("unknown scheduler {name:?} (fcfs | chunked)"))
 }
 
+/// Render, validate, and write a Chrome-trace export.  The document is
+/// checked *before* it hits disk — an export the validator rejects is a
+/// bug, not an artifact.
+fn write_trace(
+    path: &str,
+    trace: &obs::Trace,
+    telemetry: Option<&obs::FleetTelemetry>,
+) -> Result<()> {
+    let json = obs::chrome::chrome_trace_json(trace, telemetry);
+    let stats = obs::chrome::validate(&json)?;
+    std::fs::write(path, &json)?;
+    println!(
+        "wrote {path}: {} events ({} spans on {} tracks, {} counters) — \
+         open in chrome://tracing or ui.perfetto.dev",
+        stats.events, stats.spans, stats.tracks, stats.counters
+    );
+    Ok(())
+}
+
+/// Run a fleet config with full observability on and export the result.
+#[allow(clippy::too_many_arguments)]
+fn export_fleet_trace(
+    path: &str,
+    model: &MoEModelConfig,
+    pod: &ClusterConfig,
+    cfg: &FleetConfig,
+    serving: &ServingConfig,
+    trace: &[mixserve::workload::Request],
+    seed: u64,
+) -> Result<()> {
+    let mut tcfg = cfg.clone();
+    tcfg.obs = ObsConfig::full(1.0);
+    let rep = simulate_fleet(model, pod, &tcfg, serving, trace, seed);
+    let t = rep.trace.ok_or_else(|| anyhow::anyhow!("traced fleet returned no trace"))?;
+    write_trace(path, &t, rep.telemetry.as_ref())
+}
+
+/// `trace` subcommand: the latency-attribution table (colocated vs
+/// chunked vs disagg on the same prompt-heavy trace), plus `--out` to
+/// export a traced run as Chrome-trace JSON and `--check` to validate
+/// an existing export.
+fn cmd_trace(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("check") {
+        let src = std::fs::read_to_string(&path)?;
+        let stats = obs::chrome::validate(&src)?;
+        println!(
+            "{path}: OK — {} events ({} spans on {} tracks, {} counters)",
+            stats.events, stats.spans, stats.tracks, stats.counters
+        );
+        return Ok(());
+    }
+    let pod = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+    let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+    let duration = args.f64_or("duration", 20.0);
+    let seed = args.usize_or("seed", 7) as u64;
+    let rows = attribution::sweep(&model, &pod, duration, seed);
+    print!("{}", attribution::render(&model, &pod, &rows));
+    if let Some(path) = args.get("out") {
+        let rate = 4.0;
+        let serving = ServingConfig::paper_eval(rate);
+        let analyzer = Analyzer::new(&model, &pod, &serving);
+        let wl = Workload { rate: rate / 2.0, ..Workload::sharegpt(rate) };
+        let best = analyzer
+            .best(&wl, Objective::MaxThroughput)
+            .ok_or_else(|| anyhow::anyhow!("no feasible strategy on {}", pod.name))?;
+        let cfg = FleetConfig {
+            replicas: 2,
+            strategy: best.strategy,
+            policy: RoutingPolicy::JoinShortestQueue,
+            mode: CommMode::FusedAsync,
+            slo: None,
+            disagg: None,
+            sched: SchedPolicy::Fcfs,
+            obs: ObsConfig::default(),
+        };
+        let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
+        export_fleet_trace(&path, &model, &pod, &cfg, &serving, &trace, seed)?;
+    }
+    Ok(())
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let cluster = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
     let model = model_by_name(&args.get_or("model", "deepseek-r1"))?;
@@ -194,6 +283,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                  see ROADMAP)"
             );
         }
+        if args.get("trace").is_some() {
+            bail!("--trace with --disagg lives on the fleet: use `fleet --disagg --trace PATH`");
+        }
         // colocated vs phase-disaggregated on 2 pods, same trace
         let rows = disagg::sweep(&model, &cluster, &[rate], duration, 7);
         print!("{}", disagg::render(&model, &cluster, &rows));
@@ -231,6 +323,19 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             sched,
         );
         println!("{}", rep.metrics.report(&format!("{:<22}", sys.label)));
+    }
+    if let Some(path) = args.get("trace") {
+        if skew > 0.0 || !pipeline.is_off() {
+            bail!("--trace composes with --sched only; drop --skew/--overlap/--chunks");
+        }
+        let sys = all_systems(&cluster)
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no baseline systems for {}", cluster.name))?;
+        let rep =
+            run_rate_traced(&model, &cluster, &sys.strategy, sys.mode, rate, duration, 7, sched);
+        let t = rep.trace.ok_or_else(|| anyhow::anyhow!("traced run returned no trace"))?;
+        write_trace(&path, &t, None)?;
     }
     Ok(())
 }
@@ -357,10 +462,11 @@ fn cmd_fleet_disagg(
         replicas: total_replicas,
         strategy: fa.strategy,
         policy: RoutingPolicy::JoinShortestQueue,
-        mode: mixserve::analyzer::latency::CommMode::FusedAsync,
+        mode: CommMode::FusedAsync,
         slo: fa.slo,
         disagg,
         sched: SchedPolicy::Fcfs,
+        obs: ObsConfig::default(),
     };
     println!(
         "disagg fleet: {prefill_replicas} prefill x ({prefill_strategy}) + \
@@ -391,6 +497,15 @@ fn cmd_fleet_disagg(
         h.p99 * 1e3
     );
     println!("{}", colo.metrics.report("colocated JSQ       "));
+    if let Some(path) = args.get("trace") {
+        let cfg = mk(Some(DisaggConfig {
+            prefill_replicas,
+            decode_replicas,
+            prefill_strategy,
+            decode_strategy,
+        }));
+        export_fleet_trace(&path, &fa.model, &fa.pod, &cfg, &fa.serving, trace, fa.seed)?;
+    }
     Ok(())
 }
 
@@ -427,10 +542,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             replicas: fa.replicas,
             strategy: fa.strategy,
             policy,
-            mode: mixserve::analyzer::latency::CommMode::FusedAsync,
+            mode: CommMode::FusedAsync,
             slo: fa.slo,
             disagg: None,
             sched,
+            obs: ObsConfig::default(),
         };
         let rep = simulate_fleet(&fa.model, &fa.pod, &cfg, &fa.serving, &trace, fa.seed);
         let t = rep.metrics.ttft_summary();
@@ -444,6 +560,19 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             rep.metrics.throughput(),
             rep.metrics.rejection_rate() * 100.0
         );
+    }
+    if let Some(path) = args.get("trace") {
+        let cfg = FleetConfig {
+            replicas: fa.replicas,
+            strategy: fa.strategy,
+            policy: RoutingPolicy::JoinShortestQueue,
+            mode: CommMode::FusedAsync,
+            slo: fa.slo,
+            disagg: None,
+            sched,
+            obs: ObsConfig::default(),
+        };
+        export_fleet_trace(&path, &fa.model, &fa.pod, &cfg, &fa.serving, &trace, fa.seed)?;
     }
     Ok(())
 }
@@ -565,12 +694,38 @@ fn main() -> Result<()> {
         "fleet" => cmd_fleet(&args)?,
         "plan" => cmd_plan(&args)?,
         "fleetsweep" => cmd_fleetsweep(&args)?,
+        "trace" => cmd_trace(&args)?,
         "disagg" => {
             let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
             let m = model_by_name(&args.get_or("model", "deepseek-r1"))?;
             let duration = args.f64_or("duration", 30.0);
             let rows = disagg::sweep(&m, &c, &[2.0, 4.0, 8.0], duration, 7);
             print!("{}", disagg::render(&m, &c, &rows));
+            if let Some(path) = args.get("trace") {
+                // export one traced 1P+1D run at the middle rate
+                let rate = 4.0;
+                let serving = ServingConfig::paper_eval(rate);
+                let pair = Analyzer::new(&m, &c, &serving)
+                    .best_disagg(&Workload::sharegpt(rate))
+                    .ok_or_else(|| anyhow::anyhow!("no feasible disagg pair on {}", c.name))?;
+                let cfg = FleetConfig {
+                    replicas: 2,
+                    strategy: pair.prefill.strategy,
+                    policy: RoutingPolicy::JoinShortestQueue,
+                    mode: CommMode::FusedAsync,
+                    slo: None,
+                    disagg: Some(DisaggConfig {
+                        prefill_replicas: 1,
+                        decode_replicas: 1,
+                        prefill_strategy: pair.prefill.strategy,
+                        decode_strategy: pair.decode.strategy,
+                    }),
+                    sched: SchedPolicy::Fcfs,
+                    obs: ObsConfig::default(),
+                };
+                let trace = TraceGen::sharegpt(rate, serving.max_seq, 7).generate(duration);
+                export_fleet_trace(&path, &m, &c, &cfg, &serving, &trace, 7)?;
+            }
         }
         "chunked" => {
             // TTFT/ITL vs scheduler quantum on a prompt-heavy and a
@@ -643,7 +798,13 @@ fn main() -> Result<()> {
                  \x20 chunked   [--model M] [--cluster POD] [--duration S]\n\
                  \x20           (TTFT/ITL vs scheduler quantum, prompt- and\n\
                  \x20            decode-heavy traces)\n\
+                 \x20 trace     [--model M] [--cluster POD] [--duration S]\n\
+                 \x20           [--out FILE] [--check FILE]\n\
+                 \x20           (latency attribution by span kind across colocated,\n\
+                 \x20            chunked, and disagg; --out writes Chrome-trace JSON,\n\
+                 \x20            --check validates an exported file)\n\
                  \x20 fig3|fig4|fig10|fig11|fig12|table1   regenerate paper artifacts\n\n\
+                 simulate/fleet/disagg also take --trace PATH to export a traced run\n\
                  models: deepseek-r1 qwen3 tiny | clusters: h20 ascend910b localhost"
             );
         }

@@ -1,0 +1,255 @@
+//! Chrome-trace (Trace Event Format) export and validation.
+//!
+//! The export loads directly into `chrome://tracing` or
+//! <https://ui.perfetto.dev>: one *process* per replica, one *thread*
+//! per span kind (the gantt lane vocabulary), complete `"X"` events
+//! for spans, and `"C"` counter tracks for the windowed fleet
+//! telemetry.  Timestamps are microseconds, per the format.
+//!
+//! | sim concept                | trace event                               |
+//! |----------------------------|-------------------------------------------|
+//! | replica                    | process (`pid` = replica id)              |
+//! | span kind                  | thread (`tid` = `SpanKind::index()`)      |
+//! | `ReqSpan`                  | `"X"` complete event, `args.req` = id     |
+//! | telemetry window           | `"C"` counter sample at the fleet process |
+
+use std::collections::BTreeSet;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::telemetry::FleetTelemetry;
+use super::{SpanKind, Trace};
+use crate::util::json::Json;
+
+/// Synthetic process id for the fleet-level counter tracks, far above
+/// any plausible replica id.
+pub const FLEET_PID: usize = 1_000_000;
+
+const SECS_TO_US: f64 = 1e6;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn meta(name: &str, pid: usize, tid: Option<usize>, value: &str) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str(name.into())),
+        ("pid", Json::Num(pid as f64)),
+        ("args", obj(vec![("name", Json::Str(value.into()))])),
+    ];
+    if let Some(tid) = tid {
+        pairs.push(("tid", Json::Num(tid as f64)));
+    }
+    obj(pairs)
+}
+
+fn counter(name: &str, t0: f64, value: f64) -> Option<Json> {
+    if !t0.is_finite() || !value.is_finite() {
+        return None;
+    }
+    Some(obj(vec![
+        ("ph", Json::Str("C".into())),
+        ("name", Json::Str(name.into())),
+        ("pid", Json::Num(FLEET_PID as f64)),
+        ("tid", Json::Num(0.0)),
+        ("ts", Json::Num(t0 * SECS_TO_US)),
+        ("args", obj(vec![("value", Json::Num(value))])),
+    ]))
+}
+
+/// Render a recorded trace (plus optional windowed telemetry) as a
+/// Chrome-trace JSON document.  Non-finite spans are skipped rather
+/// than emitted as invalid JSON.
+pub fn chrome_trace_json(trace: &Trace, telemetry: Option<&FleetTelemetry>) -> String {
+    let timeline = trace.timeline();
+    let mut events: Vec<Json> = Vec::new();
+
+    let replicas: BTreeSet<usize> = timeline.iter().map(|s| s.replica).collect();
+    for &pid in &replicas {
+        events.push(meta("process_name", pid, None, &format!("replica {pid}")));
+        for kind in SpanKind::ALL {
+            events.push(meta("thread_name", pid, Some(kind.index()), kind.label()));
+        }
+    }
+
+    // timeline() is sorted by start, so each (pid, tid) track is
+    // emitted with non-decreasing ts — the invariant validate() checks
+    for s in &timeline {
+        if !s.start.is_finite() || !s.end.is_finite() || s.end < s.start {
+            continue;
+        }
+        events.push(obj(vec![
+            ("ph", Json::Str("X".into())),
+            ("name", Json::Str(s.kind.label().into())),
+            ("cat", Json::Str("request".into())),
+            ("pid", Json::Num(s.replica as f64)),
+            ("tid", Json::Num(s.kind.index() as f64)),
+            ("ts", Json::Num(s.start * SECS_TO_US)),
+            ("dur", Json::Num(s.duration() * SECS_TO_US)),
+            ("args", obj(vec![("req", Json::Num(s.req as f64))])),
+        ]));
+    }
+
+    if let Some(tel) = telemetry {
+        events.push(meta("process_name", FLEET_PID, None, "fleet"));
+        for w in &tel.fleet {
+            events.extend(counter("queue_depth", w.t0, w.queue_depth as f64));
+            events.extend(counter("batch_occupancy", w.t0, w.occupancy as f64));
+            events.extend(counter("tokens_per_s", w.t0, w.tokens_per_s()));
+            events.extend(counter("kv_bytes_in_flight", w.t0, w.handoff_bytes));
+            events.extend(counter("slo_attainment", w.t0, w.slo_attainment()));
+            events.extend(counter("rejection_rate", w.t0, w.rejection_rate()));
+        }
+    }
+
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+    .render()
+}
+
+/// Counts from a validated Chrome-trace document.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ChromeStats {
+    pub events: usize,
+    pub spans: usize,
+    pub counters: usize,
+    /// Distinct (pid, tid) span tracks.
+    pub tracks: usize,
+}
+
+/// Validate an exported document: it parses, `traceEvents` is a
+/// non-empty array, every span has finite `ts` and non-negative `dur`,
+/// and `ts` is monotone (non-decreasing) within each track — `(pid,
+/// tid)` for spans, `(pid, name)` for counters.
+pub fn validate(src: &str) -> Result<ChromeStats> {
+    let doc = Json::parse(src).map_err(|e| anyhow!("chrome trace does not parse: {e}"))?;
+    let events = doc
+        .req("traceEvents")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("traceEvents is not an array"))?;
+    if events.is_empty() {
+        bail!("traceEvents is empty");
+    }
+    let mut stats = ChromeStats { events: events.len(), ..Default::default() };
+    let mut span_tracks: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut last_ts: std::collections::BTreeMap<(String, usize, usize, String), f64> =
+        std::collections::BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .req("ph")?
+            .as_str()
+            .ok_or_else(|| anyhow!("event {i}: ph is not a string"))?
+            .to_string();
+        if ph == "M" {
+            continue;
+        }
+        let pid = ev.req("pid")?.as_usize().ok_or_else(|| anyhow!("event {i}: bad pid"))?;
+        let ts = ev.req("ts")?.as_f64().ok_or_else(|| anyhow!("event {i}: bad ts"))?;
+        if !ts.is_finite() {
+            bail!("event {i}: non-finite ts");
+        }
+        let key = match ph.as_str() {
+            "X" => {
+                let tid =
+                    ev.req("tid")?.as_usize().ok_or_else(|| anyhow!("event {i}: bad tid"))?;
+                let dur = ev.req("dur")?.as_f64().ok_or_else(|| anyhow!("event {i}: bad dur"))?;
+                if !dur.is_finite() || dur < 0.0 {
+                    bail!("event {i}: bad span duration {dur}");
+                }
+                stats.spans += 1;
+                span_tracks.insert((pid, tid));
+                ("X".to_string(), pid, tid, String::new())
+            }
+            "C" => {
+                let name = ev
+                    .req("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("event {i}: counter without a name"))?
+                    .to_string();
+                stats.counters += 1;
+                ("C".to_string(), pid, 0, name)
+            }
+            other => bail!("event {i}: unsupported phase {other:?}"),
+        };
+        if let Some(&prev) = last_ts.get(&key) {
+            if ts < prev {
+                bail!("event {i}: ts {ts} goes backwards (track {key:?}, prev {prev})");
+            }
+        }
+        last_ts.insert(key, ts);
+    }
+    if stats.spans == 0 {
+        bail!("no span events in traceEvents");
+    }
+    stats.tracks = span_tracks.len();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new();
+        t.arrival(0, 0.0);
+        t.span(0, 0, SpanKind::PrefillChunk, 0.5, 1.0);
+        t.span(0, 0, SpanKind::KvHandoff, 1.0, 1.25);
+        t.span(0, 1, SpanKind::DecodeIter, 1.5, 1.75);
+        t.first_token(0, 1.0);
+        t.completion(0, 1.75);
+        t
+    }
+
+    #[test]
+    fn export_roundtrips_through_the_validator() {
+        let json = chrome_trace_json(&sample_trace(), None);
+        let stats = validate(&json).unwrap();
+        // 3 recorded + 2 derived wait spans
+        assert_eq!(stats.spans, 5);
+        assert_eq!(stats.counters, 0);
+        assert!(stats.tracks >= 4, "prefill/handoff/decode/wait lanes expected");
+    }
+
+    #[test]
+    fn telemetry_becomes_counter_tracks() {
+        let mut tb = super::super::TelemetryBuilder::new(1.0, vec!["colocated"], false);
+        tb.roll(
+            2.0,
+            &[super::super::telemetry::ReplicaSnapshot { tokens: 64, ..Default::default() }],
+            128.0,
+            0,
+        );
+        let tel = tb.finish();
+        let json = chrome_trace_json(&sample_trace(), Some(&tel));
+        let stats = validate(&json).unwrap();
+        assert_eq!(stats.counters, 2 * 6);
+        assert!(json.contains("kv_bytes_in_flight"));
+    }
+
+    #[test]
+    fn validator_rejects_broken_documents() {
+        assert!(validate("not json").is_err());
+        assert!(validate(r#"{"traceEvents":[]}"#).is_err());
+        // backwards ts within one track
+        let bad = r#"{"traceEvents":[
+            {"ph":"X","name":"a","pid":0,"tid":0,"ts":5,"dur":1,"args":{}},
+            {"ph":"X","name":"a","pid":0,"tid":0,"ts":1,"dur":1,"args":{}}]}"#;
+        assert!(validate(bad).is_err());
+        // negative duration
+        let neg = r#"{"traceEvents":[
+            {"ph":"X","name":"a","pid":0,"tid":0,"ts":1,"dur":-2,"args":{}}]}"#;
+        assert!(validate(neg).is_err());
+    }
+
+    #[test]
+    fn non_finite_spans_are_skipped_not_emitted() {
+        let mut t = sample_trace();
+        t.span(9, 0, SpanKind::DecodeIter, f64::NAN, 2.0);
+        let json = chrome_trace_json(&t, None);
+        assert!(validate(&json).is_ok());
+        assert!(!json.contains("NaN"));
+    }
+}

@@ -1,0 +1,463 @@
+//! End-to-end observability: per-request span tracing, latency
+//! attribution, windowed fleet telemetry, and Chrome-trace export.
+//!
+//! The serving sim and the fleet loop emit **work** spans only —
+//! [`SpanKind::PrefillChunk`] and [`SpanKind::DecodeIter`] over the
+//! iterations that actually touched a request, and
+//! [`SpanKind::KvHandoff`] over the timed KV transfer — plus three
+//! point marks (arrival, first token, completion).  The **wait** spans
+//! ([`SpanKind::QueueWait`], [`SpanKind::DecodeQueue`]) are derived at
+//! rollup time as the gaps between consecutive work spans, classified
+//! by the kind of the span that ends the gap.  Built this way the
+//! rollup *partitions* end-to-end latency by construction, and the
+//! conservation test asserts the residual is ~0 rather than assuming
+//! it: any overlap between recorded spans, or any trailing gap after
+//! the last span, shows up as a non-zero [`ReqAttribution::residual`].
+//!
+//! Tracing is off by default and costs nothing when disabled: the
+//! recorder lives behind an `Option` in [`crate::cluster::ReplicaSim`]
+//! and never perturbs event timing.
+
+pub mod chrome;
+pub mod telemetry;
+
+use std::collections::BTreeMap;
+
+pub use telemetry::{
+    FleetTelemetry, ReplicaSnapshot, ReplicaTelemetry, TelemetryBuilder, WindowSample,
+};
+
+/// What a request was doing during a span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// Derived: waiting for a prefill slot (gap ending in a
+    /// `PrefillChunk` or `KvHandoff` span).
+    QueueWait,
+    /// Recorded: an iteration that advanced this request's prefill.
+    PrefillChunk,
+    /// Recorded: the timed KV transfer from a prefill to a decode pool.
+    KvHandoff,
+    /// Derived: waiting for a decode slot (gap ending in a
+    /// `DecodeIter` span).
+    DecodeQueue,
+    /// Recorded: an iteration that generated one token for this request.
+    DecodeIter,
+}
+
+impl SpanKind {
+    pub const COUNT: usize = 5;
+    pub const ALL: [SpanKind; Self::COUNT] = [
+        SpanKind::QueueWait,
+        SpanKind::PrefillChunk,
+        SpanKind::KvHandoff,
+        SpanKind::DecodeQueue,
+        SpanKind::DecodeIter,
+    ];
+
+    /// Stable index into `[f64; SpanKind::COUNT]` attribution arrays.
+    pub fn index(self) -> usize {
+        match self {
+            SpanKind::QueueWait => 0,
+            SpanKind::PrefillChunk => 1,
+            SpanKind::KvHandoff => 2,
+            SpanKind::DecodeQueue => 3,
+            SpanKind::DecodeIter => 4,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::QueueWait => "queue-wait",
+            SpanKind::PrefillChunk => "prefill",
+            SpanKind::KvHandoff => "kv-handoff",
+            SpanKind::DecodeQueue => "decode-queue",
+            SpanKind::DecodeIter => "decode",
+        }
+    }
+
+    /// Wait kinds are derived at rollup; work kinds are recorded live.
+    pub fn is_wait(self) -> bool {
+        matches!(self, SpanKind::QueueWait | SpanKind::DecodeQueue)
+    }
+}
+
+/// One timed interval in a request's lifecycle, tagged with the replica
+/// that did the work (for `KvHandoff`, the prefill-side replica).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReqSpan {
+    pub req: usize,
+    pub replica: usize,
+    pub kind: SpanKind,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl ReqSpan {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Observability knobs carried by `FleetConfig`.  Both default to off;
+/// a disabled field costs nothing in the event loop.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ObsConfig {
+    /// Record per-request spans (exposed as `FleetReport.trace`).
+    pub trace: bool,
+    /// Fixed telemetry window width in seconds (exposed as
+    /// `FleetReport.telemetry`).  `None` disables sampling.
+    pub window: Option<f64>,
+}
+
+impl ObsConfig {
+    pub fn tracing() -> Self {
+        ObsConfig { trace: true, window: None }
+    }
+
+    pub fn full(window: f64) -> Self {
+        ObsConfig { trace: true, window: Some(window) }
+    }
+}
+
+/// Per-request span recorder.  `BTreeMap`s keep every read-out
+/// deterministic (the sim itself is a pure function of trace + seed).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    spans: Vec<ReqSpan>,
+    arrivals: BTreeMap<usize, f64>,
+    first_tokens: BTreeMap<usize, f64>,
+    completions: BTreeMap<usize, f64>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn span(&mut self, req: usize, replica: usize, kind: SpanKind, start: f64, end: f64) {
+        self.spans.push(ReqSpan { req, replica, kind, start, end });
+    }
+
+    /// First writer wins: a handed-off request re-announces its arrival
+    /// on the decode pool with the same timestamp.
+    pub fn arrival(&mut self, req: usize, t: f64) {
+        self.arrivals.entry(req).or_insert(t);
+    }
+
+    pub fn first_token(&mut self, req: usize, t: f64) {
+        self.first_tokens.entry(req).or_insert(t);
+    }
+
+    pub fn completion(&mut self, req: usize, t: f64) {
+        self.completions.insert(req, t);
+    }
+
+    pub fn spans(&self) -> &[ReqSpan] {
+        &self.spans
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn requests_completed(&self) -> usize {
+        self.completions.len()
+    }
+
+    /// Merge another recorder (e.g. a per-replica trace) into this one.
+    pub fn absorb(&mut self, other: Trace) {
+        self.spans.extend(other.spans);
+        for (req, t) in other.arrivals {
+            self.arrivals.entry(req).or_insert(t);
+        }
+        for (req, t) in other.first_tokens {
+            self.first_tokens.entry(req).or_insert(t);
+        }
+        self.completions.extend(other.completions);
+    }
+
+    /// Per-request latency attribution for every *completed* request:
+    /// recorded work spans are summed by kind and the gaps between them
+    /// become the derived wait kinds.  `residual` is whatever part of
+    /// `completion - arrival` the partition failed to cover (overlap
+    /// between recorded spans drives it negative, a trailing gap after
+    /// the last span drives it positive); the conservation property
+    /// test pins it to ~0.
+    pub fn rollup(&self) -> Vec<ReqAttribution> {
+        let mut by_req: BTreeMap<usize, Vec<ReqSpan>> = BTreeMap::new();
+        for s in &self.spans {
+            by_req.entry(s.req).or_default().push(*s);
+        }
+        let mut out = Vec::with_capacity(self.completions.len());
+        for (&req, &completion) in &self.completions {
+            let Some(&arrival) = self.arrivals.get(&req) else { continue };
+            let mut spans = by_req.remove(&req).unwrap_or_default();
+            spans.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.end.total_cmp(&b.end)));
+            let mut by_kind = [0.0f64; SpanKind::COUNT];
+            let mut cursor = arrival;
+            for s in &spans {
+                if s.start > cursor {
+                    by_kind[gap_kind(s.kind).index()] += s.start - cursor;
+                    cursor = s.start;
+                }
+                by_kind[s.kind.index()] += s.end - s.start;
+                cursor = cursor.max(s.end);
+            }
+            let total = completion - arrival;
+            let attributed: f64 = by_kind.iter().sum();
+            out.push(ReqAttribution {
+                req,
+                arrival,
+                first_token: self.first_tokens.get(&req).copied(),
+                completion,
+                by_kind,
+                residual: total - attributed,
+            });
+        }
+        out
+    }
+
+    /// Recorded spans plus the derived wait spans of every completed
+    /// request, as drawable intervals (waits inherit the replica of the
+    /// work span that ends them).  Sorted by start time.
+    pub fn timeline(&self) -> Vec<ReqSpan> {
+        let mut out = self.spans.clone();
+        let mut by_req: BTreeMap<usize, Vec<ReqSpan>> = BTreeMap::new();
+        for s in &self.spans {
+            by_req.entry(s.req).or_default().push(*s);
+        }
+        for (&req, &arrival) in &self.arrivals {
+            let Some(mut spans) = by_req.remove(&req) else { continue };
+            spans.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.end.total_cmp(&b.end)));
+            let mut cursor = arrival;
+            for s in &spans {
+                if s.start > cursor {
+                    out.push(ReqSpan {
+                        req,
+                        replica: s.replica,
+                        kind: gap_kind(s.kind),
+                        start: cursor,
+                        end: s.start,
+                    });
+                }
+                cursor = cursor.max(s.end);
+            }
+        }
+        out.sort_by(|a, b| {
+            a.start
+                .total_cmp(&b.start)
+                .then(a.replica.cmp(&b.replica))
+                .then(a.req.cmp(&b.req))
+        });
+        out
+    }
+
+    /// Fleet-wide attribution over every completed request.
+    pub fn attribution(&self) -> LatencyAttribution {
+        LatencyAttribution::from_rows(&self.rollup())
+    }
+
+    /// Attribution restricted to the TTFT tail: requests whose first
+    /// token landed at or above the `q`-quantile of TTFT (round-index
+    /// convention, matching `util::stats::Summary`).  This is the
+    /// paperbench question — *where do the p99-TTFT milliseconds go?*
+    pub fn tail_attribution(&self, q: f64) -> LatencyAttribution {
+        let rows = self.rollup();
+        let mut ttfts: Vec<f64> = rows.iter().filter_map(|r| r.ttft()).collect();
+        if ttfts.is_empty() {
+            return LatencyAttribution::from_rows(&[]);
+        }
+        ttfts.sort_by(f64::total_cmp);
+        let idx = (((ttfts.len() - 1) as f64) * q).round() as usize;
+        let threshold = ttfts[idx.min(ttfts.len() - 1)];
+        let tail: Vec<ReqAttribution> =
+            rows.into_iter().filter(|r| r.ttft().is_some_and(|t| t >= threshold)).collect();
+        LatencyAttribution::from_rows(&tail)
+    }
+}
+
+/// Which wait kind a gap belongs to, classified by the work span that
+/// ends it: anything leading into prefill work (or its handoff) is a
+/// prefill-queue wait; anything leading into a decode iteration is a
+/// decode-slot wait.
+fn gap_kind(next: SpanKind) -> SpanKind {
+    match next {
+        SpanKind::DecodeIter | SpanKind::DecodeQueue => SpanKind::DecodeQueue,
+        _ => SpanKind::QueueWait,
+    }
+}
+
+/// One completed request's latency, partitioned by span kind.
+#[derive(Debug, Clone, Copy)]
+pub struct ReqAttribution {
+    pub req: usize,
+    pub arrival: f64,
+    pub first_token: Option<f64>,
+    pub completion: f64,
+    /// Seconds per kind, indexed by [`SpanKind::index`].
+    pub by_kind: [f64; SpanKind::COUNT],
+    /// `latency() - by_kind.sum()` — ~0 when the partition is exact.
+    pub residual: f64,
+}
+
+impl ReqAttribution {
+    pub fn latency(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token.map(|t| t - self.arrival)
+    }
+}
+
+/// Aggregate attribution over a set of requests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyAttribution {
+    pub requests: usize,
+    /// Summed end-to-end latency (seconds) across the set.
+    pub total: f64,
+    /// Summed seconds per kind, indexed by [`SpanKind::index`].
+    pub by_kind: [f64; SpanKind::COUNT],
+    pub max_abs_residual: f64,
+}
+
+impl LatencyAttribution {
+    pub fn from_rows(rows: &[ReqAttribution]) -> Self {
+        let mut out = LatencyAttribution { requests: rows.len(), ..Default::default() };
+        for r in rows {
+            out.total += r.latency();
+            for (acc, v) in out.by_kind.iter_mut().zip(r.by_kind) {
+                *acc += v;
+            }
+            out.max_abs_residual = out.max_abs_residual.max(r.residual.abs());
+        }
+        out
+    }
+
+    /// Fraction of total latency spent in `kind` (0 when empty).
+    pub fn share(&self, kind: SpanKind) -> f64 {
+        if self.total <= 0.0 {
+            0.0
+        } else {
+            self.by_kind[kind.index()] / self.total
+        }
+    }
+
+    pub fn shares(&self) -> [f64; SpanKind::COUNT] {
+        let mut out = [0.0; SpanKind::COUNT];
+        for (s, k) in out.iter_mut().zip(SpanKind::ALL) {
+            *s = self.share(k);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built disagg lifecycle: arrive 0, prefill [1,2], handoff
+    /// [2,3], decode iters [3.5,4] and [4,4.5], done at 4.5.  The
+    /// derived waits must be QueueWait [0,1] and DecodeQueue [3,3.5],
+    /// and the partition must be exact.
+    #[test]
+    fn rollup_partitions_a_disagg_lifecycle_exactly() {
+        let mut t = Trace::new();
+        t.arrival(7, 0.0);
+        t.span(7, 0, SpanKind::PrefillChunk, 1.0, 2.0);
+        t.span(7, 0, SpanKind::KvHandoff, 2.0, 3.0);
+        t.span(7, 1, SpanKind::DecodeIter, 3.5, 4.0);
+        t.span(7, 1, SpanKind::DecodeIter, 4.0, 4.5);
+        t.first_token(7, 2.0);
+        t.completion(7, 4.5);
+
+        let rows = t.rollup();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.by_kind[SpanKind::QueueWait.index()], 1.0);
+        assert_eq!(r.by_kind[SpanKind::PrefillChunk.index()], 1.0);
+        assert_eq!(r.by_kind[SpanKind::KvHandoff.index()], 1.0);
+        assert_eq!(r.by_kind[SpanKind::DecodeQueue.index()], 0.5);
+        assert_eq!(r.by_kind[SpanKind::DecodeIter.index()], 1.0);
+        assert!(r.residual.abs() < 1e-12, "residual {}", r.residual);
+        assert_eq!(r.ttft(), Some(2.0));
+
+        let agg = t.attribution();
+        assert_eq!(agg.requests, 1);
+        assert!((agg.total - 4.5).abs() < 1e-12);
+        let share_sum: f64 = agg.shares().iter().sum();
+        assert!((share_sum - 1.0).abs() < 1e-12);
+    }
+
+    /// Overlapping recorded spans must surface as a negative residual —
+    /// the conservation test exists to catch exactly this bug class.
+    #[test]
+    fn overlapping_spans_produce_negative_residual() {
+        let mut t = Trace::new();
+        t.arrival(0, 0.0);
+        t.span(0, 0, SpanKind::PrefillChunk, 0.0, 2.0);
+        t.span(0, 0, SpanKind::DecodeIter, 1.0, 3.0);
+        t.completion(0, 3.0);
+        let rows = t.rollup();
+        assert!(rows[0].residual < -0.9, "overlap must not be silently absorbed");
+    }
+
+    /// A trailing gap (completion after the last span) is a positive
+    /// residual, not silently attributed to any kind.
+    #[test]
+    fn trailing_gap_produces_positive_residual() {
+        let mut t = Trace::new();
+        t.arrival(0, 0.0);
+        t.span(0, 0, SpanKind::PrefillChunk, 0.0, 1.0);
+        t.completion(0, 2.0);
+        let rows = t.rollup();
+        assert!((rows[0].residual - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_merges_replica_traces_and_first_arrival_wins() {
+        let mut a = Trace::new();
+        a.arrival(1, 0.25);
+        a.span(1, 0, SpanKind::PrefillChunk, 0.25, 1.0);
+        let mut b = Trace::new();
+        b.arrival(1, 0.25);
+        b.span(1, 1, SpanKind::DecodeIter, 1.0, 1.5);
+        b.completion(1, 1.5);
+        a.absorb(b);
+        assert_eq!(a.len(), 2);
+        let rows = a.rollup();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].residual.abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_synthesizes_wait_intervals() {
+        let mut t = Trace::new();
+        t.arrival(3, 0.0);
+        t.span(3, 0, SpanKind::PrefillChunk, 1.0, 2.0);
+        t.completion(3, 2.0);
+        let tl = t.timeline();
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].kind, SpanKind::QueueWait);
+        assert_eq!((tl[0].start, tl[0].end), (0.0, 1.0));
+    }
+
+    #[test]
+    fn tail_attribution_keeps_only_the_slow_first_tokens() {
+        let mut t = Trace::new();
+        for req in 0..10 {
+            let ttft = 1.0 + req as f64; // req 9 is the slowest
+            t.arrival(req, 0.0);
+            t.span(req, 0, SpanKind::PrefillChunk, 0.5, ttft);
+            t.first_token(req, ttft);
+            t.completion(req, ttft);
+        }
+        let tail = t.tail_attribution(0.99);
+        assert_eq!(tail.requests, 1);
+        assert!((tail.total - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,325 @@
+//! Windowed fleet telemetry: fixed-width, left-closed windows
+//! `[k·w, (k+1)·w)` of per-replica and fleet-aggregate counters,
+//! sampled from the fleet event loop.
+//!
+//! The event loop is discrete: between one event time and the next,
+//! every counter is constant.  So the builder closes a window lazily —
+//! right before the loop advances from `now` to `next_t`, it closes
+//! every boundary in `(now, next_t]` using the current (pre-boundary)
+//! state.  Events *at* a boundary `t = (k+1)·w` belong to the next
+//! window, which is exactly the left-closed semantics.  The final
+//! partial window is dropped (the loop never rolls past the last
+//! event), so every emitted sample covers a full `w` seconds.
+//!
+//! This is the signal set the ROADMAP's elastic controller consumes:
+//! per-pool queue depth, batch occupancy, tokens/s, SLO attainment,
+//! rejection rate, and KV bytes in flight.
+
+/// Cumulative per-replica state captured by the fleet loop at a window
+/// close.  All counter fields are cumulative since t=0; the builder
+/// differences consecutive snapshots itself.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaSnapshot {
+    /// Requests waiting or running on the replica (gauge).
+    pub queue_depth: usize,
+    /// Requests actively in the running batch (gauge).
+    pub running: usize,
+    /// Cumulative tokens processed (prefill + decode).
+    pub tokens: usize,
+    pub completed: usize,
+    pub submitted: usize,
+    pub rejected: usize,
+    /// Cumulative first-token samples recorded.
+    pub ttft_n: usize,
+    /// Cumulative first tokens that met the TTFT deadline.
+    pub ttft_ok: usize,
+}
+
+/// One closed window of one replica (or the fleet aggregate).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WindowSample {
+    /// Window start; the window covers `[t0, t0 + window)`.
+    pub t0: f64,
+    pub window: f64,
+    /// Queue depth at window close (gauge).
+    pub queue_depth: usize,
+    /// Running-batch occupancy at window close (gauge).
+    pub occupancy: usize,
+    /// Tokens processed during this window.
+    pub tokens: usize,
+    pub completed: usize,
+    /// Requests offered during this window (accepted + shed).
+    pub offered: usize,
+    pub rejected: usize,
+    /// First tokens meeting the deadline this window (0 without SLO).
+    pub slo_ok: usize,
+    /// First tokens recorded this window (0 without an SLO policy).
+    pub slo_n: usize,
+    /// KV bytes in flight at window close (fleet rows only).
+    pub handoff_bytes: f64,
+}
+
+impl WindowSample {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.window > 0.0 {
+            self.tokens as f64 / self.window
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of this window's first tokens that met the deadline;
+    /// vacuously 1.0 when no SLO is configured or none landed.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.slo_n == 0 {
+            1.0
+        } else {
+            self.slo_ok as f64 / self.slo_n as f64
+        }
+    }
+
+    pub fn rejection_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.offered as f64
+        }
+    }
+
+    /// Accumulate another sample into this one (pool aggregation).
+    fn accumulate(&mut self, o: &WindowSample) {
+        self.queue_depth += o.queue_depth;
+        self.occupancy += o.occupancy;
+        self.tokens += o.tokens;
+        self.completed += o.completed;
+        self.offered += o.offered;
+        self.rejected += o.rejected;
+        self.slo_ok += o.slo_ok;
+        self.slo_n += o.slo_n;
+        self.handoff_bytes += o.handoff_bytes;
+    }
+}
+
+/// One replica's windowed series, tagged with its pool role.
+#[derive(Debug, Clone)]
+pub struct ReplicaTelemetry {
+    pub replica: usize,
+    /// `Role::label()` of the replica ("colocated" | "prefill" | "decode").
+    pub role: &'static str,
+    pub samples: Vec<WindowSample>,
+}
+
+/// The windowed series of a whole fleet run: one track per replica
+/// plus the fleet aggregate (which also carries front-door sheds and
+/// KV bytes in flight).
+#[derive(Debug, Clone)]
+pub struct FleetTelemetry {
+    pub window: f64,
+    pub replicas: Vec<ReplicaTelemetry>,
+    pub fleet: Vec<WindowSample>,
+}
+
+impl FleetTelemetry {
+    pub fn windows(&self) -> usize {
+        self.fleet.len()
+    }
+
+    /// Sum the windowed series of every replica whose role matches —
+    /// the per-pool signal the elastic controller reads.
+    pub fn pool(&self, role: &str) -> Vec<WindowSample> {
+        let mut out: Vec<WindowSample> = Vec::new();
+        for r in self.replicas.iter().filter(|r| r.role == role) {
+            if out.is_empty() {
+                out = r.samples.clone();
+            } else {
+                for (acc, s) in out.iter_mut().zip(&r.samples) {
+                    acc.accumulate(s);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Incremental window closer driven by the fleet event loop.
+#[derive(Debug)]
+pub struct TelemetryBuilder {
+    window: f64,
+    /// Whether an SLO policy is active; without one the attainment
+    /// counters are suppressed so `slo_attainment()` stays vacuous.
+    slo_aware: bool,
+    closed: usize,
+    prev: Vec<ReplicaSnapshot>,
+    prev_front_sheds: usize,
+    replicas: Vec<ReplicaTelemetry>,
+    fleet: Vec<WindowSample>,
+}
+
+impl TelemetryBuilder {
+    /// `roles` carries one `Role::label()` per replica, in replica order.
+    pub fn new(window: f64, roles: Vec<&'static str>, slo_aware: bool) -> Self {
+        let n = roles.len();
+        TelemetryBuilder {
+            window: window.max(1e-9),
+            slo_aware,
+            closed: 0,
+            prev: vec![ReplicaSnapshot::default(); n],
+            prev_front_sheds: 0,
+            replicas: roles
+                .into_iter()
+                .enumerate()
+                .map(|(replica, role)| ReplicaTelemetry { replica, role, samples: Vec::new() })
+                .collect(),
+            fleet: Vec::new(),
+        }
+    }
+
+    /// Cheap guard: does advancing the loop clock to `up_to` cross at
+    /// least one unclosed window boundary?
+    pub fn pending(&self, up_to: f64) -> bool {
+        (self.closed + 1) as f64 * self.window <= up_to
+    }
+
+    /// Close every window boundary in `(now, up_to]` with the current
+    /// pre-boundary state.  Counters in `snaps` are cumulative; the
+    /// builder differences them against the previous close, so a
+    /// quiet stretch spanning several windows yields zero-delta rows.
+    pub fn roll(
+        &mut self,
+        up_to: f64,
+        snaps: &[ReplicaSnapshot],
+        handoff_bytes: f64,
+        front_sheds: usize,
+    ) {
+        while (self.closed + 1) as f64 * self.window <= up_to {
+            let t0 = self.closed as f64 * self.window;
+            self.close_one(t0, snaps, handoff_bytes, front_sheds);
+            self.closed += 1;
+        }
+    }
+
+    fn close_one(
+        &mut self,
+        t0: f64,
+        snaps: &[ReplicaSnapshot],
+        handoff_bytes: f64,
+        front_sheds: usize,
+    ) {
+        let mut fleet_row =
+            WindowSample { t0, window: self.window, handoff_bytes, ..Default::default() };
+        for (i, (cur, prev)) in snaps.iter().zip(&self.prev).enumerate() {
+            let s = WindowSample {
+                t0,
+                window: self.window,
+                queue_depth: cur.queue_depth,
+                occupancy: cur.running,
+                tokens: cur.tokens - prev.tokens,
+                completed: cur.completed - prev.completed,
+                offered: cur.submitted - prev.submitted,
+                rejected: cur.rejected - prev.rejected,
+                slo_ok: if self.slo_aware { cur.ttft_ok - prev.ttft_ok } else { 0 },
+                slo_n: if self.slo_aware { cur.ttft_n - prev.ttft_n } else { 0 },
+                handoff_bytes: 0.0,
+            };
+            fleet_row.accumulate(&s);
+            self.replicas[i].samples.push(s);
+        }
+        // front-door sheds are offered-and-rejected before any replica
+        // sees them; only the fleet row carries them
+        fleet_row.handoff_bytes = handoff_bytes;
+        let front = front_sheds - self.prev_front_sheds;
+        fleet_row.offered += front;
+        fleet_row.rejected += front;
+        self.fleet.push(fleet_row);
+        self.prev.copy_from_slice(snaps);
+        self.prev_front_sheds = front_sheds;
+    }
+
+    pub fn finish(self) -> FleetTelemetry {
+        FleetTelemetry { window: self.window, replicas: self.replicas, fleet: self.fleet }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(tokens: usize, completed: usize, submitted: usize) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            queue_depth: 2,
+            running: 1,
+            tokens,
+            completed,
+            submitted,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn windows_are_left_closed_and_difference_cumulative_counters() {
+        let mut tb = TelemetryBuilder::new(1.0, vec!["colocated"], false);
+        // loop advances to t=1.0: the [0,1) window closes with the
+        // pre-boundary state
+        assert!(tb.pending(1.0));
+        tb.roll(1.0, &[snap(100, 1, 2)], 0.0, 0);
+        // advance to 2.5: [1,2) closes; [2,2.5) stays open
+        tb.roll(2.5, &[snap(250, 3, 5)], 7.0, 1);
+        let tel = tb.finish();
+        assert_eq!(tel.windows(), 2);
+        let r = &tel.replicas[0].samples;
+        assert_eq!(r[0].tokens, 100);
+        assert_eq!(r[1].tokens, 150, "second window must be the delta");
+        assert_eq!(r[1].completed, 2);
+        assert_eq!(r[1].offered, 3);
+        // the fleet row carries front-door sheds and handoff bytes
+        assert_eq!(tel.fleet[1].offered, 4);
+        assert_eq!(tel.fleet[1].rejected, 1);
+        assert_eq!(tel.fleet[1].handoff_bytes, 7.0);
+        assert!((tel.fleet[0].tokens_per_s() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn a_quiet_stretch_emits_zero_delta_windows() {
+        let mut tb = TelemetryBuilder::new(0.5, vec!["prefill"], false);
+        tb.roll(0.5, &[snap(10, 0, 1)], 0.0, 0);
+        // one long jump across three boundaries with unchanged state
+        tb.roll(2.0, &[snap(10, 0, 1)], 0.0, 0);
+        let tel = tb.finish();
+        assert_eq!(tel.windows(), 4);
+        for w in &tel.replicas[0].samples[1..] {
+            assert_eq!(w.tokens, 0);
+            assert_eq!(w.offered, 0);
+        }
+    }
+
+    #[test]
+    fn partial_last_window_is_dropped() {
+        let mut tb = TelemetryBuilder::new(1.0, vec!["colocated"], false);
+        tb.roll(1.7, &[snap(10, 1, 1)], 0.0, 0);
+        // the loop ends at t=1.7; [1,2) never closes
+        assert_eq!(tb.finish().windows(), 1);
+    }
+
+    #[test]
+    fn pool_sums_matching_replicas_only() {
+        let mut tb = TelemetryBuilder::new(1.0, vec!["prefill", "decode", "prefill"], true);
+        let s = |tokens| ReplicaSnapshot { tokens, ttft_n: 2, ttft_ok: 1, ..Default::default() };
+        tb.roll(1.0, &[s(10), s(20), s(30)], 0.0, 0);
+        let tel = tb.finish();
+        let prefill = tel.pool("prefill");
+        assert_eq!(prefill.len(), 1);
+        assert_eq!(prefill[0].tokens, 40);
+        assert_eq!(tel.pool("decode")[0].tokens, 20);
+        assert!(tel.pool("expert").is_empty());
+        assert!((prefill[0].slo_attainment() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attainment_is_vacuous_without_an_slo() {
+        let mut tb = TelemetryBuilder::new(1.0, vec!["colocated"], false);
+        tb.roll(1.0, &[ReplicaSnapshot { ttft_n: 5, ttft_ok: 0, ..Default::default() }], 0.0, 0);
+        let tel = tb.finish();
+        assert_eq!(tel.fleet[0].slo_n, 0);
+        assert!((tel.fleet[0].slo_attainment() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,174 @@
+//! Latency-attribution table (beyond the paper's figures): where the
+//! TTFT tail goes, per serving architecture, on one prompt-heavy trace.
+//!
+//! Every architecture sees the identical trace and pod shape; only the
+//! serving architecture changes between rows — colocated FCFS,
+//! colocated chunked-prefill, and 1P+1D disaggregation.  Each run is
+//! traced ([`crate::obs`]), the tail requests (TTFT at or above the
+//! p99 threshold) are rolled up, and the row reports each span kind's
+//! share of their end-to-end latency.  This is the table that says
+//! *why* an architecture's tail is what it is: FCFS tails are
+//! queue-wait, chunked tails shift into prefill slices, disagg tails
+//! pay the KV handoff and decode-queue instead.
+
+use crate::analyzer::indicators::Workload;
+use crate::analyzer::latency::CommMode;
+use crate::analyzer::search::{Analyzer, Objective};
+use crate::cluster::{simulate_fleet, DisaggConfig, FleetConfig, ObsConfig, RoutingPolicy};
+use crate::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use crate::obs::SpanKind;
+use crate::serving::scheduler::SchedPolicy;
+use crate::workload::{fixed_shape_trace, Request};
+
+/// Tail quantile the table attributes (requests with TTFT ≥ p99).
+pub const TAIL_Q: f64 = 0.99;
+
+/// One architecture's tail-attribution row.
+#[derive(Debug, Clone)]
+pub struct AttributionRow {
+    pub arch: String,
+    pub completed: usize,
+    /// requests in the attributed tail (TTFT ≥ the p99 threshold)
+    pub tail_requests: usize,
+    pub ttft_p99_ms: f64,
+    /// share of the tail's end-to-end latency per span kind, indexed
+    /// by [`SpanKind::index`]
+    pub shares: [f64; SpanKind::COUNT],
+    /// worst per-request conservation residual across the whole trace
+    pub max_residual: f64,
+}
+
+fn run_arch(
+    arch: &str,
+    model: &MoEModelConfig,
+    pod: &ClusterConfig,
+    cfg: &FleetConfig,
+    serving: &ServingConfig,
+    trace: &[Request],
+    seed: u64,
+) -> Option<AttributionRow> {
+    let rep = simulate_fleet(model, pod, cfg, serving, trace, seed);
+    let t = rep.trace?;
+    let whole = t.attribution();
+    let tail = t.tail_attribution(TAIL_Q);
+    Some(AttributionRow {
+        arch: arch.to_string(),
+        completed: rep.metrics.completed,
+        tail_requests: tail.requests,
+        ttft_p99_ms: rep.metrics.ttft_summary().p99 * 1e3,
+        shares: tail.shares(),
+        max_residual: whole.max_abs_residual,
+    })
+}
+
+/// Run the attribution comparison: colocated FCFS, colocated chunked
+/// prefill, and — when the analyzer finds a per-phase pair — 1P+1D
+/// disaggregation, all traced over the same prompt-heavy trace.
+pub fn sweep(
+    model: &MoEModelConfig,
+    pod: &ClusterConfig,
+    duration: f64,
+    seed: u64,
+) -> Vec<AttributionRow> {
+    let rate = 4.0;
+    let serving = ServingConfig::paper_eval(rate);
+    let cap = serving.max_seq;
+    let trace = fixed_shape_trace(rate, duration, (cap / 2).clamp(1, 1536), 64);
+    let analyzer = Analyzer::new(model, pod, &serving);
+    // the colocated fleet splits arrivals over its 2 replicas; the
+    // disagg pools each see the full rate (same pricing as the disagg
+    // sweep)
+    let colo_wl = Workload { rate: rate / 2.0, ..Workload::sharegpt(rate) };
+    let Some(colo_best) = analyzer.best(&colo_wl, Objective::MaxThroughput) else {
+        return Vec::new();
+    };
+    let colo_cfg = FleetConfig {
+        replicas: 2,
+        strategy: colo_best.strategy,
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: None,
+        disagg: None,
+        sched: SchedPolicy::Fcfs,
+        obs: ObsConfig::tracing(),
+    };
+    let chunked_cfg =
+        FleetConfig { sched: SchedPolicy::Chunked { quantum: 256 }, ..colo_cfg.clone() };
+    let mut rows = Vec::new();
+    rows.extend(run_arch("colocated", model, pod, &colo_cfg, &serving, &trace, seed));
+    rows.extend(run_arch("chunked", model, pod, &chunked_cfg, &serving, &trace, seed));
+    if let Some(pair) = analyzer.best_disagg(&Workload::sharegpt(rate)) {
+        let dis_cfg = FleetConfig {
+            disagg: Some(DisaggConfig {
+                prefill_replicas: 1,
+                decode_replicas: 1,
+                prefill_strategy: pair.prefill.strategy,
+                decode_strategy: pair.decode.strategy,
+            }),
+            sched: SchedPolicy::Fcfs,
+            ..colo_cfg
+        };
+        rows.extend(run_arch("disagg", model, pod, &dis_cfg, &serving, &trace, seed));
+    }
+    rows
+}
+
+/// Render the attribution table: one row per architecture, one share
+/// column per span kind.
+pub fn render(model: &MoEModelConfig, pod: &ClusterConfig, rows: &[AttributionRow]) -> String {
+    let mut out = format!(
+        "Latency attribution — {} on {} (share of tail latency by span kind, TTFT ≥ p99)\n\
+         {:<10} {:>6} {:>5} {:>10}",
+        model.name, pod.name, "arch", "done", "tail", "TTFT p99"
+    );
+    for kind in SpanKind::ALL {
+        out.push_str(&format!(" {:>12}", kind.label()));
+    }
+    out.push_str(&format!(" {:>10}\n", "residual"));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<10} {:>6} {:>5} {:>8.1}ms",
+            r.arch, r.completed, r.tail_requests, r.ttft_p99_ms
+        ));
+        for kind in SpanKind::ALL {
+            out.push_str(&format!(" {:>11.1}%", r.shares[kind.index()] * 100.0));
+        }
+        out.push_str(&format!(" {:>10.2e}\n", r.max_residual));
+    }
+    if rows.is_empty() {
+        out.push_str("(no feasible strategy on this pod shape)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attribution_runs_on_the_localhost_grid() {
+        // the CI smoke shape: tiny model on the 2-node localhost grid
+        let model = MoEModelConfig::tiny();
+        let pod = ClusterConfig::localhost(2, 4);
+        let rows = sweep(&model, &pod, 5.0, 7);
+        assert!(rows.len() >= 2, "colocated and chunked rows always run");
+        assert!(rows.iter().any(|r| r.arch == "colocated"));
+        assert!(rows.iter().any(|r| r.arch == "chunked"));
+        for r in &rows {
+            assert!(r.completed > 0, "{} served nothing", r.arch);
+            assert!(r.tail_requests > 0, "{} attributed an empty tail", r.arch);
+            assert!(r.max_residual < 1e-6, "{} leaks latency: {}", r.arch, r.max_residual);
+            let sum: f64 = r.shares.iter().sum();
+            assert!(
+                r.shares.iter().all(|s| (0.0..=1.0).contains(s)),
+                "{} shares out of range: {:?}",
+                r.arch,
+                r.shares
+            );
+            assert!((sum - 1.0).abs() < 1e-6, "{} shares sum to {}", r.arch, sum);
+        }
+        let rendered = render(&model, &pod, &rows);
+        assert!(rendered.contains("Latency attribution"));
+        assert!(rendered.contains("queue-wait"));
+    }
+}

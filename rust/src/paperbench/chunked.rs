@@ -168,8 +168,10 @@ mod tests {
         };
         let fcfs = get(None);
         let fine = get(Some(SWEEP_QUANTA[0]));
+        // 2% slack: ITL series this long live in the P² sketch, whose
+        // p99 is an estimate rather than the exact order statistic
         assert!(
-            fine.itl_p99_ms <= fcfs.itl_p99_ms * 1.0001,
+            fine.itl_p99_ms <= fcfs.itl_p99_ms * 1.02,
             "128-token quantum must bound the decode stall: {} !<= {}",
             fine.itl_p99_ms,
             fcfs.itl_p99_ms

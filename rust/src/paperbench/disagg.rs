@@ -67,6 +67,7 @@ pub fn sweep(
             slo: None,
             disagg: None,
             sched: SchedPolicy::Fcfs,
+            obs: crate::obs::ObsConfig::default(),
         };
         let dis_cfg = FleetConfig {
             disagg: Some(DisaggConfig {

@@ -3,6 +3,7 @@
 //! prints the same rows/series the paper reports (shape reproduction —
 //! see EXPERIMENTS.md for paper-vs-measured).
 
+pub mod attribution;
 pub mod chunked;
 pub mod disagg;
 pub mod fig10;

@@ -11,6 +11,16 @@ pub struct ServingMetrics {
     pub tokens_in: usize,
     pub completed: usize,
     pub rejected: usize,
+    /// Requests offered to this engine (accepted **or** shed).  Engines
+    /// that count this (the replica sim does, at `submit`) make
+    /// [`ServingMetrics::offered`] exact even while the trace is still
+    /// draining; engines that leave it 0 fall back to
+    /// `completed + rejected`, which is only exact once fully drained.
+    pub submitted: usize,
+    /// First tokens that met the TTFT deadline (only counted when an
+    /// SLO deadline is configured on the engine) — the numerator of the
+    /// windowed SLO-attainment telemetry signal.
+    pub ttft_ok: usize,
     pub duration: f64,
 }
 
@@ -58,11 +68,25 @@ impl ServingMetrics {
         self.itl.summary()
     }
 
-    /// Fraction of offered requests shed by admission control.  After a
-    /// trace fully drains, `completed + rejected` equals the offered
-    /// request count, so this is rejected / offered.
+    /// Requests offered so far: the explicit `submitted` counter when
+    /// the engine maintains one, else the `completed + rejected`
+    /// fallback.  The fallback undercounts while requests are still in
+    /// flight (a partially-drained trace), which is exactly the case
+    /// the explicit counter fixes.
+    pub fn offered(&self) -> usize {
+        if self.submitted > 0 {
+            self.submitted
+        } else {
+            self.completed + self.rejected
+        }
+    }
+
+    /// Fraction of offered requests shed by admission control:
+    /// `rejected / offered()`.  With the explicit `submitted` counter
+    /// this is exact at any point of the run; with the fallback it is
+    /// exact only after the trace fully drains.
     pub fn rejection_rate(&self) -> f64 {
-        let offered = self.completed + self.rejected;
+        let offered = self.offered();
         if offered == 0 {
             return 0.0;
         }
@@ -72,6 +96,13 @@ impl ServingMetrics {
     /// Fold another replica's metrics into this one (fleet aggregation):
     /// latency samples are pooled, counters summed, and the duration is
     /// the max (replicas run concurrently, not back-to-back).
+    ///
+    /// Pooling exactness: while both sides' series are below the exact
+    /// cap (`util::stats::EXACT_CAP`) — and whenever both sides are
+    /// still exact — the pooled series keeps every raw sample, so the
+    /// merged p99 is sample-exact.  Once a side has migrated to the P²
+    /// sketch the pooled quantiles are estimates whose error is bounded
+    /// by the gap between the subgroup quantiles (see `Series`).
     pub fn merge(&mut self, other: &ServingMetrics) {
         self.ttft.extend_from(&other.ttft);
         self.itl.extend_from(&other.itl);
@@ -79,6 +110,8 @@ impl ServingMetrics {
         self.tokens_in += other.tokens_in;
         self.completed += other.completed;
         self.rejected += other.rejected;
+        self.submitted += other.submitted;
+        self.ttft_ok += other.ttft_ok;
         self.duration = self.duration.max(other.duration);
     }
 
@@ -156,6 +189,22 @@ mod tests {
         assert_eq!(a.tokens_in, 300);
         assert_eq!(a.duration, 8.0);
         assert!((a.rejection_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offered_prefers_the_explicit_counter_mid_drain() {
+        // partially-drained trace: 10 offered, 1 shed, only 3 done yet
+        let mut m = ServingMetrics::new();
+        m.submitted = 10;
+        m.rejected = 1;
+        m.completed = 3;
+        assert_eq!(m.offered(), 10);
+        assert!((m.rejection_rate() - 0.1).abs() < 1e-12);
+        // without the counter the fallback undercounts until drained
+        let mut f = ServingMetrics::new();
+        f.rejected = 1;
+        f.completed = 3;
+        assert_eq!(f.offered(), 4);
     }
 
     #[test]

@@ -1,5 +1,9 @@
 //! Descriptive statistics: mean/std/percentiles for latency series
 //! (the paper reports averages with std error bars plus P99).
+//!
+//! [`Series`] is exact up to [`EXACT_CAP`] samples and then migrates to
+//! a streaming P² quantile sketch (Jain & Chlamtac, CACM 1985), so a
+//! million-request trace no longer holds a million `f64`s per metric.
 
 /// Total-order ascending sort of f64 samples: NaN sorts to the end
 /// (after +∞) instead of panicking the way per-call-site
@@ -9,7 +13,7 @@ pub fn sort_f64(xs: &mut [f64]) {
     xs.sort_by(f64::total_cmp);
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Summary {
     pub n: usize,
     pub mean: f64,
@@ -48,11 +52,270 @@ impl Summary {
     }
 }
 
-/// Streaming histogram-free percentile collector (stores samples; serving
-/// runs are small enough that exact percentiles are fine).
+/// Sample count up to which a [`Series`] stores raw values and reports
+/// exact percentiles.  The 1025th push migrates the series to the P²
+/// sketch.
+pub const EXACT_CAP: usize = 1024;
+
+/// The quantiles a sketched series tracks (matching [`Summary`]).
+const SKETCH_QUANTILES: [f64; 3] = [0.50, 0.90, 0.99];
+
+/// Desired P² marker positions for `n` observed samples at quantile `p`.
+fn desired_positions(n: f64, p: f64) -> [f64; 5] {
+    [
+        1.0,
+        1.0 + (n - 1.0) * p / 2.0,
+        1.0 + (n - 1.0) * p,
+        1.0 + (n - 1.0) * (1.0 + p) / 2.0,
+        n,
+    ]
+}
+
+/// One P² (piecewise-parabolic) streaming quantile estimator: five
+/// markers whose heights track {min, p/2, p, (1+p)/2, max} of the
+/// stream in O(1) memory.
+#[derive(Debug, Clone)]
+struct P2 {
+    p: f64,
+    /// Samples observed.  Below 5, `q[..cnt]` holds raw sorted samples.
+    cnt: usize,
+    /// Marker heights.
+    q: [f64; 5],
+    /// Actual marker positions (1-based sample ranks).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+}
+
+impl P2 {
+    fn new(p: f64) -> Self {
+        P2 { p, cnt: 0, q: [0.0; 5], pos: [0.0; 5], np: [0.0; 5] }
+    }
+
+    fn observe(&mut self, x: f64) {
+        if self.cnt < 5 {
+            // initialization: insertion-sort the first five samples
+            let mut i = self.cnt;
+            while i > 0 && self.q[i - 1] > x {
+                self.q[i] = self.q[i - 1];
+                i -= 1;
+            }
+            self.q[i] = x;
+            self.cnt += 1;
+            if self.cnt == 5 {
+                self.pos = [1.0, 2.0, 3.0, 4.0, 5.0];
+                self.np = desired_positions(5.0, self.p);
+            }
+            return;
+        }
+        // locate the marker cell containing x, stretching the extremes
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 3;
+            for i in 1..5 {
+                if x < self.q[i] {
+                    k = i - 1;
+                    break;
+                }
+            }
+            k
+        };
+        for pos in &mut self.pos[k + 1..] {
+            *pos += 1.0;
+        }
+        let dn = [0.0, self.p / 2.0, self.p, (1.0 + self.p) / 2.0, 1.0];
+        for (np, d) in self.np.iter_mut().zip(dn) {
+            *np += d;
+        }
+        // nudge interior markers toward their desired positions
+        for i in 1..4 {
+            let d = self.np[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let s = if d >= 0.0 { 1.0 } else { -1.0 };
+                let parabolic = self.parabolic(i, s);
+                self.q[i] = if self.q[i - 1] < parabolic && parabolic < self.q[i + 1] {
+                    parabolic
+                } else {
+                    self.linear(i, s)
+                };
+                self.pos[i] += s;
+            }
+        }
+        self.cnt += 1;
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (q, n) = (&self.q, &self.pos);
+        q[i] + s / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + s * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    fn value(&self) -> f64 {
+        match self.cnt {
+            0 => 0.0,
+            c if c < 5 => {
+                // still raw samples: exact round-index percentile
+                let idx = ((c as f64 - 1.0) * self.p).round() as usize;
+                self.q[idx.min(c - 1)]
+            }
+            _ => self.q[2],
+        }
+    }
+
+    /// Approximate pooled merge.  Raw-sample sides are replayed exactly;
+    /// two converged estimators combine by taking the count-weighted
+    /// average of the interior marker heights (extremes take min/max)
+    /// and re-seating the positions at the combined count's desired
+    /// spots.  The pooled quantile always lies between the two inputs'
+    /// estimates, so the merge error is bounded by their gap.
+    fn merge_weighted(&mut self, other: &P2) {
+        if other.cnt == 0 {
+            return;
+        }
+        if self.cnt == 0 {
+            *self = other.clone();
+            return;
+        }
+        if other.cnt < 5 {
+            for &x in &other.q[..other.cnt] {
+                self.observe(x);
+            }
+            return;
+        }
+        if self.cnt < 5 {
+            let mut merged = other.clone();
+            for &x in &self.q[..self.cnt] {
+                merged.observe(x);
+            }
+            *self = merged;
+            return;
+        }
+        let (wa, wb) = (self.cnt as f64, other.cnt as f64);
+        let w = wa + wb;
+        self.q[0] = self.q[0].min(other.q[0]);
+        self.q[4] = self.q[4].max(other.q[4]);
+        for (a, &b) in self.q[1..4].iter_mut().zip(&other.q[1..4]) {
+            *a = (*a * wa + b * wb) / w;
+        }
+        self.cnt += other.cnt;
+        self.np = desired_positions(self.cnt as f64, self.p);
+        self.pos = self.np;
+    }
+}
+
+/// Constant-memory stand-in for the raw sample vector: three P²
+/// estimators plus Welford mean/variance and exact min/max.
+#[derive(Debug, Clone)]
+struct Sketch {
+    quantiles: [P2; 3],
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Sketch {
+    fn new() -> Self {
+        Sketch {
+            quantiles: [
+                P2::new(SKETCH_QUANTILES[0]),
+                P2::new(SKETCH_QUANTILES[1]),
+                P2::new(SKETCH_QUANTILES[2]),
+            ],
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn observe(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x.is_nan() {
+            // a NaN poisons mean/std (as in the exact path) but must
+            // not corrupt the quantile marker invariants
+            return;
+        }
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        for q in &mut self.quantiles {
+            q.observe(x);
+        }
+    }
+
+    /// Chan et al. combine for mean/M2; weighted P² merge for quantiles.
+    fn merge(&mut self, other: &Sketch) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let delta = other.mean - self.mean;
+        self.m2 += other.m2 + delta * delta * na * nb / (na + nb);
+        self.mean += delta * nb / (na + nb);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (a, b) in self.quantiles.iter_mut().zip(&other.quantiles) {
+            a.merge_weighted(b);
+        }
+        self.n += other.n;
+    }
+
+    fn summary(&self) -> Summary {
+        Summary {
+            n: self.n,
+            mean: self.mean,
+            std: if self.n > 0 { (self.m2.max(0.0) / self.n as f64).sqrt() } else { 0.0 },
+            min: self.min,
+            p50: self.quantiles[0].value(),
+            p90: self.quantiles[1].value(),
+            p99: self.quantiles[2].value(),
+            max: self.max,
+        }
+    }
+}
+
+/// Latency sample collector behind the [`Summary`] API.
+///
+/// * Up to [`EXACT_CAP`] pushed samples the series stores raw values
+///   and `summary()` is exact (`Summary::of`).
+/// * The push that exceeds the cap migrates every stored sample into a
+///   P² sketch; from then on memory is O(1) and percentiles are
+///   streaming estimates.  Identical push streams produce identical
+///   sketches, so determinism pins are unaffected.
+/// * [`Series::extend_from`] keeps **exact + exact** merges exact even
+///   past the cap (the fleet aggregation path: pooled p99 over merged
+///   replica series stays sample-exact).  A merge that involves a
+///   sketched side stays sketched: exact samples are replayed into the
+///   sketch one by one (still a true streaming fold), and
+///   sketch + sketch combines marker heights by count-weighted average
+///   — the pooled quantile lies between the two subgroup estimates, so
+///   the merge error is bounded by their gap.
 #[derive(Debug, Clone, Default)]
 pub struct Series {
     xs: Vec<f64>,
+    sketch: Option<Box<Sketch>>,
 }
 
 impl Series {
@@ -61,28 +324,69 @@ impl Series {
     }
 
     pub fn push(&mut self, x: f64) {
-        self.xs.push(x);
+        if let Some(sketch) = self.sketch.as_mut() {
+            sketch.observe(x);
+            return;
+        }
+        if self.xs.len() < EXACT_CAP {
+            self.xs.push(x);
+            return;
+        }
+        let mut sketch = Box::new(Sketch::new());
+        for &v in &self.xs {
+            sketch.observe(v);
+        }
+        sketch.observe(x);
+        self.xs = Vec::new();
+        self.sketch = Some(sketch);
     }
 
     pub fn len(&self) -> usize {
-        self.xs.len()
+        match &self.sketch {
+            Some(sketch) => sketch.n,
+            None => self.xs.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.xs.is_empty()
+        self.len() == 0
     }
 
     pub fn summary(&self) -> Summary {
-        Summary::of(&self.xs)
+        match &self.sketch {
+            Some(sketch) => sketch.summary(),
+            None => Summary::of(&self.xs),
+        }
     }
 
+    /// Raw samples while the series is exact; **empty once sketched**
+    /// (the samples no longer exist).  Exact-mode determinism pins can
+    /// keep comparing sample-for-sample; past [`EXACT_CAP`] they should
+    /// compare `summary()` fields instead.
     pub fn values(&self) -> &[f64] {
         &self.xs
     }
 
-    /// Append all of `other`'s samples (fleet-level metric aggregation).
+    /// Pool all of `other`'s samples into `self` (fleet-level metric
+    /// aggregation).  Exactness rules are documented on [`Series`].
     pub fn extend_from(&mut self, other: &Series) {
-        self.xs.extend_from_slice(&other.xs);
+        match (self.sketch.as_mut(), &other.sketch) {
+            (None, None) => self.xs.extend_from_slice(&other.xs),
+            (Some(sketch), None) => {
+                for &x in &other.xs {
+                    sketch.observe(x);
+                }
+            }
+            (None, Some(other_sketch)) => {
+                let mut sketch = other_sketch.clone();
+                for &x in &self.xs {
+                    sketch.observe(x);
+                }
+                self.xs = Vec::new();
+                self.sketch = Some(sketch);
+            }
+            (Some(sketch), Some(other_sketch)) => sketch.merge(other_sketch),
+        }
     }
 }
 
@@ -141,6 +445,7 @@ pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn summary_of_known_series() {
@@ -169,6 +474,105 @@ mod tests {
         }
         assert_eq!(s.len(), 10);
         assert!((s.summary().mean - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_path_is_bit_for_bit_below_the_cap() {
+        let mut rng = Rng::seed_from_u64(11);
+        let xs: Vec<f64> = (0..EXACT_CAP).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        let mut s = Series::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.values(), &xs[..], "below the cap every sample is retained");
+        assert_eq!(s.summary(), Summary::of(&xs));
+    }
+
+    /// The satellite acceptance: on a heavy-tailed stream the sketch
+    /// tracks the exact summary — mean/min/max tight, quantiles within
+    /// estimator tolerance.
+    #[test]
+    fn sketch_matches_exact_on_heavy_tailed_samples() {
+        let mut rng = Rng::seed_from_u64(42);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.lognormal(0.0, 1.5)).collect();
+        let mut s = Series::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!(s.values().is_empty(), "past the cap raw samples are gone");
+        assert_eq!(s.len(), xs.len());
+        let (sk, ex) = (s.summary(), Summary::of(&xs));
+        assert_eq!(sk.n, ex.n);
+        assert_eq!(sk.min, ex.min);
+        assert_eq!(sk.max, ex.max);
+        assert!((sk.mean - ex.mean).abs() / ex.mean < 1e-9);
+        assert!((sk.std - ex.std).abs() / ex.std < 1e-9);
+        for (got, want, tol, name) in [
+            (sk.p50, ex.p50, 0.10, "p50"),
+            (sk.p90, ex.p90, 0.10, "p90"),
+            (sk.p99, ex.p99, 0.25, "p99"),
+        ] {
+            assert!(
+                (got - want).abs() / want < tol,
+                "{name}: sketch {got} vs exact {want} (tol {tol})"
+            );
+        }
+        assert!(sk.p50 <= sk.p90 && sk.p90 <= sk.p99);
+    }
+
+    /// Fleet aggregation pools per-replica series with `extend_from`;
+    /// when both sides are exact the pool must stay exact even past the
+    /// cap (the documented merged-p99 guarantee).
+    #[test]
+    fn exact_merge_stays_exact_past_the_cap() {
+        let mut rng = Rng::seed_from_u64(3);
+        let xs: Vec<f64> = (0..800).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        let ys: Vec<f64> = (0..800).map(|_| rng.lognormal(0.5, 1.0)).collect();
+        let mk = |vals: &[f64]| {
+            let mut s = Series::new();
+            for &v in vals {
+                s.push(v);
+            }
+            s
+        };
+        let mut pooled = mk(&xs);
+        pooled.extend_from(&mk(&ys));
+        assert_eq!(pooled.len(), 1600);
+        let mut all = xs.clone();
+        all.extend_from_slice(&ys);
+        assert_eq!(pooled.values(), &all[..]);
+        assert_eq!(pooled.summary(), Summary::of(&all));
+    }
+
+    /// Sketch + sketch merges are approximate with a known bound: the
+    /// pooled quantile estimate lies between the two subgroup
+    /// estimates.
+    #[test]
+    fn sketched_merge_lands_between_the_subgroup_quantiles() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mk = |mu: f64, n: usize, rng: &mut Rng| {
+            let mut s = Series::new();
+            for _ in 0..n {
+                s.push(rng.lognormal(mu, 1.0));
+            }
+            s
+        };
+        let a = mk(0.0, 3000, &mut rng);
+        let b = mk(1.0, 5000, &mut rng);
+        let (qa, qb) = (a.summary(), b.summary());
+        let mut pooled = a;
+        pooled.extend_from(&b);
+        assert_eq!(pooled.len(), 8000);
+        let q = pooled.summary();
+        for (got, lo, hi) in [
+            (q.p50, qa.p50.min(qb.p50), qa.p50.max(qb.p50)),
+            (q.p90, qa.p90.min(qb.p90), qa.p90.max(qb.p90)),
+            (q.p99, qa.p99.min(qb.p99), qa.p99.max(qb.p99)),
+        ] {
+            assert!(lo - 1e-12 <= got && got <= hi + 1e-12, "{got} outside [{lo}, {hi}]");
+        }
+        assert_eq!(q.min, qa.min.min(qb.min));
+        assert_eq!(q.max, qa.max.max(qb.max));
     }
 
     #[test]

@@ -7,7 +7,8 @@ use mixserve::analyzer::indicators::Workload;
 use mixserve::analyzer::latency::CommMode;
 use mixserve::analyzer::search::{Analyzer, Objective};
 use mixserve::cluster::{
-    carve_replicas, simulate_fleet, FleetConfig, FleetPlanner, RoutingPolicy, SloPolicy,
+    carve_replicas, simulate_fleet, FleetConfig, FleetPlanner, ObsConfig, RoutingPolicy,
+    SloPolicy,
 };
 use mixserve::cluster::sweep::policy_sweep;
 use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
@@ -23,6 +24,7 @@ fn fleet_cfg(replicas: usize, policy: RoutingPolicy, slo: Option<SloPolicy>) -> 
         slo,
         disagg: None,
         sched: SchedPolicy::Fcfs,
+        obs: ObsConfig::default(),
     }
 }
 

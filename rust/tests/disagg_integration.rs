@@ -7,7 +7,7 @@ use mixserve::analyzer::indicators::Workload;
 use mixserve::analyzer::latency::CommMode;
 use mixserve::analyzer::search::{Analyzer, Objective};
 use mixserve::cluster::{
-    simulate_fleet, DisaggConfig, FleetConfig, FleetPlanner, RoutingPolicy,
+    simulate_fleet, DisaggConfig, FleetConfig, FleetPlanner, ObsConfig, RoutingPolicy,
 };
 use mixserve::config::{ClusterConfig, MoEModelConfig, ServingConfig};
 use mixserve::serving::scheduler::SchedPolicy;
@@ -103,6 +103,7 @@ fn disagg_beats_colocated_ttft_p99_under_prompt_heavy_load() {
         slo: None,
         disagg: None,
         sched: SchedPolicy::Fcfs,
+        obs: ObsConfig::default(),
     };
     let colo = simulate_fleet(&model, &pod, &base, &serving, &trace, 17);
     let dis_cfg = FleetConfig {
@@ -171,6 +172,7 @@ fn one_replica_colocated_fleet_reproduces_the_serving_sim_exactly() {
             slo: None,
             disagg: None,
             sched: SchedPolicy::Fcfs,
+            obs: ObsConfig::default(),
         },
         &serving,
         &trace,
@@ -205,6 +207,7 @@ fn disagg_fleet_is_deterministic() {
             decode_strategy: mixserve::config::ParallelStrategy::mixserve(2, 8),
         }),
         sched: SchedPolicy::Fcfs,
+        obs: ObsConfig::default(),
     };
     let a = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 5);
     let b = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 5);

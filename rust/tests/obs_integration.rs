@@ -1,0 +1,207 @@
+//! Observability integration: the zero-cost pin (tracing and telemetry
+//! must not perturb the simulation), the span-conservation property
+//! across all three architectures (FCFS, chunked, disagg), windowed
+//! telemetry semantics on a real fleet run, and the Chrome-trace export
+//! round-trip.
+
+use mixserve::analyzer::latency::CommMode;
+use mixserve::cluster::{
+    simulate_fleet, DisaggConfig, FleetConfig, ObsConfig, RoutingPolicy, SloPolicy,
+};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use mixserve::obs::{chrome, SpanKind};
+use mixserve::serving::scheduler::SchedPolicy;
+use mixserve::testkit::forall;
+use mixserve::util::rng::Rng;
+use mixserve::workload::TraceGen;
+
+/// The three serving architectures the spans must partition.
+#[derive(Debug, Clone, Copy)]
+enum Arch {
+    Fcfs,
+    Chunked(usize),
+    Disagg,
+}
+
+fn fleet_cfg(arch: Arch, obs: ObsConfig, slo: Option<SloPolicy>) -> FleetConfig {
+    FleetConfig {
+        replicas: 2,
+        strategy: ParallelStrategy::mixserve(4, 8),
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo,
+        disagg: match arch {
+            Arch::Disagg => Some(DisaggConfig {
+                prefill_replicas: 1,
+                decode_replicas: 1,
+                prefill_strategy: ParallelStrategy::mixserve(4, 8),
+                decode_strategy: ParallelStrategy::pure_ep(4, 8),
+            }),
+            _ => None,
+        },
+        sched: match arch {
+            Arch::Chunked(q) => SchedPolicy::Chunked { quantum: q },
+            _ => SchedPolicy::Fcfs,
+        },
+        obs,
+    }
+}
+
+/// Observability must be free when enabled and absent when disabled:
+/// the traced+telemetered run reproduces the plain run sample-for-sample.
+#[test]
+fn observability_is_zero_cost_when_disabled_and_inert_when_enabled() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let serving = ServingConfig::paper_eval(6.0);
+    let trace = TraceGen::sharegpt(6.0, serving.max_seq, 23).generate(12.0);
+    for arch in [Arch::Fcfs, Arch::Chunked(256), Arch::Disagg] {
+        let plain = simulate_fleet(
+            &model,
+            &pod,
+            &fleet_cfg(arch, ObsConfig::default(), None),
+            &serving,
+            &trace,
+            23,
+        );
+        let traced = simulate_fleet(
+            &model,
+            &pod,
+            &fleet_cfg(arch, ObsConfig::full(0.5), None),
+            &serving,
+            &trace,
+            23,
+        );
+        assert!(plain.trace.is_none() && plain.telemetry.is_none());
+        assert!(traced.trace.is_some() && traced.telemetry.is_some());
+        assert_eq!(plain.metrics.completed, traced.metrics.completed, "{arch:?}");
+        assert_eq!(plain.metrics.rejected, traced.metrics.rejected, "{arch:?}");
+        assert_eq!(plain.metrics.submitted, traced.metrics.submitted, "{arch:?}");
+        assert_eq!(plain.metrics.duration, traced.metrics.duration, "{arch:?}");
+        assert_eq!(plain.metrics.ttft.summary(), traced.metrics.ttft.summary(), "{arch:?}");
+        assert_eq!(plain.metrics.itl.summary(), traced.metrics.itl.summary(), "{arch:?}");
+        assert_eq!(
+            plain.kv_handoff.summary(),
+            traced.kv_handoff.summary(),
+            "{arch:?} handoffs diverge"
+        );
+    }
+}
+
+/// Conservation property: on every architecture, for every completed
+/// request, the typed spans partition `completion - arrival` exactly —
+/// no negative durations, no non-finite endpoints, |residual| ≤ 1e-9.
+#[test]
+fn prop_spans_partition_latency_on_every_architecture() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    forall(
+        "span conservation",
+        9,
+        29,
+        |r: &mut Rng| {
+            let arch = match r.below(3) {
+                0 => Arch::Fcfs,
+                1 => Arch::Chunked([128, 256, 512][r.below(3)]),
+                _ => Arch::Disagg,
+            };
+            let rate = r.range_f64(2.0, 6.0);
+            let duration = r.range_f64(4.0, 8.0);
+            (arch, rate, duration, r.next_u64())
+        },
+        |&(arch, rate, duration, seed)| {
+            let serving = ServingConfig::paper_eval(rate);
+            let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
+            let cfg = fleet_cfg(arch, ObsConfig::tracing(), None);
+            let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, seed);
+            let t = rep.trace.as_ref().ok_or("no trace recorded")?;
+            for s in t.spans() {
+                if !s.start.is_finite() || !s.end.is_finite() {
+                    return Err(format!("non-finite span {s:?}"));
+                }
+                if s.end < s.start {
+                    return Err(format!("negative duration {s:?}"));
+                }
+            }
+            if t.requests_completed() != rep.metrics.completed {
+                return Err(format!(
+                    "trace saw {} completions, metrics {}",
+                    t.requests_completed(),
+                    rep.metrics.completed
+                ));
+            }
+            for row in t.rollup() {
+                if row.residual.abs() > 1e-9 {
+                    return Err(format!(
+                        "req {} leaks {:.3e}s of latency (by_kind {:?})",
+                        row.req, row.residual, row.by_kind
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Windowed telemetry semantics on a real run: fixed-width left-closed
+/// windows, cumulative counters differenced per window, fleet row =
+/// sum of replica rows, partial trailing window dropped.
+#[test]
+fn telemetry_windows_are_fixed_width_and_consistent() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let serving = ServingConfig::paper_eval(8.0);
+    let trace = TraceGen::sharegpt(8.0, serving.max_seq, 31).generate(15.0);
+    let slo = Some(SloPolicy { ttft_deadline: 8.0 });
+    let cfg = fleet_cfg(Arch::Fcfs, ObsConfig::full(1.0), slo);
+    let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 31);
+    let tel = rep.telemetry.expect("telemetry on");
+    assert!(tel.windows() >= 14, "15s of load closes at least 14 full 1s windows");
+    assert_eq!(tel.replicas.len(), 2);
+    for r in &tel.replicas {
+        assert_eq!(r.role, "colocated");
+        assert_eq!(r.samples.len(), tel.windows(), "every track has every window");
+    }
+    for (k, w) in tel.fleet.iter().enumerate() {
+        assert_eq!(w.window, 1.0);
+        assert!((w.t0 - k as f64).abs() < 1e-12, "windows start at k*w");
+        let rep_tokens: usize = tel.replicas.iter().map(|r| r.samples[k].tokens).sum();
+        assert_eq!(w.tokens, rep_tokens, "fleet row sums the replica rows");
+        assert!((0.0..=1.0).contains(&w.slo_attainment()));
+    }
+    let total_completed: usize = tel.fleet.iter().map(|w| w.completed).sum();
+    assert!(
+        total_completed <= rep.metrics.completed,
+        "windowed completions cannot exceed the final count"
+    );
+    let slo_n: usize = tel.fleet.iter().map(|w| w.slo_n).sum();
+    assert!(slo_n > 0, "an SLO run must record attainment denominators");
+    let pooled = tel.pool("colocated");
+    assert_eq!(pooled.len(), tel.windows());
+    assert_eq!(pooled[0].tokens, tel.fleet[0].tokens, "one-pool fleet: pool == fleet");
+}
+
+/// Chrome-trace export round-trip on a disagg fleet: the JSON validates,
+/// carries KV-handoff spans and fleet counter tracks, and the handoff
+/// share of the attribution is visible.
+#[test]
+fn chrome_export_roundtrips_with_handoff_spans_and_counters() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let serving = ServingConfig::paper_eval(4.0);
+    let trace = TraceGen::sharegpt(4.0, serving.max_seq, 37).generate(10.0);
+    let cfg = fleet_cfg(Arch::Disagg, ObsConfig::full(1.0), None);
+    let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 37);
+    let t = rep.trace.expect("trace on");
+    let json = chrome::chrome_trace_json(&t, rep.telemetry.as_ref());
+    let stats = chrome::validate(&json).expect("export must validate");
+    assert!(stats.spans > 0 && stats.counters > 0 && stats.tracks >= 2);
+    assert!(json.contains("kv-handoff"), "handoff spans must be exported");
+    assert!(json.contains("kv_bytes_in_flight"), "handoff gauge must be exported");
+    let att = t.attribution();
+    assert!(
+        att.share(SpanKind::KvHandoff) > 0.0,
+        "every disagg request pays a visible handoff"
+    );
+    assert!(att.max_abs_residual < 1e-9);
+}

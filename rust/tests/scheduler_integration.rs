@@ -6,8 +6,8 @@
 
 use mixserve::analyzer::latency::CommMode;
 use mixserve::cluster::{
-    simulate_fleet, ArchPlan, DisaggConfig, FleetConfig, FleetPlanner, RoutingPolicy,
-    SloPolicy, DEFAULT_QUANTA,
+    simulate_fleet, ArchPlan, DisaggConfig, FleetConfig, FleetPlanner, ObsConfig,
+    RoutingPolicy, SloPolicy, DEFAULT_QUANTA,
 };
 use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use mixserve::serving::scheduler::SchedPolicy;
@@ -80,8 +80,10 @@ fn sim_confirms_the_ttft_p99_vs_itl_trade() {
         fi.p99,
         ci.p99
     );
+    // 2% slack: ITL series this long live in the P² sketch, whose
+    // p50 is an estimate rather than the exact order statistic
     assert!(
-        fi.p50 <= ci.p50 * 1.0001,
+        fi.p50 <= ci.p50 * 1.02,
         "median ITL must not worsen under the fine quantum: {} !<= {}",
         fi.p50,
         ci.p50
@@ -161,6 +163,7 @@ fn chunked_fleet_drains_deterministically() {
         slo: None,
         disagg: None,
         sched: SchedPolicy::Chunked { quantum: 256 },
+        obs: ObsConfig::default(),
     };
     let a = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 19);
     let b = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 19);
@@ -197,6 +200,7 @@ fn two_stage_admission_sheds_under_decode_bound_overload() {
             decode_strategy: ParallelStrategy::mixserve(4, 8),
         }),
         sched: SchedPolicy::Fcfs,
+        obs: ObsConfig::default(),
     };
     let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 3);
     assert_eq!(rep.metrics.completed + rep.metrics.rejected, n, "books balance");
