@@ -20,14 +20,17 @@ use mixserve::comm::fused::{fused_ag_dispatch, fused_rs_combine, Route};
 use mixserve::comm::primitives::{synth_contrib, unfused_rs_a2a_ag};
 use mixserve::comm::world::{RankWorld, Tensor2};
 use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use mixserve::cluster::engine::TransitQueue;
+use mixserve::cluster::{simulate_fleet, FleetConfig, ObsConfig, RoutingPolicy};
 use mixserve::moe::router::RouterSim;
 use mixserve::pipeline::{HybridStage, MAX_CHUNKS};
 use mixserve::serving::batcher::{Batcher, BatcherConfig};
 use mixserve::serving::kvcache::KvCacheManager;
-use mixserve::simulator::EventQueue;
+use mixserve::serving::scheduler::SchedPolicy;
+use mixserve::simulator::{EventQueue, IndexedQueue};
 use mixserve::testkit::Bench;
 use mixserve::timing::{kv_handoff_secs, CommDomain};
-use mixserve::workload::Request;
+use mixserve::workload::{Request, TraceGen};
 
 fn main() {
     let mut b = Bench::new(3, 20);
@@ -160,6 +163,66 @@ fn main() {
             n += 1;
         }
         n
+    });
+
+    // --- indexed event engine floors (DESIGN.md §Engine): heavier
+    //     closures, fewer iterations
+    b.warmup = 1;
+    b.iters = 5;
+    b.run("indexed queue push/cancel/pop 1M", || {
+        let mut q = IndexedQueue::new(1024);
+        for i in 0..1_000_000usize {
+            q.schedule(i % 1024, (i % 97) as f64 + (i / 1024) as f64);
+            if i % 3 == 0 {
+                q.cancel((i + 511) % 1024);
+            }
+        }
+        let mut n = 0usize;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        n
+    });
+    b.run("transit queue drain", || {
+        let mut tq = TransitQueue::new(2.0);
+        for i in 0..100_000usize {
+            let req = Request { id: i, arrival: 0.0, len_in: 64, len_out: 8 };
+            tq.push((i % 1009) as f64, req);
+        }
+        let mut n = 0usize;
+        while tq.pop_due(f64::INFINITY).is_some() {
+            n += 1;
+        }
+        n
+    });
+
+    // --- the fleet loop itself at scale-sweep shape (tiny model so the
+    //     event engine, not the latency model, dominates)
+    b.iters = 3;
+    let tiny = MoEModelConfig::tiny();
+    let grid = ClusterConfig::localhost(2, 4);
+    let fleet_rate = 7.8125 * 64.0;
+    let fleet_serving = ServingConfig::paper_eval(fleet_rate);
+    let fleet_strategy = Analyzer::new(&tiny, &grid, &fleet_serving)
+        .best(&Workload::sharegpt(7.8125), Objective::MaxThroughput)
+        .expect("localhost grid must have a feasible strategy")
+        .strategy;
+    let fleet_cfg = FleetConfig {
+        replicas: 64,
+        strategy: fleet_strategy,
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: None,
+        disagg: None,
+        sched: SchedPolicy::Fcfs,
+        obs: ObsConfig::default(),
+    };
+    let fleet_trace = TraceGen::sharegpt(fleet_rate, fleet_serving.max_seq, 7)
+        .generate(100_000.0 / fleet_rate);
+    b.run("fleet 100k reqs x 64 replicas", || {
+        simulate_fleet(&tiny, &grid, &fleet_cfg, &fleet_serving, &fleet_trace, 7)
+            .metrics
+            .completed
     });
 
     println!("\n{} benches complete", b.results().len());

@@ -156,6 +156,42 @@ impl AdmissionController {
         }
         (slack * self.mu).floor() as usize
     }
+
+    /// The exact integer bound behind [`AdmissionController::admit`]:
+    /// `admit(q)` ⟺ `q <= bound`, found by probing `admit` itself
+    /// (monotone in the backlog), so the fleet loop's per-arrival gate
+    /// collapses to one integer compare.  Unlike
+    /// [`AdmissionController::max_admissible_backlog`]'s closed form,
+    /// this cannot disagree with `admit` by a floating-point rounding at
+    /// the boundary.  `None` when even an empty queue sheds; `None` also
+    /// for a two-stage gate, whose decision needs the live decode
+    /// backlog and has no single-integer bound.
+    pub fn backlog_bound(&self) -> Option<usize> {
+        if self.is_two_stage() || !self.admit(0) {
+            return None;
+        }
+        // a deadline slack of CAP/μ seconds is beyond any reachable
+        // queue: treat it as unbounded
+        const CAP: usize = 1 << 32;
+        let mut hi = 1usize;
+        while hi < CAP && self.admit(hi) {
+            hi *= 2;
+        }
+        if hi >= CAP {
+            return Some(usize::MAX);
+        }
+        // invariant: admit(lo) && !admit(hi)
+        let mut lo = hi / 2;
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if self.admit(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(lo)
+    }
 }
 
 #[cfg(test)]
@@ -206,6 +242,30 @@ mod tests {
         let ac = controller(1e-9);
         assert!(!ac.admit(0));
         assert_eq!(ac.max_admissible_backlog(), 0);
+    }
+
+    #[test]
+    fn backlog_bound_matches_admit_pointwise_at_the_boundary() {
+        for deadline in [0.5, 1.0, 7.3, 30.0, 123.456] {
+            let ac = controller(deadline);
+            match ac.backlog_bound() {
+                Some(b) => {
+                    assert!(ac.admit(b), "deadline {deadline}: bound {b} must admit");
+                    assert!(!ac.admit(b + 1), "deadline {deadline}: bound {b}+1 must shed");
+                }
+                None => assert!(!ac.admit(0), "deadline {deadline}: None means shed-all"),
+            }
+        }
+        assert_eq!(controller(1e-9).backlog_bound(), None, "impossible deadline sheds all");
+        let two = controller(30.0).with_decode_stage(
+            &MoEModelConfig::deepseek_r1(),
+            &ClusterConfig::ascend910b(),
+            &ParallelStrategy::pure_ep(4, 8),
+            &ServingConfig::paper_eval(4.0),
+            &Workload::sharegpt(4.0),
+            CommMode::FusedAsync,
+        );
+        assert_eq!(two.backlog_bound(), None, "two-stage gates have no scalar bound");
     }
 
     #[test]

@@ -120,6 +120,46 @@ impl Dispatcher {
         pool_argmin(replicas, Role::Decode)
             .expect("disaggregated fleet must have at least one Role::Decode replica")
     }
+
+    /// [`Dispatcher::route_arrival`] over a precomputed (ascending)
+    /// prefill-pool index slice: O(pool) instead of role-filtering the
+    /// whole fleet per arrival.  Identical pick to the role-filtered
+    /// path — both scan the same members in the same order.
+    pub fn route_arrival_pooled(
+        &mut self,
+        req: &Request,
+        replicas: &[ReplicaSim],
+        prefill_pool: &[usize],
+    ) -> usize {
+        match pool_argmin_over(replicas, prefill_pool) {
+            Some(i) => i,
+            None => self.route(req, replicas),
+        }
+    }
+
+    /// [`Dispatcher::route_handoff`] over a precomputed (ascending)
+    /// decode-pool index slice.
+    pub fn route_handoff_pooled(
+        &mut self,
+        _req: &Request,
+        replicas: &[ReplicaSim],
+        decode_pool: &[usize],
+    ) -> usize {
+        pool_argmin_over(replicas, decode_pool)
+            .expect("disaggregated fleet must have at least one Role::Decode replica")
+    }
+}
+
+/// Shortest-queue member of a precomputed pool (ties to the lowest
+/// index); None on an empty pool.  With an ascending index slice this is
+/// exactly [`pool_argmin`] minus the role scan.
+fn pool_argmin_over(replicas: &[ReplicaSim], pool: &[usize]) -> Option<usize> {
+    pool.iter().copied().min_by_key(|&i| (replicas[i].queue_depth(), i))
+}
+
+/// [`pool_min_depth`] over a precomputed pool index slice.
+pub fn pool_min_depth_over(replicas: &[ReplicaSim], pool: &[usize]) -> Option<usize> {
+    pool.iter().map(|&i| replicas[i].queue_depth()).min()
 }
 
 /// Shortest-queue member of the `role` pool (ties to the lowest index —
@@ -304,6 +344,40 @@ mod tests {
         let picks: Vec<usize> =
             (0..3).map(|i| d.route_arrival(&req(i, 100, 100), &replicas)).collect();
         assert_eq!(picks, vec![0, 1, 2], "no prefill pool: policy applies");
+    }
+
+    #[test]
+    fn pooled_routing_matches_role_filtered_routing() {
+        let mut replicas = role_fleet(2, 3);
+        let prefill_pool: Vec<usize> = vec![0, 1];
+        let decode_pool: Vec<usize> = vec![2, 3, 4];
+        replicas[0].submit(req(0, 100, 100));
+        replicas[2].submit_prefilled(req(1, 100, 100));
+        replicas[3].submit_prefilled(req(2, 100, 100));
+        let mut a = Dispatcher::new(RoutingPolicy::JoinShortestQueue);
+        let mut b = Dispatcher::new(RoutingPolicy::JoinShortestQueue);
+        let r = req(9, 100, 100);
+        assert_eq!(
+            a.route_arrival(&r, &replicas),
+            b.route_arrival_pooled(&r, &replicas, &prefill_pool)
+        );
+        assert_eq!(
+            a.route_handoff(&r, &replicas),
+            b.route_handoff_pooled(&r, &replicas, &decode_pool)
+        );
+        assert_eq!(
+            pool_min_depth(&replicas, Role::Decode),
+            pool_min_depth_over(&replicas, &decode_pool)
+        );
+        // empty pools: arrival falls back to the policy, min depth is None
+        let colocated = fleet(2);
+        let mut c = Dispatcher::new(RoutingPolicy::RoundRobin);
+        let mut d = Dispatcher::new(RoutingPolicy::RoundRobin);
+        assert_eq!(
+            c.route_arrival(&r, &colocated),
+            d.route_arrival_pooled(&r, &colocated, &[])
+        );
+        assert_eq!(pool_min_depth_over(&colocated, &[]), None);
     }
 
     #[test]

@@ -1,0 +1,601 @@
+//! The indexed event engine behind `simulate_fleet` (DESIGN.md §Engine).
+//!
+//! The historical fleet loop re-stepped **every** replica at **every**
+//! clock advance and linearly re-partitioned the KV `transit` vec each
+//! iteration — O(events × replicas) work where O(events × log replicas)
+//! suffices, a ~256× tax at million-request, 256-replica scale.  This
+//! module is the fast path:
+//!
+//! * [`crate::simulator::IndexedQueue`] holds one generation-stamped
+//!   next-event entry per replica; rescheduling is a heap push, stale
+//!   entries are skipped lazily on pop;
+//! * [`TransitQueue`] keeps in-flight KV handoffs in a slab behind a
+//!   time-ordered queue (FIFO on delivery ties — exactly the legacy
+//!   insertion-order partition) with the in-flight byte total maintained
+//!   as a running counter;
+//! * [`ArrivalFeed`] injects trace arrivals in batches, skipping the
+//!   defensive copy-and-sort when the trace is already arrival-sorted;
+//! * between synchronization points (arrivals, KV deliveries, telemetry
+//!   window boundaries) replicas only interact through dispatch — so a
+//!   colocated fleet advances each replica's event *chain* independently
+//!   to the horizon, sharded across `std::thread::scope` workers when
+//!   enough chains are due, with a deterministic index-ordered merge.
+//!
+//! Sample identity with the legacy loop rests on one invariant: a
+//! replica with no scheduled entry is exactly one whose last `step`
+//! returned `None` and which has not been submitted to since.  Every
+//! legacy step call outside that set is *pure* — an in-flight iteration
+//! finishing later, an idle replica, or the empty-plan retry tick
+//! (`Batcher::admit` mutates nothing when it admits nothing) — so
+//! skipping it changes no metric, span, or RNG draw.  The equivalence is
+//! pinned metric-for-metric and span-for-span by
+//! `tests/engine_equivalence.rs`.
+
+use super::admission::AdmissionController;
+use super::dispatch::{pool_min_depth_over, Dispatcher};
+use super::replica::{ReplicaSim, Role};
+use crate::comm::cost::CollectiveCost;
+use crate::config::MoEModelConfig;
+use crate::obs::{self, ReplicaSnapshot, SpanKind, TelemetryBuilder};
+use crate::simulator::{EventQueue, IndexedQueue};
+use crate::timing::{kv_handoff_secs, CommCost};
+use crate::util::stats::Series;
+use crate::workload::Request;
+use std::borrow::Cow;
+
+/// Spawn shard workers only when at least this many chains are due at
+/// once — below it the scope setup costs more than the stepping.
+const PAR_MIN_CHAINS: usize = 16;
+/// Upper bound on shard workers (diminishing returns past the memory
+/// bandwidth of a few cores).
+const MAX_SHARDS: usize = 8;
+
+/// Trace arrivals in arrival order, fed to the loop in batches.  An
+/// already-sorted trace (every generator emits one) is borrowed as-is;
+/// only an unsorted trace pays the copy-and-stable-sort the legacy loop
+/// paid unconditionally.
+pub struct ArrivalFeed<'a> {
+    sorted: Cow<'a, [Request]>,
+    next: usize,
+}
+
+impl<'a> ArrivalFeed<'a> {
+    pub fn new(trace: &'a [Request]) -> Self {
+        let sorted = if trace.windows(2).all(|w| w[0].arrival <= w[1].arrival) {
+            Cow::Borrowed(trace)
+        } else {
+            let mut v = trace.to_vec();
+            crate::workload::sort_by_arrival(&mut v);
+            Cow::Owned(v)
+        };
+        Self { sorted, next: 0 }
+    }
+
+    /// The arrivals in feed order (sorted by arrival time).
+    pub fn requests(&self) -> &[Request] {
+        &self.sorted
+    }
+
+    /// Arrival time of the next unfed request.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.sorted.get(self.next).map(|r| r.arrival)
+    }
+
+    /// Next request with `arrival <= now`, in arrival order.
+    pub fn next_due(&mut self, now: f64) -> Option<&Request> {
+        let r = self.sorted.get(self.next)?;
+        if r.arrival <= now {
+            self.next += 1;
+            Some(r)
+        } else {
+            None
+        }
+    }
+
+    /// Trace span: the last arrival time, floored away from zero (the
+    /// admission predictor's rate denominator).
+    pub fn span(&self) -> f64 {
+        self.sorted.last().map(|r| r.arrival).unwrap_or(0.0).max(1e-9)
+    }
+}
+
+/// KV handoffs in flight between the prefill and decode pools: request
+/// state parked in a slab (no per-hop moves), delivery order driven by a
+/// time-ordered queue whose FIFO tie-break reproduces the legacy
+/// insertion-order partition exactly.  The in-flight byte total is a
+/// running counter — pushes and deliveries add and subtract the same
+/// exact-in-f64 integer product, so it always equals the legacy
+/// per-window sum bit-for-bit.
+pub struct TransitQueue {
+    q: EventQueue<usize>,
+    slab: Vec<Option<Request>>,
+    free: Vec<usize>,
+    bytes_per_token: f64,
+    bytes_in_flight: f64,
+    len: usize,
+}
+
+impl TransitQueue {
+    pub fn new(bytes_per_token: f64) -> Self {
+        Self {
+            q: EventQueue::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            bytes_per_token,
+            bytes_in_flight: 0.0,
+            len: 0,
+        }
+    }
+
+    pub fn push(&mut self, deliver_at: f64, req: Request) {
+        self.bytes_in_flight += req.len_in as f64 * self.bytes_per_token;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s] = Some(req);
+                s
+            }
+            None => {
+                self.slab.push(Some(req));
+                self.slab.len() - 1
+            }
+        };
+        self.q.push(deliver_at, slot);
+        self.len += 1;
+    }
+
+    /// Earliest pending delivery time.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.q.peek_time()
+    }
+
+    /// Deliver the next transfer if it has landed by `now`.
+    pub fn pop_due(&mut self, now: f64) -> Option<Request> {
+        if self.q.peek_time()? > now {
+            return None;
+        }
+        let (_, slot) = self.q.pop().expect("peeked entry vanished");
+        let req = self.slab[slot].take().expect("slab slot empty on delivery");
+        self.free.push(slot);
+        self.bytes_in_flight -= req.len_in as f64 * self.bytes_per_token;
+        self.len -= 1;
+        Some(req)
+    }
+
+    /// KV bytes currently riding the inter-pool NIC.
+    pub fn bytes_in_flight(&self) -> f64 {
+        self.bytes_in_flight
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Persistent telemetry snapshot buffer: one `ReplicaSnapshot` per
+/// replica, refreshed in place and only for replicas that changed since
+/// the last window close — the legacy loop allocated a fresh vec and
+/// re-sampled every replica at every boundary.
+struct SnapCache {
+    snaps: Vec<ReplicaSnapshot>,
+    dirty: Vec<bool>,
+}
+
+impl SnapCache {
+    fn new(n: usize) -> Self {
+        Self { snaps: vec![ReplicaSnapshot::default(); n], dirty: vec![true; n] }
+    }
+
+    fn mark(&mut self, i: usize) {
+        self.dirty[i] = true;
+    }
+
+    fn refresh(&mut self, replicas: &[ReplicaSim]) -> &[ReplicaSnapshot] {
+        for (i, dirty) in self.dirty.iter_mut().enumerate() {
+            if *dirty {
+                self.snaps[i] = snapshot(&replicas[i]);
+                *dirty = false;
+            }
+        }
+        &self.snaps
+    }
+}
+
+/// The telemetry gauge/counter sample of one replica (shared with the
+/// legacy loop).
+pub fn snapshot(r: &ReplicaSim) -> ReplicaSnapshot {
+    ReplicaSnapshot {
+        queue_depth: r.queue_depth(),
+        running: r.running_len(),
+        tokens: r.metrics.tokens_in + r.metrics.tokens_out,
+        completed: r.metrics.completed,
+        submitted: r.metrics.submitted,
+        rejected: r.metrics.rejected,
+        ttft_n: r.metrics.ttft.len(),
+        ttft_ok: r.metrics.ttft_ok,
+    }
+}
+
+/// What the loop hands back to `simulate_fleet` for aggregation.
+pub struct FleetLoopOut {
+    /// final clock — the time of the last executed event
+    pub now: f64,
+    pub shed_front_door: usize,
+    pub kv_handoff: Series,
+}
+
+/// The admission gate, pre-resolved so the arrival hot path is an
+/// integer compare for the common single-stage case.
+enum Gate<'a> {
+    Open,
+    /// single-stage: admit iff `queue_depth <= bound`; `None` sheds
+    /// everything (the deadline rejects even an empty queue)
+    Single(Option<usize>),
+    /// disaggregated two-stage gate — needs the decode-pool backlog
+    TwoStage(&'a AdmissionController),
+}
+
+/// Advance one replica's private event chain from `t0` up to (but not
+/// across) `horizon`.  Returns the replica's next event time (if any)
+/// and the last chain time actually stepped — the legacy clock passed
+/// through every one of these times, so the caller folds the maximum
+/// into the final-duration bookkeeping.  A step that executes no
+/// iteration (the empty-plan retry tick) ends the chain early: the tick
+/// goes back to the index so starvation grinds at the global loop's
+/// cadence instead of spinning here.
+fn advance_chain(r: &mut ReplicaSim, t0: f64, horizon: f64) -> (Option<f64>, f64) {
+    let mut t = t0;
+    loop {
+        let iters_before = r.iterations;
+        match r.step(t) {
+            None => return (None, t),
+            Some(next) => {
+                debug_assert!(next > t, "replica event time must advance: {next} !> {t}");
+                debug_assert!(!r.has_handoffs(), "colocated chains never produce handoffs");
+                if next >= horizon || r.iterations == iters_before {
+                    return (Some(next), t);
+                }
+                t = next;
+            }
+        }
+    }
+}
+
+/// Advance every due chain to `horizon`, sharding across scoped worker
+/// threads when enough are due.  Chains are independent — each replica
+/// owns its RNG, metrics, and trace — so the merge (index-ordered
+/// reschedule) is deterministic regardless of worker interleaving.
+fn advance_chains(
+    replicas: &mut [ReplicaSim],
+    chains: &mut [(f64, usize)],
+    horizon: f64,
+    idx: &mut IndexedQueue,
+    snaps: &mut SnapCache,
+    batch_last: &mut f64,
+) {
+    chains.sort_unstable_by_key(|&(_, key)| key);
+    for &(_, key) in chains.iter() {
+        snaps.mark(key);
+    }
+    if chains.len() < PAR_MIN_CHAINS {
+        for &(t0, key) in chains.iter() {
+            let (next, last) = advance_chain(&mut replicas[key], t0, horizon);
+            *batch_last = batch_last.max(last);
+            if let Some(t) = next {
+                idx.schedule(key, t);
+            }
+        }
+        return;
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(MAX_SHARDS)
+        .min(chains.len());
+    let chunk = chains.len().div_ceil(workers);
+    let mut results: Vec<Vec<(usize, Option<f64>, f64)>> = Vec::with_capacity(workers);
+    std::thread::scope(|s| {
+        let mut rest = replicas;
+        let mut base = 0usize;
+        let mut handles = Vec::with_capacity(workers);
+        for group in chains.chunks(chunk) {
+            // keys are ascending and unique: each group owns the
+            // contiguous replica range [base, last_key], carved off the
+            // front of the remaining slice
+            let last_key = group.last().expect("chunks are non-empty").1;
+            let (shard, tail) = rest.split_at_mut(last_key + 1 - base);
+            rest = tail;
+            let shard_base = base;
+            base = last_key + 1;
+            handles.push(s.spawn(move || {
+                group
+                    .iter()
+                    .map(|&(t0, key)| {
+                        let (next, last) =
+                            advance_chain(&mut shard[key - shard_base], t0, horizon);
+                        (key, next, last)
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("shard worker panicked"));
+        }
+    });
+    for group in results {
+        for (key, next, last) in group {
+            *batch_last = batch_last.max(last);
+            if let Some(t) = next {
+                idx.schedule(key, t);
+            }
+        }
+    }
+}
+
+/// Price a replica's drained handoffs onto the transit queue (and the
+/// fleet trace), in the replica-index order the caller visits.
+#[allow(clippy::too_many_arguments)]
+fn drain_handoffs(
+    r: &mut ReplicaSim,
+    now: f64,
+    model: &MoEModelConfig,
+    handoff_cost: &CollectiveCost,
+    kv_handoff: &mut Series,
+    fleet_trace: &mut Option<obs::Trace>,
+    transit: &mut TransitQueue,
+) {
+    for req in r.take_handoffs() {
+        let delay = kv_handoff_secs(handoff_cost, model, req.len_in);
+        kv_handoff.push(delay);
+        if let Some(t) = fleet_trace.as_mut() {
+            // the span lives on the prefill replica's timeline; handoffs
+            // drain at now == prefill finish, so the span abuts the
+            // PrefillChunk that produced it
+            t.span(req.id, r.id, SpanKind::KvHandoff, now, now + delay);
+        }
+        transit.push(now + delay, req);
+    }
+}
+
+/// The indexed discrete-event loop: route arrivals, deliver KV transfers,
+/// step exactly the replicas whose events are due (plus any just
+/// submitted to), batch-advance independent chains to the next
+/// synchronization point, and close telemetry windows at the boundaries
+/// the clock crosses.  Sample-identical to the legacy loop (see the
+/// module docs for the argument; `tests/engine_equivalence.rs` for the
+/// pin).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_loop(
+    model: &MoEModelConfig,
+    replicas: &mut [ReplicaSim],
+    dispatcher: &mut Dispatcher,
+    handoff_cost: &CollectiveCost,
+    admission: Option<&AdmissionController>,
+    trace: &[Request],
+    fleet_trace: &mut Option<obs::Trace>,
+    telemetry: &mut Option<TelemetryBuilder>,
+) -> FleetLoopOut {
+    let n = replicas.len();
+    let disagg = replicas.iter().any(|r| r.role() != Role::Colocated);
+    let decode_pool: Vec<usize> = (0..n).filter(|&i| replicas[i].role() == Role::Decode).collect();
+    let prefill_pool: Vec<usize> =
+        (0..n).filter(|&i| replicas[i].role() == Role::Prefill).collect();
+    let gate = match admission {
+        None => Gate::Open,
+        Some(ac) if ac.is_two_stage() => Gate::TwoStage(ac),
+        Some(ac) => Gate::Single(ac.backlog_bound()),
+    };
+
+    let mut idx = IndexedQueue::new(n);
+    let mut transit = TransitQueue::new(model.kv_bytes_per_token() as f64);
+    let mut feed = ArrivalFeed::new(trace);
+    let mut snaps = SnapCache::new(n);
+    let mut kv_handoff = Series::new();
+    let mut shed_front_door = 0usize;
+
+    // the legacy loop's first iteration steps every replica at t=0
+    let mut due: Vec<usize> = (0..n).collect();
+    let mut touched: Vec<usize> = Vec::new();
+    let mut chains: Vec<(f64, usize)> = Vec::new();
+    let mut now = 0.0f64;
+
+    loop {
+        // (1) route arrivals due by `now` — dispatch reads queue depths
+        // before any step at `now`, exactly as the legacy loop did
+        while let Some(req) = feed.next_due(now) {
+            let req = req.clone();
+            let target = dispatcher.route_arrival_pooled(&req, replicas, &prefill_pool);
+            let admitted = match &gate {
+                Gate::Open => true,
+                Gate::Single(bound) => {
+                    bound.is_some_and(|b| replicas[target].queue_depth() <= b)
+                }
+                Gate::TwoStage(ac) => {
+                    let decode_backlog = pool_min_depth_over(replicas, &decode_pool).unwrap_or(0);
+                    ac.admit_two_stage(replicas[target].queue_depth(), decode_backlog)
+                }
+            };
+            if admitted {
+                // queue-cap sheds are counted inside the replica
+                replicas[target].submit(req);
+            } else {
+                shed_front_door += 1;
+                continue;
+            }
+            touched.push(target);
+        }
+
+        // (2) deliver KV transfers that landed by `now` (FIFO on ties —
+        // the legacy insertion-order partition)
+        while let Some(req) = transit.pop_due(now) {
+            let target = dispatcher.route_handoff_pooled(&req, replicas, &decode_pool);
+            replicas[target].submit_prefilled(req);
+            touched.push(target);
+        }
+
+        // (3) step the replicas whose events are due at `now`, plus any
+        // just submitted to, in ascending index order (the order the
+        // legacy loop visited them)
+        due.append(&mut touched);
+        due.sort_unstable();
+        due.dedup();
+        for &i in due.iter() {
+            snaps.mark(i);
+            match replicas[i].step(now) {
+                Some(t) => idx.schedule(i, t),
+                None => idx.cancel(i),
+            }
+            drain_handoffs(
+                &mut replicas[i],
+                now,
+                model,
+                handoff_cost,
+                &mut kv_handoff,
+                fleet_trace,
+                &mut transit,
+            );
+        }
+        due.clear();
+
+        // (4) colocated fleets: between here and the next arrival or
+        // window boundary the replicas cannot interact — advance each
+        // due chain independently (sharded when many are due)
+        let mut batch_last = f64::NEG_INFINITY;
+        if !disagg {
+            let horizon = [feed.peek_time(), telemetry.as_ref().map(|tb| tb.next_boundary())]
+                .into_iter()
+                .flatten()
+                .fold(f64::INFINITY, f64::min);
+            loop {
+                chains.clear();
+                idx.pop_before(horizon, &mut chains);
+                if chains.is_empty() {
+                    break;
+                }
+                // retry-tick bailouts can land back under the horizon;
+                // the outer loop re-pops them at the global cadence
+                advance_chains(
+                    replicas,
+                    &mut chains,
+                    horizon,
+                    &mut idx,
+                    &mut snaps,
+                    &mut batch_last,
+                );
+            }
+        }
+
+        // (5) earliest next event across replicas, transfers, arrivals
+        let next_t = [idx.peek_time(), transit.peek_time(), feed.peek_time()]
+            .into_iter()
+            .flatten()
+            .fold(f64::INFINITY, f64::min);
+        // the legacy clock passed through every chain event; the run's
+        // duration must account for the latest one
+        now = now.max(batch_last);
+        if !next_t.is_finite() {
+            break; // fully drained, no arrivals left
+        }
+        // close any window boundaries the clock is about to cross, using
+        // the pre-boundary state (counters are constant between events)
+        if let Some(tb) = telemetry.as_mut() {
+            if tb.pending(next_t) {
+                let s = snaps.refresh(replicas);
+                tb.roll(next_t, s, transit.bytes_in_flight(), shed_front_door);
+            }
+        }
+        debug_assert!(next_t > now, "fleet clock must advance: {next_t} !> {now}");
+        now = next_t;
+        idx.pop_due(now, &mut due);
+    }
+
+    FleetLoopOut { now, shed_front_door, kv_handoff }
+}
+
+/// Drive one replica over a trace until drained; returns the final
+/// clock.  The single-replica engine behind `serving::sim` — same event
+/// cadence as the historical `drive` loop (one step per event time),
+/// sharing [`ArrivalFeed`]'s sorted-trace fast path.
+pub fn drive_replica<C: CommCost>(replica: &mut ReplicaSim<C>, trace: &[Request]) -> f64 {
+    let mut feed = ArrivalFeed::new(trace);
+    let mut now = 0.0f64;
+    loop {
+        // feed arrivals due by `now` (queue-cap sheds are counted by the
+        // replica into metrics.rejected)
+        while let Some(req) = feed.next_due(now) {
+            let req = req.clone();
+            replica.submit(req);
+        }
+        let next_arrival = feed.peek_time().unwrap_or(f64::INFINITY);
+        let t = match replica.step(now) {
+            Some(t) => t.min(next_arrival),
+            None => next_arrival, // idle: jump to next work
+        };
+        if !t.is_finite() {
+            break; // drained and no arrivals left
+        }
+        now = t;
+    }
+    now
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, arrival: f64, len_in: usize) -> Request {
+        Request { id, arrival, len_in, len_out: 8 }
+    }
+
+    #[test]
+    fn arrival_feed_borrows_a_sorted_trace() {
+        let trace = vec![req(0, 0.5, 10), req(1, 1.0, 10), req(2, 1.0, 10)];
+        let mut feed = ArrivalFeed::new(&trace);
+        assert!(matches!(feed.sorted, Cow::Borrowed(_)), "sorted traces are not copied");
+        assert_eq!(feed.peek_time(), Some(0.5));
+        assert!(feed.next_due(0.4).is_none());
+        assert_eq!(feed.next_due(1.0).map(|r| r.id), Some(0));
+        assert_eq!(feed.next_due(1.0).map(|r| r.id), Some(1));
+        assert_eq!(feed.next_due(1.0).map(|r| r.id), Some(2));
+        assert!(feed.next_due(9.0).is_none());
+        assert_eq!(feed.peek_time(), None);
+    }
+
+    #[test]
+    fn arrival_feed_sorts_an_unsorted_trace_stably() {
+        let trace = vec![req(0, 2.0, 10), req(1, 1.0, 10), req(2, 1.0, 10)];
+        let mut feed = ArrivalFeed::new(&trace);
+        assert!(matches!(feed.sorted, Cow::Owned(_)));
+        // stable: ids 1, 2 keep their relative order at the tied time
+        assert_eq!(feed.next_due(5.0).map(|r| r.id), Some(1));
+        assert_eq!(feed.next_due(5.0).map(|r| r.id), Some(2));
+        assert_eq!(feed.next_due(5.0).map(|r| r.id), Some(0));
+        assert_eq!(feed.span(), 2.0);
+    }
+
+    #[test]
+    fn transit_queue_delivers_in_time_then_insertion_order() {
+        let mut tq = TransitQueue::new(2.0);
+        tq.push(3.0, req(0, 0.0, 100));
+        tq.push(1.0, req(1, 0.0, 50));
+        tq.push(3.0, req(2, 0.0, 25));
+        assert_eq!(tq.len(), 3);
+        assert_eq!(tq.bytes_in_flight(), (100 + 50 + 25) as f64 * 2.0);
+        assert_eq!(tq.peek_time(), Some(1.0));
+        assert!(tq.pop_due(0.5).is_none(), "nothing lands before 1.0");
+        assert_eq!(tq.pop_due(1.0).map(|r| r.id), Some(1));
+        assert_eq!(tq.bytes_in_flight(), (100 + 25) as f64 * 2.0);
+        // delivery ties break by insertion order, like the legacy
+        // partition of the insertion-ordered vec
+        assert_eq!(tq.pop_due(3.0).map(|r| r.id), Some(0));
+        assert_eq!(tq.pop_due(3.0).map(|r| r.id), Some(2));
+        assert!(tq.is_empty());
+        assert_eq!(tq.bytes_in_flight(), 0.0);
+        // slots recycle through the free list
+        tq.push(4.0, req(3, 0.0, 10));
+        assert_eq!(tq.slab.len(), 3, "slab does not grow while slots are free");
+    }
+}

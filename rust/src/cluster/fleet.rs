@@ -13,6 +13,7 @@
 
 use super::admission::{AdmissionController, SloPolicy};
 use super::dispatch::{pool_min_depth, Dispatcher, RoutingPolicy};
+use super::engine;
 use super::replica::{ReplicaSim, Role};
 use crate::analyzer::indicators::Workload;
 use crate::analyzer::latency::CommMode;
@@ -71,6 +72,10 @@ pub struct FleetReport {
     /// front-door sheds
     pub metrics: ServingMetrics,
     pub per_replica: Vec<ServingMetrics>,
+    /// total scheduler iterations executed across the fleet — with
+    /// `metrics.completed` and the handoff count, the event total the
+    /// scale sweep reports events/sec against
+    pub iterations: usize,
     /// iteration-weighted mean EP straggler factor across replicas
     pub mean_imbalance: f64,
     /// per-request prefill→decode KV transfer delays (empty when the
@@ -95,21 +100,27 @@ pub fn trace_workload(trace: &[Request], duration: f64) -> Workload {
     }
 }
 
-/// Run `trace` through a fleet of pods, each shaped like
-/// `replica_cluster`.  The trace is shared — arrivals are routed by the
-/// dispatcher, possibly shed by admission, and the loop runs until every
-/// admitted request completes.  With `cfg.disagg` set the fleet runs
-/// role-split: arrivals go to the prefill pool, finished prefills ride a
-/// [`kv_handoff_secs`]-timed transfer, and decode replicas pick them up
-/// when the KV lands.
-pub fn simulate_fleet(
+/// Everything a fleet loop needs, built identically for the indexed
+/// engine and the legacy oracle: replicas (same seeds, roles,
+/// schedulers), dispatcher, handoff pricing, admission gate, and the
+/// observability recorders.
+struct FleetSetup {
+    replicas: Vec<ReplicaSim>,
+    dispatcher: Dispatcher,
+    handoff_cost: CollectiveCost,
+    admission: Option<AdmissionController>,
+    fleet_trace: Option<obs::Trace>,
+    telemetry: Option<TelemetryBuilder>,
+}
+
+fn build_fleet(
     model: &MoEModelConfig,
     replica_cluster: &ClusterConfig,
     cfg: &FleetConfig,
     serving: &ServingConfig,
     trace: &[Request],
     seed: u64,
-) -> FleetReport {
+) -> FleetSetup {
     let mk_replica = |i: usize, strategy: &ParallelStrategy| {
         let r = ReplicaSim::new(
             model,
@@ -127,7 +138,7 @@ pub fn simulate_fleet(
             r
         }
     };
-    let (mut replicas, admission_strategy): (Vec<ReplicaSim>, ParallelStrategy) =
+    let (replicas, admission_strategy): (Vec<ReplicaSim>, ParallelStrategy) =
         match &cfg.disagg {
             None => {
                 assert!(cfg.replicas > 0, "fleet needs at least one replica");
@@ -159,17 +170,14 @@ pub fn simulate_fleet(
                 (v, d.prefill_strategy)
             }
         };
-    let n_replicas = replicas.len();
-    let mut dispatcher = Dispatcher::new(cfg.policy);
+    let dispatcher = Dispatcher::new(cfg.policy);
     // the handoff rides the prefill pod's NIC(s); colocated fleets never
     // consult this
     let handoff_cost = CollectiveCost::new(replica_cluster);
 
-    let mut arrivals = trace.to_vec();
-    crate::workload::sort_by_arrival(&mut arrivals);
-    let span = arrivals.last().map(|r| r.arrival).unwrap_or(0.0).max(1e-9);
+    let span = trace.iter().map(|r| r.arrival).fold(0.0f64, f64::max).max(1e-9);
     let admission = cfg.slo.map(|slo| {
-        let wl = trace_workload(&arrivals, span);
+        let wl = trace_workload(trace, span);
         let ac = AdmissionController::new(
             model,
             replica_cluster,
@@ -194,29 +202,142 @@ pub fn simulate_fleet(
         }
     });
 
-    let mut shed_front_door = 0usize;
-    let mut kv_handoff = Series::new();
     // fleet-level span recorder: owns the KvHandoff spans (the handoff
     // happens between replicas) and absorbs each replica's trace at the
     // end of the run
-    let mut fleet_trace = if cfg.obs.trace { Some(obs::Trace::new()) } else { None };
-    let mut telemetry = cfg.obs.window.map(|w| {
+    let fleet_trace = if cfg.obs.trace { Some(obs::Trace::new()) } else { None };
+    let telemetry = cfg.obs.window.map(|w| {
         TelemetryBuilder::new(
             w,
             replicas.iter().map(|r| r.role().label()).collect(),
             cfg.slo.is_some(),
         )
     });
-    let snapshot = |r: &ReplicaSim| ReplicaSnapshot {
-        queue_depth: r.queue_depth(),
-        running: r.running_len(),
-        tokens: r.metrics.tokens_in + r.metrics.tokens_out,
-        completed: r.metrics.completed,
-        submitted: r.metrics.submitted,
-        rejected: r.metrics.rejected,
-        ttft_n: r.metrics.ttft.len(),
-        ttft_ok: r.metrics.ttft_ok,
-    };
+    FleetSetup { replicas, dispatcher, handoff_cost, admission, fleet_trace, telemetry }
+}
+
+/// Fold the loop's outputs into a [`FleetReport`] (shared by the engine
+/// and the legacy oracle): absorb per-replica traces in index order,
+/// stamp every metrics copy with the run duration, and merge.
+fn finish_report(
+    cfg: &FleetConfig,
+    mut setup: FleetSetup,
+    now: f64,
+    shed_front_door: usize,
+    kv_handoff: Series,
+) -> FleetReport {
+    // fold each replica's recorded spans into the fleet trace
+    if let Some(ft) = setup.fleet_trace.as_mut() {
+        for r in setup.replicas.iter_mut() {
+            if let Some(t) = r.take_trace() {
+                ft.absorb(t);
+            }
+        }
+    }
+
+    // aggregate
+    let mut agg = ServingMetrics::new();
+    let mut per_replica = Vec::with_capacity(setup.replicas.len());
+    let (mut imb_weighted, mut iters) = (0.0f64, 0usize);
+    for r in &setup.replicas {
+        let mut m = r.metrics.clone();
+        m.duration = now.max(1e-9);
+        agg.merge(&m);
+        imb_weighted += r.mean_imbalance() * r.iterations as f64;
+        iters += r.iterations;
+        per_replica.push(m);
+    }
+    // front-door sheds were offered to the fleet too: keep
+    // `rejection_rate()` = shed / offered across both gates
+    agg.submitted += shed_front_door;
+    agg.rejected += shed_front_door;
+    agg.duration = now.max(1e-9);
+    FleetReport {
+        policy: cfg.policy,
+        replicas: setup.replicas.len(),
+        strategy: cfg.strategy,
+        metrics: agg,
+        per_replica,
+        iterations: iters,
+        mean_imbalance: if iters > 0 { imb_weighted / iters as f64 } else { 1.0 },
+        kv_handoff,
+        trace: setup.fleet_trace,
+        telemetry: setup.telemetry.map(|tb| tb.finish()),
+    }
+}
+
+/// Run `trace` through a fleet of pods, each shaped like
+/// `replica_cluster`.  The trace is shared — arrivals are routed by the
+/// dispatcher, possibly shed by admission, and the loop runs until every
+/// admitted request completes.  With `cfg.disagg` set the fleet runs
+/// role-split: arrivals go to the prefill pool, finished prefills ride a
+/// [`kv_handoff_secs`]-timed transfer, and decode replicas pick them up
+/// when the KV lands.
+///
+/// Runs on the indexed event engine ([`engine::run_fleet_loop`]):
+/// per-replica next-event entries instead of an every-replica re-step
+/// per clock advance.  Sample-identical to the pre-refactor loop, which
+/// survives as [`simulate_fleet_legacy`] and pins the equivalence in
+/// `tests/engine_equivalence.rs`.
+pub fn simulate_fleet(
+    model: &MoEModelConfig,
+    replica_cluster: &ClusterConfig,
+    cfg: &FleetConfig,
+    serving: &ServingConfig,
+    trace: &[Request],
+    seed: u64,
+) -> FleetReport {
+    let mut setup = build_fleet(model, replica_cluster, cfg, serving, trace, seed);
+    let FleetSetup {
+        ref mut replicas,
+        ref mut dispatcher,
+        ref handoff_cost,
+        ref admission,
+        ref mut fleet_trace,
+        ref mut telemetry,
+        ..
+    } = setup;
+    let out = engine::run_fleet_loop(
+        model,
+        replicas,
+        dispatcher,
+        handoff_cost,
+        admission.as_ref(),
+        trace,
+        fleet_trace,
+        telemetry,
+    );
+    finish_report(cfg, setup, out.now, out.shed_front_door, out.kv_handoff)
+}
+
+/// The pre-refactor O(events × replicas) fleet loop, kept verbatim as
+/// the equivalence oracle for the indexed engine (and for a measured
+/// speedup row in the scale sweep).  Semantics are frozen: do not
+/// optimize this function.
+pub fn simulate_fleet_legacy(
+    model: &MoEModelConfig,
+    replica_cluster: &ClusterConfig,
+    cfg: &FleetConfig,
+    serving: &ServingConfig,
+    trace: &[Request],
+    seed: u64,
+) -> FleetReport {
+    let mut setup = build_fleet(model, replica_cluster, cfg, serving, trace, seed);
+    let FleetSetup {
+        ref mut replicas,
+        ref mut dispatcher,
+        ref handoff_cost,
+        ref admission,
+        ref mut fleet_trace,
+        ref mut telemetry,
+        ..
+    } = setup;
+
+    let mut arrivals = trace.to_vec();
+    crate::workload::sort_by_arrival(&mut arrivals);
+    let mut shed_front_door = 0usize;
+    let mut kv_handoff = Series::new();
+    let snapshot = engine::snapshot;
     // KV transfers in flight: (delivery time, request), insertion-ordered
     let mut transit: Vec<(f64, Request)> = Vec::new();
     let mut next = 0usize;
@@ -262,7 +383,7 @@ pub fn simulate_fleet(
                 next_t = next_t.min(t);
             }
             for req in r.take_handoffs() {
-                let delay = kv_handoff_secs(&handoff_cost, model, req.len_in);
+                let delay = kv_handoff_secs(handoff_cost, model, req.len_in);
                 kv_handoff.push(delay);
                 if let Some(t) = fleet_trace.as_mut() {
                     // the span lives on the prefill replica's timeline;
@@ -298,43 +419,7 @@ pub fn simulate_fleet(
         now = next_t;
     }
 
-    // fold each replica's recorded spans into the fleet trace
-    if let Some(ft) = fleet_trace.as_mut() {
-        for r in replicas.iter_mut() {
-            if let Some(t) = r.take_trace() {
-                ft.absorb(t);
-            }
-        }
-    }
-
-    // aggregate
-    let mut agg = ServingMetrics::new();
-    let mut per_replica = Vec::with_capacity(replicas.len());
-    let (mut imb_weighted, mut iters) = (0.0f64, 0usize);
-    for r in &replicas {
-        let mut m = r.metrics.clone();
-        m.duration = now.max(1e-9);
-        agg.merge(&m);
-        imb_weighted += r.mean_imbalance() * r.iterations as f64;
-        iters += r.iterations;
-        per_replica.push(m);
-    }
-    // front-door sheds were offered to the fleet too: keep
-    // `rejection_rate()` = shed / offered across both gates
-    agg.submitted += shed_front_door;
-    agg.rejected += shed_front_door;
-    agg.duration = now.max(1e-9);
-    FleetReport {
-        policy: cfg.policy,
-        replicas: n_replicas,
-        strategy: cfg.strategy,
-        metrics: agg,
-        per_replica,
-        mean_imbalance: if iters > 0 { imb_weighted / iters as f64 } else { 1.0 },
-        kv_handoff,
-        trace: fleet_trace,
-        telemetry: telemetry.map(|tb| tb.finish()),
-    }
+    finish_report(cfg, setup, now, shed_front_door, kv_handoff)
 }
 
 /// Convenience wrapper: ShareGPT trace at `rate` for `duration` seconds

@@ -18,6 +18,13 @@
 //!   with [`fleet::DisaggConfig`] it runs true P/D disaggregation:
 //!   role-split pools and a CommCost-priced KV handoff between them
 //!   (DESIGN.md §Disaggregation);
+//! * [`engine`] — the indexed event engine the fleet loop runs on:
+//!   per-replica next-event entries with generation-stamped lazy
+//!   invalidation, a slab-backed time-ordered KV transit queue, batched
+//!   arrival injection, and sharded parallel chain stepping between
+//!   synchronization points (DESIGN.md §Engine) — sample-identical to
+//!   the legacy loop, which survives as
+//!   [`fleet::simulate_fleet_legacy`], the equivalence oracle;
 //! * [`planner`] — joint (replica count × strategy) search under a
 //!   device budget, extending `analyzer::search` one level up; its
 //!   [`planner::FleetPlanner::plan_disagg`] searches (prefill pool ×
@@ -30,6 +37,7 @@
 
 pub mod admission;
 pub mod dispatch;
+pub mod engine;
 pub mod fleet;
 pub mod planner;
 pub mod replica;
@@ -37,7 +45,9 @@ pub mod sweep;
 
 pub use admission::{AdmissionController, SloPolicy};
 pub use dispatch::{Dispatcher, RoutingPolicy};
-pub use fleet::{run_fleet_rate, simulate_fleet, DisaggConfig, FleetConfig, FleetReport};
+pub use fleet::{
+    run_fleet_rate, simulate_fleet, simulate_fleet_legacy, DisaggConfig, FleetConfig, FleetReport,
+};
 pub use planner::{
     carve_replicas, ArchPlan, DisaggPlan, FleetPlan, FleetPlanner, SchedPlan, DEFAULT_QUANTA,
 };

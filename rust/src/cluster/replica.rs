@@ -297,6 +297,13 @@ impl<C: CommCost> ReplicaSim<C> {
         std::mem::take(&mut self.handoffs)
     }
 
+    /// Whether finished prefills are waiting to be drained — the event
+    /// engine's cheap guard (and debug invariant: colocated replicas
+    /// advanced off the hot path must never accumulate any).
+    pub fn has_handoffs(&self) -> bool {
+        !self.handoffs.is_empty()
+    }
+
     /// Hand a request to this replica.  Returns false when the batcher's
     /// admission cap sheds it; the shed is recorded in `metrics.rejected`.
     pub fn submit(&mut self, req: Request) -> bool {

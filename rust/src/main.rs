@@ -11,6 +11,8 @@
 //!   chunked   TTFT/ITL vs scheduler quantum (prompt-/decode-heavy traces)
 //!   trace     latency-attribution table; --out exports Chrome-trace JSON,
 //!             --check validates an existing export
+//!   scale     million-request engine bench: wall-clock + events/sec
+//!             (--legacy adds the measured pre-refactor speedup)
 //!   fig3|fig4|fig10|fig11|fig12|table1   regenerate a paper artifact
 //!
 //! Observability flags (simulate / fleet / disagg):
@@ -55,7 +57,9 @@ use mixserve::cluster::{
 use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use mixserve::grammar::parse_strategy;
 use mixserve::obs;
-use mixserve::paperbench::{attribution, chunked, disagg, fig10, fig11, fig12, fig3, fig4, table1};
+use mixserve::paperbench::{
+    attribution, chunked, disagg, fig10, fig11, fig12, fig3, fig4, scale, table1,
+};
 use mixserve::pipeline::PipelineCfg;
 use mixserve::runtime::Engine;
 use mixserve::serving::engine::RealEngine;
@@ -757,6 +761,16 @@ fn main() -> Result<()> {
             let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
             print!("{}", fig12::render(&c, args.f64_or("duration", 60.0), 7));
         }
+        "scale" => {
+            // the engine's bench floor: default 1M requests x 256 replicas
+            let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+            let m = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+            let requests = args.usize_or("requests", 1_000_000);
+            let replicas = args.usize_or("replicas", 256);
+            let seed = args.usize_or("seed", 7) as u64;
+            let rep = scale::run(&m, &c, requests, replicas, seed, args.has_flag("legacy"));
+            print!("{}", scale::render(&m, &c, rep.as_ref()));
+        }
         "table1" => {
             let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
             print!("{}", table1::render(&c));
@@ -798,6 +812,11 @@ fn main() -> Result<()> {
                  \x20 chunked   [--model M] [--cluster POD] [--duration S]\n\
                  \x20           (TTFT/ITL vs scheduler quantum, prompt- and\n\
                  \x20            decode-heavy traces)\n\
+                 \x20 scale     [--model M] [--cluster POD] [--requests N]\n\
+                 \x20           [--replicas R] [--seed S] [--legacy]\n\
+                 \x20           (million-request engine bench: wall-clock and\n\
+                 \x20            events/sec; --legacy adds the measured speedup\n\
+                 \x20            over the pre-refactor loop)\n\
                  \x20 trace     [--model M] [--cluster POD] [--duration S]\n\
                  \x20           [--out FILE] [--check FILE]\n\
                  \x20           (latency attribution by span kind across colocated,\n\

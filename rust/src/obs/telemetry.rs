@@ -180,6 +180,15 @@ impl TelemetryBuilder {
         (self.closed + 1) as f64 * self.window <= up_to
     }
 
+    /// The next unclosed window boundary — the event engine's
+    /// synchronization horizon: replicas may advance independently up
+    /// to (but not across) this time, because closing the window needs
+    /// a consistent fleet-wide snapshot.  `pending(t)` ⟺
+    /// `next_boundary() <= t`.
+    pub fn next_boundary(&self) -> f64 {
+        (self.closed + 1) as f64 * self.window
+    }
+
     /// Close every window boundary in `(now, up_to]` with the current
     /// pre-boundary state.  Counters in `snaps` are cumulative; the
     /// builder differences them against the previous close, so a
@@ -276,6 +285,16 @@ mod tests {
         assert_eq!(tel.fleet[1].rejected, 1);
         assert_eq!(tel.fleet[1].handoff_bytes, 7.0);
         assert!((tel.fleet[0].tokens_per_s() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn next_boundary_tracks_pending() {
+        let mut tb = TelemetryBuilder::new(2.0, vec!["colocated"], false);
+        assert_eq!(tb.next_boundary(), 2.0);
+        assert!(!tb.pending(1.9) && tb.pending(2.0));
+        tb.roll(5.0, &[snap(1, 0, 1)], 0.0, 0); // closes [0,2) and [2,4)
+        assert_eq!(tb.next_boundary(), 6.0);
+        assert!(!tb.pending(5.9) && tb.pending(6.0));
     }
 
     #[test]

@@ -11,4 +11,5 @@ pub mod fig11;
 pub mod fig12;
 pub mod fig3;
 pub mod fig4;
+pub mod scale;
 pub mod table1;

@@ -1,0 +1,177 @@
+//! Million-request scale sweep: the bench floor for the indexed event
+//! engine (DESIGN.md §Engine).
+//!
+//! One colocated JSQ fleet of the analyzer's throughput optimum serves a
+//! diurnal ShareGPT trace sized as `requests` total arrivals spread over
+//! `replicas` pods at a fixed per-replica rate — the default
+//! (1M requests × 256 replicas) is the regime the legacy
+//! O(events × replicas) loop made intractable.  Reports wall-clock,
+//! simulated events (scheduler iterations + routed arrivals + KV-handoff
+//! legs), and events/sec; `compare_legacy` re-runs the identical trace
+//! through [`simulate_fleet_legacy`] for a measured speedup row (only
+//! sensible at reduced sizes — the CI smoke runs 10k × 16).
+
+use crate::analyzer::indicators::Workload;
+use crate::analyzer::latency::CommMode;
+use crate::analyzer::search::{Analyzer, Objective};
+use crate::cluster::{simulate_fleet, simulate_fleet_legacy, FleetConfig, RoutingPolicy};
+use crate::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use crate::serving::scheduler::SchedPolicy;
+use crate::workload::TraceGen;
+
+/// Arrival rate per replica, req/s — the 1M × 256 default works out to
+/// 2000 req/s over ~500 simulated seconds.
+pub const PER_REPLICA_RATE: f64 = 7.8125;
+/// Diurnal modulation depth (fraction of the mean rate).
+pub const DIURNAL_DEPTH: f64 = 0.6;
+
+/// One scale-sweep measurement.
+#[derive(Debug, Clone)]
+pub struct ScaleReport {
+    pub requests: usize,
+    pub replicas: usize,
+    /// fleet-wide mean arrival rate, req/s
+    pub rate: f64,
+    /// trace duration, simulated seconds
+    pub duration: f64,
+    pub completed: usize,
+    pub rejected: usize,
+    /// scheduler iterations across the fleet
+    pub iterations: usize,
+    /// prefill→decode KV transfers (0 on this colocated sweep)
+    pub handoffs: usize,
+    /// simulated events: iterations + routed arrivals + 2 legs per handoff
+    pub events: usize,
+    /// wall-clock seconds for the indexed-engine run
+    pub wall_s: f64,
+    pub tok_s: f64,
+    /// wall-clock seconds for the legacy loop on the identical trace
+    /// (None unless `compare_legacy`)
+    pub legacy_wall_s: Option<f64>,
+}
+
+impl ScaleReport {
+    pub fn events_per_s(&self) -> f64 {
+        self.events as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// Run the sweep: `requests` arrivals over `replicas` pods of `pod`'s
+/// shape at [`PER_REPLICA_RATE`] each, diurnal modulation at
+/// [`DIURNAL_DEPTH`] with a quarter-duration period.  None when the
+/// analyzer finds no feasible strategy on the pod (never fabricated).
+pub fn run(
+    model: &MoEModelConfig,
+    pod: &ClusterConfig,
+    requests: usize,
+    replicas: usize,
+    seed: u64,
+    compare_legacy: bool,
+) -> Option<ScaleReport> {
+    assert!(requests > 0 && replicas > 0, "scale sweep needs work and workers");
+    let rate = PER_REPLICA_RATE * replicas as f64;
+    let duration = requests as f64 / rate;
+    let serving = ServingConfig::paper_eval(rate);
+    let wl = Workload::sharegpt(PER_REPLICA_RATE);
+    let best = Analyzer::new(model, pod, &serving).best(&wl, Objective::MaxThroughput)?;
+    let cfg = FleetConfig {
+        replicas,
+        strategy: best.strategy,
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: None,
+        disagg: None,
+        sched: SchedPolicy::Fcfs,
+        obs: crate::obs::ObsConfig::default(),
+    };
+    let trace = TraceGen::diurnal(rate, serving.max_seq, seed, DIURNAL_DEPTH, duration / 4.0)
+        .generate(duration);
+
+    let t0 = std::time::Instant::now();
+    let rep = simulate_fleet(model, pod, &cfg, &serving, &trace, seed);
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let legacy_wall_s = compare_legacy.then(|| {
+        let t0 = std::time::Instant::now();
+        let legacy = simulate_fleet_legacy(model, pod, &cfg, &serving, &trace, seed);
+        assert_eq!(
+            legacy.metrics.completed, rep.metrics.completed,
+            "legacy oracle disagrees with the indexed engine"
+        );
+        t0.elapsed().as_secs_f64()
+    });
+
+    let handoffs = rep.kv_handoff.len();
+    Some(ScaleReport {
+        requests: trace.len(),
+        replicas,
+        rate,
+        duration,
+        completed: rep.metrics.completed,
+        rejected: rep.metrics.rejected,
+        iterations: rep.iterations,
+        handoffs,
+        events: rep.iterations + trace.len() + 2 * handoffs,
+        wall_s,
+        tok_s: rep.metrics.throughput(),
+        legacy_wall_s,
+    })
+}
+
+/// Render the measurement as the paperbench-style report.
+pub fn render(model: &MoEModelConfig, pod: &ClusterConfig, rep: Option<&ScaleReport>) -> String {
+    let Some(r) = rep else {
+        return format!("Scale sweep — no feasible strategy for {} on {}\n", model.name, pod.name);
+    };
+    let mut out = format!(
+        "Scale sweep — {} on {} x {} pods (indexed event engine)\n\
+         {:>10} requests over {:.1}s simulated ({:.1} req/s, diurnal depth {})\n\
+         {:>10} completed, {} shed, {} scheduler iterations, {} KV handoffs\n\
+         {:>10.3}s wall-clock | {:.0} events/sec | {:.1} tok/s simulated\n",
+        model.name,
+        r.replicas,
+        pod.name,
+        r.requests,
+        r.duration,
+        r.rate,
+        DIURNAL_DEPTH,
+        r.completed,
+        r.rejected,
+        r.iterations,
+        r.handoffs,
+        r.wall_s,
+        r.events_per_s(),
+        r.tok_s,
+    );
+    if let Some(lw) = r.legacy_wall_s {
+        out.push_str(&format!(
+            "{:>10.3}s legacy loop wall-clock | {:.2}x speedup\n",
+            lw,
+            lw / r.wall_s.max(1e-9)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_sweep_runs_and_matches_the_legacy_loop() {
+        // the CI smoke shape, reduced: tiny model on the localhost grid,
+        // with the legacy comparison row (which also asserts agreement)
+        let model = MoEModelConfig::tiny();
+        let pod = ClusterConfig::localhost(2, 4);
+        let rep = run(&model, &pod, 500, 2, 7, true).expect("localhost grid must be feasible");
+        assert!(rep.completed > 0, "the sweep must serve traffic");
+        assert_eq!(rep.completed + rep.rejected, rep.requests);
+        assert!(rep.iterations > 0 && rep.events > rep.requests);
+        assert_eq!(rep.handoffs, 0, "colocated sweep has no KV handoffs");
+        assert!(rep.legacy_wall_s.is_some());
+        let rendered = render(&model, &pod, Some(&rep));
+        assert!(rendered.contains("events/sec"));
+        assert!(rendered.contains("speedup"));
+        assert!(render(&model, &pod, None).contains("no feasible strategy"));
+    }
+}

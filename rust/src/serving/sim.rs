@@ -41,33 +41,12 @@ pub struct SimReport {
     pub trace: Option<obs::Trace>,
 }
 
-/// Drive one replica over a sorted-by-us arrival list until drained;
-/// returns the final clock.
+/// Drive one replica over an arrival list until drained; returns the
+/// final clock.  Delegates to [`crate::cluster::engine::drive_replica`],
+/// which keeps the historical event cadence (one step per event time)
+/// while skipping the copy-and-sort on already-sorted traces.
 fn drive<C: CommCost>(replica: &mut ReplicaSim<C>, trace: &[Request]) -> f64 {
-    let mut arrivals = trace.to_vec();
-    crate::workload::sort_by_arrival(&mut arrivals);
-
-    let mut next = 0usize;
-    let mut now = 0.0f64;
-    loop {
-        // feed arrivals due by `now` (queue-cap sheds are counted by the
-        // replica into metrics.rejected)
-        while next < arrivals.len() && arrivals[next].arrival <= now {
-            replica.submit(arrivals[next].clone());
-            next += 1;
-        }
-        let next_arrival =
-            if next < arrivals.len() { arrivals[next].arrival } else { f64::INFINITY };
-        let t = match replica.step(now) {
-            Some(t) => t.min(next_arrival),
-            None => next_arrival, // idle: jump to next work
-        };
-        if !t.is_finite() {
-            break; // drained and no arrivals left
-        }
-        now = t;
-    }
-    now
+    crate::cluster::engine::drive_replica(replica, trace)
 }
 
 fn report<C: CommCost>(mut replica: ReplicaSim<C>, now: f64, mode: CommMode) -> SimReport {

@@ -89,10 +89,123 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|e| e.time.0)
     }
 
+    /// Borrow the earliest event without popping it (clock untouched).
+    pub fn peek(&self) -> Option<(f64, &E)> {
+        self.heap.peek().map(|e| (e.time.0, &e.ev))
+    }
+
+    /// Pop the earliest event and every event tied with it at the same
+    /// timestamp, in FIFO push order.  Advances the clock to that
+    /// timestamp; returns an empty vec on an empty queue.
+    pub fn drain_ties(&mut self) -> Vec<E> {
+        let mut out = Vec::new();
+        let Some((t, _)) = self.peek() else { return out };
+        while self.peek_time() == Some(t) {
+            let (_, ev) = self.pop().expect("peeked entry vanished");
+            out.push(ev);
+        }
+        out
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// One pending timestamp per integer key, generation-stamped for O(log n)
+/// cancellation: `schedule`/`cancel` bump the key's generation so stale
+/// heap entries are skipped lazily on `peek_time`/`pop` instead of being
+/// removed eagerly.  This is the index the fleet engine hangs per-replica
+/// next-event times on — rescheduling a replica is a push, never a heap
+/// rebuild (DESIGN.md §Engine).
+pub struct IndexedQueue {
+    heap: BinaryHeap<Entry<(usize, u64)>>,
+    /// current generation per key; a heap entry is live iff its stamped
+    /// generation equals this.
+    gen: Vec<u64>,
+    seq: u64,
+}
+
+impl IndexedQueue {
+    pub fn new(keys: usize) -> Self {
+        Self { heap: BinaryHeap::new(), gen: vec![0; keys], seq: 0 }
+    }
+
+    /// Schedule (or reschedule) `key` at `time`, superseding any entry
+    /// previously scheduled for it.
+    pub fn schedule(&mut self, key: usize, time: f64) {
+        debug_assert!(time.is_finite(), "cannot schedule at non-finite time");
+        self.gen[key] += 1;
+        self.heap.push(Entry { time: Time(time), seq: self.seq, ev: (key, self.gen[key]) });
+        self.seq += 1;
+    }
+
+    /// Invalidate whatever is scheduled for `key` (no-op if nothing is).
+    pub fn cancel(&mut self, key: usize) {
+        self.gen[key] += 1;
+    }
+
+    fn top_is_stale(&self) -> bool {
+        match self.heap.peek() {
+            Some(e) => self.gen[e.ev.0] != e.ev.1,
+            None => false,
+        }
+    }
+
+    /// Earliest live timestamp; purges stale entries from the top.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        while self.top_is_stale() {
+            self.heap.pop();
+        }
+        self.heap.peek().map(|e| e.time.0)
+    }
+
+    /// Pop the earliest live `(time, key)`, skipping stale entries.
+    pub fn pop(&mut self) -> Option<(f64, usize)> {
+        while self.top_is_stale() {
+            self.heap.pop();
+        }
+        self.heap.pop().map(|e| {
+            self.gen[e.ev.0] += 1; // consumed: nothing pending for key
+            (e.time.0, e.ev.0)
+        })
+    }
+
+    /// Pop every live key scheduled at exactly `now` (FIFO schedule
+    /// order) into `out`.
+    pub fn pop_due(&mut self, now: f64, out: &mut Vec<usize>) {
+        while self.peek_time() == Some(now) {
+            let (_, key) = self.pop().expect("peeked entry vanished");
+            out.push(key);
+        }
+    }
+
+    /// Pop every live key scheduled strictly before `horizon` (earliest
+    /// first, FIFO ties) into `out` as `(time, key)` pairs.
+    pub fn pop_before(&mut self, horizon: f64, out: &mut Vec<(f64, usize)>) {
+        while let Some(t) = self.peek_time() {
+            if t >= horizon {
+                break;
+            }
+            let (t, key) = self.pop().expect("peeked entry vanished");
+            out.push((t, key));
+        }
+    }
+
+    /// Number of heap entries, live *and* stale (an upper bound on
+    /// pending keys; exact after a full drain).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no entries remain at all.  Like [`Self::len`] this
+    /// counts stale entries (`false` may mean only stale entries are
+    /// left); any `pop`/`peek_time` purges the top, so it is exact
+    /// immediately after a drain.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -158,6 +271,90 @@ mod tests {
         q.push(6.0, ());
         q.pop();
         assert_eq!(q.now(), 6.0);
+    }
+
+    #[test]
+    fn peek_leaves_queue_and_clock_untouched() {
+        let mut q = EventQueue::new();
+        q.push(2.0, "b");
+        q.push(1.0, "a");
+        assert_eq!(q.peek(), Some((1.0, &"a")));
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((1.0, "a")));
+    }
+
+    #[test]
+    fn drain_ties_takes_all_tied_events_in_fifo_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "a1");
+        q.push(2.0, "b");
+        q.push(1.0, "a2");
+        q.push(1.0, "a3");
+        assert_eq!(q.drain_ties(), vec!["a1", "a2", "a3"]);
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.drain_ties(), vec!["b"]);
+        assert!(q.drain_ties().is_empty());
+    }
+
+    #[test]
+    fn indexed_queue_pops_in_time_order_with_fifo_ties() {
+        let mut q = IndexedQueue::new(4);
+        q.schedule(2, 1.0);
+        q.schedule(0, 1.0);
+        q.schedule(1, 0.5);
+        q.schedule(3, 2.0);
+        assert_eq!(q.pop(), Some((0.5, 1)));
+        // keys 2 and 0 tie at t=1.0: FIFO by schedule order.
+        assert_eq!(q.pop(), Some((1.0, 2)));
+        assert_eq!(q.pop(), Some((1.0, 0)));
+        assert_eq!(q.pop(), Some((2.0, 3)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn indexed_queue_reschedule_supersedes_stale_entry() {
+        let mut q = IndexedQueue::new(2);
+        q.schedule(0, 5.0);
+        q.schedule(1, 3.0);
+        q.schedule(0, 1.0); // moves key 0 earlier; the 5.0 entry is stale
+        assert_eq!(q.pop(), Some((1.0, 0)));
+        assert_eq!(q.pop(), Some((3.0, 1)));
+        assert_eq!(q.pop(), None); // stale 5.0 entry skipped, not returned
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn indexed_queue_cancel_drops_pending_entry() {
+        let mut q = IndexedQueue::new(2);
+        q.schedule(0, 1.0);
+        q.schedule(1, 2.0);
+        q.cancel(0);
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.pop(), Some((2.0, 1)));
+        assert!(q.is_empty());
+        // cancelling an empty key is a no-op, and the key stays usable
+        q.cancel(0);
+        q.schedule(0, 4.0);
+        assert_eq!(q.pop(), Some((4.0, 0)));
+    }
+
+    #[test]
+    fn indexed_queue_pop_due_and_pop_before() {
+        let mut q = IndexedQueue::new(5);
+        q.schedule(0, 1.0);
+        q.schedule(1, 1.0);
+        q.schedule(2, 2.0);
+        q.schedule(3, 3.0);
+        q.schedule(4, 1.0);
+        q.cancel(1);
+        let mut due = Vec::new();
+        q.pop_due(1.0, &mut due);
+        assert_eq!(due, vec![0, 4]); // 1 cancelled; FIFO among survivors
+        let mut batch = Vec::new();
+        q.pop_before(3.0, &mut batch);
+        assert_eq!(batch, vec![(2.0, 2)]); // 3.0 >= horizon stays queued
+        assert_eq!(q.pop(), Some((3.0, 3)));
     }
 
     #[test]

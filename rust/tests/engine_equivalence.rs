@@ -1,0 +1,238 @@
+//! The indexed event engine's sample-identity pin (DESIGN.md §Engine):
+//! [`simulate_fleet`] (indexed engine, batched chains, sharded stepping)
+//! must reproduce [`simulate_fleet_legacy`] (the frozen pre-refactor
+//! O(events × replicas) loop) **exactly** — every metric counter, every
+//! latency sample, every span, every telemetry window — across all three
+//! architectures (colocated FCFS, chunked prefill, P/D disaggregation),
+//! with and without observability, with and without SLO admission.
+//!
+//! The strongest check is the last one in [`assert_reports_identical`]:
+//! the full `Debug` rendering of both reports must match byte-for-byte
+//! (Rust's f64 Debug output round-trips, and every container in the
+//! report is deterministic — Vec / BTreeMap, no hash maps), so any
+//! divergence anywhere in the report surfaces even if the targeted
+//! asserts miss it.
+
+use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::latency::CommMode;
+use mixserve::analyzer::search::{Analyzer, Objective};
+use mixserve::cluster::{
+    simulate_fleet, simulate_fleet_legacy, DisaggConfig, FleetConfig, FleetReport, ObsConfig,
+    RoutingPolicy, SloPolicy,
+};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use mixserve::serving::scheduler::SchedPolicy;
+use mixserve::testkit::forall;
+use mixserve::util::rng::Rng;
+use mixserve::workload::TraceGen;
+
+fn assert_reports_identical(engine: &FleetReport, legacy: &FleetReport, label: &str) {
+    // targeted asserts first, for readable failures
+    let (em, lm) = (&engine.metrics, &legacy.metrics);
+    assert_eq!(em.completed, lm.completed, "{label}: completed");
+    assert_eq!(em.rejected, lm.rejected, "{label}: rejected");
+    assert_eq!(em.submitted, lm.submitted, "{label}: submitted");
+    assert_eq!(em.tokens_in, lm.tokens_in, "{label}: tokens_in");
+    assert_eq!(em.tokens_out, lm.tokens_out, "{label}: tokens_out");
+    assert_eq!(em.ttft_ok, lm.ttft_ok, "{label}: ttft_ok");
+    assert_eq!(em.duration, lm.duration, "{label}: duration");
+    assert_eq!(em.ttft.values(), lm.ttft.values(), "{label}: TTFT samples");
+    assert_eq!(em.itl.values(), lm.itl.values(), "{label}: ITL samples");
+    assert_eq!(em.ttft_summary(), lm.ttft_summary(), "{label}: TTFT summary");
+    assert_eq!(em.itl_summary(), lm.itl_summary(), "{label}: ITL summary");
+    assert_eq!(engine.iterations, legacy.iterations, "{label}: iterations");
+    assert_eq!(engine.mean_imbalance, legacy.mean_imbalance, "{label}: imbalance");
+    assert_eq!(engine.kv_handoff.len(), legacy.kv_handoff.len(), "{label}: handoffs");
+    assert_eq!(engine.kv_handoff.values(), legacy.kv_handoff.values(), "{label}: handoff samples");
+    assert_eq!(engine.per_replica.len(), legacy.per_replica.len(), "{label}: replica count");
+    for (i, (e, l)) in engine.per_replica.iter().zip(&legacy.per_replica).enumerate() {
+        assert_eq!(e.completed, l.completed, "{label}: replica {i} completed");
+        assert_eq!(e.ttft.values(), l.ttft.values(), "{label}: replica {i} TTFT");
+    }
+    // span-for-span
+    match (&engine.trace, &legacy.trace) {
+        (None, None) => {}
+        (Some(e), Some(l)) => {
+            assert_eq!(e.spans(), l.spans(), "{label}: spans");
+            assert_eq!(e.requests_completed(), l.requests_completed(), "{label}: completions");
+        }
+        _ => panic!("{label}: one report traced, the other not"),
+    }
+    // window-for-window (WindowSample has no PartialEq; Debug output is
+    // deterministic, so string equality is exact)
+    match (&engine.telemetry, &legacy.telemetry) {
+        (None, None) => {}
+        (Some(e), Some(l)) => {
+            assert_eq!(e.windows(), l.windows(), "{label}: telemetry windows");
+            let (ef, lf) = (format!("{:?}", e.fleet), format!("{:?}", l.fleet));
+            assert_eq!(ef, lf, "{label}: fleet windows");
+            let (er, lr) = (format!("{:?}", e.replicas), format!("{:?}", l.replicas));
+            assert_eq!(er, lr, "{label}: replica windows");
+        }
+        _ => panic!("{label}: one report has telemetry, the other not"),
+    }
+    // the catch-all: byte-identical Debug rendering of the whole report
+    assert_eq!(format!("{engine:?}"), format!("{legacy:?}"), "{label}: full report");
+}
+
+fn run_both(
+    model: &MoEModelConfig,
+    pod: &ClusterConfig,
+    cfg: &FleetConfig,
+    rate: f64,
+    duration: f64,
+    seed: u64,
+) -> (FleetReport, FleetReport) {
+    let serving = ServingConfig::paper_eval(rate);
+    let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
+    let engine = simulate_fleet(model, pod, cfg, &serving, &trace, seed);
+    let legacy = simulate_fleet_legacy(model, pod, cfg, &serving, &trace, seed);
+    (engine, legacy)
+}
+
+fn colocated(replicas: usize, strategy: ParallelStrategy) -> FleetConfig {
+    FleetConfig {
+        replicas,
+        strategy,
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: None,
+        disagg: None,
+        sched: SchedPolicy::Fcfs,
+        obs: ObsConfig::default(),
+    }
+}
+
+fn one_p_one_d() -> DisaggConfig {
+    DisaggConfig {
+        prefill_replicas: 1,
+        decode_replicas: 1,
+        prefill_strategy: ParallelStrategy::mixserve(4, 8),
+        decode_strategy: ParallelStrategy::pure_ep(4, 8),
+    }
+}
+
+#[test]
+fn colocated_fleet_is_sample_identical_with_full_obs() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let mut cfg = colocated(4, ParallelStrategy::mixserve(4, 8));
+    cfg.obs = ObsConfig::full(1.0);
+    let (engine, legacy) = run_both(&model, &pod, &cfg, 8.0, 20.0, 7);
+    assert!(engine.metrics.completed > 0, "the pin must exercise real traffic");
+    assert_reports_identical(&engine, &legacy, "colocated+obs");
+}
+
+#[test]
+fn chunked_fleet_is_sample_identical() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let mut cfg = colocated(3, ParallelStrategy::mixserve(4, 8));
+    cfg.sched = SchedPolicy::Chunked { quantum: 256 };
+    cfg.obs = ObsConfig::full(1.0);
+    let (engine, legacy) = run_both(&model, &pod, &cfg, 6.0, 15.0, 11);
+    assert!(engine.metrics.completed > 0);
+    assert_reports_identical(&engine, &legacy, "chunked+obs");
+}
+
+#[test]
+fn disagg_fleet_is_sample_identical_with_handoffs() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let mut cfg = colocated(2, ParallelStrategy::mixserve(4, 8));
+    cfg.disagg = Some(one_p_one_d());
+    cfg.obs = ObsConfig::full(1.0);
+    let (engine, legacy) = run_both(&model, &pod, &cfg, 6.0, 15.0, 11);
+    assert!(!engine.kv_handoff.is_empty(), "the pin must exercise the transit queue");
+    assert_reports_identical(&engine, &legacy, "disagg+obs");
+}
+
+#[test]
+fn slo_gated_fleet_is_sample_identical_under_shedding() {
+    // overload + deadline: the engine's precomputed backlog bound must
+    // shed exactly the arrivals the legacy per-arrival admit() shed
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let mut cfg = colocated(2, ParallelStrategy::mixserve(4, 8));
+    cfg.slo = Some(SloPolicy { ttft_deadline: 8.0 });
+    let (engine, legacy) = run_both(&model, &pod, &cfg, 24.0, 30.0, 3);
+    assert!(engine.metrics.rejected > 0, "the pin must exercise shedding");
+    assert_reports_identical(&engine, &legacy, "slo-gated");
+}
+
+#[test]
+fn disagg_slo_fleet_is_sample_identical_through_the_two_stage_gate() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let mut cfg = colocated(2, ParallelStrategy::mixserve(4, 8));
+    cfg.disagg = Some(one_p_one_d());
+    cfg.slo = Some(SloPolicy { ttft_deadline: 8.0 });
+    let (engine, legacy) = run_both(&model, &pod, &cfg, 12.0, 20.0, 3);
+    assert_reports_identical(&engine, &legacy, "disagg+slo");
+}
+
+#[test]
+fn prop_engine_matches_legacy_on_random_small_fleets() {
+    // random fleets over all three architectures × obs on/off × optional
+    // SLO, on the tiny-model localhost grid (fast enough to randomize)
+    let model = MoEModelConfig::tiny();
+    let pod = ClusterConfig::localhost(2, 4);
+    let analyzer = Analyzer::new(&model, &pod, &ServingConfig::paper_eval(4.0));
+    let wl = Workload::sharegpt(4.0);
+    let colo_strategy = analyzer
+        .best(&wl, Objective::MaxThroughput)
+        .expect("localhost grid must be feasible")
+        .strategy;
+    let pair = analyzer.best_disagg(&wl).expect("localhost grid must have a disagg pair");
+    forall(
+        "indexed engine == legacy loop, metric-for-metric",
+        12,
+        97,
+        |r: &mut Rng| {
+            let arch = r.below(3); // 0 colocated, 1 chunked, 2 disagg
+            let replicas = match arch {
+                2 => 2 + r.below(7), // split across the two pools below
+                _ => 1 + r.below(8),
+            };
+            let obs = r.below(2) == 1;
+            let slo = r.below(3) == 0;
+            let rate = 2.0 + r.below(5) as f64;
+            let duration = 6.0 + r.below(5) as f64;
+            (arch, replicas, obs, slo, rate, duration, r.next_u64() % 1000)
+        },
+        |&(arch, replicas, obs, slo, rate, duration, seed)| {
+            let mut cfg = colocated(replicas, colo_strategy);
+            match arch {
+                1 => cfg.sched = SchedPolicy::Chunked { quantum: 64 },
+                2 => {
+                    let prefill = 1 + (replicas - 2) / 2;
+                    cfg.disagg = Some(DisaggConfig {
+                        prefill_replicas: prefill,
+                        decode_replicas: replicas - prefill,
+                        prefill_strategy: pair.prefill.strategy,
+                        decode_strategy: pair.decode.strategy,
+                    });
+                }
+                _ => {}
+            }
+            if obs {
+                cfg.obs = ObsConfig::full(1.0);
+            }
+            if slo {
+                cfg.slo = Some(SloPolicy { ttft_deadline: 4.0 });
+            }
+            let (engine, legacy) = run_both(&model, &pod, &cfg, rate, duration, seed);
+            if format!("{engine:?}") != format!("{legacy:?}") {
+                return Err(format!(
+                    "reports diverged (engine completed {}, legacy {}; \
+                     iterations {} vs {})",
+                    engine.metrics.completed,
+                    legacy.metrics.completed,
+                    engine.iterations,
+                    legacy.iterations
+                ));
+            }
+            Ok(())
+        },
+    );
+}
