@@ -216,6 +216,7 @@ fn main() {
         disagg: None,
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
+        controller: None,
     };
     let fleet_trace = TraceGen::sharegpt(fleet_rate, fleet_serving.max_seq, 7)
         .generate(100_000.0 / fleet_rate);

@@ -248,6 +248,21 @@ impl<C: CommCost> Analyzer<C> {
         let handoff_secs = kv_handoff_secs(&self.cost, &self.model, wl.len_in);
         Some(PhasePair { prefill, decode, handoff_secs })
     }
+
+    /// The incremental online re-plan behind the elastic controller
+    /// (`cluster/controller.rs`): reduce one already-chosen strategy to
+    /// its **per-unit-rate utilization** under the workload *shape*.
+    /// For a fixed request shape ρ is linear in the arrival rate, so the
+    /// controller sizes the active fleet as
+    /// `ceil(rho_per_rate · measured_rate / rho_target)` each control
+    /// tick without re-running the grammar search in the event loop.
+    /// None when the strategy is degenerate under this shape (ρ
+    /// non-positive or non-finite).
+    pub fn replan(&self, s: &ParallelStrategy, wl: &Workload) -> Option<f64> {
+        let rho = self.report(s, wl).indicators.rho;
+        let per_rate = rho / wl.rate.max(1e-9);
+        (per_rate.is_finite() && per_rate > 0.0).then_some(per_rate)
+    }
 }
 
 #[cfg(test)]
@@ -363,6 +378,26 @@ mod tests {
                 p.indicators.ttft
             );
         }
+    }
+
+    #[test]
+    fn replan_reduces_rho_to_a_rate_linear_coefficient() {
+        let a = setup(ClusterConfig::ascend910b());
+        let wl = Workload::sharegpt(4.0);
+        let s = a.best(&wl, Objective::MaxThroughput).unwrap().strategy;
+        let per_rate = a.replan(&s, &wl).expect("a feasible optimum must replan");
+        assert!(per_rate > 0.0 && per_rate.is_finite());
+        // ρ is linear in the arrival rate for a fixed request shape: the
+        // coefficient must not depend on the rate the shape was measured at
+        let wl2 = Workload { rate: 8.0, ..wl };
+        let per_rate2 = a.replan(&s, &wl2).unwrap();
+        assert!(
+            (per_rate - per_rate2).abs() < 1e-9 * per_rate.max(per_rate2),
+            "per-unit-rate rho drifted with rate: {per_rate} vs {per_rate2}"
+        );
+        // and it reproduces the full report's utilization when scaled back
+        let rho = a.report(&s, &wl).indicators.rho;
+        assert!((per_rate * wl.rate - rho).abs() < 1e-12 * rho.abs().max(1.0));
     }
 
     #[test]

@@ -1,0 +1,617 @@
+//! The elastic fleet controller (DESIGN.md §Controller): ROADMAP item 1.
+//!
+//! `Role` used to be frozen at fleet construction, while `workload/`
+//! generates diurnal and bursty traffic whose prompt/decode mix drifts
+//! by the hour.  This module closes the loop *online*: a [`Controller`]
+//! rides the fleet event loop and acts at every telemetry window close
+//! (the control interval **is** the window width), reading the
+//! just-closed [`crate::obs::WindowSample`] rows — queue depth,
+//! occupancy, SLO attainment, rejection rate, KV bytes in flight — and
+//! actuating three moves:
+//!
+//! * **flip** a replica between `Role::Prefill` and `Role::Decode`
+//!   (never to or from `Colocated` — the architecture is not a
+//!   per-window decision).  A flip begins as a [`ReplicaState::Draining`]
+//!   transition: the replica serves out every already-accepted request
+//!   and flushes its pending KV handoffs, then the role lands at a later
+//!   window close.  No request is ever lost or duplicated across a flip
+//!   (pinned by the conservation proptest in
+//!   `tests/controller_integration.rs`);
+//! * **grow** the active fleet by waking a [`ReplicaState::Parked`]
+//!   spare (constructed up to `max_replicas` against the device budget);
+//! * **shrink** by draining an active replica to park.
+//!
+//! Sizing is the PR 1/PR 6 planner run online: [`Analyzer::replan`]
+//! (analyzer/search.rs) reduces the configured strategy to a
+//! per-unit-rate utilization, and the controller resizes to
+//! `ceil(rho_per_rate · measured_rate / rho_target)` from the measured
+//! window arrival rate — no grammar search in the loop.
+//!
+//! Determinism: every decision is a pure function of the telemetry
+//! builder state and replica gauges at the window close, so the indexed
+//! engine and the legacy loop (which share this hook at their respective
+//! window-close points) make identical decisions — controller-on runs
+//! stay engine-vs-legacy sample-identical, and controller-off runs are
+//! bit-for-bit the PR 8 behavior (the hook is never entered).
+
+use super::replica::{ReplicaSim, ReplicaState, Role};
+use crate::obs::TelemetryBuilder;
+
+/// One controller actuation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlAction {
+    /// Drain, then land on this role (Prefill ↔ Decode only).
+    Flip(Role),
+    /// Drain, then park (scale-down).
+    Park,
+    /// Wake a parked replica into this role (scale-up).
+    Activate(Role),
+}
+
+/// A scripted directive: apply `action` to `replica` at the first
+/// window close with tick ≥ `tick`.  Scripted mode drives the
+/// conservation proptest with arbitrary-but-reproducible flip plans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Directive {
+    pub tick: usize,
+    pub replica: usize,
+    pub action: ControlAction,
+}
+
+/// Controller policy knobs.  `ControllerConfig::new(interval)` gives the
+/// reactive defaults; `scripted` replays a fixed plan (tests).
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Control interval, seconds.  Forced as the telemetry window when
+    /// `FleetConfig::obs.window` is unset — the controller ticks exactly
+    /// when a window closes.
+    pub interval: f64,
+    /// Target per-replica utilization the rate-driven resize aims at.
+    pub rho_target: f64,
+    /// SLO-attainment floor: a window below it is distress (grow).
+    pub slo_floor: f64,
+    /// Per-active-replica queue imbalance between the prefill and decode
+    /// pools that triggers a role flip (disaggregated fleets only).
+    pub flip_ratio: f64,
+    /// Minimum ticks between reactive actions (drains need time to land
+    /// before the signal is worth reading again).
+    pub cooldown: usize,
+    /// Never shrink below this many active replicas.
+    pub min_replicas: usize,
+    /// Device budget: total replicas constructed.  Replicas beyond
+    /// `FleetConfig::replicas` (or the disagg pool sum) start parked.
+    pub max_replicas: usize,
+    /// Per-unit-rate utilization from [`crate::analyzer::search::Analyzer::replan`];
+    /// None disables the rate-driven resize (distress growth and flips
+    /// still apply).
+    pub rho_per_rate: Option<f64>,
+    /// Whether the reactive policy runs (scripted tests turn it off).
+    pub reactive: bool,
+    /// Scripted directives, applied in order of their ticks.
+    pub directives: Vec<Directive>,
+}
+
+impl ControllerConfig {
+    /// Reactive defaults at the given control interval.
+    pub fn new(interval: f64) -> Self {
+        ControllerConfig {
+            interval,
+            rho_target: 0.7,
+            slo_floor: 0.95,
+            flip_ratio: 1.5,
+            cooldown: 2,
+            min_replicas: 1,
+            max_replicas: 0, // builder clamps up to the initial fleet size
+            rho_per_rate: None,
+            reactive: true,
+            directives: Vec::new(),
+        }
+    }
+
+    /// A purely scripted controller: no reactive policy, just the plan.
+    pub fn scripted(interval: f64, mut directives: Vec<Directive>) -> Self {
+        directives.sort_by_key(|d| d.tick);
+        ControllerConfig { reactive: false, directives, ..ControllerConfig::new(interval) }
+    }
+}
+
+/// One applied actuation, stamped with the control tick and sim time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControlEvent {
+    pub tick: usize,
+    pub t: f64,
+    pub replica: usize,
+    pub action: ControlAction,
+}
+
+/// What the controller did over the run, attached to
+/// [`super::fleet::FleetReport`] (None when no controller ran —
+/// preserving the PR 8 report rendering bit-for-bit).
+#[derive(Debug, Clone)]
+pub struct ControllerReport {
+    pub events: Vec<ControlEvent>,
+    pub flips: usize,
+    pub grows: usize,
+    pub shrinks: usize,
+    /// Active replicas when the run ended.
+    pub final_active: usize,
+}
+
+/// The live routing pools an elastic fleet loop consults instead of the
+/// construction-time role scan: ascending replica indices, recomputed
+/// only when the controller changes something.
+#[derive(Debug, Default, Clone)]
+pub struct LivePools {
+    pub active: Vec<usize>,
+    pub prefill: Vec<usize>,
+    pub decode: Vec<usize>,
+}
+
+impl LivePools {
+    pub fn recompute(&mut self, replicas: &[ReplicaSim]) {
+        self.active.clear();
+        self.prefill.clear();
+        self.decode.clear();
+        for (i, r) in replicas.iter().enumerate() {
+            if !r.is_routable() {
+                continue;
+            }
+            self.active.push(i);
+            match r.role() {
+                Role::Prefill => self.prefill.push(i),
+                Role::Decode => self.decode.push(i),
+                Role::Colocated => {}
+            }
+        }
+    }
+}
+
+/// The control loop state machine.  Owned by the fleet setup; both the
+/// indexed engine and the legacy loop call [`Controller::on_windows_closed`]
+/// right after rolling telemetry windows, and route through
+/// [`Controller::pools`].
+#[derive(Debug)]
+pub struct Controller {
+    cfg: ControllerConfig,
+    pools: LivePools,
+    next_directive: usize,
+    last_action: Option<usize>,
+    events: Vec<ControlEvent>,
+    flips: usize,
+    grows: usize,
+    shrinks: usize,
+}
+
+impl Controller {
+    pub fn new(cfg: ControllerConfig, replicas: &[ReplicaSim]) -> Self {
+        let mut pools = LivePools::default();
+        pools.recompute(replicas);
+        Controller {
+            cfg,
+            pools,
+            next_directive: 0,
+            last_action: None,
+            events: Vec::new(),
+            flips: 0,
+            grows: 0,
+            shrinks: 0,
+        }
+    }
+
+    pub fn pools(&self) -> &LivePools {
+        &self.pools
+    }
+
+    /// The control hook, shared verbatim by both fleet loops: called
+    /// right after `TelemetryBuilder::roll` closed one or more windows.
+    /// Lands ready drains, applies scripted directives due by this tick,
+    /// then (cooldown permitting) takes at most one reactive action.
+    /// Returns whether anything changed — the pools are already
+    /// recomputed when it did.
+    pub fn on_windows_closed(
+        &mut self,
+        replicas: &mut [ReplicaSim],
+        tb: &TelemetryBuilder,
+    ) -> bool {
+        let tick = tb.closed();
+        let window = tb.window();
+        let mut changed = false;
+
+        // (1) land every drain that has served out its obligations —
+        // role flips take effect here, park completions leave rotation
+        for r in replicas.iter_mut() {
+            if r.drain_complete() {
+                r.finish_drain();
+                changed = true;
+            }
+        }
+        if changed {
+            self.pools.recompute(replicas);
+        }
+
+        // (2) scripted directives due by this tick, in plan order
+        while let Some(d) = self.cfg.directives.get(self.next_directive).copied() {
+            if d.tick > tick {
+                break;
+            }
+            self.next_directive += 1;
+            if self.apply(tick, window, d.replica, d.action, replicas) {
+                changed = true;
+                self.pools.recompute(replicas);
+            }
+        }
+
+        // (3) one reactive action per tick, after the cooldown
+        let cooled =
+            !matches!(self.last_action, Some(t) if tick.saturating_sub(t) < self.cfg.cooldown);
+        if self.cfg.reactive && cooled && self.react(tick, window, tb, replicas) {
+            self.last_action = Some(tick);
+            changed = true;
+            self.pools.recompute(replicas);
+        }
+        changed
+    }
+
+    /// Validate and actuate one action.  Guards keep the fleet servable:
+    /// flips move only between the P/D roles and never drain a pool's
+    /// last active member (the handoff router panics on an empty decode
+    /// pool — the guard makes that unreachable); parks respect
+    /// `min_replicas` and the same pool floor; activations need a spare.
+    fn apply(
+        &mut self,
+        tick: usize,
+        window: f64,
+        i: usize,
+        action: ControlAction,
+        replicas: &mut [ReplicaSim],
+    ) -> bool {
+        if i >= replicas.len() {
+            return false;
+        }
+        let valid = match action {
+            ControlAction::Flip(target) => {
+                replicas[i].is_routable()
+                    && matches!(replicas[i].role(), Role::Prefill | Role::Decode)
+                    && matches!(target, Role::Prefill | Role::Decode)
+                    && replicas[i].role() != target
+                    && self.pool_can_lose(replicas, replicas[i].role())
+            }
+            ControlAction::Park => {
+                replicas[i].is_routable()
+                    && self.pools.active.len() > self.cfg.min_replicas
+                    && self.pool_can_lose(replicas, replicas[i].role())
+            }
+            ControlAction::Activate(role) => {
+                // the architecture is static: a colocated fleet wakes
+                // only colocated spares, a role-split fleet only P/D
+                // ones (the engine precomputes per-architecture state a
+                // cross-shape wake would invalidate), and a prefill
+                // wake needs a decode pool to hand its KV to
+                let fleet_disagg = replicas.iter().any(|r| r.role() != Role::Colocated);
+                replicas[i].state() == ReplicaState::Parked
+                    && match role {
+                        Role::Colocated => !fleet_disagg,
+                        Role::Decode => fleet_disagg,
+                        Role::Prefill => {
+                            fleet_disagg
+                                && replicas
+                                    .iter()
+                                    .any(|r| r.is_routable() && r.role() == Role::Decode)
+                        }
+                    }
+            }
+        };
+        if !valid {
+            return false;
+        }
+        match action {
+            ControlAction::Flip(target) => {
+                replicas[i].begin_drain(Some(target));
+                self.flips += 1;
+            }
+            ControlAction::Park => {
+                replicas[i].begin_drain(None);
+                self.shrinks += 1;
+            }
+            ControlAction::Activate(role) => {
+                replicas[i].activate(role);
+                self.grows += 1;
+            }
+        }
+        self.events.push(ControlEvent { tick, t: tick as f64 * window, replica: i, action });
+        true
+    }
+
+    /// A P/D pool may lose a member only while another active member
+    /// remains; colocated replicas are only floored by `min_replicas`.
+    fn pool_can_lose(&self, replicas: &[ReplicaSim], role: Role) -> bool {
+        match role {
+            Role::Colocated => true,
+            Role::Prefill | Role::Decode => {
+                replicas
+                    .iter()
+                    .filter(|r| r.is_routable() && r.role() == role)
+                    .count()
+                    >= 2
+            }
+        }
+    }
+
+    /// The reactive policy: signal → decision → (at most one) actuation.
+    ///
+    /// * distress (any rejection, or SLO attainment under the floor in
+    ///   the last window) forces growth when a spare exists;
+    /// * otherwise the rate-driven resize compares the active count to
+    ///   `ceil(rho_per_rate · measured_rate / rho_target)`;
+    /// * otherwise a disaggregated fleet rebalances: when one pool's
+    ///   per-active-replica queue exceeds `flip_ratio ×` the other's,
+    ///   the lightest member of the cold pool flips over.
+    fn react(
+        &mut self,
+        tick: usize,
+        window: f64,
+        tb: &TelemetryBuilder,
+        replicas: &mut [ReplicaSim],
+    ) -> bool {
+        let Some(w) = tb.last_fleet() else {
+            return false;
+        };
+        let active = self.pools.active.len();
+        let distress = w.rejected > 0 || w.slo_attainment() < self.cfg.slo_floor;
+        let rate = w.offered as f64 / w.window.max(1e-9);
+        let budget = replicas.len();
+        let mut desired = match self.cfg.rho_per_rate {
+            Some(rpr) => (((rpr * rate / self.cfg.rho_target).ceil() as usize)
+                .max(self.cfg.min_replicas))
+            .min(budget),
+            None => active,
+        };
+        if distress {
+            desired = desired.max((active + 1).min(budget));
+        }
+        let disagg = !self.pools.prefill.is_empty() || !self.pools.decode.is_empty();
+
+        if desired > active {
+            if let Some(i) = replicas.iter().position(|r| r.state() == ReplicaState::Parked) {
+                let role = if disagg { self.hotter_pool_role(tb) } else { Role::Colocated };
+                if self.apply(tick, window, i, ControlAction::Activate(role), replicas) {
+                    return true;
+                }
+            }
+            // no spare left: a disagg fleet can still rebalance below
+        } else if desired < active && !distress {
+            let victim = self
+                .pools
+                .active
+                .iter()
+                .copied()
+                .min_by_key(|&i| (replicas[i].queue_depth(), i));
+            if let Some(i) = victim {
+                if self.apply(tick, window, i, ControlAction::Park, replicas) {
+                    return true;
+                }
+            }
+        }
+        if disagg {
+            return self.maybe_flip(tick, window, tb, replicas);
+        }
+        false
+    }
+
+    /// Per-active-replica queue depth of a pool, from the just-closed
+    /// window rows (the gauges are sampled at the boundary, so they
+    /// equal the live depths at decision time).
+    fn pool_depth(tb: &TelemetryBuilder, pool: &[usize]) -> f64 {
+        if pool.is_empty() {
+            return 0.0;
+        }
+        let total: usize =
+            pool.iter().map(|&i| tb.last_replica(i).map_or(0, |s| s.queue_depth)).sum();
+        total as f64 / pool.len() as f64
+    }
+
+    /// Which pool a grown replica should join: the one with the deeper
+    /// per-replica queue (decode when tied — completions gate there).
+    fn hotter_pool_role(&self, tb: &TelemetryBuilder) -> Role {
+        let qp = Self::pool_depth(tb, &self.pools.prefill);
+        let qd = Self::pool_depth(tb, &self.pools.decode);
+        if qp > qd {
+            Role::Prefill
+        } else {
+            Role::Decode
+        }
+    }
+
+    /// Flip the lightest member of the cold pool toward the hot one when
+    /// the imbalance crosses `flip_ratio`.  The `+ 1.0` hysteresis keeps
+    /// near-empty queues from flapping.
+    fn maybe_flip(
+        &mut self,
+        tick: usize,
+        window: f64,
+        tb: &TelemetryBuilder,
+        replicas: &mut [ReplicaSim],
+    ) -> bool {
+        let qp = Self::pool_depth(tb, &self.pools.prefill);
+        let qd = Self::pool_depth(tb, &self.pools.decode);
+        let lightest = |pool: &[usize], replicas: &[ReplicaSim]| {
+            pool.iter().copied().min_by_key(|&i| (replicas[i].queue_depth(), i))
+        };
+        if qp > self.cfg.flip_ratio * (qd + 1.0) {
+            if let Some(i) = lightest(&self.pools.decode, replicas) {
+                return self.apply(tick, window, i, ControlAction::Flip(Role::Prefill), replicas);
+            }
+        } else if qd > self.cfg.flip_ratio * (qp + 1.0) {
+            if let Some(i) = lightest(&self.pools.prefill, replicas) {
+                return self.apply(tick, window, i, ControlAction::Flip(Role::Decode), replicas);
+            }
+        }
+        false
+    }
+
+    /// Fold into the report row attached to the `FleetReport`.
+    pub fn finish(self, replicas: &[ReplicaSim]) -> ControllerReport {
+        ControllerReport {
+            events: self.events,
+            flips: self.flips,
+            grows: self.grows,
+            shrinks: self.shrinks,
+            final_active: replicas.iter().filter(|r| r.is_routable()).count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::latency::CommMode;
+    use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+    use crate::obs::ReplicaSnapshot;
+
+    fn fleet(roles: &[Role]) -> Vec<ReplicaSim> {
+        roles
+            .iter()
+            .enumerate()
+            .map(|(i, &role)| {
+                ReplicaSim::new(
+                    &MoEModelConfig::tiny(),
+                    &ClusterConfig::localhost(2, 4),
+                    &ParallelStrategy::mixserve(2, 4),
+                    &ServingConfig::paper_eval(4.0),
+                    CommMode::FusedAsync,
+                    i as u64,
+                    i,
+                )
+                .with_role(role)
+            })
+            .collect()
+    }
+
+    fn builder(roles: &[Role]) -> TelemetryBuilder {
+        TelemetryBuilder::new(1.0, roles.iter().map(|r| r.label()).collect(), false)
+    }
+
+    /// Cumulative snapshots with the given queue-depth gauges and one
+    /// submission per replica per window (kept monotone by reuse).
+    fn snaps(depths: &[usize], submitted: usize) -> Vec<ReplicaSnapshot> {
+        depths
+            .iter()
+            .map(|&queue_depth| ReplicaSnapshot {
+                queue_depth,
+                submitted,
+                ..Default::default()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scripted_flip_drains_then_lands() {
+        let roles = [Role::Prefill, Role::Prefill, Role::Decode];
+        let mut replicas = fleet(&roles);
+        let cfg = ControllerConfig::scripted(
+            1.0,
+            vec![Directive { tick: 1, replica: 0, action: ControlAction::Flip(Role::Decode) }],
+        );
+        let mut ctl = Controller::new(cfg, &replicas);
+        assert_eq!(ctl.pools().prefill, vec![0, 1]);
+        assert_eq!(ctl.pools().decode, vec![2]);
+        let mut tb = builder(&roles);
+        let s = snaps(&[0, 0, 0], 0);
+        tb.roll(1.0, &s, 0.0, 0);
+        assert!(ctl.on_windows_closed(&mut replicas, &tb));
+        // the flip begins: replica 0 leaves the routing pools at once
+        assert_eq!(ctl.pools().prefill, vec![1]);
+        assert_eq!(replicas[0].state(), ReplicaState::Draining { target: Some(Role::Decode) });
+        // idle drain lands at the next window close
+        tb.roll(2.0, &s, 0.0, 0);
+        assert!(ctl.on_windows_closed(&mut replicas, &tb));
+        assert_eq!(replicas[0].role(), Role::Decode);
+        assert_eq!(replicas[0].state(), ReplicaState::Active);
+        assert_eq!(ctl.pools().decode, vec![0, 2]);
+    }
+
+    #[test]
+    fn guards_refuse_to_empty_a_pool_or_break_the_floor() {
+        let roles = [Role::Prefill, Role::Decode];
+        let mut replicas = fleet(&roles);
+        let cfg = ControllerConfig::scripted(
+            1.0,
+            vec![
+                // would empty the prefill pool
+                Directive { tick: 1, replica: 0, action: ControlAction::Flip(Role::Decode) },
+                // would empty the decode pool
+                Directive { tick: 1, replica: 1, action: ControlAction::Park },
+            ],
+        );
+        let mut ctl = Controller::new(cfg, &replicas);
+        let mut tb = builder(&roles);
+        tb.roll(1.0, &snaps(&[0, 0], 0), 0.0, 0);
+        assert!(!ctl.on_windows_closed(&mut replicas, &tb), "both directives rejected");
+        assert!(replicas.iter().all(|r| r.is_routable()));
+        let rep = ctl.finish(&replicas);
+        assert!(rep.events.is_empty());
+        assert_eq!(rep.final_active, 2);
+    }
+
+    #[test]
+    fn distress_wakes_a_parked_spare_into_the_hotter_pool() {
+        let roles = [Role::Prefill, Role::Decode, Role::Decode];
+        let mut replicas = fleet(&roles);
+        // replica 2 is the parked spare
+        replicas[2].begin_drain(None);
+        assert!(replicas[2].drain_complete());
+        replicas[2].finish_drain();
+        let mut ctl = Controller::new(ControllerConfig::new(1.0), &replicas);
+        assert_eq!(ctl.pools().active, vec![0, 1]);
+        // a window with rejections and a deep prefill queue: distress
+        let mut tb = builder(&roles);
+        let s = [
+            ReplicaSnapshot { queue_depth: 9, submitted: 9, rejected: 2, ..Default::default() },
+            ReplicaSnapshot { queue_depth: 1, submitted: 1, ..Default::default() },
+            ReplicaSnapshot::default(),
+        ];
+        tb.roll(1.0, &s, 0.0, 0);
+        assert!(ctl.on_windows_closed(&mut replicas, &tb));
+        assert!(replicas[2].is_routable());
+        assert_eq!(replicas[2].role(), Role::Prefill, "the spare joins the hotter pool");
+        let rep = ctl.finish(&replicas);
+        assert_eq!(rep.grows, 1);
+        assert_eq!(rep.final_active, 3);
+    }
+
+    #[test]
+    fn queue_imbalance_flips_the_lightest_cold_replica() {
+        let roles = [Role::Prefill, Role::Decode, Role::Decode];
+        let mut replicas = fleet(&roles);
+        let mut ctl = Controller::new(ControllerConfig::new(1.0), &replicas);
+        let mut tb = builder(&roles);
+        // prefill pool gauge deep, decode pools idle: rebalance
+        tb.roll(1.0, &snaps(&[8, 0, 0], 1), 0.0, 0);
+        assert!(ctl.on_windows_closed(&mut replicas, &tb));
+        // one of the two decode replicas begins draining toward prefill
+        let draining: Vec<usize> = (1..3)
+            .filter(|&i| {
+                replicas[i].state() == ReplicaState::Draining { target: Some(Role::Prefill) }
+            })
+            .collect();
+        assert_eq!(draining, vec![1], "the lightest (lowest-index) decode member flips");
+        assert_eq!(ctl.pools().decode, vec![2], "the drainer left the pool immediately");
+    }
+
+    #[test]
+    fn cooldown_spaces_reactive_actions() {
+        let roles = [Role::Prefill, Role::Prefill, Role::Decode, Role::Decode];
+        let mut replicas = fleet(&roles);
+        let mut ctl = Controller::new(ControllerConfig::new(1.0), &replicas);
+        let mut tb = builder(&roles);
+        let s = snaps(&[8, 8, 0, 0], 1);
+        tb.roll(1.0, &s, 0.0, 0);
+        assert!(ctl.on_windows_closed(&mut replicas, &tb), "first tick acts");
+        // tick 2 shows the same imbalance, but it is within the cooldown
+        // of the tick-1 action: only the drain landing changes state
+        tb.roll(2.0, &s, 0.0, 0);
+        ctl.on_windows_closed(&mut replicas, &tb);
+        let rep = ctl.finish(&replicas);
+        assert_eq!(rep.flips, 1, "cooldown must suppress the second flip");
+    }
+}

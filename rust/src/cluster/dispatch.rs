@@ -148,6 +148,72 @@ impl Dispatcher {
         pool_argmin_over(replicas, decode_pool)
             .expect("disaggregated fleet must have at least one Role::Decode replica")
     }
+
+    /// Controller-aware front door: route only over the *live* pools the
+    /// elastic fleet loop maintains (Active replicas, by current role —
+    /// draining and parked replicas excluded).  Arrivals go to the live
+    /// prefill pool when one exists (JSQ within it), else the configured
+    /// policy applies over the `active` slice.
+    pub fn route_arrival_ctl(
+        &mut self,
+        req: &Request,
+        replicas: &[ReplicaSim],
+        prefill_pool: &[usize],
+        active: &[usize],
+    ) -> usize {
+        match pool_argmin_over(replicas, prefill_pool) {
+            Some(i) => i,
+            None => self.route_within(req, replicas, active),
+        }
+    }
+
+    /// Controller-aware handoff routing over the live decode pool.
+    /// Panics when the pool is empty — the controller must never drain
+    /// the last Active decode replica (its flip guard enforces this).
+    pub fn route_handoff_ctl(
+        &mut self,
+        _req: &Request,
+        replicas: &[ReplicaSim],
+        decode_pool: &[usize],
+    ) -> usize {
+        pool_argmin_over(replicas, decode_pool)
+            .expect("elastic fleet must keep at least one Active decode replica")
+    }
+
+    /// The configured policy applied over an arbitrary (ascending) index
+    /// slice — the elastic loops' routing domain when no prefill pool is
+    /// live.  Over the full `0..n` slice every arm picks exactly what
+    /// [`Dispatcher::route`] picks (same tie-breaks, same round-robin
+    /// cursor), which is what keeps a controller-on-but-idle run aligned
+    /// with the historical paths.
+    pub fn route_within(&mut self, req: &Request, replicas: &[ReplicaSim], pool: &[usize]) -> usize {
+        let n = pool.len();
+        assert!(n > 0, "cannot route over an empty active set");
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let i = pool[self.rr_next % n];
+                self.rr_next = self.rr_next.wrapping_add(1);
+                i
+            }
+            RoutingPolicy::JoinShortestQueue => {
+                pool_argmin_over(replicas, pool).expect("non-empty pool")
+            }
+            RoutingPolicy::LeastOutstandingTokens => pool
+                .iter()
+                .copied()
+                .min_by_key(|&i| (replicas[i].outstanding_tokens(), i))
+                .expect("non-empty pool"),
+            RoutingPolicy::PrefillDecodeDisagg => {
+                let (lo, hi) =
+                    if req.len_in >= req.len_out { (0, n.div_ceil(2)) } else { (n / 2, n) };
+                pool[lo..hi]
+                    .iter()
+                    .copied()
+                    .min_by_key(|&i| (replicas[i].queue_depth(), i))
+                    .expect("non-empty pool half")
+            }
+        }
+    }
 }
 
 /// Shortest-queue member of a precomputed pool (ties to the lowest
@@ -378,6 +444,45 @@ mod tests {
             d.route_arrival_pooled(&r, &colocated, &[])
         );
         assert_eq!(pool_min_depth_over(&colocated, &[]), None);
+    }
+
+    #[test]
+    fn route_within_full_slice_matches_route_for_every_policy() {
+        let mut replicas = fleet(4);
+        replicas[0].submit(req(0, 4000, 90));
+        replicas[2].submit(req(1, 10, 10));
+        let full: Vec<usize> = (0..4).collect();
+        for policy in RoutingPolicy::all() {
+            let mut a = Dispatcher::new(policy);
+            let mut b = Dispatcher::new(policy);
+            for id in 0..6 {
+                let r = req(10 + id, if id % 2 == 0 { 2000 } else { 50 }, 500);
+                assert_eq!(
+                    a.route(&r, &replicas),
+                    b.route_within(&r, &replicas, &full),
+                    "{policy}: full-slice routing must match route()"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ctl_routing_stays_inside_the_live_pools() {
+        let mut replicas = role_fleet(2, 2);
+        let mut d = Dispatcher::new(RoutingPolicy::JoinShortestQueue);
+        // replica 0 drained out of the prefill pool: arrivals land on 1
+        replicas[1].submit(req(0, 100, 100));
+        assert_eq!(d.route_arrival_ctl(&req(1, 100, 100), &replicas, &[1], &[1, 2, 3]), 1);
+        // replica 3 drained out of the decode pool: handoffs land on 2
+        assert_eq!(d.route_handoff_ctl(&req(2, 100, 100), &replicas, &[2]), 2);
+        // no live prefill pool (all colocated): the policy applies over
+        // the active slice only
+        let colocated = fleet(3);
+        let mut rr = Dispatcher::new(RoutingPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..4)
+            .map(|i| rr.route_arrival_ctl(&req(i, 100, 100), &colocated, &[], &[0, 2]))
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "round-robin cycles the active slice");
     }
 
     #[test]

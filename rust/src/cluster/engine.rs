@@ -32,6 +32,7 @@
 //! `tests/engine_equivalence.rs`.
 
 use super::admission::AdmissionController;
+use super::controller::Controller;
 use super::dispatch::{pool_min_depth_over, Dispatcher};
 use super::replica::{ReplicaSim, Role};
 use crate::comm::cost::CollectiveCost;
@@ -377,7 +378,12 @@ pub fn run_fleet_loop(
     trace: &[Request],
     fleet_trace: &mut Option<obs::Trace>,
     telemetry: &mut Option<TelemetryBuilder>,
+    controller: &mut Option<Controller>,
 ) -> FleetLoopOut {
+    debug_assert!(
+        controller.is_none() || telemetry.is_some(),
+        "an elastic fleet ticks at telemetry window closes; build_fleet forces the window on"
+    );
     let n = replicas.len();
     let disagg = replicas.iter().any(|r| r.role() != Role::Colocated);
     let decode_pool: Vec<usize> = (0..n).filter(|&i| replicas[i].role() == Role::Decode).collect();
@@ -407,14 +413,29 @@ pub fn run_fleet_loop(
         // before any step at `now`, exactly as the legacy loop did
         while let Some(req) = feed.next_due(now) {
             let req = req.clone();
-            let target = dispatcher.route_arrival_pooled(&req, replicas, &prefill_pool);
+            // an elastic fleet routes over the controller's live pools
+            // (draining and parked replicas keep their construction-time
+            // role tag, so the static pools would still count them)
+            let target = match controller.as_ref() {
+                Some(c) => dispatcher.route_arrival_ctl(
+                    &req,
+                    replicas,
+                    &c.pools().prefill,
+                    &c.pools().active,
+                ),
+                None => dispatcher.route_arrival_pooled(&req, replicas, &prefill_pool),
+            };
             let admitted = match &gate {
                 Gate::Open => true,
                 Gate::Single(bound) => {
                     bound.is_some_and(|b| replicas[target].queue_depth() <= b)
                 }
                 Gate::TwoStage(ac) => {
-                    let decode_backlog = pool_min_depth_over(replicas, &decode_pool).unwrap_or(0);
+                    let pool: &[usize] = match controller.as_ref() {
+                        Some(c) => &c.pools().decode,
+                        None => &decode_pool,
+                    };
+                    let decode_backlog = pool_min_depth_over(replicas, pool).unwrap_or(0);
                     ac.admit_two_stage(replicas[target].queue_depth(), decode_backlog)
                 }
             };
@@ -431,7 +452,10 @@ pub fn run_fleet_loop(
         // (2) deliver KV transfers that landed by `now` (FIFO on ties —
         // the legacy insertion-order partition)
         while let Some(req) = transit.pop_due(now) {
-            let target = dispatcher.route_handoff_pooled(&req, replicas, &decode_pool);
+            let target = match controller.as_ref() {
+                Some(c) => dispatcher.route_handoff_ctl(&req, replicas, &c.pools().decode),
+                None => dispatcher.route_handoff_pooled(&req, replicas, &decode_pool),
+            };
             replicas[target].submit_prefilled(req);
             touched.push(target);
         }
@@ -505,6 +529,13 @@ pub fn run_fleet_loop(
             if tb.pending(next_t) {
                 let s = snaps.refresh(replicas);
                 tb.roll(next_t, s, transit.bytes_in_flight(), shed_front_door);
+                // the elastic controller acts on the just-closed windows.
+                // Every state change lands on an idle replica (no queued
+                // event, no pending handoff), so `next_t` and the indexed
+                // entries stay valid and no snapshot counter moves
+                if let Some(c) = controller.as_mut() {
+                    c.on_windows_closed(replicas, tb);
+                }
             }
         }
         debug_assert!(next_t > now, "fleet clock must advance: {next_t} !> {now}");

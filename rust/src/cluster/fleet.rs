@@ -12,7 +12,8 @@
 //! joins a decode replica's queue when the transfer lands.
 
 use super::admission::{AdmissionController, SloPolicy};
-use super::dispatch::{pool_min_depth, Dispatcher, RoutingPolicy};
+use super::controller::{Controller, ControllerConfig, ControllerReport};
+use super::dispatch::{pool_min_depth, pool_min_depth_over, Dispatcher, RoutingPolicy};
 use super::engine;
 use super::replica::{ReplicaSim, Role};
 use crate::analyzer::indicators::Workload;
@@ -60,6 +61,13 @@ pub struct FleetConfig {
     /// is fully off — simulation results are bit-for-bit identical to a
     /// fleet run without the field (pinned by `obs_integration`).
     pub obs: ObsConfig,
+    /// elastic fleet controller (DESIGN.md §Controller); None keeps the
+    /// static fleet, bit-for-bit (pinned by `controller_integration`).
+    /// When set, windowed telemetry is forced on at the control
+    /// interval (an explicit `obs.window` takes precedence), and
+    /// `controller.max_replicas` beyond the configured fleet start
+    /// parked as scale-up spares.
+    pub controller: Option<ControllerConfig>,
 }
 
 /// Result of one fleet run.
@@ -85,6 +93,8 @@ pub struct FleetReport {
     pub trace: Option<obs::Trace>,
     /// windowed fleet telemetry (None unless `cfg.obs.window` is set)
     pub telemetry: Option<FleetTelemetry>,
+    /// what the elastic controller did (None unless `cfg.controller`)
+    pub controller: Option<ControllerReport>,
 }
 
 /// Mean request shape of a trace (drives the admission predictor).
@@ -111,6 +121,7 @@ struct FleetSetup {
     admission: Option<AdmissionController>,
     fleet_trace: Option<obs::Trace>,
     telemetry: Option<TelemetryBuilder>,
+    controller: Option<Controller>,
 }
 
 fn build_fleet(
@@ -138,7 +149,7 @@ fn build_fleet(
             r
         }
     };
-    let (replicas, admission_strategy): (Vec<ReplicaSim>, ParallelStrategy) =
+    let (mut replicas, admission_strategy): (Vec<ReplicaSim>, ParallelStrategy) =
         match &cfg.disagg {
             None => {
                 assert!(cfg.replicas > 0, "fleet needs at least one replica");
@@ -170,6 +181,20 @@ fn build_fleet(
                 (v, d.prefill_strategy)
             }
         };
+    // scale-up spares against the device budget: replicas beyond the
+    // configured fleet start parked and enter rotation only when the
+    // controller activates them.  In a disaggregated fleet a spare is
+    // built on the decode-pool strategy (the pool autoscaling most often
+    // grows); the controller assigns its role at activation.
+    if let Some(ctl) = &cfg.controller {
+        for k in replicas.len()..ctl.max_replicas {
+            let spare = match &cfg.disagg {
+                None => mk_replica(k, &cfg.strategy).with_sched(cfg.sched),
+                Some(d) => mk_replica(k, &d.decode_strategy).with_role(Role::Decode),
+            };
+            replicas.push(spare.parked());
+        }
+    }
     let dispatcher = Dispatcher::new(cfg.policy);
     // the handoff rides the prefill pod's NIC(s); colocated fleets never
     // consult this
@@ -206,14 +231,19 @@ fn build_fleet(
     // happens between replicas) and absorbs each replica's trace at the
     // end of the run
     let fleet_trace = if cfg.obs.trace { Some(obs::Trace::new()) } else { None };
-    let telemetry = cfg.obs.window.map(|w| {
+    // the controller ticks at telemetry window closes, so a controlled
+    // fleet forces telemetry on at the control interval; an explicit
+    // obs.window takes precedence (and sets the tick width)
+    let window = cfg.obs.window.or_else(|| cfg.controller.as_ref().map(|c| c.interval));
+    let telemetry = window.map(|w| {
         TelemetryBuilder::new(
             w,
             replicas.iter().map(|r| r.role().label()).collect(),
             cfg.slo.is_some(),
         )
     });
-    FleetSetup { replicas, dispatcher, handoff_cost, admission, fleet_trace, telemetry }
+    let controller = cfg.controller.clone().map(|c| Controller::new(c, &replicas));
+    FleetSetup { replicas, dispatcher, handoff_cost, admission, fleet_trace, telemetry, controller }
 }
 
 /// Fold the loop's outputs into a [`FleetReport`] (shared by the engine
@@ -226,6 +256,7 @@ fn finish_report(
     shed_front_door: usize,
     kv_handoff: Series,
 ) -> FleetReport {
+    let controller = setup.controller.take().map(|c| c.finish(&setup.replicas));
     // fold each replica's recorded spans into the fleet trace
     if let Some(ft) = setup.fleet_trace.as_mut() {
         for r in setup.replicas.iter_mut() {
@@ -263,6 +294,7 @@ fn finish_report(
         kv_handoff,
         trace: setup.fleet_trace,
         telemetry: setup.telemetry.map(|tb| tb.finish()),
+        controller,
     }
 }
 
@@ -295,6 +327,7 @@ pub fn simulate_fleet(
         ref admission,
         ref mut fleet_trace,
         ref mut telemetry,
+        ref mut controller,
         ..
     } = setup;
     let out = engine::run_fleet_loop(
@@ -306,6 +339,7 @@ pub fn simulate_fleet(
         trace,
         fleet_trace,
         telemetry,
+        controller,
     );
     finish_report(cfg, setup, out.now, out.shed_front_door, out.kv_handoff)
 }
@@ -330,6 +364,7 @@ pub fn simulate_fleet_legacy(
         ref admission,
         ref mut fleet_trace,
         ref mut telemetry,
+        ref mut controller,
         ..
     } = setup;
 
@@ -347,10 +382,25 @@ pub fn simulate_fleet_legacy(
         while next < arrivals.len() && arrivals[next].arrival <= now {
             let req = arrivals[next].clone();
             next += 1;
-            let target = dispatcher.route_arrival(&req, &replicas);
+            // an elastic fleet routes over the controller's live pools
+            // (draining and parked replicas keep their role tag, so the
+            // construction-time role scan would still count them)
+            let target = match controller.as_ref() {
+                Some(c) => dispatcher.route_arrival_ctl(
+                    &req,
+                    replicas,
+                    &c.pools().prefill,
+                    &c.pools().active,
+                ),
+                None => dispatcher.route_arrival(&req, replicas),
+            };
             let admitted = match &admission {
                 Some(ac) if ac.is_two_stage() => {
-                    let decode_backlog = pool_min_depth(&replicas, Role::Decode).unwrap_or(0);
+                    let decode_backlog = match controller.as_ref() {
+                        Some(c) => pool_min_depth_over(replicas, &c.pools().decode),
+                        None => pool_min_depth(replicas, Role::Decode),
+                    }
+                    .unwrap_or(0);
                     ac.admit_two_stage(replicas[target].queue_depth(), decode_backlog)
                 }
                 Some(ac) => ac.admit(replicas[target].queue_depth()),
@@ -371,7 +421,10 @@ pub fn simulate_fleet_legacy(
                 std::mem::take(&mut transit).into_iter().partition(|(t, _)| *t <= now);
             transit = pending;
             for (_, req) in ready {
-                let target = dispatcher.route_handoff(&req, &replicas);
+                let target = match controller.as_ref() {
+                    Some(c) => dispatcher.route_handoff_ctl(&req, replicas, &c.pools().decode),
+                    None => dispatcher.route_handoff(&req, replicas),
+                };
                 replicas[target].submit_prefilled(req);
             }
         }
@@ -413,6 +466,12 @@ pub fn simulate_fleet_legacy(
                 let in_flight: f64 =
                     transit.iter().map(|(_, req)| req.len_in as f64 * per_tok).sum();
                 tb.roll(next_t, &snaps, in_flight, shed_front_door);
+                // the elastic controller acts on the just-closed windows;
+                // state changes land only on idle replicas, so no queued
+                // event or in-flight handoff is ever disturbed
+                if let Some(c) = controller.as_mut() {
+                    c.on_windows_closed(replicas, tb);
+                }
             }
         }
         debug_assert!(next_t > now, "fleet clock must advance: {next_t} !> {now}");
@@ -451,6 +510,7 @@ mod tests {
             disagg: None,
             sched: SchedPolicy::Fcfs,
             obs: ObsConfig::default(),
+            controller: None,
         }
     }
 
@@ -525,6 +585,7 @@ mod tests {
             }),
             sched: SchedPolicy::Fcfs,
             obs: ObsConfig::default(),
+            controller: None,
         };
         let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 11);
         assert_eq!(rep.metrics.completed, n, "every request finishes its decode");

@@ -29,6 +29,12 @@
 //!   device budget, extending `analyzer::search` one level up; its
 //!   [`planner::FleetPlanner::plan_disagg`] searches (prefill pool ×
 //!   decode pool × per-phase strategy) against the colocated plans;
+//! * [`controller`] — the elastic fleet controller (DESIGN.md
+//!   §Controller): an online control loop at telemetry window
+//!   boundaries that flips replicas between P/D roles (draining
+//!   in-flight work across the flip) and grows/shrinks the active
+//!   fleet against the device budget from measured traffic — the
+//!   PR 1 planner run online;
 //! * [`sweep`] — the paperbench-style policy × traffic-pattern table.
 //!
 //! Observability rides along: `FleetConfig::obs` ([`crate::obs::ObsConfig`])
@@ -36,6 +42,7 @@
 //! off by default and free when disabled (DESIGN.md §Observability).
 
 pub mod admission;
+pub mod controller;
 pub mod dispatch;
 pub mod engine;
 pub mod fleet;
@@ -44,6 +51,10 @@ pub mod replica;
 pub mod sweep;
 
 pub use admission::{AdmissionController, SloPolicy};
+pub use controller::{
+    ControlAction, ControlEvent, Controller, ControllerConfig, ControllerReport, Directive,
+    LivePools,
+};
 pub use dispatch::{Dispatcher, RoutingPolicy};
 pub use fleet::{
     run_fleet_rate, simulate_fleet, simulate_fleet_legacy, DisaggConfig, FleetConfig, FleetReport,
@@ -52,4 +63,4 @@ pub use planner::{
     carve_replicas, ArchPlan, DisaggPlan, FleetPlan, FleetPlanner, SchedPlan, DEFAULT_QUANTA,
 };
 pub use crate::obs::ObsConfig;
-pub use replica::{ReplicaSim, Role};
+pub use replica::{ReplicaSim, ReplicaState, Role};

@@ -59,6 +59,24 @@ impl Role {
     }
 }
 
+/// Controller-facing lifecycle of a replica inside an elastic fleet
+/// (DESIGN.md §Controller).  `Active` is the only state the dispatcher
+/// routes new work to.  `Draining` serves out already-accepted requests
+/// and pending KV handoffs, then lands on `target` (a role flip) or
+/// parks when `target` is `None` (a scale-down).  `Parked` replicas hold
+/// devices in reserve against the budget: they are never routed to or
+/// stepped.  Fleets without a controller leave every replica `Active`
+/// forever, so the state machine is inert on all historical paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplicaState {
+    #[default]
+    Active,
+    Draining {
+        target: Option<Role>,
+    },
+    Parked,
+}
+
 /// An engine iteration currently executing on the replica.
 #[derive(Debug, Clone)]
 struct InFlight {
@@ -108,6 +126,9 @@ pub struct ReplicaSim<C: CommCost = CollectiveCost> {
     /// TTFT deadline whose attainment `metrics.ttft_ok` counts (the
     /// telemetry SLO signal); counting never perturbs timing
     slo_deadline: Option<f64>,
+    /// elastic-controller lifecycle; `Active` (the default) on every
+    /// path without a controller, so the field is inert historically
+    state: ReplicaState,
 }
 
 impl ReplicaSim<CollectiveCost> {
@@ -213,6 +234,7 @@ impl<C: CommCost> ReplicaSim<C> {
             handoffs: Vec::new(),
             trace: None,
             slo_deadline: None,
+            state: ReplicaState::Active,
         }
     }
 
@@ -274,6 +296,89 @@ impl<C: CommCost> ReplicaSim<C> {
 
     pub fn role(&self) -> Role {
         self.role
+    }
+
+    /// Controller lifecycle state (always `Active` without a controller).
+    pub fn state(&self) -> ReplicaState {
+        self.state
+    }
+
+    /// Whether the dispatcher may route new work here — the single
+    /// predicate the elastic fleet loops consult when recomputing their
+    /// live routing pools.
+    pub fn is_routable(&self) -> bool {
+        self.state == ReplicaState::Active
+    }
+
+    /// Park at construction (builder style): the controller's spare
+    /// capacity.  Parked replicas are never routed to or stepped until
+    /// [`ReplicaSim::activate`] wakes them.
+    pub fn parked(mut self) -> Self {
+        self.state = ReplicaState::Parked;
+        self
+    }
+
+    /// Begin draining: the replica keeps serving everything already
+    /// submitted but the fleet loop stops routing to it.  Once idle with
+    /// no pending KV handoffs, [`ReplicaSim::finish_drain`] lands the
+    /// transition — onto `target` (a role flip) or `Parked` when `None`.
+    pub fn begin_drain(&mut self, target: Option<Role>) {
+        debug_assert_eq!(self.state, ReplicaState::Active, "only active replicas drain");
+        self.state = ReplicaState::Draining { target };
+    }
+
+    /// Whether a draining replica has served out everything it owes:
+    /// no queued or running work, no in-flight iteration, and no
+    /// prefilled requests awaiting their KV transfer.
+    pub fn drain_complete(&self) -> bool {
+        matches!(self.state, ReplicaState::Draining { .. })
+            && self.is_idle()
+            && !self.has_handoffs()
+    }
+
+    /// Land a completed drain: flip onto the target role (installing its
+    /// scheduler, exactly as [`ReplicaSim::with_role`] would have at
+    /// construction) or park.  Returns the role the replica now serves,
+    /// or `None` when it parked.
+    pub fn finish_drain(&mut self) -> Option<Role> {
+        debug_assert!(self.drain_complete(), "drain landed early");
+        let ReplicaState::Draining { target } = self.state else {
+            return Some(self.role);
+        };
+        match target {
+            Some(role) => {
+                self.set_role(role);
+                self.state = ReplicaState::Active;
+                Some(role)
+            }
+            None => {
+                self.state = ReplicaState::Parked;
+                None
+            }
+        }
+    }
+
+    /// Wake a parked replica into `role`.  Its batcher, KV pool, and
+    /// metrics carry over (a parked replica is idle by construction, so
+    /// there is nothing stale to flush).
+    pub fn activate(&mut self, role: Role) {
+        debug_assert_eq!(self.state, ReplicaState::Parked, "only parked replicas activate");
+        self.set_role(role);
+        self.state = ReplicaState::Active;
+    }
+
+    /// In-place role change — the controller's flip actuation.  Same
+    /// scheduler choice as [`ReplicaSim::with_role`]: a prefill pool
+    /// runs the handoff-disposition FCFS, a decode pool plain FCFS,
+    /// and `Colocated` keeps whatever scheduler is installed (so a
+    /// chunked colocated replica stays chunked across park/activate).
+    fn set_role(&mut self, role: Role) {
+        self.role = role;
+        match role {
+            Role::Prefill => self.scheduler = Box::new(DisaggPrefill),
+            Role::Decode => self.scheduler = Box::new(FcfsColocated),
+            Role::Colocated => {}
+        }
     }
 
     /// Hand an already-prefilled request to this (Decode-role) replica:
@@ -805,6 +910,66 @@ mod tests {
         }
         assert_eq!(r.metrics.ttft_ok, 4, "an infinite deadline admits every first token");
         assert_eq!(r.metrics.submitted, 4);
+    }
+
+    #[test]
+    fn drain_lands_a_role_flip_only_after_the_last_handoff() {
+        let mut r = replica(None).with_role(Role::Prefill);
+        for id in 0..3 {
+            r.submit(Request { id, arrival: 0.0, len_in: 256, len_out: 32 });
+        }
+        assert!(r.is_routable());
+        r.begin_drain(Some(Role::Decode));
+        assert!(!r.is_routable(), "a draining replica takes no new work");
+        assert!(!r.drain_complete(), "work is still queued");
+        let mut now = 0.0;
+        while let Some(t) = r.step(now) {
+            now = t;
+        }
+        // idle, but the prefilled requests still await their KV transfer
+        assert!(r.is_idle() && r.has_handoffs());
+        assert!(!r.drain_complete(), "pending handoffs must flush first");
+        let handed = r.take_handoffs();
+        assert_eq!(handed.len(), 3);
+        assert!(r.drain_complete());
+        assert_eq!(r.finish_drain(), Some(Role::Decode));
+        assert_eq!(r.role(), Role::Decode);
+        assert!(r.is_routable());
+        // the flipped replica serves decode work like a born-decode one
+        for req in handed {
+            r.submit_prefilled(req);
+        }
+        let mut now2 = now;
+        while let Some(t) = r.step(now2) {
+            now2 = t;
+        }
+        assert_eq!(r.metrics.completed, 3, "flipped replica finishes the work");
+    }
+
+    #[test]
+    fn drain_to_park_and_activate_round_trip() {
+        let mut r = replica(None);
+        assert_eq!(r.state(), ReplicaState::Active);
+        r.begin_drain(None);
+        assert!(r.drain_complete(), "an idle replica drains immediately");
+        assert_eq!(r.finish_drain(), None);
+        assert_eq!(r.state(), ReplicaState::Parked);
+        assert!(!r.is_routable());
+        r.activate(Role::Colocated);
+        assert!(r.is_routable());
+        r.submit(Request { id: 0, arrival: 0.0, len_in: 64, len_out: 4 });
+        let mut now = 0.0;
+        while let Some(t) = r.step(now) {
+            now = t;
+        }
+        assert_eq!(r.metrics.completed, 1, "a re-activated replica serves again");
+    }
+
+    #[test]
+    fn parked_builder_starts_out_of_rotation() {
+        let r = replica(None).parked();
+        assert_eq!(r.state(), ReplicaState::Parked);
+        assert!(!r.is_routable());
     }
 
     #[test]

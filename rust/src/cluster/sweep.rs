@@ -74,6 +74,7 @@ pub fn policy_sweep(
                 disagg: None,
                 sched: SchedPolicy::Fcfs,
                 obs: crate::obs::ObsConfig::default(),
+                controller: None,
             };
             let rep = simulate_fleet(model, replica_cluster, &cfg, &serving, &trace, seed);
             let t = rep.metrics.ttft_summary();

@@ -13,7 +13,18 @@
 //!             --check validates an existing export
 //!   scale     million-request engine bench: wall-clock + events/sec
 //!             (--legacy adds the measured pre-refactor speedup)
+//!   elastic   static-optimal vs controlled fleet over one compressed
+//!             diurnal day with antiphase prompt/decode mix drift
 //!   fig3|fig4|fig10|fig11|fig12|table1   regenerate a paper artifact
+//!
+//! Controller flags (fleet):
+//!   --controller      run the elastic fleet controller (DESIGN.md
+//!                     §Controller) on a JSQ fleet: role flips, parked
+//!                     spares up to --max-replicas, rate-driven resizing
+//!                     via the analyzer's per-unit-rate ρ
+//!   --ctl-interval S  control interval, seconds (default duration/48)
+//!   --max-replicas N  device budget; replicas beyond --replicas start
+//!                     parked as scale-up spares (default --replicas)
 //!
 //! Observability flags (simulate / fleet / disagg):
 //!   --trace PATH  re-run the primary configuration with span tracing
@@ -52,13 +63,14 @@ use mixserve::analyzer::search::{Analyzer, Objective};
 use mixserve::baselines::all_systems;
 use mixserve::cluster::sweep::{policy_sweep, render as render_sweep};
 use mixserve::cluster::{
-    simulate_fleet, DisaggConfig, FleetConfig, FleetPlanner, ObsConfig, RoutingPolicy, SloPolicy,
+    simulate_fleet, ControllerConfig, DisaggConfig, FleetConfig, FleetPlanner, ObsConfig,
+    RoutingPolicy, SloPolicy,
 };
 use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use mixserve::grammar::parse_strategy;
 use mixserve::obs;
 use mixserve::paperbench::{
-    attribution, chunked, disagg, fig10, fig11, fig12, fig3, fig4, scale, table1,
+    attribution, chunked, disagg, elastic, fig10, fig11, fig12, fig3, fig4, scale, table1,
 };
 use mixserve::pipeline::PipelineCfg;
 use mixserve::runtime::Engine;
@@ -212,6 +224,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
             disagg: None,
             sched: SchedPolicy::Fcfs,
             obs: ObsConfig::default(),
+            controller: None,
         };
         let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
         export_fleet_trace(&path, &model, &pod, &cfg, &serving, &trace, seed)?;
@@ -471,6 +484,7 @@ fn cmd_fleet_disagg(
         disagg,
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
+        controller: None,
     };
     println!(
         "disagg fleet: {prefill_replicas} prefill x ({prefill_strategy}) + \
@@ -513,6 +527,63 @@ fn cmd_fleet_disagg(
     Ok(())
 }
 
+/// `fleet --controller`: one JSQ fleet under the elastic controller —
+/// reactive role flips and park/activate against the `--max-replicas`
+/// device budget, with the rate-driven resize fed by the analyzer's
+/// per-unit-rate ρ ([`Analyzer::replan`], the planner run online).
+fn cmd_fleet_controller(
+    args: &Args,
+    fa: &FleetArgs,
+    sched: SchedPolicy,
+    trace: &[mixserve::workload::Request],
+) -> Result<()> {
+    let interval = args.f64_or("ctl-interval", (fa.duration / 48.0).max(0.25));
+    if interval <= 0.0 {
+        bail!("--ctl-interval must be positive, got {interval}");
+    }
+    let max_replicas = args.usize_or("max-replicas", fa.replicas).max(fa.replicas);
+    let wl = Workload::sharegpt(fa.rate / fa.replicas as f64);
+    let rho_per_rate = Analyzer::new(&fa.model, &fa.pod, &fa.serving).replan(&fa.strategy, &wl);
+    let ctl = ControllerConfig { max_replicas, rho_per_rate, ..ControllerConfig::new(interval) };
+    let cfg = FleetConfig {
+        replicas: fa.replicas,
+        strategy: fa.strategy,
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: fa.slo,
+        disagg: None,
+        sched,
+        obs: ObsConfig::default(),
+        controller: Some(ctl),
+    };
+    println!(
+        "controlled fleet: {} active of {max_replicas} budget, control interval {interval:.2}s\
+         {}",
+        fa.replicas,
+        rho_per_rate
+            .map(|r| format!(", per-unit-rate rho {r:.4}"))
+            .unwrap_or_else(|| ", rate-driven resize off (no feasible replan)".into())
+    );
+    let rep = simulate_fleet(&fa.model, &fa.pod, &cfg, &fa.serving, trace, fa.seed);
+    println!("{}", rep.metrics.report("controlled JSQ      "));
+    let c = rep.controller.ok_or_else(|| anyhow::anyhow!("controlled fleet lost its report"))?;
+    println!(
+        "controller: {} actions ({} flips, {} grows, {} shrinks), {} active at end",
+        c.events.len(),
+        c.flips,
+        c.grows,
+        c.shrinks,
+        c.final_active
+    );
+    for e in c.events.iter().take(12) {
+        println!("  t={:>8.2}s tick {:>4} replica {:>3} {:?}", e.t, e.tick, e.replica, e.action);
+    }
+    if c.events.len() > 12 {
+        println!("  ... {} more actions", c.events.len() - 12);
+    }
+    Ok(())
+}
+
 fn cmd_fleet(args: &Args) -> Result<()> {
     let fa = fleet_args(args, 32.0)?;
     let sched = sched_from_args(args)?;
@@ -520,6 +591,15 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let trace = TraceGen::sharegpt(fa.rate, fa.serving.max_seq, fa.seed)
         .with_pattern(pattern)
         .generate(fa.duration);
+    if args.has_flag("controller") {
+        if args.has_flag("disagg") {
+            bail!(
+                "--controller on a role-split fleet is the elastic sweep; \
+                 use `mixserve elastic` instead"
+            );
+        }
+        return cmd_fleet_controller(args, &fa, sched, &trace);
+    }
     if args.has_flag("disagg") {
         if sched != SchedPolicy::Fcfs {
             bail!("--disagg pools run their role schedulers; drop --sched");
@@ -551,6 +631,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             disagg: None,
             sched,
             obs: ObsConfig::default(),
+            controller: None,
         };
         let rep = simulate_fleet(&fa.model, &fa.pod, &cfg, &fa.serving, &trace, fa.seed);
         let t = rep.metrics.ttft_summary();
@@ -575,6 +656,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             disagg: None,
             sched,
             obs: ObsConfig::default(),
+            controller: None,
         };
         export_fleet_trace(&path, &fa.model, &fa.pod, &cfg, &fa.serving, &trace, fa.seed)?;
     }
@@ -726,6 +808,7 @@ fn main() -> Result<()> {
                     }),
                     sched: SchedPolicy::Fcfs,
                     obs: ObsConfig::default(),
+                    controller: None,
                 };
                 let trace = TraceGen::sharegpt(rate, serving.max_seq, 7).generate(duration);
                 export_fleet_trace(&path, &m, &c, &cfg, &serving, &trace, 7)?;
@@ -771,6 +854,20 @@ fn main() -> Result<()> {
             let rep = scale::run(&m, &c, requests, replicas, seed, args.has_flag("legacy"));
             print!("{}", scale::render(&m, &c, rep.as_ref()));
         }
+        "elastic" => {
+            // static-optimal vs controlled fleet over one compressed day
+            let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
+            let m = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+            let requests = args.usize_or("requests", 20_000);
+            let budget = args.usize_or("budget", 8);
+            let deadline = args.f64_or("slo-ttft", 8.0);
+            let seed = args.usize_or("seed", 7) as u64;
+            if budget < 2 {
+                bail!("--budget must be at least 2 (an elastic P/D fleet needs both pools)");
+            }
+            let rep = elastic::run(&m, &c, requests, budget, deadline, seed);
+            print!("{}", elastic::render(&m, &c, rep.as_ref()));
+        }
         "table1" => {
             let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
             print!("{}", table1::render(&c));
@@ -798,8 +895,11 @@ fn main() -> Result<()> {
                  \x20           [--slo-ttft S] [--strategy \"TP=8 + DP=4, TP=8 + EP=4\"]\n\
                  \x20           [--disagg [--prefill-replicas P] [--decode-replicas D]\n\
                  \x20            [--prefill-strategy S] [--decode-strategy S]]\n\
+                 \x20           [--controller [--ctl-interval S] [--max-replicas N]]\n\
                  \x20           (each replica runs on its own POD-shaped device pool;\n\
-                 \x20            --disagg role-splits the fleet with a timed KV handoff)\n\
+                 \x20            --disagg role-splits the fleet with a timed KV handoff;\n\
+                 \x20            --controller runs the elastic controller with parked\n\
+                 \x20            spares up to the --max-replicas budget)\n\
                  \x20 plan      [--model M] [--cluster BUDGET] [--rate R] [--skew Z]\n\
                  \x20           [--overlap | --chunks K] [--disagg] [--arch]\n\
                  \x20           [--sched fcfs|chunked [--quantum N]]\n\
@@ -817,6 +917,11 @@ fn main() -> Result<()> {
                  \x20           (million-request engine bench: wall-clock and\n\
                  \x20            events/sec; --legacy adds the measured speedup\n\
                  \x20            over the pre-refactor loop)\n\
+                 \x20 elastic   [--model M] [--cluster POD] [--requests N]\n\
+                 \x20           [--budget R] [--slo-ttft S] [--seed S]\n\
+                 \x20           (every static P:D split vs the controlled fleet on\n\
+                 \x20            one compressed diurnal day with antiphase\n\
+                 \x20            prompt/decode mix drift)\n\
                  \x20 trace     [--model M] [--cluster POD] [--duration S]\n\
                  \x20           [--out FILE] [--check FILE]\n\
                  \x20           (latency attribution by span kind across colocated,\n\

@@ -11,9 +11,15 @@
 //! partial window is dropped (the loop never rolls past the last
 //! event), so every emitted sample covers a full `w` seconds.
 //!
-//! This is the signal set the ROADMAP's elastic controller consumes:
-//! per-pool queue depth, batch occupancy, tokens/s, SLO attainment,
-//! rejection rate, and KV bytes in flight.
+//! This is the signal set the elastic controller
+//! (`cluster/controller.rs`) consumes: per-pool queue depth, batch
+//! occupancy, tokens/s, SLO attainment, rejection rate, and KV bytes
+//! in flight.  The builder exposes the just-closed rows incrementally
+//! ([`TelemetryBuilder::last_fleet`] / [`TelemetryBuilder::last_replica`])
+//! so the controller can act at window close without waiting for
+//! [`TelemetryBuilder::finish`].
+
+use crate::cluster::replica::Role;
 
 /// Cumulative per-replica state captured by the fleet loop at a window
 /// close.  All counter fields are cumulative since t=0; the builder
@@ -125,8 +131,21 @@ impl FleetTelemetry {
     }
 
     /// Sum the windowed series of every replica whose role matches —
-    /// the per-pool signal the elastic controller reads.
-    pub fn pool(&self, role: &str) -> Vec<WindowSample> {
+    /// the per-pool signal the elastic controller reads.  Taking a
+    /// typed [`Role`] makes a nonexistent pool (`"expert"`, a typo'd
+    /// label) unrepresentable at the call site.
+    pub fn pool(&self, role: Role) -> Vec<WindowSample> {
+        self.pool_by_label(role.label())
+    }
+
+    /// String-labelled variant of [`FleetTelemetry::pool`], kept for
+    /// callers that carry labels rather than roles.
+    #[deprecated(since = "0.9.0", note = "use pool(Role) — labels can name nonexistent pools")]
+    pub fn pool_label(&self, role: &str) -> Vec<WindowSample> {
+        self.pool_by_label(role)
+    }
+
+    fn pool_by_label(&self, role: &str) -> Vec<WindowSample> {
         let mut out: Vec<WindowSample> = Vec::new();
         for r in self.replicas.iter().filter(|r| r.role == role) {
             if out.is_empty() {
@@ -244,6 +263,29 @@ impl TelemetryBuilder {
         self.prev_front_sheds = front_sheds;
     }
 
+    /// Windows closed so far — the elastic controller's tick counter.
+    pub fn closed(&self) -> usize {
+        self.closed
+    }
+
+    /// The window width (= the controller's control interval).
+    pub fn window(&self) -> f64 {
+        self.window
+    }
+
+    /// The most recently closed fleet-aggregate row (None before the
+    /// first boundary) — the controller's fleet-wide signal.
+    pub fn last_fleet(&self) -> Option<&WindowSample> {
+        self.fleet.last()
+    }
+
+    /// Replica `i`'s most recently closed row (None before the first
+    /// boundary) — the controller aggregates these per *live* pool,
+    /// since [`ReplicaTelemetry::role`] is the construction-time tag.
+    pub fn last_replica(&self, i: usize) -> Option<&WindowSample> {
+        self.replicas.get(i).and_then(|r| r.samples.last())
+    }
+
     pub fn finish(self) -> FleetTelemetry {
         FleetTelemetry { window: self.window, replicas: self.replicas, fleet: self.fleet }
     }
@@ -325,12 +367,31 @@ mod tests {
         let s = |tokens| ReplicaSnapshot { tokens, ttft_n: 2, ttft_ok: 1, ..Default::default() };
         tb.roll(1.0, &[s(10), s(20), s(30)], 0.0, 0);
         let tel = tb.finish();
-        let prefill = tel.pool("prefill");
+        let prefill = tel.pool(Role::Prefill);
         assert_eq!(prefill.len(), 1);
         assert_eq!(prefill[0].tokens, 40);
-        assert_eq!(tel.pool("decode")[0].tokens, 20);
-        assert!(tel.pool("expert").is_empty());
+        assert_eq!(tel.pool(Role::Decode)[0].tokens, 20);
+        assert!(tel.pool(Role::Colocated).is_empty());
         assert!((prefill[0].slo_attainment() - 0.5).abs() < 1e-12);
+        // the deprecated string shim still answers, typos and all
+        #[allow(deprecated)]
+        {
+            assert_eq!(tel.pool_label("prefill")[0].tokens, 40);
+            assert!(tel.pool_label("expert").is_empty());
+        }
+    }
+
+    #[test]
+    fn builder_exposes_the_last_closed_rows_incrementally() {
+        let mut tb = TelemetryBuilder::new(1.0, vec!["prefill", "decode"], false);
+        assert_eq!(tb.closed(), 0);
+        assert!(tb.last_fleet().is_none() && tb.last_replica(0).is_none());
+        tb.roll(1.0, &[snap(10, 1, 2), snap(20, 2, 3)], 5.0, 0);
+        assert_eq!(tb.closed(), 1);
+        assert_eq!(tb.last_fleet().unwrap().tokens, 30);
+        assert_eq!(tb.last_fleet().unwrap().handoff_bytes, 5.0);
+        assert_eq!(tb.last_replica(1).unwrap().tokens, 20);
+        assert!(tb.last_replica(9).is_none(), "out-of-range replica is None");
     }
 
     #[test]

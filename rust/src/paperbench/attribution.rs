@@ -91,6 +91,7 @@ pub fn sweep(
         disagg: None,
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::tracing(),
+        controller: None,
     };
     let chunked_cfg =
         FleetConfig { sched: SchedPolicy::Chunked { quantum: 256 }, ..colo_cfg.clone() };

@@ -68,6 +68,7 @@ pub fn sweep(
             disagg: None,
             sched: SchedPolicy::Fcfs,
             obs: crate::obs::ObsConfig::default(),
+            controller: None,
         };
         let dis_cfg = FleetConfig {
             disagg: Some(DisaggConfig {

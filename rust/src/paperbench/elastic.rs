@@ -1,0 +1,246 @@
+//! Elastic-controller sweep: static-optimal vs controlled fleets under
+//! traffic drift (DESIGN.md §Controller; ROADMAP item 1).
+//!
+//! A compressed 24-hour "day" of ShareGPT traffic hits a P/D-disaggregated
+//! fleet of fixed device budget: the arrival rate swings diurnally while
+//! the prompt/decode length mix drifts in antiphase
+//! ([`TraceGen::with_mix_drift`]) — mornings are prompt-heavy, evenings
+//! decode-heavy.  No single P:D split is right all day.
+//!
+//! The sweep runs every static split of the budget under the two-stage
+//! SLO admission gate and takes the best (the strongest baseline an
+//! offline planner could pick), then runs the *same* budget with the
+//! elastic controller flipping replicas between the pools at window
+//! closes.  The claim being measured: the controlled fleet meets or
+//! beats the best static split on SLO attainment and beats it on
+//! rejection rate, because it re-shapes the pools as the mix drifts
+//! instead of paying a fixed split's worst half-day.
+
+use crate::analyzer::indicators::Workload;
+use crate::analyzer::latency::CommMode;
+use crate::analyzer::search::Analyzer;
+use crate::cluster::{
+    simulate_fleet, ControllerConfig, DisaggConfig, FleetConfig, FleetReport, RoutingPolicy,
+    SloPolicy,
+};
+use crate::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use crate::serving::scheduler::SchedPolicy;
+use crate::workload::TraceGen;
+
+/// Arrival rate per budgeted replica, req/s (the scale sweep's cadence).
+pub const PER_REPLICA_RATE: f64 = 7.8125;
+/// Diurnal arrival-rate modulation depth.
+pub const DIURNAL_DEPTH: f64 = 0.5;
+/// Prompt/decode mix-drift amplitude (±50% swing in antiphase).
+pub const MIX_AMPLITUDE: f64 = 0.5;
+/// Control ticks per compressed day — the controller acts "half-hourly".
+pub const TICKS_PER_DAY: f64 = 48.0;
+
+/// One fleet arm of the comparison (a static split or the controlled run).
+#[derive(Debug, Clone)]
+pub struct ElasticArm {
+    /// "static P{p}:D{d}" or "controlled"
+    pub label: String,
+    pub prefill: usize,
+    pub decode: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    /// fraction of recorded first tokens that met the TTFT deadline
+    pub slo_attainment: f64,
+    /// shed / offered across both admission gates
+    pub rejection_rate: f64,
+    /// role flips the controller landed (0 on static arms)
+    pub flips: usize,
+}
+
+impl ElasticArm {
+    fn from_report(label: String, prefill: usize, decode: usize, rep: &FleetReport) -> Self {
+        let ttft_n = rep.metrics.ttft.len();
+        ElasticArm {
+            label,
+            prefill,
+            decode,
+            completed: rep.metrics.completed,
+            rejected: rep.metrics.rejected,
+            slo_attainment: if ttft_n == 0 {
+                1.0
+            } else {
+                rep.metrics.ttft_ok as f64 / ttft_n as f64
+            },
+            rejection_rate: rep.metrics.rejection_rate(),
+            flips: rep.controller.as_ref().map_or(0, |c| c.flips),
+        }
+    }
+}
+
+/// The full comparison over one compressed day.
+#[derive(Debug, Clone)]
+pub struct ElasticReport {
+    pub requests: usize,
+    pub budget: usize,
+    pub rate: f64,
+    pub duration: f64,
+    pub deadline: f64,
+    /// every static split, in P-ascending order
+    pub arms: Vec<ElasticArm>,
+    /// index into `arms` of the best static split (max SLO attainment,
+    /// ties broken by lower rejection rate)
+    pub best_static: usize,
+    pub controlled: ElasticArm,
+}
+
+/// Run the sweep: `requests` arrivals over a `budget`-replica device
+/// budget on `pod`-shaped pods, one compressed diurnal day with
+/// antiphase mix drift, TTFT SLO at `deadline` seconds.  None when the
+/// analyzer finds no feasible per-phase strategies (never fabricated).
+pub fn run(
+    model: &MoEModelConfig,
+    pod: &ClusterConfig,
+    requests: usize,
+    budget: usize,
+    deadline: f64,
+    seed: u64,
+) -> Option<ElasticReport> {
+    assert!(budget >= 2, "an elastic P/D fleet needs at least two replicas");
+    let rate = PER_REPLICA_RATE * budget as f64;
+    let duration = requests as f64 / rate;
+    let serving = ServingConfig::paper_eval(rate);
+    let wl = Workload::sharegpt(PER_REPLICA_RATE);
+    let pair = Analyzer::new(model, pod, &serving).best_disagg(&wl)?;
+    // one full diurnal cycle over the run, mix drift in the same period
+    let trace = TraceGen::diurnal(rate, serving.max_seq, seed, DIURNAL_DEPTH, duration)
+        .with_mix_drift(MIX_AMPLITUDE, duration)
+        .generate(duration);
+
+    let cfg_for = |p: usize, ctl: Option<ControllerConfig>| FleetConfig {
+        replicas: budget,
+        strategy: pair.prefill.strategy,
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: Some(SloPolicy { ttft_deadline: deadline }),
+        disagg: Some(DisaggConfig {
+            prefill_replicas: p,
+            decode_replicas: budget - p,
+            prefill_strategy: pair.prefill.strategy,
+            decode_strategy: pair.decode.strategy,
+        }),
+        sched: SchedPolicy::Fcfs,
+        obs: crate::obs::ObsConfig::default(),
+        controller: ctl,
+    };
+
+    // every static split the budget admits — the offline planner's menu
+    let mut arms = Vec::with_capacity(budget - 1);
+    for p in 1..budget {
+        let rep = simulate_fleet(model, pod, &cfg_for(p, None), &serving, &trace, seed);
+        arms.push(ElasticArm::from_report(
+            format!("static P{p}:D{}", budget - p),
+            p,
+            budget - p,
+            &rep,
+        ));
+    }
+    let best_static = (0..arms.len())
+        .max_by(|&a, &b| {
+            (arms[a].slo_attainment, -arms[a].rejection_rate)
+                .partial_cmp(&(arms[b].slo_attainment, -arms[b].rejection_rate))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .expect("budget >= 2 yields at least one split");
+
+    // the controlled arm: same budget, balanced starting split, the
+    // reactive controller flipping replicas as the mix drifts
+    let p0 = (budget / 2).max(1);
+    let ctl = ControllerConfig {
+        interval: duration / TICKS_PER_DAY,
+        max_replicas: budget,
+        ..ControllerConfig::new(duration / TICKS_PER_DAY)
+    };
+    let rep = simulate_fleet(model, pod, &cfg_for(p0, Some(ctl)), &serving, &trace, seed);
+    let controlled = ElasticArm::from_report("controlled".into(), p0, budget - p0, &rep);
+
+    Some(ElasticReport {
+        requests: trace.len(),
+        budget,
+        rate,
+        duration,
+        deadline,
+        arms,
+        best_static,
+        controlled,
+    })
+}
+
+/// Render the comparison as the paperbench-style report.  Every arm is
+/// one grep-able row; the CI smoke requires both a `static` and a
+/// `controlled` row so an empty comparison fails the job.
+pub fn render(model: &MoEModelConfig, pod: &ClusterConfig, rep: Option<&ElasticReport>) -> String {
+    let Some(r) = rep else {
+        return format!(
+            "Elastic sweep — no feasible per-phase strategies for {} on {}\n",
+            model.name, pod.name
+        );
+    };
+    let mut out = format!(
+        "Elastic sweep — {} on {} x {} budget (one compressed day)\n\
+         {:>8} requests over {:.1}s ({:.1} req/s diurnal depth {}, mix drift ±{:.0}%, \
+         TTFT SLO {:.1}s)\n",
+        model.name,
+        pod.name,
+        r.budget,
+        r.requests,
+        r.duration,
+        r.rate,
+        DIURNAL_DEPTH,
+        MIX_AMPLITUDE * 100.0,
+        r.deadline,
+    );
+    for (i, a) in r.arms.iter().enumerate() {
+        let marker = if i == r.best_static { "  <- best static" } else { "" };
+        out.push_str(&format!(
+            "{:<16} slo_attainment {:.3}  rejection_rate {:.3}  completed {}{}\n",
+            a.label, a.slo_attainment, a.rejection_rate, a.completed, marker
+        ));
+    }
+    let c = &r.controlled;
+    out.push_str(&format!(
+        "{:<16} slo_attainment {:.3}  rejection_rate {:.3}  completed {}  ({} flips from P{}:D{})\n",
+        c.label, c.slo_attainment, c.rejection_rate, c.completed, c.flips, c.prefill, c.decode
+    ));
+    let b = &r.arms[r.best_static];
+    out.push_str(&format!(
+        "controlled vs best static: slo {:+.3}, rejection {:+.3}\n",
+        c.slo_attainment - b.slo_attainment,
+        c.rejection_rate - b.rejection_rate
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elastic_sweep_compares_every_split_against_the_controlled_fleet() {
+        // the CI smoke shape: tiny model on the localhost grid
+        let model = MoEModelConfig::tiny();
+        let pod = ClusterConfig::localhost(2, 4);
+        let rep = run(&model, &pod, 600, 4, 8.0, 11).expect("localhost grid must be feasible");
+        assert_eq!(rep.arms.len(), 3, "a budget of 4 admits P1:D3, P2:D2, P3:D1");
+        for a in &rep.arms {
+            assert_eq!(a.prefill + a.decode, 4, "static splits spend the whole budget");
+            assert_eq!(a.flips, 0, "static arms never flip");
+            assert!(a.completed + a.rejected > 0, "every arm serves the trace");
+            assert!((0.0..=1.0).contains(&a.slo_attainment));
+        }
+        assert!(rep.best_static < rep.arms.len());
+        let c = &rep.controlled;
+        assert!(c.completed > 0, "the controlled fleet serves traffic");
+        assert!((0.0..=1.0).contains(&c.slo_attainment));
+        let rendered = render(&model, &pod, Some(&rep));
+        assert!(rendered.contains("static P1:D3"), "every split renders a row");
+        assert!(rendered.contains("best static"));
+        assert!(rendered.contains("controlled"));
+        assert!(render(&model, &pod, None).contains("no feasible"));
+    }
+}

@@ -6,6 +6,7 @@
 pub mod attribution;
 pub mod chunked;
 pub mod disagg;
+pub mod elastic;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;

@@ -83,6 +83,7 @@ pub fn run(
         disagg: None,
         sched: SchedPolicy::Fcfs,
         obs: crate::obs::ObsConfig::default(),
+        controller: None,
     };
     let trace = TraceGen::diurnal(rate, serving.max_seq, seed, DIURNAL_DEPTH, duration / 4.0)
         .generate(duration);

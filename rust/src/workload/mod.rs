@@ -104,6 +104,12 @@ pub struct TraceGen {
     prompt_dist: (f64, f64),
     /// ln-space (mu, sigma) of the output-length lognormal
     output_dist: (f64, f64),
+    /// sinusoidal prompt/decode mix drift (amplitude, period): at phase
+    /// `sin(2πt/period)` prompts scale by `1 + a·sin` while decode
+    /// budgets scale by `1 − a·sin` (antiphase) — the traffic-shape
+    /// drift the elastic controller chases.  None leaves the draws
+    /// untouched (bit-exact historical streams).
+    mix_drift: Option<(f64, f64)>,
 }
 
 impl TraceGen {
@@ -116,6 +122,7 @@ impl TraceGen {
             // ln-space parameters: median e^mu, shape sigma
             prompt_dist: (5.0, 1.0), // median ~148
             output_dist: (5.3, 0.8), // median ~200
+            mix_drift: None,
         }
     }
 
@@ -140,6 +147,18 @@ impl TraceGen {
     pub fn with_pattern(mut self, pattern: ArrivalPattern) -> Self {
         pattern.validate();
         self.pattern = pattern;
+        self
+    }
+
+    /// Drift the prompt/decode length mix sinusoidally over time:
+    /// prompts scale by `1 + amplitude·sin(2πt/period)`, decode budgets
+    /// by the antiphase factor.  The scaling multiplies the lognormal
+    /// draws *after* they are taken, so the RNG stream — and therefore
+    /// every arrival time — is bit-identical to the undrifted trace.
+    pub fn with_mix_drift(mut self, amplitude: f64, period: f64) -> Self {
+        assert!((0.0..1.0).contains(&amplitude), "mix-drift amplitude must be in [0, 1)");
+        assert!(period > 0.0, "mix-drift period must be positive");
+        self.mix_drift = Some((amplitude, period));
         self
     }
 
@@ -169,12 +188,19 @@ impl TraceGen {
                 continue;
             }
             let (pm, ps) = self.prompt_dist;
-            let raw_in = self.rng.lognormal(pm, ps);
+            let mut raw_in = self.rng.lognormal(pm, ps);
+            let (om, os) = self.output_dist;
+            let mut raw_out = self.rng.lognormal(om, os);
+            // shape drift scales the draws after they are taken, keeping
+            // the RNG stream (and all arrival times) bit-exact
+            if let Some((amp, period)) = self.mix_drift {
+                let phase = (2.0 * std::f64::consts::PI * t / period).sin();
+                raw_in *= 1.0 + amp * phase;
+                raw_out *= 1.0 - amp * phase;
+            }
             // keep at least one token of generation budget
             let len_in = self.clamp_len(raw_in).min(self.max_len - 1);
             let budget = self.max_len - len_in;
-            let (om, os) = self.output_dist;
-            let raw_out = self.rng.lognormal(om, os);
             let len_out = self.clamp_len(raw_out).min(budget);
             out.push(Request { id, arrival: t, len_in, len_out });
             id += 1;
@@ -341,6 +367,55 @@ mod tests {
         let d = TraceGen::diurnal(2.0, 2048, 9, 0.5, 60.0).generate(200.0);
         assert_eq!(c, d);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn mix_drift_preserves_the_arrival_stream_bit_for_bit() {
+        let plain = TraceGen::diurnal(4.0, 4096, 13, 0.5, 40.0).generate(200.0);
+        let drifted = TraceGen::diurnal(4.0, 4096, 13, 0.5, 40.0)
+            .with_mix_drift(0.5, 40.0)
+            .generate(200.0);
+        assert_eq!(plain.len(), drifted.len(), "thinning must not see the drift");
+        for (p, d) in plain.iter().zip(&drifted) {
+            assert_eq!(p.arrival, d.arrival, "arrival times must be bit-identical");
+        }
+        assert!(
+            plain.iter().zip(&drifted).any(|(p, d)| p.len_in != d.len_in),
+            "the drift must actually move prompt lengths"
+        );
+    }
+
+    #[test]
+    fn mix_drift_swings_prompts_and_decodes_in_antiphase() {
+        let period = 50.0;
+        let reqs = TraceGen::sharegpt(8.0, 4096, 17)
+            .with_mix_drift(0.6, period)
+            .generate(1000.0);
+        // sin > 0 on the first half of each period: prompt-heavy phase
+        let (mut day_in, mut day_out, mut nd) = (0usize, 0usize, 0usize);
+        let (mut night_in, mut night_out, mut nn) = (0usize, 0usize, 0usize);
+        for r in &reqs {
+            if (r.arrival / period).rem_euclid(1.0) < 0.5 {
+                day_in += r.len_in;
+                day_out += r.len_out;
+                nd += 1;
+            } else {
+                night_in += r.len_in;
+                night_out += r.len_out;
+                nn += 1;
+            }
+        }
+        let (day_mean_in, day_mean_out) = (day_in as f64 / nd as f64, day_out as f64 / nd as f64);
+        let (night_mean_in, night_mean_out) =
+            (night_in as f64 / nn as f64, night_out as f64 / nn as f64);
+        assert!(
+            day_mean_in > 1.3 * night_mean_in,
+            "prompt-heavy half: {day_mean_in:.0} !> 1.3×{night_mean_in:.0}"
+        );
+        assert!(
+            night_mean_out > 1.3 * day_mean_out,
+            "decode-heavy half: {night_mean_out:.0} !> 1.3×{day_mean_out:.0}"
+        );
     }
 
     #[test]

@@ -25,6 +25,7 @@ fn fleet_cfg(replicas: usize, policy: RoutingPolicy, slo: Option<SloPolicy>) -> 
         disagg: None,
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
+        controller: None,
     }
 }
 

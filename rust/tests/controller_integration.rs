@@ -1,0 +1,258 @@
+//! Elastic-controller end-to-end pins (DESIGN.md §Controller):
+//!
+//! * **conservation** — a property sweep over 2–8 replicas × all three
+//!   architectures × arbitrary directive storms (flips, parks, wakes —
+//!   valid and invalid alike): every request completes or is rejected
+//!   exactly once, no matter how the controller reshapes the fleet
+//!   mid-run;
+//! * **controller-off pin** — `controller: None` keeps the static fleet
+//!   bit-for-bit: the indexed engine and the frozen legacy loop render
+//!   the identical `FleetReport`, with the report's controller slot
+//!   empty (the PR 8 report, unchanged);
+//! * **controller-on equivalence** — with a scripted controller the two
+//!   loops still agree sample-for-sample, so the control hook sits at
+//!   the same point of both event orders.
+
+use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::latency::CommMode;
+use mixserve::analyzer::search::{Analyzer, Objective};
+use mixserve::cluster::{
+    simulate_fleet, simulate_fleet_legacy, ControlAction, ControllerConfig, Directive,
+    DisaggConfig, FleetConfig, ObsConfig, Role, RoutingPolicy, SloPolicy,
+};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use mixserve::serving::scheduler::SchedPolicy;
+use mixserve::testkit::forall;
+use mixserve::util::rng::Rng;
+use mixserve::workload::TraceGen;
+
+fn base_cfg(replicas: usize, strategy: ParallelStrategy) -> FleetConfig {
+    FleetConfig {
+        replicas,
+        strategy,
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: None,
+        disagg: None,
+        sched: SchedPolicy::Fcfs,
+        obs: ObsConfig::default(),
+        controller: None,
+    }
+}
+
+/// The tiny-model localhost setup shared by every test here.
+struct Grid {
+    model: MoEModelConfig,
+    pod: ClusterConfig,
+    colo_strategy: ParallelStrategy,
+    prefill_strategy: ParallelStrategy,
+    decode_strategy: ParallelStrategy,
+}
+
+fn grid() -> Grid {
+    let model = MoEModelConfig::tiny();
+    let pod = ClusterConfig::localhost(2, 4);
+    let analyzer = Analyzer::new(&model, &pod, &ServingConfig::paper_eval(4.0));
+    let wl = Workload::sharegpt(4.0);
+    let colo_strategy = analyzer
+        .best(&wl, Objective::MaxThroughput)
+        .expect("localhost grid must be feasible")
+        .strategy;
+    let pair = analyzer.best_disagg(&wl).expect("localhost grid must have a disagg pair");
+    Grid {
+        model,
+        pod,
+        colo_strategy,
+        prefill_strategy: pair.prefill.strategy,
+        decode_strategy: pair.decode.strategy,
+    }
+}
+
+/// Every request is accounted exactly once: completions and rejections
+/// partition the trace.  A lost request (stranded on a drained replica)
+/// breaks the sum low; a duplicated one (double-delivered across a
+/// flip) breaks it high.
+fn assert_conserved(rep: &mixserve::cluster::FleetReport, n: usize, label: &str) {
+    assert_eq!(
+        rep.metrics.completed + rep.metrics.rejected,
+        n,
+        "{label}: {} completed + {} rejected must partition {n} requests",
+        rep.metrics.completed,
+        rep.metrics.rejected
+    );
+}
+
+#[test]
+fn prop_no_request_lost_or_duplicated_across_arbitrary_control_storms() {
+    let g = grid();
+    forall(
+        "completed + rejected == arrivals under arbitrary directives",
+        14,
+        41,
+        |r: &mut Rng| {
+            let arch = r.below(3); // 0 colocated, 1 chunked, 2 disagg
+            let replicas = 2 + r.below(7); // 2..=8
+            let spares = r.below(3); // parked scale-up headroom
+            let reactive = r.below(2) == 1;
+            // an arbitrary storm of directives — valid and invalid mixed;
+            // the guards must keep every one of them safe
+            let n_dir = r.below(7);
+            let directives: Vec<Directive> = (0..n_dir)
+                .map(|_| Directive {
+                    tick: 1 + r.below(10),
+                    replica: r.below(replicas + spares),
+                    action: match r.below(6) {
+                        0 => ControlAction::Flip(Role::Prefill),
+                        1 => ControlAction::Flip(Role::Decode),
+                        2 => ControlAction::Park,
+                        3 => ControlAction::Activate(Role::Prefill),
+                        4 => ControlAction::Activate(Role::Decode),
+                        _ => ControlAction::Activate(Role::Colocated),
+                    },
+                })
+                .collect();
+            let rate = 2.0 + r.below(5) as f64;
+            let duration = 6.0 + r.below(5) as f64;
+            (arch, replicas, spares, reactive, directives, rate, duration, r.next_u64() % 1000)
+        },
+        |&(arch, replicas, spares, reactive, ref directives, rate, duration, seed)| {
+            let mut cfg = base_cfg(replicas, g.colo_strategy);
+            match arch {
+                1 => cfg.sched = SchedPolicy::Chunked { quantum: 64 },
+                2 => {
+                    let prefill = 1 + (replicas - 2) / 2;
+                    cfg.disagg = Some(DisaggConfig {
+                        prefill_replicas: prefill,
+                        decode_replicas: replicas - prefill,
+                        prefill_strategy: g.prefill_strategy,
+                        decode_strategy: g.decode_strategy,
+                    });
+                }
+                _ => {}
+            }
+            let mut ctl = ControllerConfig::scripted(1.0, directives.clone());
+            ctl.max_replicas = replicas + spares;
+            ctl.reactive = reactive;
+            cfg.controller = Some(ctl);
+            let serving = ServingConfig::paper_eval(rate);
+            let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
+            let rep = simulate_fleet(&g.model, &g.pod, &cfg, &serving, &trace, seed);
+            if rep.metrics.completed + rep.metrics.rejected != trace.len() {
+                return Err(format!(
+                    "conservation broken: {} completed + {} rejected != {} arrivals \
+                     ({} control events applied)",
+                    rep.metrics.completed,
+                    rep.metrics.rejected,
+                    trace.len(),
+                    rep.controller.as_ref().map_or(0, |c| c.events.len())
+                ));
+            }
+            // the two loops must also stay sample-identical controller-on
+            let legacy = simulate_fleet_legacy(&g.model, &g.pod, &cfg, &serving, &trace, seed);
+            if format!("{rep:?}") != format!("{legacy:?}") {
+                return Err(format!(
+                    "engine and legacy loop diverged under control \
+                     (engine completed {}, legacy {})",
+                    rep.metrics.completed, legacy.metrics.completed
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn controller_off_fleet_is_the_pr8_static_fleet_bit_for_bit() {
+    // the no-controller path must not move: both loops, full obs, SLO
+    // admission — and the report's controller slot stays empty
+    let g = grid();
+    let mut cfg = base_cfg(3, g.colo_strategy);
+    cfg.obs = ObsConfig::full(1.0);
+    cfg.slo = Some(SloPolicy { ttft_deadline: 6.0 });
+    let serving = ServingConfig::paper_eval(5.0);
+    let trace = TraceGen::sharegpt(5.0, serving.max_seq, 13).generate(12.0);
+    let engine = simulate_fleet(&g.model, &g.pod, &cfg, &serving, &trace, 13);
+    let legacy = simulate_fleet_legacy(&g.model, &g.pod, &cfg, &serving, &trace, 13);
+    assert!(engine.metrics.completed > 0, "the pin must exercise real traffic");
+    assert!(engine.controller.is_none(), "no controller ran, none is reported");
+    assert_eq!(
+        format!("{engine:?}"),
+        format!("{legacy:?}"),
+        "controller-off reports must stay byte-identical"
+    );
+    assert!(
+        format!("{engine:?}").contains("controller: None"),
+        "the report carries the empty controller slot explicitly"
+    );
+    // determinism of the untouched path: a re-run reproduces it exactly
+    let again = simulate_fleet(&g.model, &g.pod, &cfg, &serving, &trace, 13);
+    assert_eq!(format!("{engine:?}"), format!("{again:?}"));
+}
+
+#[test]
+fn scripted_flip_lands_in_a_real_run_and_both_loops_agree() {
+    // a 2P+2D fleet with one scripted decode->prefill flip: the flip
+    // must actually land (events recorded, one flip counted), requests
+    // keep flowing through both pools, and the engine and legacy loops
+    // agree on every sample
+    let g = grid();
+    let mut cfg = base_cfg(4, g.colo_strategy);
+    cfg.disagg = Some(DisaggConfig {
+        prefill_replicas: 2,
+        decode_replicas: 2,
+        prefill_strategy: g.prefill_strategy,
+        decode_strategy: g.decode_strategy,
+    });
+    cfg.controller = Some(ControllerConfig::scripted(
+        1.0,
+        vec![Directive { tick: 3, replica: 2, action: ControlAction::Flip(Role::Prefill) }],
+    ));
+    let serving = ServingConfig::paper_eval(6.0);
+    let trace = TraceGen::sharegpt(6.0, serving.max_seq, 29).generate(15.0);
+    let engine = simulate_fleet(&g.model, &g.pod, &cfg, &serving, &trace, 29);
+    let legacy = simulate_fleet_legacy(&g.model, &g.pod, &cfg, &serving, &trace, 29);
+    assert_eq!(format!("{engine:?}"), format!("{legacy:?}"), "controller-on equivalence");
+    assert_conserved(&engine, trace.len(), "scripted flip");
+    let ctl = engine.controller.expect("a controlled run reports its controller");
+    assert_eq!(ctl.flips, 1, "the scripted flip applied");
+    assert_eq!(ctl.events.len(), 1);
+    assert_eq!(ctl.events[0].replica, 2);
+    assert_eq!(ctl.events[0].action, ControlAction::Flip(Role::Prefill));
+    assert_eq!(ctl.final_active, 4, "the flip changes a role, not the active count");
+    assert!(engine.metrics.completed > 0);
+    assert!(!engine.kv_handoff.is_empty(), "the role-split fleet kept handing off KV");
+}
+
+#[test]
+fn parked_spares_wake_under_the_rate_driven_resize_and_requests_survive() {
+    // 1P+1D fleet with two parked spares: an (intentionally huge)
+    // per-unit-rate rho makes the planner-fed resize demand the full
+    // budget as soon as any window carries traffic, so the park->active
+    // transitions are exercised deterministically; conservation and
+    // engine/legacy equivalence must hold through the growth
+    let g = grid();
+    let mut cfg = base_cfg(2, g.colo_strategy);
+    cfg.disagg = Some(DisaggConfig {
+        prefill_replicas: 1,
+        decode_replicas: 1,
+        prefill_strategy: g.prefill_strategy,
+        decode_strategy: g.decode_strategy,
+    });
+    let mut ctl = ControllerConfig::new(1.0);
+    ctl.max_replicas = 4;
+    ctl.rho_per_rate = Some(10.0);
+    cfg.controller = Some(ctl);
+    let serving = ServingConfig::paper_eval(8.0);
+    let trace = TraceGen::sharegpt(8.0, serving.max_seq, 3).generate(15.0);
+    let engine = simulate_fleet(&g.model, &g.pod, &cfg, &serving, &trace, 3);
+    let legacy = simulate_fleet_legacy(&g.model, &g.pod, &cfg, &serving, &trace, 3);
+    assert_eq!(format!("{engine:?}"), format!("{legacy:?}"), "reactive equivalence");
+    assert_conserved(&engine, trace.len(), "reactive growth");
+    let ctl = engine.controller.expect("controlled run");
+    assert!(
+        ctl.grows > 0,
+        "the resize must wake a spare once a window carries traffic (events: {:?})",
+        ctl.events
+    );
+    assert!(ctl.final_active > 2, "grown replicas stay active through the end");
+}

@@ -104,6 +104,7 @@ fn disagg_beats_colocated_ttft_p99_under_prompt_heavy_load() {
         disagg: None,
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
+        controller: None,
     };
     let colo = simulate_fleet(&model, &pod, &base, &serving, &trace, 17);
     let dis_cfg = FleetConfig {
@@ -173,6 +174,7 @@ fn one_replica_colocated_fleet_reproduces_the_serving_sim_exactly() {
             disagg: None,
             sched: SchedPolicy::Fcfs,
             obs: ObsConfig::default(),
+            controller: None,
         },
         &serving,
         &trace,
@@ -208,6 +210,7 @@ fn disagg_fleet_is_deterministic() {
         }),
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
+        controller: None,
     };
     let a = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 5);
     let b = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 5);

@@ -100,6 +100,7 @@ fn colocated(replicas: usize, strategy: ParallelStrategy) -> FleetConfig {
         disagg: None,
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
+        controller: None,
     }
 }
 

@@ -44,6 +44,7 @@ fn fleet_cfg(arch: Arch, obs: ObsConfig, slo: Option<SloPolicy>) -> FleetConfig 
             _ => SchedPolicy::Fcfs,
         },
         obs,
+        controller: None,
     }
 }
 
@@ -176,7 +177,7 @@ fn telemetry_windows_are_fixed_width_and_consistent() {
     );
     let slo_n: usize = tel.fleet.iter().map(|w| w.slo_n).sum();
     assert!(slo_n > 0, "an SLO run must record attainment denominators");
-    let pooled = tel.pool("colocated");
+    let pooled = tel.pool(mixserve::cluster::Role::Colocated);
     assert_eq!(pooled.len(), tel.windows());
     assert_eq!(pooled[0].tokens, tel.fleet[0].tokens, "one-pool fleet: pool == fleet");
 }

@@ -164,6 +164,7 @@ fn chunked_fleet_drains_deterministically() {
         disagg: None,
         sched: SchedPolicy::Chunked { quantum: 256 },
         obs: ObsConfig::default(),
+        controller: None,
     };
     let a = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 19);
     let b = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 19);
@@ -201,6 +202,7 @@ fn two_stage_admission_sheds_under_decode_bound_overload() {
         }),
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
+        controller: None,
     };
     let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 3);
     assert_eq!(rep.metrics.completed + rep.metrics.rejected, n, "books balance");
