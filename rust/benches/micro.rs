@@ -29,7 +29,7 @@ use mixserve::serving::kvcache::KvCacheManager;
 use mixserve::serving::scheduler::SchedPolicy;
 use mixserve::simulator::{EventQueue, IndexedQueue};
 use mixserve::testkit::Bench;
-use mixserve::timing::{kv_handoff_secs, CommDomain};
+use mixserve::timing::{kv_handoff_secs, CommDomain, DispatchBackend};
 use mixserve::workload::{Request, TraceGen};
 
 fn main() {
@@ -65,6 +65,7 @@ fn main() {
         comb_blk_bytes: 4e6,
         comb_ag_bytes: 16e6,
         flops: 2.5e11,
+        backend: DispatchBackend::AllToAll,
     };
     b.run("pipeline makespan K=4 (hybrid stage)", || {
         stage.makespan(&cost, 4).to_bits()
@@ -72,6 +73,14 @@ fn main() {
     b.run("pipeline auto-chunk search (K<=8)", || {
         stage.auto_chunks(&cost, MAX_CHUNKS).0
     });
+    // --- per-backend makespan of the same stage: what one swap of the
+    //     dispatch algorithm costs/saves at the schedule-IR level
+    for backend in DispatchBackend::ALL {
+        let staged = HybridStage { backend, ..stage };
+        b.run(&format!("pipeline makespan K=4 backend={}", backend.label()), || {
+            staged.makespan(&cost, 4).to_bits()
+        });
+    }
     let lm = LatencyModel::new(&MoEModelConfig::deepseek_r1(), &cluster);
     let mix = ParallelStrategy::mixserve(4, 8);
     b.run("moe_pipelined_layer K=4 (deepseek)", || {
@@ -217,6 +226,7 @@ fn main() {
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
         controller: None,
+        tuning: Default::default(),
     };
     let fleet_trace = TraceGen::sharegpt(fleet_rate, fleet_serving.max_seq, 7)
         .generate(100_000.0 / fleet_rate);

@@ -13,8 +13,11 @@ use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy};
 use crate::gantt::Lane;
 use crate::pipeline::{chunked_pipeline, HybridStage, PipelineCfg};
-use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir, Schedule, Step};
-use crate::timing::{remote_group_copies, CommCost, CommDomain, ExpertLoadProfile};
+use crate::timing::schedule::{backend_combine_ir, backend_dispatch_ir, EpShape, Schedule, Step};
+use crate::timing::{
+    agmask_exchange_time, remote_group_copies, CommCost, CommDomain, DispatchBackend,
+    ExpertLoadProfile,
+};
 
 /// Prefill processes the full prompt; decode one token with a cached
 /// context (Eqs. 9–10 evaluate Δt_svc at s = L_in and s = 1).
@@ -83,6 +86,9 @@ pub struct LatencyModel<C: CommCost = CollectiveCost> {
     /// chunked micro-batch pipelining of the MoE block (default Off:
     /// the historical additive pricing, bit-for-bit)
     pub pipeline: PipelineCfg,
+    /// dispatch/combine algorithm for the MoE exchange (default
+    /// `AllToAll`: the fused pairwise shape, bit-for-bit)
+    pub backend: DispatchBackend,
 }
 
 impl LatencyModel<CollectiveCost> {
@@ -100,6 +106,7 @@ impl<C: CommCost> LatencyModel<C> {
             cost,
             load: ExpertLoadProfile::uniform(model.n_experts),
             pipeline: PipelineCfg::Off,
+            backend: DispatchBackend::AllToAll,
         }
     }
 
@@ -120,6 +127,20 @@ impl<C: CommCost> LatencyModel<C> {
     /// Swap the pipeline config in place (the serving simulator's knob).
     pub fn set_pipeline(&mut self, pipeline: PipelineCfg) {
         self.pipeline = pipeline;
+    }
+
+    /// Price the MoE exchange under this dispatch/combine backend
+    /// (builder style; `DispatchBackend::AllToAll` reproduces the fused
+    /// pairwise pricing bit-for-bit).
+    pub fn with_backend(mut self, backend: DispatchBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Swap the dispatch backend in place (the analyzer's joint
+    /// strategy × backend search re-prices one model per candidate).
+    pub fn set_backend(&mut self, backend: DispatchBackend) {
+        self.backend = backend;
     }
 
     /// Swap the load profile in place (per-iteration re-pricing in the
@@ -318,8 +339,17 @@ impl<C: CommCost> LatencyModel<C> {
         if ep == 1 {
             // pure TP: every token's FFN sharded over all tp devices; one
             // AR of the full activation volume per layer (skew-immune —
-            // every device serves every expert).
+            // every device serves every expert).  No dispatch/combine
+            // exists, so this branch is backend-invariant.
             c.all_reduce(global_bytes, tp, c.domain_of(tp))
+        } else if self.backend == DispatchBackend::AllGatherMask {
+            // AG-dispatch + RS-combine over the EP communicator: gather
+            // the FULL global activation on every rank and mask locally.
+            // No per-peer launches (one collective α per direction) but
+            // no routing dedup either — and skew-immune, since every
+            // rank gathers everything regardless of expert popularity.
+            // The strided tp×ep group spans nodes iff tp·ep does.
+            agmask_exchange_time(c, global_bytes, ep, c.domain_of(tp * ep))
         } else if tp == 1 {
             // pure EP: rank-granular dispatch/combine.  Every *distinct
             // activated rank* receives its own copy of the token's hidden
@@ -335,8 +365,13 @@ impl<C: CommCost> LatencyModel<C> {
             // model is per-link-traffic-aware by construction: sharers = 1
             // or a contention-aware backend would double-count.
             let (per_nic, per_fabric) = self.pure_ep_lane_volumes(d, global_bytes, hot);
-            let t_inter = c.pairwise_rounds(d - 1, per_nic, 1, CommDomain::InterNode);
-            let t_intra = c.wire(per_fabric, 1, CommDomain::IntraNode);
+            // the backend reshapes the lane model: launch count per the
+            // kernel's round structure, wire at its effective bandwidth
+            // (`AllToAll` keeps d−1 rounds at factor 1.0 — bit-for-bit)
+            let rounds = self.backend.launch_rounds(d - 1);
+            let wf = self.backend.wire_factor();
+            let t_inter = c.pairwise_rounds(rounds, per_nic * wf, 1, CommDomain::InterNode);
+            let t_intra = c.wire(per_fabric * wf, 1, CommDomain::IntraNode);
             // dispatch + combine; intra and inter lanes progress together
             2.0 * t_inter.max(t_intra)
         } else {
@@ -347,10 +382,19 @@ impl<C: CommCost> LatencyModel<C> {
             // the TP group's RS/AG stay intra-node only while tp fits in a
             // node — oversized TP groups pay the NIC (Fig. 3's d > 8 wall)
             let tp_domain = c.domain_of(tp);
-            // Algorithms 1–2 as the shared schedule IR, played under the
-            // bound cost backend (async) or summed per lane (sync).
-            let disp = ag_dispatch_ir(1, ep, tp, blk, blk, tp_domain);
-            let comb = rs_combine_ir(1, ep, tp, blk, bytes, tp_domain);
+            // Algorithms 1–2 as the shared schedule IR — reshaped per
+            // dispatch backend (`AllToAll` delegates to the plain
+            // builders verbatim), played under the bound cost backend
+            // (async) or summed per lane (sync).
+            let shape = EpShape {
+                nodes: 1,
+                rounds: ep,
+                tp,
+                tp_domain,
+                ep_domain: c.domain_of(tp * ep),
+            };
+            let disp = backend_dispatch_ir(self.backend, &shape, blk, blk);
+            let comb = backend_combine_ir(self.backend, &shape, blk, bytes);
             let (disp_async, disp_sync) = disp.makespans(c);
             let (comb_async, comb_sync) = comb.makespans(c);
             match mode {
@@ -379,9 +423,12 @@ impl<C: CommCost> LatencyModel<C> {
         let k = chunks.max(1);
         let (tp, ep) = (s.moe.tp, s.moe.ep);
         let gemm_chunk = self.moe_compute_chunk(s, batch, seq, phase, k);
-        if ep <= 1 {
+        if ep <= 1 || self.backend == DispatchBackend::AllGatherMask {
             // pure TP: a single AR, no dispatch/compute/combine chain to
-            // pipeline — additive, chunk-independent
+            // pipeline — additive, chunk-independent.  AllGatherMask is
+            // the same shape for a different reason: its exchange is two
+            // monolithic collectives, so there is no round structure for
+            // micro-chunks to overlap against.
             return self.moe_comm_layer(s, batch, seq, phase, CommMode::FusedAsync)
                 + self.moe_compute_chunk(s, batch, seq, phase, 1);
         }
@@ -394,8 +441,10 @@ impl<C: CommCost> LatencyModel<C> {
             // exactly why low-batch high-degree EP pipelines poorly
             let (per_nic, per_fabric) = self.pure_ep_lane_volumes(ep, global_bytes, hot);
             let kf = k as f64;
-            let t_inter = c.pairwise_rounds(ep - 1, per_nic / kf, 1, CommDomain::InterNode);
-            let t_intra = c.wire(per_fabric / kf, 1, CommDomain::IntraNode);
+            let rounds = self.backend.launch_rounds(ep - 1);
+            let wf = self.backend.wire_factor();
+            let t_inter = c.pairwise_rounds(rounds, per_nic * wf / kf, 1, CommDomain::InterNode);
+            let t_intra = c.wire(per_fabric * wf / kf, 1, CommDomain::IntraNode);
             let dir = t_inter.max(t_intra);
             let sched = chunked_pipeline(
                 k,
@@ -429,6 +478,7 @@ impl<C: CommCost> LatencyModel<C> {
             comb_blk_bytes: blk,
             comb_ag_bytes: bytes,
             flops: 0.0, // per-chunk cost passed explicitly below
+            backend: self.backend,
         };
         let rate = (self.cluster.flops * self.cluster.mfu).max(1.0);
         stage.schedule_with(k, gemm_chunk * rate).makespans(c).0

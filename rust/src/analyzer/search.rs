@@ -18,7 +18,9 @@ use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConf
 use crate::grammar::enumerate_strategies;
 use crate::pipeline::PipelineCfg;
 use crate::serving::scheduler::SchedPolicy;
-use crate::timing::{kv_handoff_secs, CommCost, ExpertLoadProfile};
+use crate::timing::{
+    kv_handoff_secs, BackendPolicy, CommCost, DispatchBackend, ExpertLoadProfile,
+};
 
 /// Seed for measured load profiles built via [`Analyzer::with_load_skew`]
 /// (deterministic selection runs).
@@ -38,6 +40,10 @@ pub enum Objective {
 #[derive(Debug, Clone)]
 pub struct StrategyReport {
     pub strategy: ParallelStrategy,
+    /// the dispatch backend the indicators were priced at (`AllToAll`
+    /// under the default [`BackendPolicy::Fixed`] policy; the per-strategy
+    /// argmin under [`BackendPolicy::Auto`])
+    pub backend: DispatchBackend,
     pub indicators: Indicators,
     pub memory: MemoryCheck,
 }
@@ -78,6 +84,11 @@ pub struct Analyzer<C: CommCost = CollectiveCost> {
     /// chunked micro-batch pipelining priced into every candidate
     /// (`Off` reproduces the additive ranking exactly)
     pub pipeline: PipelineCfg,
+    /// which A2A dispatch backends the search may price each candidate
+    /// at (`Fixed(AllToAll)` — the default — reproduces the pairwise
+    /// ranking bit-for-bit; `Auto` searches the backend jointly with
+    /// the strategy)
+    pub backend: BackendPolicy,
 }
 
 impl Analyzer<CollectiveCost> {
@@ -90,6 +101,7 @@ impl Analyzer<CollectiveCost> {
             cost: CollectiveCost::new(cluster),
             load: ExpertLoadProfile::uniform(model.n_experts),
             pipeline: PipelineCfg::Off,
+            backend: BackendPolicy::default(),
         }
     }
 }
@@ -110,6 +122,7 @@ impl<C: CommCost> Analyzer<C> {
             cost,
             load: self.load,
             pipeline: self.pipeline,
+            backend: self.backend,
         }
     }
 
@@ -118,6 +131,15 @@ impl<C: CommCost> Analyzer<C> {
     /// chunk count (`Auto`) or a forced one (`Fixed`).
     pub fn with_pipeline(mut self, pipeline: PipelineCfg) -> Self {
         self.pipeline = pipeline;
+        self
+    }
+
+    /// Constrain (or open up) the dispatch-backend dimension of the
+    /// search: `Fixed(b)` prices every candidate at backend `b`, `Auto`
+    /// picks the per-strategy argmin over [`DispatchBackend::ALL`] under
+    /// the same key the entry point ranks by.
+    pub fn with_backend(mut self, backend: BackendPolicy) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -139,9 +161,12 @@ impl<C: CommCost> Analyzer<C> {
         self.with_load(load)
     }
 
-    /// Evaluate one strategy (memory + indicators).
+    /// Evaluate one strategy (memory + indicators).  Under a `Fixed`
+    /// backend policy the indicators are priced at that backend; under
+    /// `Auto` the report carries whichever backend minimizes the mean
+    /// end-to-end request latency for this workload shape.
     pub fn report(&self, s: &ParallelStrategy, wl: &Workload) -> StrategyReport {
-        let lm = LatencyModel::with_cost(&self.model, &self.cluster, self.cost.clone())
+        let mut lm = LatencyModel::with_cost(&self.model, &self.cluster, self.cost.clone())
             .with_load(self.load.clone())
             .with_pipeline(self.pipeline);
         let memory = check_memory(
@@ -151,38 +176,82 @@ impl<C: CommCost> Analyzer<C> {
             self.serving.max_batch,
             self.serving.max_seq,
         );
-        let indicators = evaluate(&lm, s, &self.serving, wl, self.mode);
-        StrategyReport { strategy: *s, indicators, memory }
+        let mut best: Option<StrategyReport> = None;
+        for backend in self.backend.candidates() {
+            lm.set_backend(backend);
+            let indicators = evaluate(&lm, s, &self.serving, wl, self.mode);
+            let report = StrategyReport { strategy: *s, backend, indicators, memory };
+            let better = match &best {
+                None => true,
+                Some(cur) => {
+                    request_latency(wl, &report.indicators)
+                        < request_latency(wl, &cur.indicators)
+                }
+            };
+            if better {
+                best = Some(report);
+            }
+        }
+        best.expect("BackendPolicy::candidates is never empty")
     }
 
     /// The candidate pipeline every search entry point shares: enumerate
     /// the grammar, keep full-budget shapes, attach the memory check,
-    /// price with `indicators`, drop infeasible/degenerate candidates,
-    /// and sort ascending by `key` (`f64::total_cmp` — a NaN indicator
-    /// ranks last instead of panicking the whole search).
+    /// price each (strategy, backend) pair the policy allows with
+    /// `indicators`, keep the per-strategy backend argmin by `key`
+    /// (strict `<`, so ties resolve to the first candidate — `AllToAll`
+    /// — and `Fixed(AllToAll)` reproduces the pairwise ranking
+    /// bit-for-bit), drop infeasible/degenerate candidates, and sort
+    /// ascending by `key` (`f64::total_cmp` — a NaN indicator ranks
+    /// last instead of panicking the whole search).
     fn rank_by(
         &self,
         indicators: impl Fn(&LatencyModel<C>, &ParallelStrategy) -> Indicators,
         key: impl Fn(&StrategyReport) -> f64,
     ) -> Vec<StrategyReport> {
-        let lm = LatencyModel::with_cost(&self.model, &self.cluster, self.cost.clone())
+        let mut lm = LatencyModel::with_cost(&self.model, &self.cluster, self.cost.clone())
             .with_load(self.load.clone())
             .with_pipeline(self.pipeline);
-        let mut reports: Vec<StrategyReport> = enumerate_strategies(&self.cluster)
+        let candidates = self.backend.candidates();
+        let mut reports: Vec<StrategyReport> = Vec::new();
+        for s in enumerate_strategies(&self.cluster)
             .iter()
             .filter(|s| s.total_devices() == self.cluster.total_devices())
-            .map(|s| {
-                let memory = check_memory(
-                    &self.model,
-                    &self.cluster,
-                    s,
-                    self.serving.max_batch,
-                    self.serving.max_seq,
-                );
-                StrategyReport { strategy: *s, indicators: indicators(&lm, s), memory }
-            })
-            .filter(|r| r.memory.feasible() && r.indicators.ttft.is_finite())
-            .collect();
+        {
+            let memory = check_memory(
+                &self.model,
+                &self.cluster,
+                s,
+                self.serving.max_batch,
+                self.serving.max_seq,
+            );
+            if !memory.feasible() {
+                continue;
+            }
+            let mut best: Option<StrategyReport> = None;
+            for &backend in &candidates {
+                lm.set_backend(backend);
+                let report = StrategyReport {
+                    strategy: *s,
+                    backend,
+                    indicators: indicators(&lm, s),
+                    memory,
+                };
+                if !report.indicators.ttft.is_finite() {
+                    continue;
+                }
+                let better = match &best {
+                    None => true,
+                    Some(cur) => key(&report) < key(cur),
+                };
+                if better {
+                    best = Some(report);
+                }
+            }
+            if let Some(r) = best {
+                reports.push(r);
+            }
+        }
         reports.sort_by(|a, b| key(a).total_cmp(&key(b)));
         reports
     }
@@ -466,6 +535,95 @@ mod tests {
         let best = a.best_sched(&wl, SchedPolicy::Fcfs).expect("feasible");
         let isolated = a.report(&best.strategy, &wl);
         assert!(best.indicators.itl >= isolated.indicators.itl * (1.0 - 1e-12));
+    }
+
+    #[test]
+    fn default_policy_prices_every_report_at_the_pairwise_backend() {
+        // the default Fixed(AllToAll) policy has exactly one candidate,
+        // so every report carries the pinned backend and report() agrees
+        // with the ranked entry for the same strategy bit-for-bit
+        let a = setup(ClusterConfig::ascend910b());
+        let wl = Workload::sharegpt(4.0);
+        let ranked = a.rank(&wl, Objective::MaxThroughput);
+        assert!(!ranked.is_empty());
+        for r in &ranked {
+            assert_eq!(r.backend, DispatchBackend::AllToAll);
+            let again = a.report(&r.strategy, &wl);
+            assert_eq!(again.backend, DispatchBackend::AllToAll);
+            assert_eq!(again.indicators.throughput, r.indicators.throughput);
+            assert_eq!(again.indicators.ttft, r.indicators.ttft);
+        }
+    }
+
+    #[test]
+    fn auto_backend_never_degrades_and_strictly_improves_somewhere() {
+        // Auto takes the per-strategy argmin over a candidate set that
+        // contains AllToAll, so no strategy's key can degrade — and on
+        // this grid at least one candidate must strictly prefer a fused
+        // or masked backend (the whole point of searching the dimension)
+        let a = setup(ClusterConfig::h20());
+        let wl = Workload::sharegpt(4.0);
+        let plain = a.clone().rank(&wl, Objective::MaxThroughput);
+        let auto = a.with_backend(BackendPolicy::Auto);
+        let opened = auto.rank(&wl, Objective::MaxThroughput);
+        // opening the backend dimension can only widen the feasible set
+        // (a strategy saturated under A2A may become finite under a
+        // cheaper exchange), never shrink it
+        assert!(opened.len() >= plain.len());
+        let mut improved = false;
+        for p in &plain {
+            let q = opened
+                .iter()
+                .find(|q| q.strategy == p.strategy)
+                .expect("every A2A-feasible strategy stays feasible under Auto");
+            assert!(
+                q.indicators.throughput >= p.indicators.throughput,
+                "{}: Auto throughput {} < pinned {}",
+                p.strategy,
+                q.indicators.throughput,
+                p.indicators.throughput
+            );
+            if q.backend != DispatchBackend::AllToAll
+                && q.indicators.throughput > p.indicators.throughput
+            {
+                improved = true;
+            }
+        }
+        assert!(
+            improved,
+            "Auto never strictly improved any candidate on the H20 grid"
+        );
+    }
+
+    #[test]
+    fn auto_backend_diverges_across_phases_on_some_grid() {
+        // prefill pools move whole prompts (wire-bound: the
+        // high-throughput trade wins) while decode pools move one token
+        // per step (launch-bound: low-latency wins) — on at least one
+        // paper grid the per-phase searches must disagree on the backend
+        let wl = Workload::sharegpt(4.0);
+        let diverged = [ClusterConfig::h20(), ClusterConfig::ascend910b()]
+            .into_iter()
+            .any(|cluster| {
+                setup(cluster)
+                    .with_backend(BackendPolicy::Auto)
+                    .best_disagg(&wl)
+                    .map(|pair| pair.prefill.backend != pair.decode.backend)
+                    .unwrap_or(false)
+            });
+        assert!(diverged, "no grid split the backend across P/D phases");
+    }
+
+    #[test]
+    fn fixed_non_default_backend_is_honored_everywhere() {
+        let a = setup(ClusterConfig::ascend910b())
+            .with_backend(BackendPolicy::Fixed(DispatchBackend::FusedLowLatency));
+        let wl = Workload::sharegpt(4.0);
+        for r in a.rank(&wl, Objective::MinItl) {
+            assert_eq!(r.backend, DispatchBackend::FusedLowLatency);
+        }
+        let s = a.best(&wl, Objective::MinItl).unwrap().strategy;
+        assert_eq!(a.report(&s, &wl).backend, DispatchBackend::FusedLowLatency);
     }
 
     #[test]

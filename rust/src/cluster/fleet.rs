@@ -21,11 +21,35 @@ use crate::analyzer::latency::CommMode;
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::obs::{self, FleetTelemetry, ObsConfig, ReplicaSnapshot, SpanKind, TelemetryBuilder};
+use crate::pipeline::PipelineCfg;
 use crate::serving::metrics::ServingMetrics;
 use crate::serving::scheduler::SchedPolicy;
-use crate::timing::kv_handoff_secs;
+use crate::timing::{kv_handoff_secs, DispatchBackend};
 use crate::util::stats::Series;
 use crate::workload::Request;
+
+/// Per-replica engine tuning applied uniformly across a fleet: gate
+/// skew for the routers, chunked micro-batch pipelining, and the A2A
+/// dispatch backend each replica prices its expert exchange through.
+/// The default (skew 0, pipelining off, `AllToAll`) reproduces the
+/// historical fleet samples bit-for-bit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaTuning {
+    /// Zipf gate-skew exponent; > 0 switches replicas to the
+    /// load-aware constructor (measured λ re-pricing each iteration)
+    pub skew: f64,
+    pub pipeline: PipelineCfg,
+    pub backend: DispatchBackend,
+}
+
+/// Per-phase dispatch backends of a disaggregated fleet — the two pools
+/// may run different exchange algorithms (the planner's `Auto` policy
+/// picks them independently).  Defaults keep both pools on `AllToAll`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseBackends {
+    pub prefill: DispatchBackend,
+    pub decode: DispatchBackend,
+}
 
 /// Phase-disaggregated fleet topology: a prefill pool and a decode pool
 /// of replicas (each on a `replica_cluster`-shaped pod) with the KV
@@ -36,6 +60,8 @@ pub struct DisaggConfig {
     pub decode_replicas: usize,
     pub prefill_strategy: ParallelStrategy,
     pub decode_strategy: ParallelStrategy,
+    /// per-pool dispatch backends (overrides `tuning.backend`)
+    pub backends: PhaseBackends,
 }
 
 /// One fleet deployment: `replicas` copies of a pod running `strategy`,
@@ -68,6 +94,9 @@ pub struct FleetConfig {
     /// `controller.max_replicas` beyond the configured fleet start
     /// parked as scale-up spares.
     pub controller: Option<ControllerConfig>,
+    /// per-replica engine tuning (skew, pipelining, dispatch backend);
+    /// the default is the historical engine, bit-for-bit
+    pub tuning: ReplicaTuning,
 }
 
 /// Result of one fleet run.
@@ -132,17 +161,26 @@ fn build_fleet(
     trace: &[Request],
     seed: u64,
 ) -> FleetSetup {
-    let mk_replica = |i: usize, strategy: &ParallelStrategy| {
-        let r = ReplicaSim::new(
-            model,
-            replica_cluster,
-            strategy,
-            serving,
-            cfg.mode,
-            seed.wrapping_add(0x9e37_79b9 * (i as u64 + 1)),
-            i,
-        )
-        .with_slo_deadline(cfg.slo.map(|s| s.ttft_deadline));
+    let mk_replica = |i: usize, strategy: &ParallelStrategy, backend: DispatchBackend| {
+        let rep_seed = seed.wrapping_add(0x9e37_79b9 * (i as u64 + 1));
+        let base = if cfg.tuning.skew > 0.0 {
+            ReplicaSim::with_skew(
+                model,
+                replica_cluster,
+                strategy,
+                serving,
+                cfg.mode,
+                rep_seed,
+                i,
+                cfg.tuning.skew,
+            )
+        } else {
+            ReplicaSim::new(model, replica_cluster, strategy, serving, cfg.mode, rep_seed, i)
+        };
+        let r = base
+            .with_pipeline(cfg.tuning.pipeline)
+            .with_backend(backend)
+            .with_slo_deadline(cfg.slo.map(|s| s.ttft_deadline));
         if cfg.obs.trace {
             r.with_tracing()
         } else {
@@ -155,7 +193,9 @@ fn build_fleet(
                 assert!(cfg.replicas > 0, "fleet needs at least one replica");
                 (
                     (0..cfg.replicas)
-                        .map(|i| mk_replica(i, &cfg.strategy).with_sched(cfg.sched))
+                        .map(|i| {
+                            mk_replica(i, &cfg.strategy, cfg.tuning.backend).with_sched(cfg.sched)
+                        })
                         .collect(),
                     cfg.strategy,
                 )
@@ -172,11 +212,17 @@ fn build_fleet(
                 );
                 let mut v = Vec::with_capacity(d.prefill_replicas + d.decode_replicas);
                 for i in 0..d.prefill_replicas {
-                    v.push(mk_replica(i, &d.prefill_strategy).with_role(Role::Prefill));
+                    v.push(
+                        mk_replica(i, &d.prefill_strategy, d.backends.prefill)
+                            .with_role(Role::Prefill),
+                    );
                 }
                 for j in 0..d.decode_replicas {
                     let i = d.prefill_replicas + j;
-                    v.push(mk_replica(i, &d.decode_strategy).with_role(Role::Decode));
+                    v.push(
+                        mk_replica(i, &d.decode_strategy, d.backends.decode)
+                            .with_role(Role::Decode),
+                    );
                 }
                 (v, d.prefill_strategy)
             }
@@ -189,8 +235,10 @@ fn build_fleet(
     if let Some(ctl) = &cfg.controller {
         for k in replicas.len()..ctl.max_replicas {
             let spare = match &cfg.disagg {
-                None => mk_replica(k, &cfg.strategy).with_sched(cfg.sched),
-                Some(d) => mk_replica(k, &d.decode_strategy).with_role(Role::Decode),
+                None => mk_replica(k, &cfg.strategy, cfg.tuning.backend).with_sched(cfg.sched),
+                Some(d) => {
+                    mk_replica(k, &d.decode_strategy, d.backends.decode).with_role(Role::Decode)
+                }
             };
             replicas.push(spare.parked());
         }
@@ -511,6 +559,7 @@ mod tests {
             sched: SchedPolicy::Fcfs,
             obs: ObsConfig::default(),
             controller: None,
+            tuning: ReplicaTuning::default(),
         }
     }
 
@@ -582,10 +631,12 @@ mod tests {
                 decode_replicas: 1,
                 prefill_strategy: ParallelStrategy::mixserve(4, 8),
                 decode_strategy: ParallelStrategy::pure_ep(4, 8),
+                backends: PhaseBackends::default(),
             }),
             sched: SchedPolicy::Fcfs,
             obs: ObsConfig::default(),
             controller: None,
+            tuning: ReplicaTuning::default(),
         };
         let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 11);
         assert_eq!(rep.metrics.completed, n, "every request finishes its decode");

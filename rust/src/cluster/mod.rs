@@ -58,6 +58,7 @@ pub use controller::{
 pub use dispatch::{Dispatcher, RoutingPolicy};
 pub use fleet::{
     run_fleet_rate, simulate_fleet, simulate_fleet_legacy, DisaggConfig, FleetConfig, FleetReport,
+    PhaseBackends, ReplicaTuning,
 };
 pub use planner::{
     carve_replicas, ArchPlan, DisaggPlan, FleetPlan, FleetPlanner, SchedPlan, DEFAULT_QUANTA,

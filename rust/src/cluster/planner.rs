@@ -26,7 +26,9 @@ use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::pipeline::PipelineCfg;
 use crate::serving::scheduler::SchedPolicy;
-use crate::timing::{kv_handoff_secs, CommCost, ExpertLoadProfile};
+use crate::timing::{
+    kv_handoff_secs, BackendPolicy, CommCost, DispatchBackend, ExpertLoadProfile,
+};
 
 /// Default scheduler-quantum candidates of the three-architecture search
 /// (`FleetPlanner::plan_arch`): token budgets from fine-grained
@@ -40,6 +42,8 @@ pub struct FleetPlan {
     /// the pod each replica runs on (an even carve of the budget)
     pub replica_cluster: ClusterConfig,
     pub strategy: ParallelStrategy,
+    /// the dispatch backend the pod's winning strategy was priced at
+    pub backend: DispatchBackend,
     /// per-replica indicators at rate/replicas
     pub indicators: Indicators,
     /// fleet-level tokens/s: replicas × per-replica Θ
@@ -55,11 +59,16 @@ pub struct DisaggPlan {
     pub prefill_replicas: usize,
     pub prefill_cluster: ClusterConfig,
     pub prefill_strategy: ParallelStrategy,
+    /// the dispatch backend the prefill pool was priced at (phases pick
+    /// independently under [`BackendPolicy::Auto`])
+    pub prefill_backend: DispatchBackend,
     /// phase indicators of one prefill replica at rate/prefill_replicas
     pub prefill_indicators: Indicators,
     pub decode_replicas: usize,
     pub decode_cluster: ClusterConfig,
     pub decode_strategy: ParallelStrategy,
+    /// the dispatch backend the decode pool was priced at
+    pub decode_backend: DispatchBackend,
     /// phase indicators of one decode replica at rate/decode_replicas
     pub decode_indicators: Indicators,
     /// per-request KV handoff between the pools, seconds
@@ -86,6 +95,8 @@ pub struct SchedPlan {
     pub replica_cluster: ClusterConfig,
     pub strategy: ParallelStrategy,
     pub sched: SchedPolicy,
+    /// the dispatch backend the pod's winning strategy was priced at
+    pub backend: DispatchBackend,
     /// per-replica composition-aware indicators at rate/replicas
     pub indicators: Indicators,
     /// fleet-level tokens/s: replicas × per-replica Θ
@@ -179,6 +190,11 @@ pub struct FleetPlanner<C: CommCost = CollectiveCost> {
     pub skew: f64,
     /// chunked micro-batch pipelining priced into every pod's search
     pub pipeline: PipelineCfg,
+    /// dispatch-backend policy handed to every per-pod analyzer
+    /// (`Fixed(AllToAll)` — the default — reproduces the pairwise
+    /// planner bit-for-bit; `Auto` searches the backend per pod, and
+    /// per phase for disaggregated pools)
+    pub backend: BackendPolicy,
     /// request-shape override `(len_in, len_out)` for every search;
     /// None = the ShareGPT averages (the historical behavior)
     pub shape: Option<(usize, usize)>,
@@ -194,6 +210,7 @@ impl FleetPlanner<CollectiveCost> {
             cost: CollectiveCost::new(budget),
             skew: 0.0,
             pipeline: PipelineCfg::Off,
+            backend: BackendPolicy::default(),
             shape: None,
         }
     }
@@ -214,6 +231,14 @@ impl<C: CommCost> FleetPlanner<C> {
     /// Re-rank the joint search under chunked micro-batch pipelining.
     pub fn with_pipeline(mut self, pipeline: PipelineCfg) -> Self {
         self.pipeline = pipeline;
+        self
+    }
+
+    /// Re-rank the joint search under a dispatch-backend policy
+    /// (`Auto` makes the communication algorithm a searched dimension
+    /// of every pod, independently per phase for disaggregated pools).
+    pub fn with_backend(mut self, backend: BackendPolicy) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -243,6 +268,7 @@ impl<C: CommCost> FleetPlanner<C> {
             cost,
             skew: self.skew,
             pipeline: self.pipeline,
+            backend: self.backend,
             shape: self.shape,
         }
     }
@@ -268,13 +294,15 @@ impl<C: CommCost> FleetPlanner<C> {
                     .with_cost(self.cost.rebind(&pod))
                     .with_mode(self.mode)
                     .with_load(load.clone())
-                    .with_pipeline(self.pipeline);
+                    .with_pipeline(self.pipeline)
+                    .with_backend(self.backend);
                 let wl = self.workload(rate / r as f64);
                 if let Some(best) = analyzer.best(&wl, Objective::MaxThroughput) {
                     out.push(FleetPlan {
                         replicas: r,
                         replica_cluster: pod,
                         strategy: best.strategy,
+                        backend: best.backend,
                         indicators: best.indicators,
                         total_throughput: best.indicators.throughput * r as f64,
                     });
@@ -346,10 +374,12 @@ impl<C: CommCost> FleetPlanner<C> {
                         prefill_replicas: *r_p,
                         prefill_cluster: p_pod.clone(),
                         prefill_strategy: p_best.strategy,
+                        prefill_backend: p_best.backend,
                         prefill_indicators: p_best.indicators,
                         decode_replicas: *r_d,
                         decode_cluster: d_pod.clone(),
                         decode_strategy: d_best.strategy,
+                        decode_backend: d_best.backend,
                         decode_indicators: d_best.indicators,
                         handoff_secs,
                         ttft,
@@ -396,7 +426,8 @@ impl<C: CommCost> FleetPlanner<C> {
                     .with_cost(self.cost.rebind(&pod))
                     .with_mode(self.mode)
                     .with_load(load.clone())
-                    .with_pipeline(self.pipeline);
+                    .with_pipeline(self.pipeline)
+                    .with_backend(self.backend);
                 let wl = self.workload(rate / r as f64);
                 if let Some(best) = analyzer.best_sched(&wl, sched) {
                     out.push(SchedPlan {
@@ -404,6 +435,7 @@ impl<C: CommCost> FleetPlanner<C> {
                         replica_cluster: pod,
                         strategy: best.strategy,
                         sched,
+                        backend: best.backend,
                         request_latency: request_latency(&wl, &best.indicators),
                         total_throughput: best.indicators.throughput * r as f64,
                         indicators: best.indicators,
@@ -451,32 +483,38 @@ impl<C: CommCost> FleetPlanner<C> {
         let plans = self.plan_arch(rate, quanta);
         let mut out = format!(
             "architecture plan — {} under a {}-device budget ({}) @ {rate} req/s\n\
-             {:<24} {:<36} {:>10} {:>9} {:>12} {:>10}\n",
+             {:<24} {:<36} {:<16} {:>10} {:>9} {:>12} {:>10}\n",
             self.model.name,
             self.budget.total_devices(),
             self.budget.name,
             "architecture",
             "strategy",
+            "backend",
             "TTFT(ms)",
             "ITL(ms)",
             "fleet tok/s",
             "req lat(s)"
         );
         for p in plans.iter().take(12) {
-            let (strategy, ttft, itl) = match p {
-                ArchPlan::Colocated(sp) | ArchPlan::Chunked(sp) => {
-                    (sp.strategy.to_string(), sp.indicators.ttft, sp.indicators.itl)
-                }
+            let (strategy, backend, ttft, itl) = match p {
+                ArchPlan::Colocated(sp) | ArchPlan::Chunked(sp) => (
+                    sp.strategy.to_string(),
+                    sp.backend.label().to_string(),
+                    sp.indicators.ttft,
+                    sp.indicators.itl,
+                ),
                 ArchPlan::Disagg(dp) => (
                     format!("{} | {}", dp.prefill_strategy, dp.decode_strategy),
+                    format!("{}|{}", dp.prefill_backend.label(), dp.decode_backend.label()),
                     dp.ttft,
                     dp.itl,
                 ),
             };
             out.push_str(&format!(
-                "{:<24} {:<36} {:>10.1} {:>9.2} {:>12.1} {:>10.2}\n",
+                "{:<24} {:<36} {:<16} {:>10.1} {:>9.2} {:>12.1} {:>10.2}\n",
                 p.label(),
                 strategy,
+                backend,
                 ttft * 1e3,
                 itl * 1e3,
                 p.total_throughput(),
@@ -508,7 +546,8 @@ impl<C: CommCost> FleetPlanner<C> {
                     .with_cost(self.cost.rebind(&pod))
                     .with_mode(self.mode)
                     .with_load(load.clone())
-                    .with_pipeline(self.pipeline);
+                    .with_pipeline(self.pipeline)
+                    .with_backend(self.backend);
                 let wl = Workload { rate: rate / r as f64, ..*base };
                 if let Some(best) = analyzer.best_phase(&wl, phase) {
                     out.push((r, pod, best));
@@ -540,13 +579,18 @@ impl<C: CommCost> FleetPlanner<C> {
             "req lat(s)"
         );
         for p in plans.iter().take(8) {
-            let pool = |r: usize, c: &ClusterConfig, s: &ParallelStrategy| {
-                format!("{r}x{}x{} {s}", c.n_nodes, c.gpus_per_node)
+            let pool = |r: usize, c: &ClusterConfig, s: &ParallelStrategy, b: DispatchBackend| {
+                format!("{r}x{}x{} {s} [{}]", c.n_nodes, c.gpus_per_node, b.label())
             };
             out.push_str(&format!(
                 "{:<26} {:<26} {:>10.1} {:>9.2} {:>11.2} {:>12.1} {:>10.2}\n",
-                pool(p.prefill_replicas, &p.prefill_cluster, &p.prefill_strategy),
-                pool(p.decode_replicas, &p.decode_cluster, &p.decode_strategy),
+                pool(
+                    p.prefill_replicas,
+                    &p.prefill_cluster,
+                    &p.prefill_strategy,
+                    p.prefill_backend,
+                ),
+                pool(p.decode_replicas, &p.decode_cluster, &p.decode_strategy, p.decode_backend),
                 p.ttft * 1e3,
                 p.itl * 1e3,
                 p.handoff_secs * 1e3,
@@ -581,13 +625,14 @@ impl<C: CommCost> FleetPlanner<C> {
         let plans = self.plan(rate);
         let mut out = format!(
             "fleet plan — {} under a {}-device budget ({}) @ {rate} req/s\n\
-             {:<4} {:<14} {:<36} {:>10} {:>9} {:>12}\n",
+             {:<4} {:<14} {:<36} {:<9} {:>10} {:>9} {:>12}\n",
             self.model.name,
             self.budget.total_devices(),
             self.budget.name,
             "R",
             "pod",
             "per-replica strategy",
+            "backend",
             "TTFT(ms)",
             "ITL(ms)",
             "fleet tok/s"
@@ -595,10 +640,11 @@ impl<C: CommCost> FleetPlanner<C> {
         for p in &plans {
             let pod = format!("{}x{}", p.replica_cluster.n_nodes, p.replica_cluster.gpus_per_node);
             out.push_str(&format!(
-                "{:<4} {:<14} {:<36} {:>10.1} {:>9.2} {:>12.1}\n",
+                "{:<4} {:<14} {:<36} {:<9} {:>10.1} {:>9.2} {:>12.1}\n",
                 p.replicas,
                 pod,
                 p.strategy,
+                p.backend.label(),
                 p.indicators.ttft * 1e3,
                 p.indicators.itl * 1e3,
                 p.total_throughput
@@ -846,6 +892,37 @@ mod tests {
             heavy[0].request_latency,
             sharegpt[0].request_latency
         );
+    }
+
+    #[test]
+    fn backend_aware_planner_never_promises_less_throughput() {
+        // opening the backend dimension takes a per-pod argmin over a
+        // superset that contains the pinned pairwise shape
+        let pinned = planner(MoEModelConfig::qwen3_235b()).plan(8.0);
+        let auto = planner(MoEModelConfig::qwen3_235b())
+            .with_backend(BackendPolicy::Auto)
+            .plan(8.0);
+        let best_pinned = pinned.first().expect("feasible");
+        let best_auto = auto.first().expect("feasible");
+        assert_eq!(best_pinned.backend, DispatchBackend::AllToAll);
+        assert!(
+            best_auto.total_throughput >= best_pinned.total_throughput,
+            "backend-aware optimum {} below pinned {}",
+            best_auto.total_throughput,
+            best_pinned.total_throughput
+        );
+    }
+
+    #[test]
+    fn renderers_surface_the_backend_choice() {
+        let p = planner(MoEModelConfig::qwen3_235b()).with_backend(BackendPolicy::Auto);
+        let fleet = p.render(8.0);
+        assert!(fleet.contains("backend"));
+        let arch = p.render_arch(8.0, DEFAULT_QUANTA);
+        assert!(arch.contains("backend"));
+        let disagg = p.render_disagg(8.0);
+        // every listed pool prints its priced backend label
+        assert!(disagg.contains('['), "{disagg}");
     }
 
     #[test]

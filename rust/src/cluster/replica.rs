@@ -27,7 +27,7 @@ use crate::serving::scheduler::{
     DisaggPrefill, FcfsColocated, IterPlan, PrefillChunk, PromptDisposition, SchedPolicy,
     Scheduler,
 };
-use crate::timing::{CommCost, ExpertLoadProfile};
+use crate::timing::{CommCost, DispatchBackend, ExpertLoadProfile};
 use crate::workload::Request;
 
 /// Degree of gate skew used in the evaluation (mild, ShareGPT-like).
@@ -461,6 +461,14 @@ impl<C: CommCost> ReplicaSim<C> {
         self
     }
 
+    /// Price every iteration's expert exchange through `backend`
+    /// (builder style; [`DispatchBackend::AllToAll`] — the default —
+    /// keeps the historical timing exactly).
+    pub fn with_backend(mut self, backend: DispatchBackend) -> Self {
+        self.lm.set_backend(backend);
+        self
+    }
+
     pub fn strategy(&self) -> &ParallelStrategy {
         &self.strategy
     }
@@ -739,6 +747,36 @@ mod tests {
             piped <= additive * (1.0 + 1e-12),
             "pipelining slowed the drain: {piped} !<= {additive}"
         );
+    }
+
+    #[test]
+    fn backend_choice_moves_the_drain_and_alltoall_is_identity() {
+        let drain = |backend: DispatchBackend| {
+            let mut r = replica(None).with_backend(backend);
+            for id in 0..16 {
+                r.submit(Request { id, arrival: 0.0, len_in: 1024, len_out: 32 });
+            }
+            let mut now = 0.0;
+            while let Some(t) = r.step(now) {
+                now = t;
+            }
+            now
+        };
+        let plain = {
+            let mut r = replica(None);
+            for id in 0..16 {
+                r.submit(Request { id, arrival: 0.0, len_in: 1024, len_out: 32 });
+            }
+            let mut now = 0.0;
+            while let Some(t) = r.step(now) {
+                now = t;
+            }
+            now
+        };
+        // the default backend is a no-op on the iteration pricing
+        assert_eq!(drain(DispatchBackend::AllToAll), plain);
+        // a fused backend must actually reshape the exchange cost
+        assert_ne!(drain(DispatchBackend::FusedLowLatency), plain);
     }
 
     #[test]

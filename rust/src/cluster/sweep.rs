@@ -75,6 +75,7 @@ pub fn policy_sweep(
                 sched: SchedPolicy::Fcfs,
                 obs: crate::obs::ObsConfig::default(),
                 controller: None,
+                tuning: Default::default(),
             };
             let rep = simulate_fleet(model, replica_cluster, &cfg, &serving, &trace, seed);
             let t = rep.metrics.ttft_summary();

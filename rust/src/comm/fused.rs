@@ -27,8 +27,10 @@ use super::primitives::combine_reference;
 use super::world::{RankWorld, Tensor2};
 use crate::gantt::Trace;
 use crate::pipeline::chunked_pipeline;
-use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir, Schedule, Step};
-use crate::timing::{CommCost, CommDomain};
+use crate::timing::schedule::{
+    backend_combine_ir, backend_dispatch_ir, rs_combine_ir, EpShape, Schedule, Step,
+};
+use crate::timing::{CommCost, CommDomain, DispatchBackend};
 
 /// Result of a fused collective: per-node output tensors plus the timed
 /// trace (async schedule) and the equivalent synchronous makespan.
@@ -69,6 +71,21 @@ pub fn fused_rs_combine<C: CommCost>(
     contrib: &[Vec<Tensor2>],
     cost: &C,
 ) -> FusedResult {
+    fused_rs_combine_on(world, contrib, cost, DispatchBackend::AllToAll)
+}
+
+/// [`fused_rs_combine`] with the *time plane* shaped by `backend`.  The
+/// data plane is backend-invariant — every algorithm delivers the same
+/// combined tensors, verified against the unfused reference — so only
+/// the schedule (launch rounds, wire volume, collective shape) changes.
+/// `DispatchBackend::AllToAll` reproduces [`fused_rs_combine`]'s
+/// Algorithm 1 rounds bit-for-bit.
+pub fn fused_rs_combine_on<C: CommCost>(
+    world: &RankWorld,
+    contrib: &[Vec<Tensor2>],
+    cost: &C,
+    backend: DispatchBackend,
+) -> FusedResult {
     let (n, m) = (world.n_nodes, world.m_per_node);
     let h = contrib[0][0].cols;
     let t_total = contrib[0][0].rows;
@@ -106,7 +123,14 @@ pub fn fused_rs_combine<C: CommCost>(
     // inter lane, send_i gated on RS_i; final AG gated on the last send
     // (full-duplex pairwise: receives land at the senders' send end).
     let blk_bytes = (t_loc * h * 4) as f64;
-    let sched = rs_combine_ir(n, n, m, blk_bytes, blk_bytes, CommDomain::IntraNode);
+    let shape = EpShape {
+        nodes: n,
+        rounds: n,
+        tp: m,
+        tp_domain: CommDomain::IntraNode,
+        ep_domain: CommDomain::InterNode,
+    };
+    let sched = backend_combine_ir(backend, &shape, blk_bytes, blk_bytes);
     let trace = sched.play(cost).trace;
     let sync_time = sched.sync_time(cost);
     let pipelined_time = trace.makespan();
@@ -199,6 +223,19 @@ pub fn fused_ag_dispatch<C: CommCost>(
     route: &Route,
     cost: &C,
 ) -> FusedResult {
+    fused_ag_dispatch_on(world, tokens, route, cost, DispatchBackend::AllToAll)
+}
+
+/// [`fused_ag_dispatch`] with the *time plane* shaped by `backend` —
+/// the dispatch mirror of [`fused_rs_combine_on`]: same delivered
+/// tensors, backend-shaped schedule.
+pub fn fused_ag_dispatch_on<C: CommCost>(
+    world: &RankWorld,
+    tokens: &[Tensor2],
+    route: &Route,
+    cost: &C,
+    backend: DispatchBackend,
+) -> FusedResult {
     let (n, m) = (world.n_nodes, world.m_per_node);
     let h = tokens[0].cols;
     assert!(h % m == 0);
@@ -241,7 +278,14 @@ pub fn fused_ag_dispatch<C: CommCost>(
     let avg_rows = if n > 1 { total_remote as f64 / (n * (n - 1)) as f64 } else { 0.0 };
     let send_bytes = avg_rows * (w * 4) as f64 * m as f64; // all m lanes per round
     let ag_bytes = avg_rows * (h * 4) as f64;
-    let sched = ag_dispatch_ir(n, n, m, send_bytes, ag_bytes, CommDomain::IntraNode);
+    let shape = EpShape {
+        nodes: n,
+        rounds: n,
+        tp: m,
+        tp_domain: CommDomain::IntraNode,
+        ep_domain: CommDomain::InterNode,
+    };
+    let sched = backend_dispatch_ir(backend, &shape, send_bytes, ag_bytes);
     let trace = sched.play(cost).trace;
     let sync_time = sched.sync_time(cost);
     let pipelined_time = trace.makespan();
@@ -373,6 +417,54 @@ mod tests {
         let contrib = synth_contrib(&world, 4, 8, 3);
         let res = fused_rs_combine(&world, &contrib, &cost());
         assert_eq!(res.pipelined_time, res.async_time());
+    }
+
+    #[test]
+    fn backend_variants_share_the_data_plane() {
+        let world = RankWorld::new(4, 4);
+        let contrib = synth_contrib(&world, 8, 16, 7);
+        let c = cost();
+        let base = fused_rs_combine(&world, &contrib, &c);
+        for b in DispatchBackend::ALL {
+            let res = fused_rs_combine_on(&world, &contrib, &c, b);
+            for (g, w) in res.per_node.iter().zip(&base.per_node) {
+                assert!(g.approx_eq(w, 0.0), "{b}: data plane must be backend-invariant");
+            }
+            assert!(res.async_time() > 0.0 && res.sync_time > 0.0, "{b}");
+        }
+        // the default-backend variant IS the plain constructor
+        let a2a = fused_rs_combine_on(&world, &contrib, &c, DispatchBackend::AllToAll);
+        assert_eq!(a2a.async_time(), base.async_time());
+        assert_eq!(a2a.sync_time, base.sync_time);
+        assert_eq!(a2a.trace.spans.len(), base.trace.spans.len());
+    }
+
+    #[test]
+    fn backend_variants_reshape_the_dispatch_schedule() {
+        let world = RankWorld::new(3, 2);
+        let h = 8;
+        let tokens: Vec<Tensor2> = (0..3)
+            .map(|s| Tensor2::from_fn(5, h, |r, c| (s * 100 + r * 10 + c) as f32))
+            .collect();
+        let route: Route =
+            vec![vec![0, 1, 2, 1, 0], vec![2, 2, 0, 1, 1], vec![0, 0, 0, 2, 1]];
+        let c = cost();
+        let want = dispatch_reference(&tokens, &route);
+        let a2a = fused_ag_dispatch_on(&world, &tokens, &route, &c, DispatchBackend::AllToAll);
+        let ll =
+            fused_ag_dispatch_on(&world, &tokens, &route, &c, DispatchBackend::FusedLowLatency);
+        let agm =
+            fused_ag_dispatch_on(&world, &tokens, &route, &c, DispatchBackend::AllGatherMask);
+        for res in [&a2a, &ll, &agm] {
+            for (g, w) in res.per_node.iter().zip(&want) {
+                assert!(g.approx_eq(w, 0.0), "dispatch must stay exact");
+            }
+        }
+        // tiny payloads are α-bound: the single-launch kernels beat the
+        // pairwise rounds, and the schedules really are different shapes
+        assert!(ll.async_time() < a2a.async_time());
+        assert!(agm.async_time() < a2a.async_time());
+        assert!(ll.trace.spans.len() < a2a.trace.spans.len());
     }
 
     #[test]

@@ -48,6 +48,14 @@
 //!                 FCFS, chunked prefill per quantum, P/D disagg — under
 //!                 one device budget on one request-latency key
 //!
+//! Backend flags (analyze / simulate / plan / disagg):
+//!   --backend B   the MoE dispatch/combine algorithm: a2a (default,
+//!                 bit-for-bit the historical engine), agmask (AG+RS
+//!                 with local masking), fused-ll / fused-ht (the DeepEP
+//!                 latency/bandwidth trade), or auto — search the
+//!                 backend jointly with the parallel strategy (and
+//!                 independently per phase on disagg fleets)
+//!
 //! Overlap flags (analyze / simulate / plan):
 //!   --overlap     price chunked micro-batch pipelining of the MoE block,
 //!                 auto-searching the chunk count K per strategy (the
@@ -70,14 +78,15 @@ use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingC
 use mixserve::grammar::parse_strategy;
 use mixserve::obs;
 use mixserve::paperbench::{
-    attribution, chunked, disagg, elastic, fig10, fig11, fig12, fig3, fig4, scale, table1,
+    attribution, backends, chunked, disagg, elastic, fig10, fig11, fig12, fig3, fig4, scale,
+    table1,
 };
 use mixserve::pipeline::PipelineCfg;
 use mixserve::runtime::Engine;
 use mixserve::serving::engine::RealEngine;
 use mixserve::serving::scheduler::SchedPolicy;
-use mixserve::serving::sim::{run_rate_sched, run_rate_traced};
-use mixserve::timing::{CommCost, NetSimCost};
+use mixserve::serving::sim::{run_rate_traced, run_rate_tuned};
+use mixserve::timing::{BackendPolicy, CommCost, NetSimCost};
 use mixserve::util::cli::Args;
 use mixserve::workload::{ArrivalPattern, TraceGen};
 
@@ -101,13 +110,14 @@ fn model_by_name(name: &str) -> Result<MoEModelConfig> {
 
 fn render_analysis<C: CommCost>(analyzer: &Analyzer<C>, wl: &Workload, top: usize) {
     println!(
-        "{:<36} {:>10} {:>9} {:>10} {:>8} {:>10}",
-        "strategy", "TTFT(ms)", "ITL(ms)", "tok/s", "rho", "mem(GB)"
+        "{:<36} {:>9} {:>10} {:>9} {:>10} {:>8} {:>10}",
+        "strategy", "backend", "TTFT(ms)", "ITL(ms)", "tok/s", "rho", "mem(GB)"
     );
     for r in analyzer.rank(wl, Objective::MaxThroughput).iter().take(top) {
         println!(
-            "{:<36} {:>10.1} {:>9.2} {:>10.1} {:>8.2} {:>10.1}",
+            "{:<36} {:>9} {:>10.1} {:>9.2} {:>10.1} {:>8.2} {:>10.1}",
             r.strategy,
+            r.backend.label(),
             r.indicators.ttft * 1e3,
             r.indicators.itl * 1e3,
             r.indicators.throughput,
@@ -116,7 +126,7 @@ fn render_analysis<C: CommCost>(analyzer: &Analyzer<C>, wl: &Workload, top: usiz
         );
     }
     if let Some(best) = analyzer.best(wl, Objective::MaxThroughput) {
-        println!("\noptimal strategy: {}", best.strategy);
+        println!("\noptimal strategy: {} ({} dispatch)", best.strategy, best.backend.label());
     }
 }
 
@@ -148,6 +158,21 @@ fn sched_from_args(args: &Args) -> Result<SchedPolicy> {
     let quantum = args.usize_or("quantum", 256);
     SchedPolicy::parse(&name, quantum)
         .ok_or_else(|| anyhow::anyhow!("unknown scheduler {name:?} (fcfs | chunked)"))
+}
+
+/// `--backend B` → the dispatch-backend policy (absent = the pinned
+/// `a2a` default, `auto` = search jointly with the strategy).  An
+/// unknown backend name is an error, not a silent fallback.
+fn backend_from_args(args: &Args) -> Result<BackendPolicy> {
+    BackendPolicy::from_flag(args.get("backend")).map_err(|e| anyhow::anyhow!(e))
+}
+
+fn backend_note(policy: BackendPolicy) -> String {
+    if policy.is_pinned_default() {
+        String::new()
+    } else {
+        format!(", {policy} dispatch")
+    }
 }
 
 /// Render, validate, and write a Chrome-trace export.  The document is
@@ -225,6 +250,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
             sched: SchedPolicy::Fcfs,
             obs: ObsConfig::default(),
             controller: None,
+            tuning: Default::default(),
         };
         let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
         export_fleet_trace(&path, &model, &pod, &cfg, &serving, &trace, seed)?;
@@ -239,18 +265,22 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let top = args.usize_or("top", 10);
     let skew = args.f64_or("skew", 0.0);
     let pipeline = pipeline_from_args(args)?;
+    let backend = backend_from_args(args)?;
     let analyzer = Analyzer::new(&model, &cluster, &ServingConfig::paper_eval(rate))
         .with_load_skew(skew)
-        .with_pipeline(pipeline);
+        .with_pipeline(pipeline)
+        .with_backend(backend);
     let wl = Workload::sharegpt(rate);
-    let backend = args.get_or("cost", "analytic");
+    let cost_backend = args.get_or("cost", "analytic");
     println!(
-        "MixServe automatic analyzer — {} on {} @ {rate} req/s (skew {skew}, {backend} cost{})",
+        "MixServe automatic analyzer — {} on {} @ {rate} req/s (skew {skew}, {cost_backend} \
+         cost{}{})",
         model.name,
         cluster.name,
-        pipeline_note(pipeline)
+        pipeline_note(pipeline),
+        backend_note(backend)
     );
-    match backend.as_str() {
+    match cost_backend.as_str() {
         "analytic" => render_analysis(&analyzer, &wl, top),
         "netsim" => {
             let contended = analyzer.with_cost(NetSimCost::new(&cluster));
@@ -290,26 +320,31 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let skew = args.f64_or("skew", 0.0);
     let pipeline = pipeline_from_args(args)?;
     let sched = sched_from_args(args)?;
+    let backend = backend_from_args(args)?;
     if args.has_flag("disagg") {
-        // the fleet replicas behind the sweep price uniform λ and the
-        // additive MoE block: refuse to silently drop the other knobs
-        if skew > 0.0 || !pipeline.is_off() || sched != SchedPolicy::Fcfs {
-            bail!(
-                "--disagg does not compose with --skew/--overlap/--chunks/--sched yet \
-                 (the disagg fleet prices uniform λ, additive MoE, role schedulers; \
-                 see ROADMAP)"
-            );
-        }
         if args.get("trace").is_some() {
             bail!("--trace with --disagg lives on the fleet: use `fleet --disagg --trace PATH`");
         }
-        // colocated vs phase-disaggregated on 2 pods, same trace
-        let rows = disagg::sweep(&model, &cluster, &[rate], duration, 7);
+        // colocated vs phase-disaggregated on 2 pods, same trace — the
+        // engine-tuning knobs (scheduler, skew, pipelining, backend)
+        // ride through both legs of the comparison
+        let cfg = disagg::DisaggSweepCfg { sched, skew, pipeline, backend };
+        let rows = disagg::sweep_tuned(&model, &cluster, &[rate], duration, 7, cfg);
         print!("{}", disagg::render(&model, &cluster, &rows));
         return Ok(());
     }
+    // the single-engine legs run one concrete backend; Auto is a search
+    // knob that lives at the analyze/plan level (or --disagg, whose
+    // sweep searches per phase)
+    let fixed_backend = match backend {
+        BackendPolicy::Fixed(b) => b,
+        BackendPolicy::Auto => bail!(
+            "--backend auto searches at the analyze/plan level; simulate runs one engine — \
+             pick a2a, agmask, fused-ll or fused-ht (or add --disagg)"
+        ),
+    };
     println!(
-        "simulating {} on {} at {rate} req/s for {duration}s{}{}{}",
+        "simulating {} on {} at {rate} req/s for {duration}s{}{}{}{}",
         model.name,
         cluster.name,
         if skew > 0.0 {
@@ -321,13 +356,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         match sched {
             SchedPolicy::Fcfs => String::new(),
             s => format!(", {} scheduler", s.label()),
-        }
+        },
+        backend_note(backend)
     );
-    // run_rate_sched subsumes run_rate (skew 0, pipeline Off, fcfs),
-    // run_rate_skewed (skew > 0), and the chunked-prefill engine — one
-    // entry point, no mode dispatch
+    // run_rate_tuned subsumes run_rate (skew 0, pipeline Off, fcfs,
+    // a2a), run_rate_skewed (skew > 0), and the chunked-prefill engine
+    // — one entry point, no mode dispatch
     for sys in all_systems(&cluster) {
-        let rep = run_rate_sched(
+        let rep = run_rate_tuned(
             &model,
             &cluster,
             &sys.strategy,
@@ -338,12 +374,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             skew,
             pipeline,
             sched,
+            fixed_backend,
         );
         println!("{}", rep.metrics.report(&format!("{:<22}", sys.label)));
     }
     if let Some(path) = args.get("trace") {
-        if skew > 0.0 || !pipeline.is_off() {
-            bail!("--trace composes with --sched only; drop --skew/--overlap/--chunks");
+        if skew > 0.0 || !pipeline.is_off() || !backend.is_pinned_default() {
+            bail!("--trace composes with --sched only; drop --skew/--overlap/--chunks/--backend");
         }
         let sys = all_systems(&cluster)
             .into_iter()
@@ -485,6 +522,7 @@ fn cmd_fleet_disagg(
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
         controller: None,
+        tuning: Default::default(),
     };
     println!(
         "disagg fleet: {prefill_replicas} prefill x ({prefill_strategy}) + \
@@ -499,6 +537,7 @@ fn cmd_fleet_disagg(
             decode_replicas,
             prefill_strategy,
             decode_strategy,
+            backends: Default::default(),
         })),
         &fa.serving,
         trace,
@@ -521,6 +560,7 @@ fn cmd_fleet_disagg(
             decode_replicas,
             prefill_strategy,
             decode_strategy,
+            backends: Default::default(),
         }));
         export_fleet_trace(&path, &fa.model, &fa.pod, &cfg, &fa.serving, trace, fa.seed)?;
     }
@@ -555,6 +595,7 @@ fn cmd_fleet_controller(
         sched,
         obs: ObsConfig::default(),
         controller: Some(ctl),
+        tuning: Default::default(),
     };
     println!(
         "controlled fleet: {} active of {max_replicas} budget, control interval {interval:.2}s\
@@ -632,6 +673,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             sched,
             obs: ObsConfig::default(),
             controller: None,
+            tuning: Default::default(),
         };
         let rep = simulate_fleet(&fa.model, &fa.pod, &cfg, &fa.serving, &trace, fa.seed);
         let t = rep.metrics.ttft_summary();
@@ -657,6 +699,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             sched,
             obs: ObsConfig::default(),
             controller: None,
+            tuning: Default::default(),
         };
         export_fleet_trace(&path, &fa.model, &fa.pod, &cfg, &fa.serving, &trace, fa.seed)?;
     }
@@ -670,7 +713,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let skew = args.f64_or("skew", 0.0);
     let planner = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(rate))
         .with_skew(skew)
-        .with_pipeline(pipeline_from_args(args)?);
+        .with_pipeline(pipeline_from_args(args)?)
+        .with_backend(backend_from_args(args)?);
     // validate --sched before any branch returns: an unknown scheduler
     // name (or a conflicting flag combination) must error, never be
     // silently ignored
@@ -785,7 +829,16 @@ fn main() -> Result<()> {
             let c = cluster_by_name(&args.get_or("cluster", "ascend910b"))?;
             let m = model_by_name(&args.get_or("model", "deepseek-r1"))?;
             let duration = args.f64_or("duration", 30.0);
-            let rows = disagg::sweep(&m, &c, &[2.0, 4.0, 8.0], duration, 7);
+            // the PR 6 engine dimensions compose with the disagg sweep:
+            // chunked colocated leg, skewed gates, pipelined MoE block,
+            // and the backend policy searched per phase under `auto`
+            let cfg = disagg::DisaggSweepCfg {
+                sched: sched_from_args(&args)?,
+                skew: args.f64_or("skew", 0.0),
+                pipeline: pipeline_from_args(&args)?,
+                backend: backend_from_args(&args)?,
+            };
+            let rows = disagg::sweep_tuned(&m, &c, &[2.0, 4.0, 8.0], duration, 7, cfg);
             print!("{}", disagg::render(&m, &c, &rows));
             if let Some(path) = args.get("trace") {
                 // export one traced 1P+1D run at the middle rate
@@ -805,14 +858,29 @@ fn main() -> Result<()> {
                         decode_replicas: 1,
                         prefill_strategy: pair.prefill.strategy,
                         decode_strategy: pair.decode.strategy,
+                        backends: Default::default(),
                     }),
                     sched: SchedPolicy::Fcfs,
                     obs: ObsConfig::default(),
                     controller: None,
+                    tuning: Default::default(),
                 };
                 let trace = TraceGen::sharegpt(rate, serving.max_seq, 7).generate(duration);
                 export_fleet_trace(&path, &m, &c, &cfg, &serving, &trace, 7)?;
             }
+        }
+        "backends" => {
+            // the dispatch algorithm priced as a searched dimension:
+            // backend x EP degree x batch x phase on two cluster grids,
+            // plus the pinned-vs-auto joint-search gain per grid
+            let m = model_by_name(&args.get_or("model", "qwen3"))?;
+            let grids = match args.get("cluster") {
+                Some(name) => vec![cluster_by_name(name)?],
+                None => vec![ClusterConfig::h20(), ClusterConfig::ascend910b()],
+            };
+            let rate = args.f64_or("rate", 4.0);
+            let s = backends::sweep(&m, &grids, rate);
+            print!("{}", backends::render(&m, &s));
         }
         "chunked" => {
             // TTFT/ITL vs scheduler quantum on a prompt-heavy and a
@@ -881,15 +949,19 @@ fn main() -> Result<()> {
                  commands:\n\
                  \x20 analyze   [--model M] [--cluster C] [--rate R] [--top N]\n\
                  \x20           [--skew Z] [--cost analytic|netsim] [--overlap | --chunks K]\n\
+                 \x20           [--backend a2a|agmask|fused-ll|fused-ht|auto]\n\
                  \x20           (Z > 0 prices λ at the hot rank's measured load;\n\
-                 \x20            --overlap prices chunked micro-batch pipelining)\n\
+                 \x20            --overlap prices chunked micro-batch pipelining;\n\
+                 \x20            --backend auto searches the dispatch algorithm jointly\n\
+                 \x20            with the strategy)\n\
                  \x20 serve     [--artifacts DIR] [--model tiny] [--rate R] [--duration S]\n\
                  \x20           [--queue-cap N]\n\
                  \x20 simulate  [--model M] [--cluster C] [--rate R] [--duration S]\n\
                  \x20           [--skew Z] [--overlap | --chunks K] [--disagg]\n\
-                 \x20           [--sched fcfs|chunked [--quantum N]]\n\
-                 \x20           (--disagg compares colocated vs P/D pools on 2 pods;\n\
-                 \x20            --sched chunked slices prompts at the quantum)\n\
+                 \x20           [--sched fcfs|chunked [--quantum N]] [--backend B]\n\
+                 \x20           (--disagg compares colocated vs P/D pools on 2 pods,\n\
+                 \x20            composing with the other knobs; --sched chunked\n\
+                 \x20            slices prompts at the quantum)\n\
                  \x20 fleet     [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
                  \x20           [--duration S] [--pattern poisson|bursty|diurnal]\n\
                  \x20           [--slo-ttft S] [--strategy \"TP=8 + DP=4, TP=8 + EP=4\"]\n\
@@ -902,13 +974,20 @@ fn main() -> Result<()> {
                  \x20            spares up to the --max-replicas budget)\n\
                  \x20 plan      [--model M] [--cluster BUDGET] [--rate R] [--skew Z]\n\
                  \x20           [--overlap | --chunks K] [--disagg] [--arch]\n\
-                 \x20           [--sched fcfs|chunked [--quantum N]]\n\
+                 \x20           [--sched fcfs|chunked [--quantum N]] [--backend B]\n\
                  \x20           (carve one device budget into replicas x strategy;\n\
                  \x20            --disagg searches prefill pool x decode pool instead;\n\
                  \x20            --arch ranks colocated vs chunked vs disagg on one key)\n\
                  \x20 fleetsweep  [--model M] [--cluster POD] [--rate R] [--replicas N]\n\
-                 \x20 disagg    [--model M] [--cluster POD] [--duration S]\n\
-                 \x20           (colocated vs disagg TTFT/ITL/tok-s over arrival rate)\n\
+                 \x20 disagg    [--model M] [--cluster POD] [--duration S] [--skew Z]\n\
+                 \x20           [--overlap | --chunks K] [--backend B]\n\
+                 \x20           [--sched fcfs|chunked [--quantum N]]\n\
+                 \x20           (colocated vs disagg TTFT/ITL/tok-s over arrival rate,\n\
+                 \x20            with the engine-tuning knobs on both legs)\n\
+                 \x20 backends  [--model M] [--cluster C] [--rate R]\n\
+                 \x20           (dispatch-backend economics: a2a vs agmask vs fused-ll\n\
+                 \x20            vs fused-ht across EP degree x batch x phase, with\n\
+                 \x20            crossover lines and the pinned-vs-auto search gain)\n\
                  \x20 chunked   [--model M] [--cluster POD] [--duration S]\n\
                  \x20           (TTFT/ITL vs scheduler quantum, prompt- and\n\
                  \x20            decode-heavy traces)\n\

@@ -92,6 +92,7 @@ pub fn sweep(
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::tracing(),
         controller: None,
+        tuning: Default::default(),
     };
     let chunked_cfg =
         FleetConfig { sched: SchedPolicy::Chunked { quantum: 256 }, ..colo_cfg.clone() };
@@ -105,6 +106,7 @@ pub fn sweep(
                 decode_replicas: 1,
                 prefill_strategy: pair.prefill.strategy,
                 decode_strategy: pair.decode.strategy,
+                backends: Default::default(),
             }),
             sched: SchedPolicy::Fcfs,
             ..colo_cfg

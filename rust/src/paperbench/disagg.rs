@@ -14,10 +14,28 @@
 use crate::analyzer::indicators::Workload;
 use crate::analyzer::latency::CommMode;
 use crate::analyzer::search::{Analyzer, Objective};
-use crate::cluster::{simulate_fleet, DisaggConfig, FleetConfig, RoutingPolicy};
+use crate::cluster::{
+    simulate_fleet, DisaggConfig, FleetConfig, PhaseBackends, ReplicaTuning, RoutingPolicy,
+};
 use crate::config::{ClusterConfig, MoEModelConfig, ServingConfig};
+use crate::pipeline::PipelineCfg;
 use crate::serving::scheduler::SchedPolicy;
+use crate::timing::BackendPolicy;
 use crate::workload::TraceGen;
+
+/// Engine tuning threaded through both legs of the sweep — the PR 6
+/// dimensions (iteration scheduler, gate skew, chunked pipelining) plus
+/// the dispatch-backend policy.  The default reproduces the historical
+/// sweep bit-for-bit: FCFS, uniform gates, no pipelining, pinned
+/// `AllToAll`.  The colocated leg runs `sched`; the disaggregated pools
+/// always run their role schedulers (FCFS at the fleet level).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DisaggSweepCfg {
+    pub sched: SchedPolicy,
+    pub skew: f64,
+    pub pipeline: PipelineCfg,
+    pub backend: BackendPolicy,
+}
 
 /// One (rate × architecture) comparison row.
 #[derive(Debug, Clone)]
@@ -33,6 +51,8 @@ pub struct DisaggRow {
     pub dis_tok_s: f64,
     /// mean prefill→decode KV transfer, ms
     pub handoff_ms: f64,
+    /// the backends the three engines ran: "colo/prefill|decode"
+    pub backends: String,
 }
 
 /// Run the colocated-vs-disagg comparison at each rate.  Rates where
@@ -44,11 +64,31 @@ pub fn sweep(
     duration: f64,
     seed: u64,
 ) -> Vec<DisaggRow> {
+    sweep_tuned(model, pod, rates, duration, seed, DisaggSweepCfg::default())
+}
+
+/// [`sweep`] with the engine-tuning dimensions wired through: the
+/// analyzer picks strategies (and, under `BackendPolicy::Auto`,
+/// backends — independently per phase) with the same skew/pipelining
+/// the fleets then simulate, and the colocated leg runs `cfg.sched`.
+pub fn sweep_tuned(
+    model: &MoEModelConfig,
+    pod: &ClusterConfig,
+    rates: &[f64],
+    duration: f64,
+    seed: u64,
+    cfg: DisaggSweepCfg,
+) -> Vec<DisaggRow> {
     let mut rows = Vec::new();
     for &rate in rates {
         let serving = ServingConfig::paper_eval(rate);
         let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
-        let analyzer = Analyzer::new(model, pod, &serving);
+        let mut analyzer = Analyzer::new(model, pod, &serving)
+            .with_pipeline(cfg.pipeline)
+            .with_backend(cfg.backend);
+        if cfg.skew > 0.0 {
+            analyzer = analyzer.with_load_skew(cfg.skew);
+        }
         // the colocated fleet splits arrivals over its 2 replicas; in
         // the 1P+1D fleet every request passes through BOTH pools, so
         // each per-phase pick is scored at the full arrival rate
@@ -66,9 +106,14 @@ pub fn sweep(
             mode: CommMode::FusedAsync,
             slo: None,
             disagg: None,
-            sched: SchedPolicy::Fcfs,
+            sched: cfg.sched,
             obs: crate::obs::ObsConfig::default(),
             controller: None,
+            tuning: ReplicaTuning {
+                skew: cfg.skew,
+                pipeline: cfg.pipeline,
+                backend: colo_best.backend,
+            },
         };
         let dis_cfg = FleetConfig {
             disagg: Some(DisaggConfig {
@@ -76,7 +121,14 @@ pub fn sweep(
                 decode_replicas: 1,
                 prefill_strategy: pair.prefill.strategy,
                 decode_strategy: pair.decode.strategy,
+                backends: PhaseBackends {
+                    prefill: pair.prefill.backend,
+                    decode: pair.decode.backend,
+                },
             }),
+            // disaggregated pools run their role schedulers: the fleet
+            // loop requires FCFS at this level regardless of cfg.sched
+            sched: SchedPolicy::Fcfs,
             ..colo_cfg.clone()
         };
         let colo = simulate_fleet(model, pod, &colo_cfg, &serving, &trace, seed);
@@ -94,6 +146,12 @@ pub fn sweep(
             dis_itl_ms: di.mean * 1e3,
             dis_tok_s: dis.metrics.throughput(),
             handoff_ms: dis.kv_handoff.summary().mean * 1e3,
+            backends: format!(
+                "{}/{}|{}",
+                colo_best.backend.label(),
+                pair.prefill.backend.label(),
+                pair.decode.backend.label()
+            ),
         });
     }
     rows
@@ -103,7 +161,7 @@ pub fn sweep(
 pub fn render(model: &MoEModelConfig, pod: &ClusterConfig, rows: &[DisaggRow]) -> String {
     let mut out = format!(
         "Disagg sweep — {} on 2 x {} pods (colocated JSQ vs 1P+1D with timed KV handoff)\n\
-         {:>5} | {:>10} {:>10} {:>9} {:>9} | {:>10} {:>10} {:>9} {:>9} {:>11}\n",
+         {:>5} | {:>10} {:>10} {:>9} {:>9} | {:>10} {:>10} {:>9} {:>9} {:>11} {:>18}\n",
         model.name,
         pod.name,
         "req/s",
@@ -115,11 +173,12 @@ pub fn render(model: &MoEModelConfig, pod: &ClusterConfig, rows: &[DisaggRow]) -
         "dis p99",
         "dis ITL",
         "dis tok/s",
-        "handoff(ms)"
+        "handoff(ms)",
+        "backends"
     );
     for r in rows {
         out.push_str(&format!(
-            "{:>5} | {:>10.1} {:>10.1} {:>9.2} {:>9.1} | {:>10.1} {:>10.1} {:>9.2} {:>9.1} {:>11.2}\n",
+            "{:>5} | {:>10.1} {:>10.1} {:>9.2} {:>9.1} | {:>10.1} {:>10.1} {:>9.2} {:>9.1} {:>11.2} {:>18}\n",
             r.rate,
             r.colo_ttft_ms,
             r.colo_ttft_p99_ms,
@@ -129,7 +188,8 @@ pub fn render(model: &MoEModelConfig, pod: &ClusterConfig, rows: &[DisaggRow]) -
             r.dis_ttft_p99_ms,
             r.dis_itl_ms,
             r.dis_tok_s,
-            r.handoff_ms
+            r.handoff_ms,
+            r.backends
         ));
     }
     if rows.is_empty() {
@@ -152,8 +212,44 @@ mod tests {
         let r = &rows[0];
         assert!(r.colo_tok_s > 0.0 && r.dis_tok_s > 0.0);
         assert!(r.handoff_ms > 0.0, "handoff must be visibly accounted");
+        assert_eq!(r.backends, "a2a/a2a|a2a", "default sweep stays pinned");
         let rendered = render(&model, &pod, &rows);
         assert!(rendered.contains("handoff(ms)"));
         assert!(rendered.contains("Disagg sweep"));
+    }
+
+    #[test]
+    fn default_tuning_reproduces_the_plain_sweep() {
+        let model = MoEModelConfig::tiny();
+        let pod = ClusterConfig::localhost(2, 4);
+        let plain = sweep(&model, &pod, &[4.0], 5.0, 7);
+        let tuned = sweep_tuned(&model, &pod, &[4.0], 5.0, 7, DisaggSweepCfg::default());
+        assert_eq!(plain.len(), tuned.len());
+        for (p, t) in plain.iter().zip(&tuned) {
+            assert_eq!(p.colo_ttft_ms, t.colo_ttft_ms);
+            assert_eq!(p.dis_ttft_ms, t.dis_ttft_ms);
+            assert_eq!(p.dis_tok_s, t.dis_tok_s);
+            assert_eq!(p.handoff_ms, t.handoff_ms);
+        }
+    }
+
+    #[test]
+    fn tuned_sweep_composes_the_pr6_dimensions_with_disagg() {
+        // the chunked×disagg gap: a chunked colocated leg and a skewed,
+        // pipelined, backend-searched pair of pools in ONE sweep row
+        let model = MoEModelConfig::tiny();
+        let pod = ClusterConfig::localhost(2, 4);
+        let cfg = DisaggSweepCfg {
+            sched: SchedPolicy::Chunked { quantum: 128 },
+            skew: 0.8,
+            pipeline: PipelineCfg::Auto,
+            backend: BackendPolicy::Auto,
+        };
+        let rows = sweep_tuned(&model, &pod, &[4.0], 5.0, 7, cfg);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.colo_tok_s > 0.0 && r.dis_tok_s > 0.0);
+        assert!(r.handoff_ms > 0.0);
+        assert!(!r.backends.is_empty());
     }
 }

@@ -123,10 +123,12 @@ pub fn run(
             decode_replicas: budget - p,
             prefill_strategy: pair.prefill.strategy,
             decode_strategy: pair.decode.strategy,
+            backends: Default::default(),
         }),
         sched: SchedPolicy::Fcfs,
         obs: crate::obs::ObsConfig::default(),
         controller: ctl,
+        tuning: Default::default(),
     };
 
     // every static split the budget admits — the offline planner's menu

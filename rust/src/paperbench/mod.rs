@@ -4,6 +4,7 @@
 //! see EXPERIMENTS.md for paper-vs-measured).
 
 pub mod attribution;
+pub mod backends;
 pub mod chunked;
 pub mod disagg;
 pub mod elastic;

@@ -84,6 +84,7 @@ pub fn run(
         sched: SchedPolicy::Fcfs,
         obs: crate::obs::ObsConfig::default(),
         controller: None,
+        tuning: Default::default(),
     };
     let trace = TraceGen::diurnal(rate, serving.max_seq, seed, DIURNAL_DEPTH, duration / 4.0)
         .generate(duration);

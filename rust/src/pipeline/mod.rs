@@ -24,8 +24,8 @@
 //! [`timing::schedule`]: crate::timing::schedule
 //! [`Lane::Stream`]: crate::gantt::Lane
 
-use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir, Schedule, Step};
-use crate::timing::{CommCost, CommDomain};
+use crate::timing::schedule::{backend_combine_ir, backend_dispatch_ir, EpShape, Schedule, Step};
+use crate::timing::{CommCost, CommDomain, DispatchBackend};
 
 /// Largest chunk count the auto search considers.  Past ~8 chunks the
 /// per-chunk launch overheads dominate every configuration we model.
@@ -165,9 +165,26 @@ pub struct HybridStage {
     pub comb_ag_bytes: f64,
     /// full-batch expert GroupGEMM FLOPs per node lane
     pub flops: f64,
+    /// dispatch/combine algorithm shaping each chunk's sub-schedule
+    /// (`AllToAll` = the plain Algorithm 1–2 builders, bit-for-bit)
+    pub backend: DispatchBackend,
 }
 
 impl HybridStage {
+    /// The EP-exchange shape the backend-parameterized builders want.
+    /// The hybrid stage's pairwise rounds are inter-node by construction
+    /// (its sends ride `Lane::Inter`), so a monolithic EP collective
+    /// (`AllGatherMask`) is priced inter-node as well.
+    fn ep_shape(&self) -> EpShape {
+        EpShape {
+            nodes: self.nodes,
+            rounds: self.rounds,
+            tp: self.tp,
+            tp_domain: self.tp_domain,
+            ep_domain: CommDomain::InterNode,
+        }
+    }
+
     /// The K-chunk interleaved schedule with an even 1/K split of both
     /// the communication volumes and the GroupGEMM work.
     pub fn schedule(&self, chunks: usize) -> Schedule {
@@ -181,28 +198,25 @@ impl HybridStage {
     pub fn schedule_with(&self, chunks: usize, flops_per_chunk: f64) -> Schedule {
         let k = chunks.max(1);
         let kf = k as f64;
+        let shape = self.ep_shape();
         chunked_pipeline(
             k,
             self.nodes,
             |_| {
-                ag_dispatch_ir(
-                    self.nodes,
-                    self.rounds,
-                    self.tp,
+                backend_dispatch_ir(
+                    self.backend,
+                    &shape,
                     self.disp_blk_bytes / kf,
                     self.disp_blk_bytes / kf,
-                    self.tp_domain,
                 )
             },
             |c, node| Step::compute(node, 0, format!("G{c}"), flops_per_chunk, vec![]),
             |_| {
-                rs_combine_ir(
-                    self.nodes,
-                    self.rounds,
-                    self.tp,
+                backend_combine_ir(
+                    self.backend,
+                    &shape,
                     self.comb_blk_bytes / kf,
                     self.comb_ag_bytes / kf,
-                    self.tp_domain,
                 )
             },
         )
@@ -273,6 +287,7 @@ mod tests {
             // ~2 ms of GroupGEMM on the 910B — comparable to the ~1.8 ms
             // of communication, so chunking has real overlap to expose
             flops: 2.5e11,
+            backend: DispatchBackend::AllToAll,
         }
     }
 
@@ -289,6 +304,7 @@ mod tests {
         // K = 1 has no overlap to exploit between disp -> gemm -> comb:
         // the pipeline makespan is the dependency chain of the three
         // stages (each stage internally still fused/overlapped)
+        use crate::timing::schedule::{ag_dispatch_ir, rs_combine_ir};
         let c = cost();
         let s = stage();
         let sched = s.schedule(1);
@@ -371,6 +387,42 @@ mod tests {
         let b2 = played.trace.busy(&Lane::Stream(2, 0));
         assert!((b0 - b2).abs() < 1e-15, "symmetric node streams");
         assert!(b0 > 0.0);
+    }
+
+    #[test]
+    fn stage_backends_reshape_the_chunk_schedules() {
+        let c = cost();
+        let a2a = stage();
+        // the default-backend stage is the plain Algorithm 1–2 chain
+        assert_eq!(a2a.backend, DispatchBackend::default());
+        // a launch-dominated stage (tiny blocks): the latency-constant
+        // kernel's single launch per direction beats pairwise rounds
+        let tiny = HybridStage {
+            disp_blk_bytes: 1e3,
+            comb_blk_bytes: 1e3,
+            comb_ag_bytes: 4e3,
+            flops: 0.0,
+            ..stage()
+        };
+        let ll = HybridStage { backend: DispatchBackend::FusedLowLatency, ..tiny };
+        assert!(
+            ll.makespan(&c, 1) < tiny.makespan(&c, 1),
+            "α-bound stage: LL must beat pairwise"
+        );
+        // a wire-bound stage: HT's aggregated transfers beat pairwise,
+        // LL's RDMA derate loses
+        let big = HybridStage {
+            rounds: 16,
+            disp_blk_bytes: 4e7,
+            comb_blk_bytes: 4e7,
+            comb_ag_bytes: 4e7,
+            flops: 0.0,
+            ..stage()
+        };
+        let ht = HybridStage { backend: DispatchBackend::FusedHighThroughput, ..big };
+        let ll = HybridStage { backend: DispatchBackend::FusedLowLatency, ..big };
+        assert!(ht.makespan(&c, 1) < big.makespan(&c, 1));
+        assert!(ll.makespan(&c, 1) > big.makespan(&c, 1));
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::obs;
 use crate::pipeline::PipelineCfg;
 use crate::serving::metrics::ServingMetrics;
 use crate::serving::scheduler::SchedPolicy;
-use crate::timing::CommCost;
+use crate::timing::{CommCost, DispatchBackend};
 use crate::workload::{Request, TraceGen};
 
 /// Result of one simulated serving run.
@@ -189,6 +189,38 @@ pub fn run_rate_sched(
     pipeline: PipelineCfg,
     sched: SchedPolicy,
 ) -> SimReport {
+    run_rate_tuned(
+        model,
+        cluster,
+        strategy,
+        mode,
+        rate,
+        duration,
+        seed,
+        skew,
+        pipeline,
+        sched,
+        DispatchBackend::AllToAll,
+    )
+}
+
+/// [`run_rate_sched`] plus the dispatch-backend dimension: the replica
+/// prices its expert exchange through `backend`.
+/// [`DispatchBackend::AllToAll`] is exactly the historical run.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rate_tuned(
+    model: &MoEModelConfig,
+    cluster: &ClusterConfig,
+    strategy: &ParallelStrategy,
+    mode: CommMode,
+    rate: f64,
+    duration: f64,
+    seed: u64,
+    skew: f64,
+    pipeline: PipelineCfg,
+    sched: SchedPolicy,
+    backend: DispatchBackend,
+) -> SimReport {
     let serving = ServingConfig::paper_eval(rate);
     let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
     let mut replica = if skew > 0.0 {
@@ -197,7 +229,8 @@ pub fn run_rate_sched(
         ReplicaSim::new(model, cluster, strategy, &serving, mode, seed, 0)
     }
     .with_pipeline(pipeline)
-    .with_sched(sched);
+    .with_sched(sched)
+    .with_backend(backend);
     let now = drive(&mut replica, &trace);
     report(replica, now, mode)
 }

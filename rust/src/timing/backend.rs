@@ -1,0 +1,293 @@
+//! Dispatch/combine **backends**: the A2A algorithm as a searched
+//! dimension, not a constant.
+//!
+//! Every production MoE stack treats the expert dispatch algorithm as a
+//! tunable — vLLM selects among `allgather_reducescatter`, `pplx`,
+//! `deepep_high_throughput` (prefill) and `deepep_low_latency` (decode);
+//! Megatron switches AllGather-dispatch (EP≤4) vs AlltoAll (EP>4) vs
+//! fused.  [`DispatchBackend`] names the four shapes we price, and the
+//! per-backend cost model is a *transformation* of the fused round
+//! structure layered on [`CommCost::round_shared`]:
+//!
+//! | backend      | launch rounds            | wire volume        | skew  |
+//! |--------------|--------------------------|--------------------|-------|
+//! | `AllToAll`   | `d` (one per peer)       | routed (dedup'd)   | aware |
+//! | `AllGatherMask` | 1 AG + 1 RS collective | **global** (×d/k′) | immune|
+//! | `FusedLowLatency` | 1 fused launch      | routed × 2 (RDMA-only) | aware |
+//! | `FusedHighThroughput` | setup + ⌈d/8⌉ batched | routed × 0.85 | aware |
+//!
+//! `AllToAll` is the bit-for-bit default: its schedule-IR builders and
+//! closed forms are the exact pre-backend code paths.  `AllGatherMask`
+//! gathers the *full* activation across the EP group and masks locally,
+//! so it pays no per-peer launches (cheap at low EP, one inter-α per
+//! direction) but moves the undeduplicated global volume (ruinous at
+//! high EP where routing dedup would have shed most of it) — and it is
+//! skew-immune, since every rank gathers everything regardless of which
+//! experts run hot.  The two fused kernels split the DeepEP trade:
+//! low-latency pays double wire (pure-RDMA path, no NVLink aggregation)
+//! for a latency-constant single launch; high-throughput keeps full
+//! wire efficiency but amortizes launches over batched sends behind a
+//! fixed setup cost.
+
+use super::{CommCost, CommDomain};
+
+/// Wire derate of the low-latency fused kernel: the pure-RDMA path
+/// skips NVLink aggregation, so every byte crosses the NIC roughly
+/// twice relative to the bandwidth-optimal route.
+pub const LL_WIRE_FACTOR: f64 = 2.0;
+/// Effective-bandwidth bonus of the high-throughput fused kernel:
+/// aggregated copy-engine transfers sustain a higher fraction of link
+/// peak than the pairwise baseline's per-peer launches (the DeepEP
+/// normal-kernel headline), modeled as a sub-1.0 wire multiplier.
+pub const HT_WIRE_FACTOR: f64 = 0.85;
+/// Fixed launch cost (in α rounds) of the big fused high-throughput
+/// kernel: barrier + layout setup before the first byte moves.
+pub const HT_SETUP_ROUNDS: usize = 2;
+/// How many pairwise sends the high-throughput kernel batches behind
+/// one launch.
+pub const HT_ROUND_BATCH: usize = 8;
+
+/// The dispatch/combine algorithm used for MoE token exchange.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DispatchBackend {
+    /// Today's fused pairwise shape (Algorithms 1–2) — the bit-for-bit
+    /// default.
+    #[default]
+    AllToAll,
+    /// AG-dispatch + RS-combine over the EP communicator with local
+    /// masking: fewest launches, full global volume, skew-immune.
+    AllGatherMask,
+    /// DeepEP-style latency-constant kernel: one fused launch per
+    /// direction, wire derated by [`LL_WIRE_FACTOR`].
+    FusedLowLatency,
+    /// DeepEP-style bandwidth-optimal kernel: full wire efficiency,
+    /// launches amortized over [`HT_ROUND_BATCH`]-send batches behind
+    /// [`HT_SETUP_ROUNDS`] of setup.
+    FusedHighThroughput,
+}
+
+impl DispatchBackend {
+    /// Every backend, in search order (the default first, so ties in
+    /// `BackendPolicy::Auto` resolve to the pinned shape).
+    pub const ALL: [DispatchBackend; 4] = [
+        DispatchBackend::AllToAll,
+        DispatchBackend::AllGatherMask,
+        DispatchBackend::FusedLowLatency,
+        DispatchBackend::FusedHighThroughput,
+    ];
+
+    /// Short stable name (CLI flag value and report column).
+    pub fn label(self) -> &'static str {
+        match self {
+            DispatchBackend::AllToAll => "a2a",
+            DispatchBackend::AllGatherMask => "agmask",
+            DispatchBackend::FusedLowLatency => "fused-ll",
+            DispatchBackend::FusedHighThroughput => "fused-ht",
+        }
+    }
+
+    /// Parse a CLI flag value ([`Self::label`] spelling, plus the
+    /// obvious aliases).
+    pub fn parse(s: &str) -> Option<DispatchBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "a2a" | "alltoall" | "all-to-all" => Some(DispatchBackend::AllToAll),
+            "agmask" | "allgather" | "allgather-mask" | "ag" => {
+                Some(DispatchBackend::AllGatherMask)
+            }
+            "fused-ll" | "ll" | "low-latency" | "deepep-ll" => {
+                Some(DispatchBackend::FusedLowLatency)
+            }
+            "fused-ht" | "ht" | "high-throughput" | "deepep-ht" => {
+                Some(DispatchBackend::FusedHighThroughput)
+            }
+            _ => None,
+        }
+    }
+
+    /// How many launch (α-paying) rounds this backend needs to move a
+    /// payload the pairwise shape would move in `data_rounds` sends.
+    pub fn launch_rounds(self, data_rounds: usize) -> usize {
+        match self {
+            DispatchBackend::AllToAll => data_rounds,
+            // one collective per direction — the AG/RS α is charged by
+            // the collective itself, not per peer
+            DispatchBackend::AllGatherMask => 1,
+            DispatchBackend::FusedLowLatency => 1,
+            DispatchBackend::FusedHighThroughput => {
+                HT_SETUP_ROUNDS + data_rounds.div_ceil(HT_ROUND_BATCH)
+            }
+        }
+        .max(1)
+    }
+
+    /// Multiplier on the routed wire volume (1.0 = the pairwise
+    /// baseline's effective bandwidth; above it pays extra wire, below
+    /// it sustains more of link peak).
+    pub fn wire_factor(self) -> f64 {
+        match self {
+            DispatchBackend::FusedLowLatency => LL_WIRE_FACTOR,
+            DispatchBackend::FusedHighThroughput => HT_WIRE_FACTOR,
+            _ => 1.0,
+        }
+    }
+
+    /// Whether the backend's moved volume scales with the measured
+    /// hot-expert factor.  `AllGatherMask` gathers everything from
+    /// everyone, so expert skew cannot concentrate its traffic.
+    pub fn skew_aware(self) -> bool {
+        !matches!(self, DispatchBackend::AllGatherMask)
+    }
+}
+
+impl std::fmt::Display for DispatchBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Closed-form cost of the AllGather-mask exchange: gather the full
+/// `global_bytes` across the `ep`-way communicator, mask locally, and
+/// reduce-scatter the expert outputs back.  Monolithic collectives —
+/// no round structure to overlap, so sync and async price the same.
+pub fn agmask_exchange_time<C: CommCost>(
+    cost: &C,
+    global_bytes: f64,
+    ep: usize,
+    ep_domain: CommDomain,
+) -> f64 {
+    cost.all_gather(global_bytes, ep, ep_domain) + cost.reduce_scatter(global_bytes, ep, ep_domain)
+}
+
+/// How the analyzer/planner treats the backend dimension: pin one shape
+/// or search all of them jointly with the parallel strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendPolicy {
+    /// Price exactly this backend (the default pins `AllToAll`, which
+    /// reproduces pre-backend outputs bit-for-bit).
+    Fixed(DispatchBackend),
+    /// Search every backend per candidate strategy and keep the best
+    /// under the active objective.
+    Auto,
+}
+
+impl Default for BackendPolicy {
+    fn default() -> Self {
+        BackendPolicy::Fixed(DispatchBackend::AllToAll)
+    }
+}
+
+impl BackendPolicy {
+    /// Build from a `--backend` CLI flag value (`None` = pinned
+    /// default, `"auto"` = search, otherwise a [`DispatchBackend`]
+    /// label).
+    pub fn from_flag(flag: Option<&str>) -> Result<BackendPolicy, String> {
+        match flag {
+            None => Ok(BackendPolicy::default()),
+            Some(s) if s.eq_ignore_ascii_case("auto") => Ok(BackendPolicy::Auto),
+            Some(s) => DispatchBackend::parse(s).map(BackendPolicy::Fixed).ok_or_else(|| {
+                format!(
+                    "unknown backend '{s}' (expected auto, a2a, agmask, fused-ll or fused-ht)"
+                )
+            }),
+        }
+    }
+
+    /// The backends this policy asks the search to price.
+    pub fn candidates(self) -> Vec<DispatchBackend> {
+        match self {
+            BackendPolicy::Fixed(b) => vec![b],
+            BackendPolicy::Auto => DispatchBackend::ALL.to_vec(),
+        }
+    }
+
+    /// True when the policy is the pinned bit-for-bit default.
+    pub fn is_pinned_default(self) -> bool {
+        self == BackendPolicy::Fixed(DispatchBackend::AllToAll)
+    }
+}
+
+impl std::fmt::Display for BackendPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendPolicy::Fixed(b) => write!(f, "{b}"),
+            BackendPolicy::Auto => f.write_str("auto"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::cost::CollectiveCost;
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn default_backend_is_the_pairwise_shape() {
+        assert_eq!(DispatchBackend::default(), DispatchBackend::AllToAll);
+        assert!(BackendPolicy::default().is_pinned_default());
+        assert_eq!(BackendPolicy::default().candidates(), vec![DispatchBackend::AllToAll]);
+    }
+
+    #[test]
+    fn labels_round_trip_through_parse() {
+        for b in DispatchBackend::ALL {
+            assert_eq!(DispatchBackend::parse(b.label()), Some(b));
+        }
+        assert_eq!(DispatchBackend::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn policy_flag_parsing_covers_auto_fixed_and_errors() {
+        assert_eq!(BackendPolicy::from_flag(None), Ok(BackendPolicy::default()));
+        assert_eq!(BackendPolicy::from_flag(Some("auto")), Ok(BackendPolicy::Auto));
+        assert_eq!(
+            BackendPolicy::from_flag(Some("fused-ll")),
+            Ok(BackendPolicy::Fixed(DispatchBackend::FusedLowLatency))
+        );
+        assert!(BackendPolicy::from_flag(Some("warp-drive")).is_err());
+        assert_eq!(BackendPolicy::Auto.candidates().len(), DispatchBackend::ALL.len());
+    }
+
+    #[test]
+    fn launch_rounds_encode_the_latency_trades() {
+        // pairwise pays one α per peer; LL is latency-constant
+        assert_eq!(DispatchBackend::AllToAll.launch_rounds(31), 31);
+        assert_eq!(DispatchBackend::FusedLowLatency.launch_rounds(31), 1);
+        assert_eq!(DispatchBackend::FusedLowLatency.launch_rounds(3), 1);
+        // HT amortizes: setup + ⌈31/8⌉ = 6 ≪ 31, but at tiny EP the
+        // fixed setup costs more launches than plain pairwise
+        assert_eq!(DispatchBackend::FusedHighThroughput.launch_rounds(31), 6);
+        assert!(
+            DispatchBackend::FusedHighThroughput.launch_rounds(2)
+                > DispatchBackend::AllToAll.launch_rounds(2)
+        );
+        // degenerate single-rank exchange still prices one launch
+        for b in DispatchBackend::ALL {
+            assert!(b.launch_rounds(0) >= 1);
+        }
+    }
+
+    #[test]
+    fn wire_factors_split_the_deepep_trade_and_only_agmask_ignores_skew() {
+        assert_eq!(DispatchBackend::AllToAll.wire_factor(), 1.0);
+        assert_eq!(DispatchBackend::AllGatherMask.wire_factor(), 1.0);
+        assert_eq!(DispatchBackend::FusedLowLatency.wire_factor(), LL_WIRE_FACTOR);
+        assert_eq!(DispatchBackend::FusedHighThroughput.wire_factor(), HT_WIRE_FACTOR);
+        assert!(LL_WIRE_FACTOR > 1.0 && HT_WIRE_FACTOR < 1.0);
+        for b in DispatchBackend::ALL {
+            assert_eq!(b.skew_aware(), b != DispatchBackend::AllGatherMask);
+        }
+    }
+
+    #[test]
+    fn agmask_exchange_is_symmetric_and_monotone_in_degree() {
+        let c = CollectiveCost::new(&ClusterConfig::h20());
+        let t4 = agmask_exchange_time(&c, 8e6, 4, CommDomain::IntraNode);
+        let t8 = agmask_exchange_time(&c, 8e6, 8, CommDomain::IntraNode);
+        assert!(t4 > 0.0);
+        // AG/RS volume scales with (d-1)/d — larger groups move more
+        assert!(t8 > t4);
+        // degree 1 collapses to nothing (reduce_scatter guards d<=1)
+        assert_eq!(agmask_exchange_time(&c, 8e6, 1, CommDomain::IntraNode), 0.0);
+    }
+}

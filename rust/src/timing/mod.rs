@@ -26,13 +26,18 @@
 //!
 //! [`CollectiveCost`]: crate::comm::cost::CollectiveCost
 
+pub mod backend;
 pub mod load;
 pub mod netsim_cost;
 pub mod schedule;
 
+pub use backend::{agmask_exchange_time, BackendPolicy, DispatchBackend};
 pub use load::ExpertLoadProfile;
 pub use netsim_cost::NetSimCost;
-pub use schedule::{ag_dispatch_ir, rs_combine_ir, CollOp, Played, Schedule, Step};
+pub use schedule::{
+    ag_dispatch_ir, backend_combine_ir, backend_dispatch_ir, rs_combine_ir, CollOp, EpShape,
+    Played, Schedule, Step,
+};
 
 use crate::config::ClusterConfig;
 
@@ -136,7 +141,13 @@ pub trait CommCost: std::fmt::Debug + Clone {
 
     /// One lane's time for `rounds` back-to-back pairwise launches
     /// carrying `bytes` in total (the rank-granular A2A lane model).
-    fn pairwise_rounds(&self, rounds: usize, bytes: f64, sharers: usize, domain: CommDomain) -> f64 {
+    fn pairwise_rounds(
+        &self,
+        rounds: usize,
+        bytes: f64,
+        sharers: usize,
+        domain: CommDomain,
+    ) -> f64 {
         if rounds == 0 {
             return 0.0;
         }
@@ -211,12 +222,20 @@ pub trait CommCost: std::fmt::Debug + Clone {
         self.round_shared(bytes, sharers, CommDomain::InterNode)
     }
 
-    /// Convenience: AR over a node-major communicator (domain inferred).
+    /// AR over a node-major communicator, domain inferred — attention
+    /// TP traffic, which every [`backend::DispatchBackend`] shares (the
+    /// backend layer only reshapes the MoE dispatch/combine exchange).
     fn ar_auto(&self, bytes: f64, degree: usize) -> f64 {
         self.all_reduce(bytes, degree, self.domain_of(degree))
     }
 
-    /// Convenience: A2A over a node-major communicator (domain inferred).
+    /// A2A over a node-major communicator, domain inferred — the
+    /// *monolithic* Eq. (3) collective.  MoE dispatch/combine no longer
+    /// prices through this single shape: the latency model routes it
+    /// through the [`backend`] layer (per-backend launch/volume rules
+    /// over `round_shared`, [`DispatchBackend::AllToAll`] reproducing
+    /// the fused pairwise IR).  This helper remains for flat A2A costs
+    /// outside the expert exchange (reports, netsim cross-checks).
     fn a2a_auto(&self, bytes: f64, degree: usize) -> f64 {
         self.all_to_all(bytes, degree, self.domain_of(degree))
     }

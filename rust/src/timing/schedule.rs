@@ -9,6 +9,7 @@
 //! the contention-aware NetSim-backed model, and renders to a Gantt
 //! [`Trace`] either way.
 
+use super::backend::DispatchBackend;
 use super::{CommCost, CommDomain};
 use crate::gantt::{Lane, Trace};
 
@@ -273,6 +274,184 @@ pub fn ag_dispatch_ir(
     sched
 }
 
+/// Shape of one EP exchange for the backend-parameterized builders:
+/// `rounds` pairwise rounds (the EP degree) over `nodes` symmetric node
+/// lanes, with a `tp`-way group replicating in `tp_domain`.  `ep_domain`
+/// is where the *EP communicator's* monolithic collectives run
+/// (`AllGatherMask` — spans nodes iff the strided tp×ep group does).
+#[derive(Debug, Clone, Copy)]
+pub struct EpShape {
+    pub nodes: usize,
+    pub rounds: usize,
+    pub tp: usize,
+    pub tp_domain: CommDomain,
+    pub ep_domain: CommDomain,
+}
+
+/// Backend-parameterized **AG-Dispatch** builder.  `AllToAll` delegates
+/// to [`ag_dispatch_ir`] verbatim (the bit-for-bit default); the other
+/// backends transform the round structure while preserving the routed
+/// wire volume `(rounds−1)·send_bytes`:
+///
+/// * `FusedLowLatency` — one latency-constant inter launch carrying the
+///   whole payload at [`LL_WIRE_FACTOR`](super::backend::LL_WIRE_FACTOR)
+///   wire derate (pure-RDMA path), one gated TP all-gather.
+/// * `FusedHighThroughput` — launches batched
+///   [`HT_ROUND_BATCH`](super::backend::HT_ROUND_BATCH)-to-one behind a
+///   fixed setup, wire at the aggregated kernel's effective bandwidth
+///   ([`HT_WIRE_FACTOR`](super::backend::HT_WIRE_FACTOR)).
+/// * `AllGatherMask` — a single monolithic all-gather of the
+///   *undeduplicated* payload (`rounds·send_bytes`) over the EP
+///   communicator in `ep_domain`; no pairwise rounds at all.
+pub fn backend_dispatch_ir(
+    backend: DispatchBackend,
+    shape: &EpShape,
+    send_bytes: f64,
+    ag_bytes: f64,
+) -> Schedule {
+    let (nodes, rounds, tp) = (shape.nodes, shape.rounds, shape.tp);
+    if rounds <= 1 || backend == DispatchBackend::AllToAll {
+        return ag_dispatch_ir(nodes, rounds, tp, send_bytes, ag_bytes, shape.tp_domain);
+    }
+    let vol = (rounds - 1) as f64 * send_bytes;
+    let total_ag = (rounds - 1) as f64 * ag_bytes;
+    match backend {
+        DispatchBackend::AllToAll => unreachable!("delegated above"),
+        DispatchBackend::FusedHighThroughput => {
+            let launches = backend.launch_rounds(rounds - 1);
+            ag_dispatch_ir(
+                nodes,
+                launches + 1,
+                tp,
+                vol * backend.wire_factor() / launches as f64,
+                total_ag / launches as f64,
+                shape.tp_domain,
+            )
+        }
+        DispatchBackend::FusedLowLatency => {
+            let mut sched = Schedule::default();
+            for node in 0..nodes {
+                let send = sched.push(Step {
+                    lane: Lane::Inter(node),
+                    label: "LL-S".to_string(),
+                    op: CollOp::Round { sharers: 1 },
+                    bytes: vol * backend.wire_factor(),
+                    domain: CommDomain::InterNode,
+                    deps: vec![],
+                });
+                sched.push(Step {
+                    lane: Lane::Intra(node),
+                    label: "LL-AG".to_string(),
+                    op: CollOp::AllGather { degree: tp },
+                    bytes: total_ag,
+                    domain: shape.tp_domain,
+                    deps: vec![send],
+                });
+            }
+            sched
+        }
+        DispatchBackend::AllGatherMask => {
+            let mut sched = Schedule::default();
+            for node in 0..nodes {
+                sched.push(Step {
+                    lane: Lane::Intra(node),
+                    label: "AGM-AG".to_string(),
+                    op: CollOp::AllGather { degree: rounds },
+                    bytes: rounds as f64 * send_bytes,
+                    domain: shape.ep_domain,
+                    deps: vec![],
+                });
+            }
+            sched
+        }
+    }
+}
+
+/// Backend-parameterized **RS-Combine** builder — the mirror of
+/// [`backend_dispatch_ir`]: `AllToAll` delegates to [`rs_combine_ir`]
+/// verbatim, the fused backends transform launch count at preserved
+/// send volume `(rounds−1)·blk_bytes`, and `AllGatherMask` is one
+/// monolithic reduce-scatter over the EP communicator followed by the
+/// TP replication all-gather.
+pub fn backend_combine_ir(
+    backend: DispatchBackend,
+    shape: &EpShape,
+    blk_bytes: f64,
+    ag_bytes: f64,
+) -> Schedule {
+    let (nodes, rounds, tp) = (shape.nodes, shape.rounds, shape.tp);
+    if rounds <= 1 || backend == DispatchBackend::AllToAll {
+        return rs_combine_ir(nodes, rounds, tp, blk_bytes, ag_bytes, shape.tp_domain);
+    }
+    let vol = (rounds - 1) as f64 * blk_bytes;
+    match backend {
+        DispatchBackend::AllToAll => unreachable!("delegated above"),
+        DispatchBackend::FusedHighThroughput => {
+            let launches = backend.launch_rounds(rounds - 1);
+            rs_combine_ir(
+                nodes,
+                launches + 1,
+                tp,
+                vol * backend.wire_factor() / launches as f64,
+                ag_bytes,
+                shape.tp_domain,
+            )
+        }
+        DispatchBackend::FusedLowLatency => {
+            let mut sched = Schedule::default();
+            for node in 0..nodes {
+                let rs = sched.push(Step {
+                    lane: Lane::Intra(node),
+                    label: "LL-RS".to_string(),
+                    op: CollOp::ReduceScatter { degree: tp },
+                    bytes: rounds as f64 * blk_bytes,
+                    domain: shape.tp_domain,
+                    deps: vec![],
+                });
+                let send = sched.push(Step {
+                    lane: Lane::Inter(node),
+                    label: "LL-S".to_string(),
+                    op: CollOp::Round { sharers: 1 },
+                    bytes: vol * backend.wire_factor(),
+                    domain: CommDomain::InterNode,
+                    deps: vec![rs],
+                });
+                sched.push(Step {
+                    lane: Lane::Intra(node),
+                    label: "LL-AG".to_string(),
+                    op: CollOp::AllGather { degree: tp },
+                    bytes: ag_bytes,
+                    domain: shape.tp_domain,
+                    deps: vec![send],
+                });
+            }
+            sched
+        }
+        DispatchBackend::AllGatherMask => {
+            let mut sched = Schedule::default();
+            for node in 0..nodes {
+                let rs = sched.push(Step {
+                    lane: Lane::Intra(node),
+                    label: "AGM-RS".to_string(),
+                    op: CollOp::ReduceScatter { degree: rounds },
+                    bytes: rounds as f64 * blk_bytes,
+                    domain: shape.ep_domain,
+                    deps: vec![],
+                });
+                sched.push(Step {
+                    lane: Lane::Intra(node),
+                    label: "AGM-AG".to_string(),
+                    op: CollOp::AllGather { degree: tp },
+                    bytes: ag_bytes,
+                    domain: shape.tp_domain,
+                    deps: vec![rs],
+                });
+            }
+            sched
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -478,5 +657,98 @@ mod tests {
         let b0 = played.trace.busy(&Lane::Intra(0));
         let b2 = played.trace.busy(&Lane::Intra(2));
         assert!((b0 - b2).abs() < 1e-15);
+    }
+
+    fn shape(rounds: usize, tp: usize) -> EpShape {
+        EpShape {
+            nodes: 1,
+            rounds,
+            tp,
+            tp_domain: CommDomain::IntraNode,
+            ep_domain: CommDomain::InterNode,
+        }
+    }
+
+    #[test]
+    fn backend_builders_with_alltoall_are_the_plain_builders() {
+        let c = cost();
+        let s = shape(8, 4);
+        let disp = backend_dispatch_ir(DispatchBackend::AllToAll, &s, 2e6, 2e6);
+        let want = ag_dispatch_ir(1, 8, 4, 2e6, 2e6, CommDomain::IntraNode);
+        assert_eq!(disp.steps.len(), want.steps.len());
+        assert_eq!(disp.makespans(&c), want.makespans(&c));
+        let comb = backend_combine_ir(DispatchBackend::AllToAll, &s, 2e6, 8e6);
+        let want = rs_combine_ir(1, 8, 4, 2e6, 8e6, CommDomain::IntraNode);
+        assert_eq!(comb.steps.len(), want.steps.len());
+        assert_eq!(comb.makespans(&c), want.makespans(&c));
+    }
+
+    #[test]
+    fn fused_backends_preserve_total_send_volume() {
+        for b in [
+            DispatchBackend::FusedLowLatency,
+            DispatchBackend::FusedHighThroughput,
+        ] {
+            let s = shape(32, 4);
+            let disp = backend_dispatch_ir(b, &s, 1e6, 1e6);
+            let sent: f64 = disp
+                .steps
+                .iter()
+                .filter(|st| matches!(st.op, CollOp::Round { .. }))
+                .map(|st| st.bytes)
+                .sum();
+            let want = 31.0 * 1e6 * b.wire_factor();
+            assert!(
+                (sent - want).abs() < 1e-3,
+                "{b}: sent {sent} vs routed {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn low_latency_is_launch_bound_high_throughput_is_wire_bound() {
+        let c = cost();
+        let s = shape(32, 4);
+        // tiny payload: α dominates — LL's single launch wins, A2A's 31
+        // launches lose
+        let tiny_a2a = backend_dispatch_ir(DispatchBackend::AllToAll, &s, 1e3, 1e3).makespans(&c).0;
+        let tiny_ll =
+            backend_dispatch_ir(DispatchBackend::FusedLowLatency, &s, 1e3, 1e3).makespans(&c).0;
+        assert!(tiny_ll < tiny_a2a, "α-bound: LL {tiny_ll} < A2A {tiny_a2a}");
+        // huge payload: wire dominates — LL pays the 2× RDMA derate, HT
+        // keeps full efficiency with far fewer launches than A2A
+        let big_a2a = backend_dispatch_ir(DispatchBackend::AllToAll, &s, 4e7, 4e7).makespans(&c).0;
+        let big_ll =
+            backend_dispatch_ir(DispatchBackend::FusedLowLatency, &s, 4e7, 4e7).makespans(&c).0;
+        let big_ht =
+            backend_dispatch_ir(DispatchBackend::FusedHighThroughput, &s, 4e7, 4e7).makespans(&c).0;
+        assert!(big_ll > big_a2a, "wire-bound: LL {big_ll} > A2A {big_a2a}");
+        assert!(big_ht < big_a2a, "wire-bound: HT {big_ht} < A2A {big_a2a}");
+    }
+
+    #[test]
+    fn agmask_is_one_collective_per_direction() {
+        let c = cost();
+        let s = shape(8, 4);
+        let disp = backend_dispatch_ir(DispatchBackend::AllGatherMask, &s, 2e6, 2e6);
+        assert_eq!(disp.steps.len(), 1);
+        assert!(matches!(disp.steps[0].op, CollOp::AllGather { degree: 8 }));
+        assert_eq!(disp.steps[0].domain, CommDomain::InterNode);
+        // monolithic collectives: nothing to overlap, async == sync
+        let (a, sy) = disp.makespans(&c);
+        assert!((a - sy).abs() < 1e-15);
+        let comb = backend_combine_ir(DispatchBackend::AllGatherMask, &s, 2e6, 8e6);
+        assert_eq!(comb.steps.len(), 2);
+        assert!(matches!(comb.steps[0].op, CollOp::ReduceScatter { degree: 8 }));
+    }
+
+    #[test]
+    fn backend_builders_collapse_at_degenerate_rounds() {
+        let c = cost();
+        for b in DispatchBackend::ALL {
+            let s = shape(1, 4);
+            let disp = backend_dispatch_ir(b, &s, 2e6, 2e6);
+            assert_eq!(disp.makespans(&c), (0.0, 0.0), "{b}: no peers, no sends");
+        }
     }
 }

@@ -1,0 +1,193 @@
+//! Backend-off identity pins: explicitly requesting the `AllToAll`
+//! dispatch backend must be bit-for-bit the engine with no backend
+//! mentioned at all — across the analyzer rankings, the serving-sim
+//! sample stream, and the fleet reports of all three architectures
+//! (colocated, chunked, disaggregated).  The searched dimension is
+//! strictly additive: pinning its default is a no-op, not a near-op.
+
+use mixserve::analyzer::indicators::Workload;
+use mixserve::analyzer::latency::CommMode;
+use mixserve::analyzer::search::{Analyzer, Objective};
+use mixserve::cluster::{
+    simulate_fleet, DisaggConfig, FleetConfig, ObsConfig, PhaseBackends, ReplicaTuning,
+    RoutingPolicy,
+};
+use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use mixserve::serving::scheduler::SchedPolicy;
+use mixserve::serving::sim::{run_rate_sched, run_rate_tuned};
+use mixserve::timing::{BackendPolicy, DispatchBackend};
+use mixserve::workload::TraceGen;
+
+#[test]
+fn pinned_default_reproduces_the_analyzer_rankings_bitwise() {
+    let model = MoEModelConfig::deepseek_r1();
+    let cluster = ClusterConfig::ascend910b();
+    let serving = ServingConfig::paper_eval(4.0);
+    let wl = Workload::sharegpt(4.0);
+    let plain = Analyzer::new(&model, &cluster, &serving);
+    let pinned = Analyzer::new(&model, &cluster, &serving)
+        .with_backend(BackendPolicy::Fixed(DispatchBackend::AllToAll));
+    for objective in [Objective::MinTtft, Objective::MinItl, Objective::MaxThroughput] {
+        let a = plain.rank(&wl, objective);
+        let b = pinned.rank(&wl, objective);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.strategy, y.strategy);
+            assert_eq!(x.backend, DispatchBackend::AllToAll);
+            assert_eq!(y.backend, DispatchBackend::AllToAll);
+            assert_eq!(x.indicators.ttft.to_bits(), y.indicators.ttft.to_bits());
+            assert_eq!(x.indicators.itl.to_bits(), y.indicators.itl.to_bits());
+            assert_eq!(x.indicators.throughput.to_bits(), y.indicators.throughput.to_bits());
+        }
+    }
+    let (a, b) = (plain.best_disagg(&wl), pinned.best_disagg(&wl));
+    let (a, b) = (a.expect("feasible"), b.expect("feasible"));
+    assert_eq!(a.prefill.strategy, b.prefill.strategy);
+    assert_eq!(a.decode.strategy, b.decode.strategy);
+    assert_eq!(a.handoff_secs.to_bits(), b.handoff_secs.to_bits());
+}
+
+#[test]
+fn pinned_default_reproduces_the_serving_sim_samples_bitwise() {
+    let model = MoEModelConfig::qwen3_235b();
+    let cluster = ClusterConfig::h20();
+    let strategy = ParallelStrategy::mixserve(2, 8);
+    // exercise the non-trivial engine dimensions too: skewed gates and
+    // the chunked scheduler must be untouched by the backend threading
+    for (skew, sched) in
+        [(0.0, SchedPolicy::Fcfs), (0.6, SchedPolicy::Chunked { quantum: 256 })]
+    {
+        let plain = run_rate_sched(
+            &model,
+            &cluster,
+            &strategy,
+            CommMode::FusedAsync,
+            4.0,
+            20.0,
+            7,
+            skew,
+            Default::default(),
+            sched,
+        );
+        let pinned = run_rate_tuned(
+            &model,
+            &cluster,
+            &strategy,
+            CommMode::FusedAsync,
+            4.0,
+            20.0,
+            7,
+            skew,
+            Default::default(),
+            sched,
+            DispatchBackend::AllToAll,
+        );
+        assert_eq!(plain.metrics.completed, pinned.metrics.completed);
+        assert_eq!(plain.metrics.ttft.values(), pinned.metrics.ttft.values());
+        assert_eq!(plain.metrics.itl.values(), pinned.metrics.itl.values());
+    }
+}
+
+#[test]
+fn pinned_default_reproduces_the_fleet_reports_across_all_three_architectures() {
+    let model = MoEModelConfig::deepseek_r1();
+    let pod = ClusterConfig::ascend910b();
+    let serving = ServingConfig::paper_eval(6.0);
+    let trace = TraceGen::sharegpt(6.0, serving.max_seq, 11).generate(15.0);
+    let strategy = ParallelStrategy::mixserve(4, 8);
+    let base = FleetConfig {
+        replicas: 2,
+        strategy,
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: None,
+        disagg: None,
+        sched: SchedPolicy::Fcfs,
+        obs: ObsConfig::default(),
+        controller: None,
+        tuning: ReplicaTuning::default(),
+    };
+    let explicit_tuning =
+        ReplicaTuning { backend: DispatchBackend::AllToAll, ..ReplicaTuning::default() };
+    // (implicit config, explicit AllToAll config) per architecture
+    let archs: Vec<(FleetConfig, FleetConfig)> = vec![
+        // colocated
+        (base.clone(), FleetConfig { tuning: explicit_tuning, ..base.clone() }),
+        // chunked colocated
+        (
+            FleetConfig { sched: SchedPolicy::Chunked { quantum: 256 }, ..base.clone() },
+            FleetConfig {
+                sched: SchedPolicy::Chunked { quantum: 256 },
+                tuning: explicit_tuning,
+                ..base.clone()
+            },
+        ),
+        // disaggregated
+        (
+            FleetConfig {
+                disagg: Some(DisaggConfig {
+                    prefill_replicas: 1,
+                    decode_replicas: 1,
+                    prefill_strategy: strategy,
+                    decode_strategy: strategy,
+                    backends: PhaseBackends::default(),
+                }),
+                ..base.clone()
+            },
+            FleetConfig {
+                disagg: Some(DisaggConfig {
+                    prefill_replicas: 1,
+                    decode_replicas: 1,
+                    prefill_strategy: strategy,
+                    decode_strategy: strategy,
+                    backends: PhaseBackends {
+                        prefill: DispatchBackend::AllToAll,
+                        decode: DispatchBackend::AllToAll,
+                    },
+                }),
+                tuning: explicit_tuning,
+                ..base.clone()
+            },
+        ),
+    ];
+    for (implicit, explicit) in &archs {
+        let a = simulate_fleet(&model, &pod, implicit, &serving, &trace, 11);
+        let b = simulate_fleet(&model, &pod, explicit, &serving, &trace, 11);
+        assert_eq!(a.metrics.completed, b.metrics.completed);
+        assert_eq!(a.metrics.rejected, b.metrics.rejected);
+        assert_eq!(a.metrics.ttft.values(), b.metrics.ttft.values());
+        assert_eq!(a.metrics.itl.values(), b.metrics.itl.values());
+        assert_eq!(a.kv_handoff.values(), b.kv_handoff.values());
+    }
+}
+
+#[test]
+fn non_default_backend_actually_changes_the_engine() {
+    // the dual of the identity pins: the threading is live, not
+    // decorative — a non-default backend must move the sample stream
+    let model = MoEModelConfig::deepseek_r1();
+    let cluster = ClusterConfig::ascend910b();
+    let strategy = ParallelStrategy::mixserve(4, 8);
+    let run = |backend| {
+        run_rate_tuned(
+            &model,
+            &cluster,
+            &strategy,
+            CommMode::FusedAsync,
+            4.0,
+            20.0,
+            7,
+            0.0,
+            Default::default(),
+            SchedPolicy::Fcfs,
+            backend,
+        )
+    };
+    let a2a = run(DispatchBackend::AllToAll);
+    let ll = run(DispatchBackend::FusedLowLatency);
+    assert_ne!(
+        a2a.metrics.ttft.values(),
+        ll.metrics.ttft.values(),
+        "fused-ll must reshape the iteration times"
+    );
+}

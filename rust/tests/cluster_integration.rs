@@ -26,6 +26,7 @@ fn fleet_cfg(replicas: usize, policy: RoutingPolicy, slo: Option<SloPolicy>) -> 
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
         controller: None,
+        tuning: Default::default(),
     }
 }
 

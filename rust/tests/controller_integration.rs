@@ -37,6 +37,7 @@ fn base_cfg(replicas: usize, strategy: ParallelStrategy) -> FleetConfig {
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
         controller: None,
+        tuning: Default::default(),
     }
 }
 
@@ -126,6 +127,7 @@ fn prop_no_request_lost_or_duplicated_across_arbitrary_control_storms() {
                         decode_replicas: replicas - prefill,
                         prefill_strategy: g.prefill_strategy,
                         decode_strategy: g.decode_strategy,
+                        backends: Default::default(),
                     });
                 }
                 _ => {}
@@ -202,6 +204,7 @@ fn scripted_flip_lands_in_a_real_run_and_both_loops_agree() {
         decode_replicas: 2,
         prefill_strategy: g.prefill_strategy,
         decode_strategy: g.decode_strategy,
+        backends: Default::default(),
     });
     cfg.controller = Some(ControllerConfig::scripted(
         1.0,
@@ -237,6 +240,7 @@ fn parked_spares_wake_under_the_rate_driven_resize_and_requests_survive() {
         decode_replicas: 1,
         prefill_strategy: g.prefill_strategy,
         decode_strategy: g.decode_strategy,
+        backends: Default::default(),
     });
     let mut ctl = ControllerConfig::new(1.0);
     ctl.max_replicas = 4;

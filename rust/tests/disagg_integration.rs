@@ -105,6 +105,7 @@ fn disagg_beats_colocated_ttft_p99_under_prompt_heavy_load() {
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
         controller: None,
+        tuning: Default::default(),
     };
     let colo = simulate_fleet(&model, &pod, &base, &serving, &trace, 17);
     let dis_cfg = FleetConfig {
@@ -113,6 +114,7 @@ fn disagg_beats_colocated_ttft_p99_under_prompt_heavy_load() {
             decode_replicas: 1,
             prefill_strategy: pair.prefill.strategy,
             decode_strategy: pair.decode.strategy,
+            backends: Default::default(),
         }),
         ..base
     };
@@ -175,6 +177,7 @@ fn one_replica_colocated_fleet_reproduces_the_serving_sim_exactly() {
             sched: SchedPolicy::Fcfs,
             obs: ObsConfig::default(),
             controller: None,
+            tuning: Default::default(),
         },
         &serving,
         &trace,
@@ -207,10 +210,12 @@ fn disagg_fleet_is_deterministic() {
             decode_replicas: 1,
             prefill_strategy: mixserve::config::ParallelStrategy::mixserve(2, 8),
             decode_strategy: mixserve::config::ParallelStrategy::mixserve(2, 8),
+            backends: Default::default(),
         }),
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
         controller: None,
+        tuning: Default::default(),
     };
     let a = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 5);
     let b = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 5);

@@ -101,6 +101,7 @@ fn colocated(replicas: usize, strategy: ParallelStrategy) -> FleetConfig {
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
         controller: None,
+        tuning: Default::default(),
     }
 }
 
@@ -110,6 +111,7 @@ fn one_p_one_d() -> DisaggConfig {
         decode_replicas: 1,
         prefill_strategy: ParallelStrategy::mixserve(4, 8),
         decode_strategy: ParallelStrategy::pure_ep(4, 8),
+        backends: Default::default(),
     }
 }
 
@@ -212,6 +214,7 @@ fn prop_engine_matches_legacy_on_random_small_fleets() {
                         decode_replicas: replicas - prefill,
                         prefill_strategy: pair.prefill.strategy,
                         decode_strategy: pair.decode.strategy,
+                        backends: Default::default(),
                     });
                 }
                 _ => {}

@@ -36,6 +36,7 @@ fn fleet_cfg(arch: Arch, obs: ObsConfig, slo: Option<SloPolicy>) -> FleetConfig 
                 decode_replicas: 1,
                 prefill_strategy: ParallelStrategy::mixserve(4, 8),
                 decode_strategy: ParallelStrategy::pure_ep(4, 8),
+                backends: Default::default(),
             }),
             _ => None,
         },
@@ -45,6 +46,7 @@ fn fleet_cfg(arch: Arch, obs: ObsConfig, slo: Option<SloPolicy>) -> FleetConfig 
         },
         obs,
         controller: None,
+        tuning: Default::default(),
     }
 }
 

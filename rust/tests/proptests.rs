@@ -816,3 +816,47 @@ fn prop_overlap_saving_bounded_by_moe_time() {
         },
     );
 }
+
+#[test]
+fn prop_alltoall_backend_is_a_bitwise_noop_and_every_backend_prices_finite() {
+    // the backend-off identity pin, randomized: binding the default
+    // backend explicitly never moves a single bit of the pricing, and
+    // every non-default backend still prices finite positive service
+    // latency over the whole strategy grammar
+    use mixserve::timing::DispatchBackend;
+    let model = MoEModelConfig::deepseek_r1();
+    let cluster = ClusterConfig::ascend910b();
+    let strategies = enumerate_strategies(&cluster);
+    forall(
+        "set_backend(a2a) == default, all backends finite",
+        30,
+        83,
+        |r: &mut Rng| {
+            let si = r.below(strategies.len());
+            let batch = 1 + r.below(32);
+            let seq = 16 + r.below(3072);
+            let prefill = r.below(2) == 0;
+            (si, batch, seq, prefill)
+        },
+        |&(si, batch, seq, prefill)| {
+            let s = &strategies[si];
+            let phase = if prefill { Phase::Prefill } else { Phase::Decode };
+            let plain = LatencyModel::new(&model, &cluster);
+            let pinned = LatencyModel::new(&model, &cluster)
+                .with_backend(DispatchBackend::AllToAll);
+            let a = plain.service_latency(s, batch, seq, phase, CommMode::FusedAsync).total();
+            let b = pinned.service_latency(s, batch, seq, phase, CommMode::FusedAsync).total();
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("{s}: pinned a2a moved the pricing {a} -> {b}"));
+            }
+            for backend in DispatchBackend::ALL {
+                let lm = LatencyModel::new(&model, &cluster).with_backend(backend);
+                let t = lm.service_latency(s, batch, seq, phase, CommMode::FusedAsync).total();
+                if !t.is_finite() || t <= 0.0 {
+                    return Err(format!("{s} under {} priced {t}", backend.label()));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -165,6 +165,7 @@ fn chunked_fleet_drains_deterministically() {
         sched: SchedPolicy::Chunked { quantum: 256 },
         obs: ObsConfig::default(),
         controller: None,
+        tuning: Default::default(),
     };
     let a = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 19);
     let b = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 19);
@@ -199,10 +200,12 @@ fn two_stage_admission_sheds_under_decode_bound_overload() {
             decode_replicas: 1,
             prefill_strategy: ParallelStrategy::mixserve(4, 8),
             decode_strategy: ParallelStrategy::mixserve(4, 8),
+            backends: Default::default(),
         }),
         sched: SchedPolicy::Fcfs,
         obs: ObsConfig::default(),
         controller: None,
+        tuning: Default::default(),
     };
     let rep = simulate_fleet(&model, &pod, &cfg, &serving, &trace, 3);
     assert_eq!(rep.metrics.completed + rep.metrics.rejected, n, "books balance");
