@@ -23,6 +23,8 @@ use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingC
 use mixserve::cluster::engine::TransitQueue;
 use mixserve::cluster::{simulate_fleet, FleetConfig, ObsConfig, RoutingPolicy};
 use mixserve::moe::router::RouterSim;
+use mixserve::moe::ExpertPlacement;
+use mixserve::timing::ExpertLoadProfile;
 use mixserve::pipeline::{HybridStage, MAX_CHUNKS};
 use mixserve::serving::batcher::{Batcher, BatcherConfig};
 use mixserve::serving::kvcache::KvCacheManager;
@@ -148,6 +150,24 @@ fn main() {
     let mut router_ref = RouterSim::new(256, 8, 0.8, 1);
     b.run("router route_batch 512tok (reference)", || {
         router_ref.route_batch_reference(512).len()
+    });
+
+    // --- placement optimizer: LPT + hot-expert replication over a
+    //     zipf-skewed 256-expert profile at EP=32 (the controller's
+    //     window-close hot path)
+    let placement_profile = ExpertLoadProfile::zipf(256, 8, 1.2, 17);
+    b.run("placement rebalance 256e ep32 budget2", || {
+        ExpertPlacement::rebalanced(&placement_profile, 32, 2)
+            .expect("256 divides 32")
+            .extra_copies()
+    });
+    let rebalanced = ExpertPlacement::rebalanced(&placement_profile, 32, 2).expect("divisible");
+    b.run("placement rank_loads 256e ep32 x100", || {
+        let mut acc = 0.0f64;
+        for _ in 0..100 {
+            acc += rebalanced.hot_factor(&placement_profile);
+        }
+        acc
     });
 
     // --- analyzer full search (77 strategies on the 4×8 grid)

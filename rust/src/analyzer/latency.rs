@@ -349,7 +349,7 @@ impl<C: CommCost> LatencyModel<C> {
             // no routing dedup either — and skew-immune, since every
             // rank gathers everything regardless of expert popularity.
             // The strided tp×ep group spans nodes iff tp·ep does.
-            agmask_exchange_time(c, global_bytes, ep, c.domain_of(tp * ep))
+            agmask_exchange_time(c, global_bytes, ep, tp * ep, c.domain_of(tp * ep))
         } else if tp == 1 {
             // pure EP: rank-granular dispatch/combine.  Every *distinct
             // activated rank* receives its own copy of the token's hidden

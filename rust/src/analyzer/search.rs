@@ -16,6 +16,7 @@ use super::memory::{check_memory, MemoryCheck};
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::grammar::enumerate_strategies;
+use crate::moe::PlacementPolicy;
 use crate::pipeline::PipelineCfg;
 use crate::serving::scheduler::SchedPolicy;
 use crate::timing::{
@@ -89,6 +90,12 @@ pub struct Analyzer<C: CommCost = CollectiveCost> {
     /// ranking bit-for-bit; `Auto` searches the backend jointly with
     /// the strategy)
     pub backend: BackendPolicy,
+    /// how experts are laid out across EP ranks: `Static` (the default)
+    /// prices the contiguous layout bit-for-bit as before; `Rebalanced`
+    /// re-derives each candidate's hot factor from the LPT-replicated
+    /// placement at that candidate's EP degree, so "rebalance at this
+    /// EP" competes with "drop to a lower EP" on priced merit
+    pub placement: PlacementPolicy,
 }
 
 impl Analyzer<CollectiveCost> {
@@ -102,6 +109,7 @@ impl Analyzer<CollectiveCost> {
             load: ExpertLoadProfile::uniform(model.n_experts),
             pipeline: PipelineCfg::Off,
             backend: BackendPolicy::default(),
+            placement: PlacementPolicy::default(),
         }
     }
 }
@@ -123,6 +131,7 @@ impl<C: CommCost> Analyzer<C> {
             load: self.load,
             pipeline: self.pipeline,
             backend: self.backend,
+            placement: self.placement,
         }
     }
 
@@ -140,6 +149,16 @@ impl<C: CommCost> Analyzer<C> {
     /// the same key the entry point ranks by.
     pub fn with_backend(mut self, backend: BackendPolicy) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Choose the expert-placement policy: `Static` leaves every
+    /// candidate priced at the contiguous layout (bit-for-bit the
+    /// pre-placement ranking); `Rebalanced { budget }` runs the LPT
+    /// rebalancer per candidate EP degree and prices the flattened
+    /// hot factor instead.
+    pub fn with_placement(mut self, placement: PlacementPolicy) -> Self {
+        self.placement = placement;
         self
     }
 
@@ -169,6 +188,9 @@ impl<C: CommCost> Analyzer<C> {
         let mut lm = LatencyModel::with_cost(&self.model, &self.cluster, self.cost.clone())
             .with_load(self.load.clone())
             .with_pipeline(self.pipeline);
+        if !self.placement.is_pinned_default() {
+            lm.set_load(self.placement.placed_profile(&self.load, s.moe.ep));
+        }
         let memory = check_memory(
             &self.model,
             &self.cluster,
@@ -213,11 +235,21 @@ impl<C: CommCost> Analyzer<C> {
             .with_load(self.load.clone())
             .with_pipeline(self.pipeline);
         let candidates = self.backend.candidates();
+        // One rebalance per distinct EP degree across the whole grammar
+        // (the optimizer is deterministic, so the cache is exact).
+        let mut placed_cache: std::collections::HashMap<usize, ExpertLoadProfile> =
+            std::collections::HashMap::new();
         let mut reports: Vec<StrategyReport> = Vec::new();
         for s in enumerate_strategies(&self.cluster)
             .iter()
             .filter(|s| s.total_devices() == self.cluster.total_devices())
         {
+            if !self.placement.is_pinned_default() {
+                let placed = placed_cache
+                    .entry(s.moe.ep)
+                    .or_insert_with(|| self.placement.placed_profile(&self.load, s.moe.ep));
+                lm.set_load(placed.clone());
+            }
             let memory = check_memory(
                 &self.model,
                 &self.cluster,
@@ -624,6 +656,57 @@ mod tests {
         }
         let s = a.best(&wl, Objective::MinItl).unwrap().strategy;
         assert_eq!(a.report(&s, &wl).backend, DispatchBackend::FusedLowLatency);
+    }
+
+    #[test]
+    fn static_placement_policy_is_the_identity() {
+        // the explicit Static knob must not perturb a single bit of the
+        // skew-aware ranking
+        let a = setup(ClusterConfig::ascend910b()).with_load_skew(0.8);
+        let wl = Workload::sharegpt(4.0);
+        let plain = a.clone().rank(&wl, Objective::MaxThroughput);
+        let pinned = a.with_placement(PlacementPolicy::Static).rank(&wl, Objective::MaxThroughput);
+        assert_eq!(plain.len(), pinned.len());
+        for (p, q) in plain.iter().zip(&pinned) {
+            assert_eq!(p.strategy, q.strategy);
+            assert_eq!(p.indicators.ttft.to_bits(), q.indicators.ttft.to_bits());
+            assert_eq!(p.indicators.throughput.to_bits(), q.indicators.throughput.to_bits());
+        }
+    }
+
+    #[test]
+    fn rebalanced_placement_never_degrades_any_candidate() {
+        // the rebalancer's hot factor is ≤ the static one at every EP
+        // degree (contiguous fallback), and latency is monotone in the
+        // hot factor — so no candidate's throughput may drop, and on a
+        // heavily skewed profile the high-EP candidates must strictly
+        // improve
+        let a = setup(ClusterConfig::ascend910b()).with_load_skew(1.2);
+        let wl = Workload::sharegpt(4.0);
+        let plain = a.clone().rank(&wl, Objective::MaxThroughput);
+        let opened = a
+            .with_placement(PlacementPolicy::Rebalanced { budget: 2 })
+            .rank(&wl, Objective::MaxThroughput);
+        // flattening λ can only widen the feasible set, never shrink it
+        assert!(opened.len() >= plain.len());
+        let mut improved = false;
+        for p in &plain {
+            let q = opened
+                .iter()
+                .find(|q| q.strategy == p.strategy)
+                .expect("every static-feasible strategy stays feasible rebalanced");
+            assert!(
+                q.indicators.throughput >= p.indicators.throughput * (1.0 - 1e-12),
+                "{}: rebalanced throughput {} < static {}",
+                p.strategy,
+                q.indicators.throughput,
+                p.indicators.throughput
+            );
+            if p.strategy.moe.ep > 1 && q.indicators.throughput > p.indicators.throughput {
+                improved = true;
+            }
+        }
+        assert!(improved, "rebalancing never improved any EP candidate at zipf 1.2");
     }
 
     #[test]

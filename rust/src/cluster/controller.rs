@@ -35,7 +35,9 @@
 //! bit-for-bit the PR 8 behavior (the hook is never entered).
 
 use super::replica::{ReplicaSim, ReplicaState, Role};
+use crate::moe::ExpertPlacement;
 use crate::obs::TelemetryBuilder;
+use crate::timing::ExpertLoadProfile;
 
 /// One controller actuation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +48,9 @@ pub enum ControlAction {
     Park,
     /// Wake a parked replica into this role (scale-up).
     Activate(Role),
+    /// Swap in a re-optimized expert placement (no drain — the replica
+    /// keeps serving, stalled one weight-copy interval).
+    Rebalance,
 }
 
 /// A scripted directive: apply `action` to `replica` at the first
@@ -89,6 +94,31 @@ pub struct ControllerConfig {
     pub reactive: bool,
     /// Scripted directives, applied in order of their ticks.
     pub directives: Vec<Directive>,
+    /// Online expert-placement rebalancing (DESIGN.md §Placement);
+    /// `None` — the default — leaves every run byte-identical to a
+    /// controller without the feature.
+    pub rebalance: Option<RebalanceCfg>,
+}
+
+/// Knobs for the online placement-rebalance trigger.  At every window
+/// close the controller reads each routable EP>1 replica's measured
+/// per-expert loads (accumulated since the previous close); when the
+/// placement-aware hot factor exceeds `threshold`, it swaps in an
+/// [`ExpertPlacement::rebalanced`] layout and stalls the replica
+/// `copy_secs_per_move` seconds per newly hosted expert copy — the
+/// priced weight-copy cost of shipping replicas over the interconnect.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RebalanceCfg {
+    /// Measured hot factor (max/mean per-rank load) above which the
+    /// current layout is considered drifted.
+    pub threshold: f64,
+    /// Replication budget handed to the optimizer: extra expert copies
+    /// allowed per rank (HBM for throughput).
+    pub budget: usize,
+    /// Stall seconds charged per expert copy the new layout hosts that
+    /// the old one did not (weight bytes / interconnect bandwidth —
+    /// the fleet builder prices this from the model and cost backend).
+    pub copy_secs_per_move: f64,
 }
 
 impl ControllerConfig {
@@ -105,6 +135,7 @@ impl ControllerConfig {
             rho_per_rate: None,
             reactive: true,
             directives: Vec::new(),
+            rebalance: None,
         }
     }
 
@@ -133,6 +164,8 @@ pub struct ControllerReport {
     pub flips: usize,
     pub grows: usize,
     pub shrinks: usize,
+    /// Placement swaps triggered by measured router-skew drift.
+    pub rebalances: usize,
     /// Active replicas when the run ended.
     pub final_active: usize,
 }
@@ -180,6 +213,7 @@ pub struct Controller {
     flips: usize,
     grows: usize,
     shrinks: usize,
+    rebalances: usize,
 }
 
 impl Controller {
@@ -195,6 +229,7 @@ impl Controller {
             flips: 0,
             grows: 0,
             shrinks: 0,
+            rebalances: 0,
         }
     }
 
@@ -249,6 +284,76 @@ impl Controller {
             changed = true;
             self.pools.recompute(replicas);
         }
+
+        // (4) placement rebalance from the window's measured skew —
+        // orthogonal to role moves (no pool change, no cooldown: the
+        // weight-copy stall is its own damper)
+        if let Some(rb) = self.cfg.rebalance {
+            if self.rebalance_skew(tick, window, rb, replicas) {
+                changed = true;
+            }
+        }
+        changed
+    }
+
+    /// Step (4) of the window-close hook: for every routable EP>1
+    /// replica, read the loads measured since the last close; when the
+    /// hot factor under the *current* layout drifted past the
+    /// threshold, swap in a re-optimized placement, stalling the
+    /// replica one priced weight-copy interval per new expert copy.
+    fn rebalance_skew(
+        &mut self,
+        tick: usize,
+        window: f64,
+        rb: RebalanceCfg,
+        replicas: &mut [ReplicaSim],
+    ) -> bool {
+        let mut changed = false;
+        for i in 0..replicas.len() {
+            let r = &mut replicas[i];
+            // draining first keeps every decision one window wide,
+            // even for replicas this tick skips
+            let loads = r.drain_window_loads();
+            let ep = r.strategy().moe.ep;
+            if !r.is_routable() || ep <= 1 || loads.iter().sum::<usize>() == 0 {
+                continue;
+            }
+            let profile = ExpertLoadProfile::from_loads(&loads, r.gate_skew());
+            let measured = match r.placement() {
+                Some(p) => p.hot_factor(&profile),
+                None => profile.hot_factor(ep),
+            };
+            if !(measured > rb.threshold) {
+                continue;
+            }
+            let Ok(placed) = ExpertPlacement::rebalanced(&profile, ep, rb.budget) else {
+                continue;
+            };
+            // only swap when the optimizer actually flattens the
+            // measured window — a drifted-but-unfixable skew is not
+            // worth a copy stall
+            if placed.hot_factor(&profile) >= measured * (1.0 - 1e-9) {
+                continue;
+            }
+            let base = match r.placement() {
+                Some(p) => p.clone(),
+                None => match ExpertPlacement::new(placed.n_experts, ep) {
+                    Ok(p) => p,
+                    Err(_) => continue,
+                },
+            };
+            let t = tick as f64 * window;
+            let stall = t + placed.copies_from(&base) as f64 * rb.copy_secs_per_move;
+            r.apply_placement(placed, stall);
+            self.rebalances += 1;
+            self.events.push(ControlEvent {
+                tick,
+                t,
+                replica: i,
+                action: ControlAction::Rebalance,
+            });
+            changed = true;
+        }
         changed
     }
 
@@ -300,6 +405,8 @@ impl Controller {
                         }
                     }
             }
+            // rebalances are actuated by the skew step, never scripted
+            ControlAction::Rebalance => false,
         };
         if !valid {
             return false;
@@ -317,6 +424,7 @@ impl Controller {
                 replicas[i].activate(role);
                 self.grows += 1;
             }
+            ControlAction::Rebalance => return false, // unreachable: valid is false above
         }
         self.events.push(ControlEvent { tick, t: tick as f64 * window, replica: i, action });
         true
@@ -456,6 +564,7 @@ impl Controller {
             flips: self.flips,
             grows: self.grows,
             shrinks: self.shrinks,
+            rebalances: self.rebalances,
             final_active: replicas.iter().filter(|r| r.is_routable()).count(),
         }
     }
@@ -467,6 +576,7 @@ mod tests {
     use crate::analyzer::latency::CommMode;
     use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
     use crate::obs::ReplicaSnapshot;
+    use crate::workload::Request;
 
     fn fleet(roles: &[Role]) -> Vec<ReplicaSim> {
         roles
@@ -596,6 +706,70 @@ mod tests {
             .collect();
         assert_eq!(draining, vec![1], "the lightest (lowest-index) decode member flips");
         assert_eq!(ctl.pools().decode, vec![2], "the drainer left the pool immediately");
+    }
+
+    /// A heavily skewed, load-tracked colocated replica that has served
+    /// a burst — its measured window loads carry the drifted skew the
+    /// rebalance trigger reads.
+    fn skewed_tracked_replica() -> ReplicaSim {
+        let mut r = ReplicaSim::with_skew(
+            &MoEModelConfig::tiny(),
+            &ClusterConfig::localhost(2, 4),
+            &ParallelStrategy::mixserve(2, 4),
+            &ServingConfig::paper_eval(4.0),
+            CommMode::FusedAsync,
+            3,
+            0,
+            1.2,
+        );
+        r.enable_load_tracking();
+        for id in 0..8 {
+            r.submit(Request { id, arrival: 0.0, len_in: 512, len_out: 8 });
+        }
+        let mut now = 0.0;
+        while let Some(t) = r.step(now) {
+            now = t;
+        }
+        r
+    }
+
+    fn rebalance_cfg(threshold: f64) -> ControllerConfig {
+        ControllerConfig {
+            reactive: false,
+            rebalance: Some(RebalanceCfg { threshold, budget: 1, copy_secs_per_move: 1000.0 }),
+            ..ControllerConfig::new(1.0)
+        }
+    }
+
+    #[test]
+    fn measured_skew_drift_triggers_a_priced_rebalance() {
+        let mut replicas = vec![skewed_tracked_replica()];
+        let mut ctl = Controller::new(rebalance_cfg(1.05), &replicas);
+        let mut tb = builder(&[Role::Colocated]);
+        tb.roll(1.0, &snaps(&[0], 1), 0.0, 0);
+        assert!(ctl.on_windows_closed(&mut replicas, &tb));
+        assert!(replicas[0].placement().is_some(), "optimized layout installed");
+        assert!(replicas[0].drain_window_loads().is_empty(), "window loads were consumed");
+        // the stall prices the weight copy: with ≥1 new expert copy at
+        // 1000 s each, the next iteration cannot start before t=1001
+        replicas[0].submit(Request { id: 99, arrival: 0.0, len_in: 128, len_out: 4 });
+        let t = replicas[0].step(0.0).expect("work restarted");
+        assert!(t > 1000.0, "weight-copy stall must gate the restart: {t}");
+        let rep = ctl.finish(&replicas);
+        assert_eq!(rep.rebalances, 1);
+        assert!(matches!(rep.events.last(), Some(e) if e.action == ControlAction::Rebalance));
+    }
+
+    #[test]
+    fn skew_below_threshold_leaves_the_layout_alone() {
+        let mut replicas = vec![skewed_tracked_replica()];
+        let mut ctl = Controller::new(rebalance_cfg(1e9), &replicas);
+        let mut tb = builder(&[Role::Colocated]);
+        tb.roll(1.0, &snaps(&[0], 1), 0.0, 0);
+        assert!(!ctl.on_windows_closed(&mut replicas, &tb));
+        assert!(replicas[0].placement().is_none());
+        assert!(replicas[0].drain_window_loads().is_empty(), "the window still resets");
+        assert_eq!(ctl.finish(&replicas).rebalances, 0);
     }
 
     #[test]

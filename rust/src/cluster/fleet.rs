@@ -24,7 +24,7 @@ use crate::obs::{self, FleetTelemetry, ObsConfig, ReplicaSnapshot, SpanKind, Tel
 use crate::pipeline::PipelineCfg;
 use crate::serving::metrics::ServingMetrics;
 use crate::serving::scheduler::SchedPolicy;
-use crate::timing::{kv_handoff_secs, DispatchBackend};
+use crate::timing::{kv_handoff_secs, CommCost, DispatchBackend};
 use crate::util::stats::Series;
 use crate::workload::Request;
 
@@ -40,6 +40,11 @@ pub struct ReplicaTuning {
     pub skew: f64,
     pub pipeline: PipelineCfg,
     pub backend: DispatchBackend,
+    /// scheduled router drift `(time, offset)`: at the first iteration
+    /// starting at or after `time`, every router's popularity ranking
+    /// rotates by `offset` experts — the "hot expert migrates
+    /// mid-trace" scenario.  `None` (the default) changes nothing.
+    pub drift: Option<(f64, usize)>,
 }
 
 /// Per-phase dispatch backends of a disaggregated fleet — the two pools
@@ -180,6 +185,7 @@ fn build_fleet(
         let r = base
             .with_pipeline(cfg.tuning.pipeline)
             .with_backend(backend)
+            .with_drift(cfg.tuning.drift)
             .with_slo_deadline(cfg.slo.map(|s| s.ttft_deadline));
         if cfg.obs.trace {
             r.with_tracing()
@@ -290,7 +296,24 @@ fn build_fleet(
             cfg.slo.is_some(),
         )
     });
-    let controller = cfg.controller.clone().map(|c| Controller::new(c, &replicas));
+    // a rebalancing controller needs the replicas measuring their
+    // per-window expert loads, and its weight-copy stall priced: one
+    // expert's weights over the inter-node NIC (the controller itself
+    // stays model-free).  An explicit positive copy_secs_per_move wins.
+    let mut controller_cfg = cfg.controller.clone();
+    if let Some(rb) = controller_cfg.as_mut().and_then(|c| c.rebalance.as_mut()) {
+        for r in replicas.iter_mut() {
+            r.enable_load_tracking();
+        }
+        if rb.copy_secs_per_move <= 0.0 {
+            let per_expert_bytes = (model.moe_params_per_layer()
+                / (model.n_experts.max(1) as u64))
+                .saturating_mul(model.dtype_bytes as u64)
+                .saturating_mul(model.n_layers as u64);
+            rb.copy_secs_per_move = handoff_cost.kv_transfer(per_expert_bytes as f64, 1);
+        }
+    }
+    let controller = controller_cfg.map(|c| Controller::new(c, &replicas));
     FleetSetup { replicas, dispatcher, handoff_cost, admission, fleet_trace, telemetry, controller }
 }
 

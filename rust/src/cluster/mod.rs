@@ -53,7 +53,7 @@ pub mod sweep;
 pub use admission::{AdmissionController, SloPolicy};
 pub use controller::{
     ControlAction, ControlEvent, Controller, ControllerConfig, ControllerReport, Directive,
-    LivePools,
+    LivePools, RebalanceCfg,
 };
 pub use dispatch::{Dispatcher, RoutingPolicy};
 pub use fleet::{

@@ -24,6 +24,7 @@ use crate::analyzer::search::{
 };
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
+use crate::moe::PlacementPolicy;
 use crate::pipeline::PipelineCfg;
 use crate::serving::scheduler::SchedPolicy;
 use crate::timing::{
@@ -195,6 +196,11 @@ pub struct FleetPlanner<C: CommCost = CollectiveCost> {
     /// planner bit-for-bit; `Auto` searches the backend per pod, and
     /// per phase for disaggregated pools)
     pub backend: BackendPolicy,
+    /// expert-placement policy handed to every per-pod analyzer
+    /// (`Static` — the default — reproduces the contiguous-layout
+    /// planner bit-for-bit; `Rebalanced` lets every pod's search weigh
+    /// "rebalance at this EP degree" against "drop to a lower EP")
+    pub placement: PlacementPolicy,
     /// request-shape override `(len_in, len_out)` for every search;
     /// None = the ShareGPT averages (the historical behavior)
     pub shape: Option<(usize, usize)>,
@@ -211,6 +217,7 @@ impl FleetPlanner<CollectiveCost> {
             skew: 0.0,
             pipeline: PipelineCfg::Off,
             backend: BackendPolicy::default(),
+            placement: PlacementPolicy::default(),
             shape: None,
         }
     }
@@ -242,6 +249,15 @@ impl<C: CommCost> FleetPlanner<C> {
         self
     }
 
+    /// Re-rank the joint search under an expert-placement policy
+    /// (`Rebalanced` makes the expert layout a searched dimension of
+    /// every pod: hot profiles are flattened by the LPT rebalancer
+    /// before pricing).
+    pub fn with_placement(mut self, placement: PlacementPolicy) -> Self {
+        self.placement = placement;
+        self
+    }
+
     /// Search for a specific request shape instead of the ShareGPT
     /// averages (builder style) — how a prompt- or decode-heavy mix is
     /// fed to the architecture search.
@@ -269,6 +285,7 @@ impl<C: CommCost> FleetPlanner<C> {
             skew: self.skew,
             pipeline: self.pipeline,
             backend: self.backend,
+            placement: self.placement,
             shape: self.shape,
         }
     }
@@ -295,7 +312,8 @@ impl<C: CommCost> FleetPlanner<C> {
                     .with_mode(self.mode)
                     .with_load(load.clone())
                     .with_pipeline(self.pipeline)
-                    .with_backend(self.backend);
+                    .with_backend(self.backend)
+                    .with_placement(self.placement);
                 let wl = self.workload(rate / r as f64);
                 if let Some(best) = analyzer.best(&wl, Objective::MaxThroughput) {
                     out.push(FleetPlan {
@@ -427,7 +445,8 @@ impl<C: CommCost> FleetPlanner<C> {
                     .with_mode(self.mode)
                     .with_load(load.clone())
                     .with_pipeline(self.pipeline)
-                    .with_backend(self.backend);
+                    .with_backend(self.backend)
+                    .with_placement(self.placement);
                 let wl = self.workload(rate / r as f64);
                 if let Some(best) = analyzer.best_sched(&wl, sched) {
                     out.push(SchedPlan {
@@ -547,7 +566,8 @@ impl<C: CommCost> FleetPlanner<C> {
                     .with_mode(self.mode)
                     .with_load(load.clone())
                     .with_pipeline(self.pipeline)
-                    .with_backend(self.backend);
+                    .with_backend(self.backend)
+                    .with_placement(self.placement);
                 let wl = Workload { rate: rate / r as f64, ..*base };
                 if let Some(best) = analyzer.best_phase(&wl, phase) {
                     out.push((r, pod, best));
@@ -923,6 +943,31 @@ mod tests {
         let disagg = p.render_disagg(8.0);
         // every listed pool prints its priced backend label
         assert!(disagg.contains('['), "{disagg}");
+    }
+
+    #[test]
+    fn rebalance_aware_planner_never_promises_less_throughput() {
+        // the rebalancer only flattens λ (contiguous fallback caps the
+        // hot factor at the static value), so opening the placement
+        // dimension at heavy skew cannot lower the fleet optimum — and
+        // it must recover part of what skew pricing took away
+        let model = MoEModelConfig::qwen3_235b;
+        let static_plans = planner(model()).with_skew(1.2).plan(8.0);
+        let rebalanced = planner(model())
+            .with_skew(1.2)
+            .with_placement(PlacementPolicy::Rebalanced { budget: 2 })
+            .plan(8.0);
+        let best_static = static_plans.first().expect("feasible").total_throughput;
+        let best_reb = rebalanced.first().expect("feasible").total_throughput;
+        assert!(
+            best_reb >= best_static * (1.0 - 1e-9),
+            "rebalanced fleet optimum {best_reb} below static {best_static}"
+        );
+        let uniform = planner(model()).plan(8.0).first().expect("feasible").total_throughput;
+        assert!(
+            best_reb <= uniform * 1.0001,
+            "rebalancing cannot beat the skew-free fleet: {best_reb} vs {uniform}"
+        );
     }
 
     #[test]

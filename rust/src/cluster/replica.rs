@@ -18,6 +18,7 @@ use crate::analyzer::memory::check_memory;
 use crate::comm::cost::CollectiveCost;
 use crate::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use crate::moe::router::{LoadStats, RouterSim};
+use crate::moe::ExpertPlacement;
 use crate::obs::{self, SpanKind};
 use crate::pipeline::PipelineCfg;
 use crate::serving::batcher::{Batcher, BatcherConfig};
@@ -129,6 +130,24 @@ pub struct ReplicaSim<C: CommCost = CollectiveCost> {
     /// elastic-controller lifecycle; `Active` (the default) on every
     /// path without a controller, so the field is inert historically
     state: ReplicaState,
+    /// optimized expert placement installed by the controller (None =
+    /// the contiguous static layout, the historical behavior exactly):
+    /// when set, each iteration's straggler factor and λ profile come
+    /// from the *placed* layout instead of contiguous grouping
+    placement: Option<ExpertPlacement>,
+    /// earliest time the next iteration may start — the one-window
+    /// weight-copy cost of an online placement swap (0.0 = no stall,
+    /// bit-identical to the historical start time)
+    stall_until: f64,
+    /// accumulate measured per-expert loads for the controller's
+    /// window-close skew check (off by default; observing never
+    /// perturbs timing)
+    track_loads: bool,
+    window_loads: Vec<usize>,
+    /// pending router drift `(time, offset)`: at the first iteration
+    /// starting at or after `time`, the gate's popularity ranking
+    /// rotates by `offset` experts (the hot-expert-migrates scenario)
+    hot_drift: Option<(f64, usize)>,
 }
 
 impl ReplicaSim<CollectiveCost> {
@@ -235,6 +254,11 @@ impl<C: CommCost> ReplicaSim<C> {
             trace: None,
             slo_deadline: None,
             state: ReplicaState::Active,
+            placement: None,
+            stall_until: 0.0,
+            track_loads: false,
+            window_loads: Vec::new(),
+            hot_drift: None,
         }
     }
 
@@ -469,6 +493,51 @@ impl<C: CommCost> ReplicaSim<C> {
         self
     }
 
+    /// Schedule a router drift (builder style; `None` — the default —
+    /// changes nothing): at the first iteration starting at or after
+    /// the given time, the gate's popularity ranking rotates by
+    /// `offset` experts — the "hot expert migrates mid-trace" scenario
+    /// the placement paperbench drives.
+    pub fn with_drift(mut self, drift: Option<(f64, usize)>) -> Self {
+        self.hot_drift = drift;
+        self
+    }
+
+    /// Start accumulating measured per-expert loads for the
+    /// controller's window-close skew check.  Pure observation: the
+    /// router draws and every timing stay bit-for-bit identical.
+    pub fn enable_load_tracking(&mut self) {
+        self.track_loads = true;
+    }
+
+    /// Take the per-expert loads measured since the last call (empty
+    /// when tracking is off or nothing ran).
+    pub fn drain_window_loads(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.window_loads)
+    }
+
+    /// The optimized placement currently serving (None = contiguous).
+    pub fn placement(&self) -> Option<&ExpertPlacement> {
+        self.placement.as_ref()
+    }
+
+    /// The Zipf exponent this replica's gate draws at (profile tagging).
+    pub fn gate_skew(&self) -> f64 {
+        self.skew
+    }
+
+    /// Install an optimized expert placement, stalling the next
+    /// iteration until `stall_until` — the priced weight-copy cost of
+    /// shipping the new expert copies.  The swap is safe mid-iteration:
+    /// the in-flight iteration's finish time is already fixed, and the
+    /// new layout prices everything from the next `step` on.
+    pub fn apply_placement(&mut self, placement: ExpertPlacement, stall_until: f64) {
+        debug_assert_eq!(placement.ep_degree, self.strategy.moe.ep);
+        debug_assert_eq!(placement.n_experts, self.router.n_experts);
+        self.stall_until = self.stall_until.max(stall_until);
+        self.placement = Some(placement);
+    }
+
     pub fn strategy(&self) -> &ParallelStrategy {
         &self.strategy
     }
@@ -496,7 +565,15 @@ impl<C: CommCost> ReplicaSim<C> {
             return None;
         }
 
-        let start = self.clock.max(now);
+        // a pending weight-copy stall delays the next start (0.0 — the
+        // default — leaves the historical start time bit-for-bit)
+        let start = self.clock.max(now).max(self.stall_until);
+        if let Some((t, offset)) = self.hot_drift {
+            if start >= t {
+                self.router.migrate_hot(offset);
+                self.hot_drift = None;
+            }
+        }
         let plan = self.scheduler.plan(&mut self.batcher, start, &mut self.kv);
         if plan.is_empty() {
             // nothing runnable (KV exhausted): wait for retirement next tick
@@ -643,6 +720,25 @@ impl<C: CommCost> ReplicaSim<C> {
             tokens.clamp(1, 512)
         };
         let loads = self.router.route_batch(sample);
+        if self.track_loads {
+            if self.window_loads.len() != loads.len() {
+                self.window_loads = vec![0; loads.len()];
+            }
+            for (w, l) in self.window_loads.iter_mut().zip(&loads) {
+                *w += l;
+            }
+        }
+        if let Some(p) = &self.placement {
+            // an optimized layout serves this iteration: both the
+            // compute straggler and (when load-aware) the λ profile
+            // come from the placed per-rank loads
+            let profile = ExpertLoadProfile::from_loads(&loads, self.skew);
+            let hot = p.hot_factor(&profile);
+            if self.lambda_load_aware {
+                self.lm.set_load(profile.with_placed_hot(self.strategy.moe.ep, hot));
+            }
+            return hot;
+        }
         if self.lambda_load_aware {
             self.lm.set_load(ExpertLoadProfile::from_loads(&loads, self.skew));
         }
@@ -1008,6 +1104,91 @@ mod tests {
         let r = replica(None).parked();
         assert_eq!(r.state(), ReplicaState::Parked);
         assert!(!r.is_routable());
+    }
+
+    fn skewed_ep_replica(aware: bool, drift: Option<(f64, usize)>) -> ReplicaSim {
+        let serving = ServingConfig::paper_eval(4.0);
+        let model = MoEModelConfig::deepseek_r1();
+        let cluster = ClusterConfig::ascend910b();
+        let strategy = ParallelStrategy::pure_ep(4, 8);
+        ReplicaSim::with_cost(
+            &model,
+            &cluster,
+            &strategy,
+            &serving,
+            CommMode::Sync,
+            5,
+            0,
+            1.2,
+            aware,
+            CollectiveCost::new(&cluster),
+        )
+        .with_drift(drift)
+    }
+
+    fn drain_burst(r: &mut ReplicaSim, n: usize) -> f64 {
+        for id in 0..n {
+            r.submit(Request { id, arrival: 0.0, len_in: 512, len_out: 16 });
+        }
+        let mut now = 0.0;
+        while let Some(t) = r.step(now) {
+            now = t;
+        }
+        now
+    }
+
+    #[test]
+    fn optimized_placement_speeds_a_skewed_replica() {
+        use crate::moe::ExpertPlacement;
+        let model = MoEModelConfig::deepseek_r1();
+        let ep = ParallelStrategy::pure_ep(4, 8).moe.ep;
+        let profile = ExpertLoadProfile::zipf(model.n_experts, model.top_k, 1.2, 5);
+        let placement = ExpertPlacement::rebalanced(&profile, ep, 2).unwrap();
+        assert!(placement.hot_factor(&profile) < profile.hot_factor(ep));
+        let contiguous = drain_burst(&mut skewed_ep_replica(true, None), 8);
+        let mut r = skewed_ep_replica(true, None);
+        r.apply_placement(placement, 0.0);
+        let placed = drain_burst(&mut r, 8);
+        assert!(
+            placed < contiguous,
+            "the flattened layout must drain faster: {placed} !< {contiguous}"
+        );
+    }
+
+    #[test]
+    fn placement_stall_delays_the_next_iteration() {
+        use crate::moe::ExpertPlacement;
+        let model = MoEModelConfig::deepseek_r1();
+        let ep = ParallelStrategy::pure_ep(4, 8).moe.ep;
+        let mut r = skewed_ep_replica(true, None);
+        r.apply_placement(ExpertPlacement::new(model.n_experts, ep).unwrap(), 50.0);
+        let end = drain_burst(&mut r, 2);
+        assert!(end >= 50.0, "the weight-copy stall must gate the start: {end}");
+    }
+
+    #[test]
+    fn router_drift_reshapes_the_run_and_none_is_identity() {
+        let plain = drain_burst(&mut skewed_ep_replica(true, None), 8);
+        let explicit = drain_burst(&mut skewed_ep_replica(true, None).with_drift(None), 8);
+        assert_eq!(plain.to_bits(), explicit.to_bits(), "None drift is the identity");
+        let drifted = drain_burst(&mut skewed_ep_replica(true, Some((0.0, 16))), 8);
+        assert_ne!(plain.to_bits(), drifted.to_bits(), "drift must reshape the run");
+        // a drift scheduled after the drain never fires
+        let late = drain_burst(&mut skewed_ep_replica(true, Some((1e12, 16))), 8);
+        assert_eq!(plain.to_bits(), late.to_bits());
+    }
+
+    #[test]
+    fn load_tracking_accumulates_and_drains_without_perturbing() {
+        let plain = drain_burst(&mut skewed_ep_replica(true, None), 8);
+        let mut r = skewed_ep_replica(true, None);
+        r.enable_load_tracking();
+        let tracked = drain_burst(&mut r, 8);
+        assert_eq!(plain.to_bits(), tracked.to_bits(), "observation must not perturb timing");
+        let loads = r.drain_window_loads();
+        assert_eq!(loads.len(), MoEModelConfig::deepseek_r1().n_experts);
+        assert!(loads.iter().sum::<usize>() > 0);
+        assert!(r.drain_window_loads().is_empty(), "drain is one-shot");
     }
 
     #[test]

@@ -15,6 +15,9 @@
 //!             (--legacy adds the measured pre-refactor speedup)
 //!   elastic   static-optimal vs controlled fleet over one compressed
 //!             diurnal day with antiphase prompt/decode mix drift
+//!   placement expert-placement economics: contiguous vs LPT-rebalanced
+//!             layouts per EP shape, the static-vs-rebalanced planner
+//!             choice, and the router-drift fleet scenario
 //!   fig3|fig4|fig10|fig11|fig12|table1   regenerate a paper artifact
 //!
 //! Controller flags (fleet):
@@ -56,6 +59,14 @@
 //!                 backend jointly with the parallel strategy (and
 //!                 independently per phase on disagg fleets)
 //!
+//! Placement flags (analyze / plan):
+//!   --placement P  the expert-placement policy: static (default,
+//!                  bit-for-bit the historical contiguous layout) or
+//!                  rebalanced[:BUDGET] — price every EP shape under the
+//!                  LPT-rebalanced layout with up to BUDGET extra expert
+//!                  copies per rank (default 1), so the search can pick
+//!                  "rebalance at this EP" over "drop to lower EP"
+//!
 //! Overlap flags (analyze / simulate / plan):
 //!   --overlap     price chunked micro-batch pipelining of the MoE block,
 //!                 auto-searching the chunk count K per strategy (the
@@ -76,10 +87,11 @@ use mixserve::cluster::{
 };
 use mixserve::config::{ClusterConfig, MoEModelConfig, ParallelStrategy, ServingConfig};
 use mixserve::grammar::parse_strategy;
+use mixserve::moe::PlacementPolicy;
 use mixserve::obs;
 use mixserve::paperbench::{
-    attribution, backends, chunked, disagg, elastic, fig10, fig11, fig12, fig3, fig4, scale,
-    table1,
+    attribution, backends, chunked, disagg, elastic, fig10, fig11, fig12, fig3, fig4, placement,
+    scale, table1,
 };
 use mixserve::pipeline::PipelineCfg;
 use mixserve::runtime::Engine;
@@ -175,6 +187,21 @@ fn backend_note(policy: BackendPolicy) -> String {
     }
 }
 
+/// `--placement P` → the expert-placement policy (absent = the pinned
+/// `static` contiguous default; `rebalanced[:BUDGET]` = LPT rebalance
+/// with hot-expert replication).  An unknown name is an error.
+fn placement_from_args(args: &Args) -> Result<PlacementPolicy> {
+    PlacementPolicy::from_flag(args.get("placement")).map_err(|e| anyhow::anyhow!(e))
+}
+
+fn placement_note(policy: PlacementPolicy) -> String {
+    if policy.is_pinned_default() {
+        String::new()
+    } else {
+        format!(", {policy} placement")
+    }
+}
+
 /// Render, validate, and write a Chrome-trace export.  The document is
 /// checked *before* it hits disk — an export the validator rejects is a
 /// bug, not an artifact.
@@ -266,19 +293,22 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let skew = args.f64_or("skew", 0.0);
     let pipeline = pipeline_from_args(args)?;
     let backend = backend_from_args(args)?;
+    let placement = placement_from_args(args)?;
     let analyzer = Analyzer::new(&model, &cluster, &ServingConfig::paper_eval(rate))
         .with_load_skew(skew)
         .with_pipeline(pipeline)
-        .with_backend(backend);
+        .with_backend(backend)
+        .with_placement(placement);
     let wl = Workload::sharegpt(rate);
     let cost_backend = args.get_or("cost", "analytic");
     println!(
         "MixServe automatic analyzer — {} on {} @ {rate} req/s (skew {skew}, {cost_backend} \
-         cost{}{})",
+         cost{}{}{})",
         model.name,
         cluster.name,
         pipeline_note(pipeline),
-        backend_note(backend)
+        backend_note(backend),
+        placement_note(placement)
     );
     match cost_backend.as_str() {
         "analytic" => render_analysis(&analyzer, &wl, top),
@@ -714,7 +744,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let planner = FleetPlanner::new(&model, &budget, &ServingConfig::paper_eval(rate))
         .with_skew(skew)
         .with_pipeline(pipeline_from_args(args)?)
-        .with_backend(backend_from_args(args)?);
+        .with_backend(backend_from_args(args)?)
+        .with_placement(placement_from_args(args)?);
     // validate --sched before any branch returns: an unknown scheduler
     // name (or a conflicting flag combination) must error, never be
     // silently ignored
@@ -882,6 +913,29 @@ fn main() -> Result<()> {
             let s = backends::sweep(&m, &grids, rate);
             print!("{}", backends::render(&m, &s));
         }
+        "placement" => {
+            // the placement optimizer end-to-end: per-EP flattening and
+            // the static-vs-rebalanced planner choice on each grid, then
+            // the router-drift fleet scenario (hot expert migrates
+            // mid-trace; the controller rebalances online)
+            let m = model_by_name(&args.get_or("model", "deepseek-r1"))?;
+            let grids = match args.get("cluster") {
+                Some(name) => vec![cluster_by_name(name)?],
+                None => vec![ClusterConfig::ascend910b(), ClusterConfig::h20()],
+            };
+            let rate = args.f64_or("rate", 4.0);
+            let s = placement::sweep(&m, &grids, rate);
+            let requests = args.usize_or("requests", 600);
+            let drift_rate = args.f64_or("drift-rate", 8.0);
+            let seed = args.usize_or("seed", 7) as u64;
+            let drifts: Vec<(String, Option<placement::DriftReport>)> = grids
+                .iter()
+                .map(|g| {
+                    (g.name.clone(), placement::drift_scenario(&m, g, requests, drift_rate, seed))
+                })
+                .collect();
+            print!("{}", placement::render(&m, &s, &drifts));
+        }
         "chunked" => {
             // TTFT/ITL vs scheduler quantum on a prompt-heavy and a
             // decode-heavy trace (the chunked-prefill paperbench sweep)
@@ -950,10 +1004,12 @@ fn main() -> Result<()> {
                  \x20 analyze   [--model M] [--cluster C] [--rate R] [--top N]\n\
                  \x20           [--skew Z] [--cost analytic|netsim] [--overlap | --chunks K]\n\
                  \x20           [--backend a2a|agmask|fused-ll|fused-ht|auto]\n\
+                 \x20           [--placement static|rebalanced[:BUDGET]]\n\
                  \x20           (Z > 0 prices λ at the hot rank's measured load;\n\
                  \x20            --overlap prices chunked micro-batch pipelining;\n\
                  \x20            --backend auto searches the dispatch algorithm jointly\n\
-                 \x20            with the strategy)\n\
+                 \x20            with the strategy; --placement rebalanced prices every\n\
+                 \x20            EP shape under the LPT-flattened expert layout)\n\
                  \x20 serve     [--artifacts DIR] [--model tiny] [--rate R] [--duration S]\n\
                  \x20           [--queue-cap N]\n\
                  \x20 simulate  [--model M] [--cluster C] [--rate R] [--duration S]\n\
@@ -975,6 +1031,7 @@ fn main() -> Result<()> {
                  \x20 plan      [--model M] [--cluster BUDGET] [--rate R] [--skew Z]\n\
                  \x20           [--overlap | --chunks K] [--disagg] [--arch]\n\
                  \x20           [--sched fcfs|chunked [--quantum N]] [--backend B]\n\
+                 \x20           [--placement static|rebalanced[:BUDGET]]\n\
                  \x20           (carve one device budget into replicas x strategy;\n\
                  \x20            --disagg searches prefill pool x decode pool instead;\n\
                  \x20            --arch ranks colocated vs chunked vs disagg on one key)\n\
@@ -988,6 +1045,12 @@ fn main() -> Result<()> {
                  \x20           (dispatch-backend economics: a2a vs agmask vs fused-ll\n\
                  \x20            vs fused-ht across EP degree x batch x phase, with\n\
                  \x20            crossover lines and the pinned-vs-auto search gain)\n\
+                 \x20 placement [--model M] [--cluster C] [--rate R] [--requests N]\n\
+                 \x20           [--drift-rate R] [--seed S]\n\
+                 \x20           (expert-placement economics: contiguous vs LPT-rebalanced\n\
+                 \x20            hot factor and decode latency per EP shape, the\n\
+                 \x20            static-vs-rebalanced planner choice, and the router-drift\n\
+                 \x20            fleet scenario with the online rebalance controller)\n\
                  \x20 chunked   [--model M] [--cluster POD] [--duration S]\n\
                  \x20           (TTFT/ITL vs scheduler quantum, prompt- and\n\
                  \x20            decode-heavy traces)\n\

@@ -4,5 +4,5 @@
 pub mod placement;
 pub mod router;
 
-pub use placement::ExpertPlacement;
+pub use placement::{ExpertPlacement, PlacementError, PlacementPolicy, DEFAULT_REPLICA_BUDGET};
 pub use router::{LoadStats, RouterSim};

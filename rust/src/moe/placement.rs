@@ -1,44 +1,398 @@
 //! Expert placement: which EP rank / node hosts which experts.
+//!
+//! Two layouts share one representation (an expert→hosts map with
+//! fractional routing weights):
+//!
+//! - **Contiguous** ([`ExpertPlacement::new`]): the static layout the
+//!   hybrid partitioner and Algorithms 1–2 assume — rank j hosts experts
+//!   [j·E/n, (j+1)·E/n), every expert on exactly one rank.
+//! - **Rebalanced** ([`ExpertPlacement::rebalanced`]): a greedy
+//!   LPT-style optimizer that, given a measured [`ExpertLoadProfile`],
+//!   reorders primaries across ranks (longest-processing-time first) and
+//!   then *replicates* hot experts onto cooler ranks under a per-rank
+//!   replica budget, splitting each replicated expert's traffic with
+//!   water-filled fractional weights so effective per-rank load
+//!   flattens.  This is the MoNTA objective (minimize the max per-rank
+//!   token volume the A2A must carry) realized with vLLM's production
+//!   shape (redistribute + replicate hot experts with fractional
+//!   routing).  Copies cost HBM, hence the explicit budget.
+//!
+//! The optimizer never prices anything itself: callers pin the placed
+//! layout's [`ExpertPlacement::hot_factor`] into the load profile
+//! (`ExpertLoadProfile::with_placed_hot`) and the existing Eq. 5/12/13
+//! path prices the flattened λ with zero new pricing code.
 
 use crate::comm::world::RankWorld;
+use crate::timing::ExpertLoadProfile;
 
-/// Contiguous expert placement over EP ranks (the layout the hybrid
-/// partitioner and Algorithms 1–2 assume: node j hosts experts
-/// [j·E/n, (j+1)·E/n)).
-#[derive(Debug, Clone)]
+/// Why a placement could not be constructed (the planner's EP sweep
+/// skips these combos instead of aborting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementError {
+    /// EP degree 0 hosts nothing.
+    ZeroDegree,
+    /// More EP ranks than experts: some rank would host no expert.
+    TooManyRanks { n_experts: usize, ep_degree: usize },
+    /// Experts don't divide evenly over the EP ranks.
+    Indivisible { n_experts: usize, ep_degree: usize },
+}
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            PlacementError::ZeroDegree => write!(f, "EP degree must be >= 1"),
+            PlacementError::TooManyRanks { n_experts, ep_degree } => {
+                write!(f, "EP degree {ep_degree} exceeds expert count {n_experts}")
+            }
+            PlacementError::Indivisible { n_experts, ep_degree } => {
+                write!(f, "experts {n_experts} must divide EP degree {ep_degree}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+/// Expert→rank map with a replica set: `hosts[e]` lists the EP ranks
+/// hosting expert `e` together with the fraction of `e`'s traffic each
+/// rank serves (weights sum to 1 per expert).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExpertPlacement {
     pub n_experts: usize,
     pub ep_degree: usize,
+    hosts: Vec<Vec<(usize, f64)>>,
 }
 
 impl ExpertPlacement {
-    pub fn new(n_experts: usize, ep_degree: usize) -> Self {
-        assert!(ep_degree >= 1 && n_experts % ep_degree == 0,
-                "experts {n_experts} must divide EP degree {ep_degree}");
-        Self { n_experts, ep_degree }
+    fn validate(n_experts: usize, ep_degree: usize) -> Result<(), PlacementError> {
+        if ep_degree == 0 {
+            return Err(PlacementError::ZeroDegree);
+        }
+        if ep_degree > n_experts {
+            return Err(PlacementError::TooManyRanks { n_experts, ep_degree });
+        }
+        if n_experts % ep_degree != 0 {
+            return Err(PlacementError::Indivisible { n_experts, ep_degree });
+        }
+        Ok(())
     }
 
+    /// The contiguous static layout: rank j hosts experts
+    /// [j·E/n, (j+1)·E/n), each with full routing weight.
+    pub fn new(n_experts: usize, ep_degree: usize) -> Result<Self, PlacementError> {
+        Self::validate(n_experts, ep_degree)?;
+        let per = n_experts / ep_degree;
+        let hosts = (0..n_experts).map(|e| vec![(e / per, 1.0)]).collect();
+        Ok(Self { n_experts, ep_degree, hosts })
+    }
+
+    /// Primary experts per rank (the HBM footprint the replica budget
+    /// adds to).
     pub fn experts_per_rank(&self) -> usize {
         self.n_experts / self.ep_degree
     }
 
-    /// EP rank hosting `expert`.
+    /// The EP rank serving the largest fraction of `expert`'s traffic
+    /// (its primary host; ties break to the first-listed host).
     pub fn rank_of(&self, expert: usize) -> usize {
         assert!(expert < self.n_experts);
-        expert / self.experts_per_rank()
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for &(r, w) in &self.hosts[expert] {
+            if w > best.1 {
+                best = (r, w);
+            }
+        }
+        best.0
     }
 
-    /// Experts hosted by `rank`.
-    pub fn experts_of(&self, rank: usize) -> std::ops::Range<usize> {
-        let per = self.experts_per_rank();
-        rank * per..(rank + 1) * per
+    /// All (rank, weight) hosts of `expert`; weights sum to 1.
+    pub fn hosts_of(&self, expert: usize) -> &[(usize, f64)] {
+        &self.hosts[expert]
     }
 
-    /// Map an expert to the *node* hosting it when EP ranks are the nodes
-    /// of `world` (the hybrid TP-EP layout of Fig. 7).
+    /// Experts hosted by `rank` (any copy, regardless of routing
+    /// weight), ascending.
+    pub fn experts_of(&self, rank: usize) -> Vec<usize> {
+        (0..self.n_experts)
+            .filter(|&e| self.hosts[e].iter().any(|&(r, _)| r == rank))
+            .collect()
+    }
+
+    /// Map an expert to the *node* hosting its primary copy when EP
+    /// ranks are the nodes of `world` (the hybrid TP-EP layout of
+    /// Fig. 7).
     pub fn node_of(&self, expert: usize, world: &RankWorld) -> usize {
         assert_eq!(self.ep_degree, world.n_nodes);
         self.rank_of(expert)
+    }
+
+    /// Expert copies beyond one-per-expert (the placement's extra HBM
+    /// cost, in expert-weights units).
+    pub fn extra_copies(&self) -> usize {
+        self.hosts.iter().map(Vec::len).sum::<usize>() - self.n_experts
+    }
+
+    /// Expert copies present here but absent in `base` — the number of
+    /// expert-weight transfers a switch from `base` to `self` must pay.
+    pub fn copies_from(&self, base: &ExpertPlacement) -> usize {
+        let shared = self.n_experts.min(base.n_experts);
+        let new_pairs: usize = (0..shared)
+            .map(|e| {
+                self.hosts[e]
+                    .iter()
+                    .filter(|&&(r, _)| !base.hosts[e].iter().any(|&(b, _)| b == r))
+                    .count()
+            })
+            .sum();
+        new_pairs + self.hosts[shared..].iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// Effective per-rank load: `loads[r] = Σ_e share(e) · weight(e, r)`.
+    pub fn rank_loads(&self, profile: &ExpertLoadProfile) -> Vec<f64> {
+        let shares = profile.shares();
+        let mut loads = vec![0.0f64; self.ep_degree];
+        for (e, hs) in self.hosts.iter().enumerate() {
+            let s = shares.get(e).copied().unwrap_or(0.0);
+            for &(r, w) in hs {
+                loads[r] += s * w;
+            }
+        }
+        loads
+    }
+
+    /// Straggler factor of this placement under `profile`: max effective
+    /// per-rank load / mean (≥ 1).  For the contiguous layout this
+    /// equals `profile.hot_factor(ep_degree)` exactly.
+    pub fn hot_factor(&self, profile: &ExpertLoadProfile) -> f64 {
+        let loads = self.rank_loads(profile);
+        let total: f64 = loads.iter().sum();
+        let mean = total / self.ep_degree as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        let max = loads.iter().cloned().fold(0.0f64, f64::max);
+        (max / mean).max(1.0)
+    }
+
+    /// Greedy LPT rebalancer with hot-expert replication.
+    ///
+    /// Phase 1 places primaries longest-processing-time-first: experts
+    /// sorted by share descending, each assigned to the least-loaded
+    /// rank with a free primary slot (capacity E/n per rank, preserving
+    /// the contiguous HBM footprint).  Phase 2 spends up to `budget`
+    /// extra expert-copies *per rank*: repeatedly replicate the hot
+    /// rank's largest-contribution expert onto the coolest rank not yet
+    /// hosting it, re-splitting that expert's traffic by water-filling
+    /// so its hosts' effective loads level out; stops when no move
+    /// lowers the max.  Never returns a placement with a worse hot
+    /// factor than the contiguous layout.
+    pub fn rebalanced(
+        profile: &ExpertLoadProfile,
+        ep_degree: usize,
+        budget: usize,
+    ) -> Result<Self, PlacementError> {
+        let n = profile.n_experts();
+        Self::validate(n, ep_degree)?;
+        let shares = profile.shares();
+        let cap = n / ep_degree;
+
+        // Phase 1: LPT primaries.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| shares[b].total_cmp(&shares[a]).then(a.cmp(&b)));
+        let mut hosts: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        let mut load = vec![0.0f64; ep_degree];
+        let mut used = vec![0usize; ep_degree];
+        for &e in &order {
+            let r = (0..ep_degree)
+                .filter(|&r| used[r] < cap)
+                .min_by(|&a, &b| load[a].total_cmp(&load[b]).then(a.cmp(&b)))
+                .expect("rank capacities sum to the expert count");
+            hosts[e].push((r, 1.0));
+            used[r] += 1;
+            load[r] += shares[e];
+        }
+        let mut placed = Self { n_experts: n, ep_degree, hosts };
+
+        // Phase 2: replicate hot experts under the per-rank budget.
+        let mut extra = vec![0usize; ep_degree];
+        loop {
+            let loads = placed.rank_loads(profile);
+            let before = loads.iter().cloned().fold(0.0f64, f64::max);
+            if before <= 0.0 {
+                break;
+            }
+            let hot = argmax(&loads);
+            // Hot rank's experts, largest contribution first.
+            let mut cands: Vec<(usize, f64)> = (0..n)
+                .filter_map(|e| {
+                    placed.hosts[e]
+                        .iter()
+                        .find(|&&(r, _)| r == hot)
+                        .map(|&(_, w)| (e, shares[e] * w))
+                })
+                .filter(|&(_, c)| c > 0.0)
+                .collect();
+            cands.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            let mut moved = false;
+            for &(e, _) in &cands {
+                let target = (0..ep_degree)
+                    .filter(|&r| {
+                        extra[r] < budget && !placed.hosts[e].iter().any(|&(h, _)| h == r)
+                    })
+                    .min_by(|&a, &b| loads[a].total_cmp(&loads[b]).then(a.cmp(&b)));
+                let Some(t) = target else { continue };
+                let saved = placed.hosts[e].clone();
+                placed.hosts[e].push((t, 0.0));
+                placed.water_fill(e, profile);
+                let after = placed.rank_loads(profile).iter().cloned().fold(0.0f64, f64::max);
+                if after + 1e-12 < before {
+                    extra[t] += 1;
+                    moved = true;
+                    break;
+                }
+                placed.hosts[e] = saved;
+            }
+            if !moved {
+                break;
+            }
+        }
+
+        // LPT + replication is a heuristic: fall back to the contiguous
+        // layout if it somehow did worse (guarantees rebalanced hot
+        // factor ≤ static hot factor for every profile).
+        let contiguous = Self::new(n, ep_degree)?;
+        if contiguous.hot_factor(profile) < placed.hot_factor(profile) {
+            return Ok(contiguous);
+        }
+        Ok(placed)
+    }
+
+    /// Re-split expert `e`'s traffic across its hosts by water-filling:
+    /// weights are chosen so the hosts' effective loads (everything else
+    /// held fixed) equalize as far as `e`'s mass allows.
+    fn water_fill(&mut self, e: usize, profile: &ExpertLoadProfile) {
+        let mass = profile.shares().get(e).copied().unwrap_or(0.0);
+        let k = self.hosts[e].len();
+        if k == 0 {
+            return;
+        }
+        if mass <= 0.0 {
+            // No traffic to split: park it all on the first host so the
+            // weights still sum to 1.
+            for (i, hw) in self.hosts[e].iter_mut().enumerate() {
+                hw.1 = if i == 0 { 1.0 } else { 0.0 };
+            }
+            return;
+        }
+        let loads = self.rank_loads(profile);
+        // Host loads with e's own contribution removed.
+        let base: Vec<f64> = self.hosts[e].iter().map(|&(r, w)| loads[r] - mass * w).collect();
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| base[a].total_cmp(&base[b]));
+        let mut remaining = mass;
+        let mut level = base[order[0]];
+        let mut filled = 1usize;
+        while filled < k {
+            let next = base[order[filled]];
+            let need = (next - level) * filled as f64;
+            if need >= remaining {
+                break;
+            }
+            remaining -= need;
+            level = next;
+            filled += 1;
+        }
+        level += remaining / filled as f64;
+        let add: Vec<f64> = base.iter().map(|&b| (level - b).max(0.0)).collect();
+        let total: f64 = add.iter().sum();
+        for (hw, a) in self.hosts[e].iter_mut().zip(&add) {
+            hw.1 = if total > 0.0 { a / total } else { 0.0 };
+        }
+    }
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// How the engine lays experts out — the search knob mirroring
+/// `BackendPolicy`: `Static` is the pre-optimizer contiguous layout
+/// (bit-for-bit identical pricing to an engine without this knob),
+/// `Rebalanced` re-derives the hot factor from the LPT-replicated
+/// layout before pricing, letting the analyzer/planner weigh
+/// "rebalance at this EP degree" against "drop to a lower EP degree"
+/// on priced merit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Contiguous static layout (the default; no new HBM cost).
+    #[default]
+    Static,
+    /// LPT rebalance with up to `budget` replica copies per rank.
+    Rebalanced { budget: usize },
+}
+
+/// Replica copies per rank when `--placement rebalanced` is given
+/// without an explicit budget.
+pub const DEFAULT_REPLICA_BUDGET: usize = 1;
+
+impl PlacementPolicy {
+    /// Parse a `--placement` flag: absent → `Static`;
+    /// `rebalanced[:BUDGET]` → `Rebalanced`.
+    pub fn from_flag(flag: Option<&str>) -> Result<Self, String> {
+        let Some(s) = flag else {
+            return Ok(Self::default());
+        };
+        if s == "static" {
+            return Ok(PlacementPolicy::Static);
+        }
+        if s == "rebalanced" {
+            return Ok(PlacementPolicy::Rebalanced { budget: DEFAULT_REPLICA_BUDGET });
+        }
+        if let Some(b) = s.strip_prefix("rebalanced:") {
+            return b
+                .parse::<usize>()
+                .map(|budget| PlacementPolicy::Rebalanced { budget })
+                .map_err(|_| format!("bad replica budget '{b}' (expected an integer)"));
+        }
+        Err(format!("unknown placement '{s}' (expected static or rebalanced[:BUDGET])"))
+    }
+
+    /// True when this policy leaves the engine exactly as it was before
+    /// the placement knob existed.
+    pub fn is_pinned_default(&self) -> bool {
+        matches!(self, PlacementPolicy::Static)
+    }
+
+    /// Apply the policy to `profile` at EP degree `ep`: under
+    /// `Rebalanced` the optimized layout's hot factor is pinned into
+    /// the profile (`with_placed_hot`) so the existing skew→λ path
+    /// prices the flattened load; under `Static` — or when no valid
+    /// placement exists at this EP degree — the profile is untouched.
+    pub fn placed_profile(&self, profile: &ExpertLoadProfile, ep: usize) -> ExpertLoadProfile {
+        match *self {
+            PlacementPolicy::Static => profile.clone(),
+            PlacementPolicy::Rebalanced { budget } => {
+                match ExpertPlacement::rebalanced(profile, ep, budget) {
+                    Ok(p) => profile.clone().with_placed_hot(ep, p.hot_factor(profile)),
+                    Err(_) => profile.clone(),
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            PlacementPolicy::Static => write!(f, "static"),
+            PlacementPolicy::Rebalanced { budget } => write!(f, "rebalanced:{budget}"),
+        }
     }
 }
 
@@ -48,25 +402,136 @@ mod tests {
 
     #[test]
     fn contiguous_blocks() {
-        let p = ExpertPlacement::new(256, 32);
+        let p = ExpertPlacement::new(256, 32).unwrap();
         assert_eq!(p.experts_per_rank(), 8);
         assert_eq!(p.rank_of(0), 0);
         assert_eq!(p.rank_of(255), 31);
-        assert_eq!(p.experts_of(3), 24..32);
+        assert_eq!(p.experts_of(3), (24..32).collect::<Vec<_>>());
+        assert_eq!(p.extra_copies(), 0);
     }
 
     #[test]
     fn every_expert_has_exactly_one_rank() {
-        let p = ExpertPlacement::new(64, 8);
+        let p = ExpertPlacement::new(64, 8).unwrap();
         for e in 0..64 {
             let r = p.rank_of(e);
             assert!(p.experts_of(r).contains(&e));
+            assert_eq!(p.hosts_of(e).len(), 1);
         }
     }
 
     #[test]
-    #[should_panic]
-    fn indivisible_panics() {
-        ExpertPlacement::new(10, 4);
+    fn indivisible_is_an_error_not_a_panic() {
+        assert_eq!(
+            ExpertPlacement::new(10, 4),
+            Err(PlacementError::Indivisible { n_experts: 10, ep_degree: 4 })
+        );
+        assert_eq!(
+            ExpertPlacement::new(4, 8),
+            Err(PlacementError::TooManyRanks { n_experts: 4, ep_degree: 8 })
+        );
+        assert_eq!(ExpertPlacement::new(8, 0), Err(PlacementError::ZeroDegree));
+        let profile = ExpertLoadProfile::uniform(10);
+        assert!(ExpertPlacement::rebalanced(&profile, 4, 1).is_err());
+    }
+
+    #[test]
+    fn contiguous_hot_factor_matches_profile() {
+        let profile = ExpertLoadProfile::zipf(64, 8, 1.2, 7);
+        for ep in [2usize, 4, 8, 16, 32, 64] {
+            let p = ExpertPlacement::new(64, ep).unwrap();
+            assert!(
+                (p.hot_factor(&profile) - profile.hot_factor(ep)).abs() < 1e-12,
+                "ep={ep}"
+            );
+        }
+    }
+
+    #[test]
+    fn rebalanced_flattens_a_skewed_profile() {
+        let profile = ExpertLoadProfile::zipf(64, 8, 1.2, 7);
+        let ep = 16;
+        let static_hot = profile.hot_factor(ep);
+        let lpt = ExpertPlacement::rebalanced(&profile, ep, 0).unwrap();
+        let replicated = ExpertPlacement::rebalanced(&profile, ep, 2).unwrap();
+        assert!(lpt.hot_factor(&profile) <= static_hot);
+        assert!(replicated.hot_factor(&profile) <= lpt.hot_factor(&profile));
+        assert!(
+            replicated.hot_factor(&profile) < static_hot * 0.9,
+            "replication must visibly flatten zipf 1.2: {} vs {}",
+            replicated.hot_factor(&profile),
+            static_hot
+        );
+        assert!(replicated.extra_copies() > 0);
+        assert!(replicated.extra_copies() <= 2 * ep);
+    }
+
+    #[test]
+    fn rebalanced_uniform_profile_is_already_flat() {
+        let profile = ExpertLoadProfile::uniform(32);
+        let p = ExpertPlacement::rebalanced(&profile, 8, 2).unwrap();
+        assert!((p.hot_factor(&profile) - 1.0).abs() < 1e-9);
+        // nothing to replicate when every rank is already at the mean
+        assert_eq!(p.extra_copies(), 0);
+    }
+
+    #[test]
+    fn replica_weights_water_fill_toward_the_mean() {
+        // one dominating expert: replication must split its traffic
+        let mut shares = vec![1.0f64; 8];
+        shares[0] = 20.0;
+        let profile = ExpertLoadProfile::from_shares(shares, 2.0);
+        let p = ExpertPlacement::rebalanced(&profile, 4, 3).unwrap();
+        let hosts = p.hosts_of(0);
+        assert!(hosts.len() > 1, "hot expert must be replicated");
+        let sum: f64 = hosts.iter().map(|&(_, w)| w).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(p.hot_factor(&profile) < profile.hot_factor(4));
+    }
+
+    #[test]
+    fn copies_from_counts_new_host_pairs() {
+        let profile = ExpertLoadProfile::zipf(32, 4, 1.2, 3);
+        let base = ExpertPlacement::new(32, 8).unwrap();
+        let reb = ExpertPlacement::rebalanced(&profile, 8, 1).unwrap();
+        assert_eq!(base.copies_from(&base), 0);
+        // every extra copy is a new pair; primaries may also have moved
+        assert!(reb.copies_from(&base) >= reb.extra_copies());
+    }
+
+    #[test]
+    fn policy_flag_parsing() {
+        assert_eq!(PlacementPolicy::from_flag(None).unwrap(), PlacementPolicy::Static);
+        assert_eq!(PlacementPolicy::from_flag(Some("static")).unwrap(), PlacementPolicy::Static);
+        assert_eq!(
+            PlacementPolicy::from_flag(Some("rebalanced")).unwrap(),
+            PlacementPolicy::Rebalanced { budget: DEFAULT_REPLICA_BUDGET }
+        );
+        assert_eq!(
+            PlacementPolicy::from_flag(Some("rebalanced:3")).unwrap(),
+            PlacementPolicy::Rebalanced { budget: 3 }
+        );
+        assert!(PlacementPolicy::from_flag(Some("shuffled")).is_err());
+        assert!(PlacementPolicy::from_flag(Some("rebalanced:x")).is_err());
+        assert_eq!(PlacementPolicy::default().to_string(), "static");
+        assert_eq!(PlacementPolicy::Rebalanced { budget: 2 }.to_string(), "rebalanced:2");
+        assert!(PlacementPolicy::Static.is_pinned_default());
+        assert!(!PlacementPolicy::Rebalanced { budget: 1 }.is_pinned_default());
+    }
+
+    #[test]
+    fn placed_profile_pins_the_flattened_hot_factor() {
+        let profile = ExpertLoadProfile::zipf(64, 8, 1.2, 7);
+        let ep = 16;
+        let policy = PlacementPolicy::Rebalanced { budget: 2 };
+        let placed = policy.placed_profile(&profile, ep);
+        assert!(placed.hot_factor(ep) < profile.hot_factor(ep));
+        // other groupings are untouched — the pin is EP-degree-specific
+        assert!((placed.hot_factor(4) - profile.hot_factor(4)).abs() < 1e-12);
+        // static policy is the identity
+        assert_eq!(PlacementPolicy::Static.placed_profile(&profile, ep), profile);
+        // invalid EP degree (indivisible) degrades to the untouched profile
+        let odd = PlacementPolicy::Rebalanced { budget: 1 }.placed_profile(&profile, 3);
+        assert_eq!(odd, profile);
     }
 }

@@ -153,6 +153,23 @@ impl RouterSim {
         loads
     }
 
+    /// Migrate the gate's popularity ranking by `offset` experts: the
+    /// weight vector rotates right so the traffic that expert `e` used
+    /// to draw now lands on expert `(e + offset) % n` — the "hot expert
+    /// migrates mid-trace" drift scenario.  Skew magnitude is
+    /// unchanged; only *which* experts are hot moves.
+    pub fn migrate_hot(&mut self, offset: usize) {
+        if self.n_experts == 0 {
+            return;
+        }
+        let offset = offset % self.n_experts;
+        if offset == 0 {
+            return;
+        }
+        self.weights.rotate_right(offset);
+        self.alias = AliasTable::new(&self.weights);
+    }
+
     /// The original per-token path — clones and shrinks the weight vector
     /// each draw (O(k·n) copies per token).  Kept as the distributional
     /// reference and the micro-bench baseline.
@@ -262,6 +279,24 @@ mod tests {
         let st = LoadStats::from_loads(&loads, 4);
         assert_eq!(st.max, 2);
         assert!((st.imbalance - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn migrate_hot_moves_the_hot_expert() {
+        let mut r = RouterSim::new(32, 2, 1.2, 11);
+        let before = r.route_batch(4000);
+        let hot_before = before.iter().enumerate().max_by_key(|&(_, &l)| l).unwrap().0;
+        assert_eq!(hot_before, 0, "zipf weights are descending: expert 0 is hottest");
+        r.migrate_hot(16);
+        let after = r.route_batch(4000);
+        let hot_after = after.iter().enumerate().max_by_key(|&(_, &l)| l).unwrap().0;
+        assert_eq!(hot_after, 16, "the hot expert must land offset ranks away");
+        // offset 0 (and multiples of n) are no-ops
+        let mut s = RouterSim::new(8, 2, 1.0, 3);
+        let w0 = s.weights.clone();
+        s.migrate_hot(0);
+        s.migrate_hot(8);
+        assert_eq!(s.weights, w0);
     }
 
     #[test]

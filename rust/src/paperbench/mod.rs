@@ -13,5 +13,6 @@ pub mod fig11;
 pub mod fig12;
 pub mod fig3;
 pub mod fig4;
+pub mod placement;
 pub mod scale;
 pub mod table1;

@@ -1,0 +1,435 @@
+//! Expert-placement sweep (DESIGN.md §Placement; ROADMAP item 4): stop
+//! pricing load skew, start fixing it.
+//!
+//! Three exhibits, all on the same Zipf-skewed gate profile:
+//!
+//! 1. **Per-EP flattening** — at every grid-covering EP shape, the hot
+//!    factor of the contiguous layout vs the LPT-rebalanced layout with
+//!    hot-expert replication ([`ExpertPlacement::rebalanced`]), and the
+//!    decode-iteration latency both price to through the existing
+//!    Eq. 5/12/13 path (zero new pricing code — the placed profile just
+//!    pins a flatter λ).
+//! 2. **Planner choice** — [`Analyzer::best`] under
+//!    [`PlacementPolicy::Static`] vs `Rebalanced`: whether fixing the
+//!    placement at a high EP degree beats the static search's answer
+//!    (which under skew often retreats to a lower EP to dodge the hot
+//!    rank).  The `planner-choice` lines are the acceptance criterion.
+//! 3. **Router drift** — a fleet scenario where the hot expert migrates
+//!    mid-trace ([`ReplicaTuning::drift`]): a static-layout arm, a
+//!    lower-EP fallback arm, and a controller arm whose window-close
+//!    rebalance trigger ([`RebalanceCfg`]) re-optimizes the placement
+//!    online, paying the priced weight-copy stall.  The `recovery` line
+//!    shows ITL/throughput recovered vs both baselines.
+
+use crate::analyzer::indicators::Workload;
+use crate::analyzer::latency::{CommMode, LatencyModel, Phase};
+use crate::analyzer::search::{Analyzer, Objective};
+use crate::cluster::{
+    simulate_fleet, ControllerConfig, FleetConfig, FleetReport, RebalanceCfg, ReplicaTuning,
+    RoutingPolicy,
+};
+use crate::config::{
+    AttnStrategy, ClusterConfig, MoEModelConfig, MoeStrategy, ParallelStrategy, ServingConfig,
+};
+use crate::moe::{ExpertPlacement, PlacementPolicy};
+use crate::serving::scheduler::SchedPolicy;
+use crate::timing::ExpertLoadProfile;
+use crate::workload::TraceGen;
+
+/// Zipf gate-skew exponent every exhibit measures at (heavy but
+/// ShareGPT-plausible drift).
+pub const SWEEP_SKEW: f64 = 1.2;
+/// Seed of the measured profile (deterministic rows).
+pub const SWEEP_SEED: u64 = 17;
+/// Cached context every decode cell prices.
+pub const DECODE_CTX: usize = 1024;
+/// Per-replica decode batch priced in the per-EP table.
+pub const DECODE_BATCH: usize = 16;
+/// Replication budget (extra expert copies per rank) for every
+/// rebalanced exhibit.
+pub const SWEEP_BUDGET: usize = 2;
+
+/// One (grid × EP shape) flattening cell.
+#[derive(Debug, Clone)]
+pub struct PlacementRow {
+    pub cluster: String,
+    pub tp: usize,
+    pub ep: usize,
+    /// hot factor of the contiguous layout (max/mean per-rank load)
+    pub static_hot: f64,
+    /// hot factor after LPT + replication under the budget
+    pub rebalanced_hot: f64,
+    /// extra expert copies the rebalanced layout hosts (HBM spent)
+    pub extra_copies: usize,
+    /// decode-iteration latency under each layout, ms
+    pub static_ms: f64,
+    pub rebalanced_ms: f64,
+}
+
+/// One grid's static-vs-rebalanced planner comparison.
+#[derive(Debug, Clone)]
+pub struct PlannerChoice {
+    pub cluster: String,
+    pub static_strategy: String,
+    pub static_ep: usize,
+    pub static_tok_s: f64,
+    pub rebalanced_strategy: String,
+    pub rebalanced_ep: usize,
+    pub rebalanced_tok_s: f64,
+}
+
+impl PlannerChoice {
+    pub fn rebalanced_wins(&self) -> bool {
+        self.rebalanced_tok_s > self.static_tok_s
+    }
+}
+
+/// The analytic half of the sweep: flattening rows + planner choices.
+#[derive(Debug, Clone)]
+pub struct PlacementSweep {
+    pub rows: Vec<PlacementRow>,
+    pub choices: Vec<PlannerChoice>,
+}
+
+/// EP degrees swept on a grid: powers of two from 2 up to both the
+/// device count and the expert count.
+fn ep_candidates(cluster: &ClusterConfig, model: &MoEModelConfig) -> Vec<usize> {
+    let cap = cluster.total_devices().min(model.n_experts);
+    let mut eps = Vec::new();
+    let mut ep = 2;
+    while ep <= cap {
+        eps.push(ep);
+        ep *= 2;
+    }
+    eps
+}
+
+/// The grid-covering hybrid shape at one EP degree (same shape rule as
+/// the backend sweep: moe TP picks up the remaining devices, attention
+/// runs the same TP with EP-many DP replicas).
+fn strategy_for(cluster: &ClusterConfig, ep: usize) -> ParallelStrategy {
+    let tp = cluster.total_devices() / ep;
+    ParallelStrategy {
+        attn: AttnStrategy { tp, dp: ep },
+        moe: MoeStrategy { tp, ep },
+        pp: 1,
+    }
+}
+
+/// Price every grid-covering EP shape under the contiguous and the
+/// rebalanced layout, and run the per-grid planner comparison.
+pub fn sweep(model: &MoEModelConfig, clusters: &[ClusterConfig], rate: f64) -> PlacementSweep {
+    let profile = ExpertLoadProfile::zipf(model.n_experts, model.top_k, SWEEP_SKEW, SWEEP_SEED);
+    let mut rows = Vec::new();
+    let mut choices = Vec::new();
+    for cluster in clusters {
+        let mut lm = LatencyModel::new(model, cluster);
+        for ep in ep_candidates(cluster, model) {
+            let s = strategy_for(cluster, ep);
+            if !s.is_valid() {
+                continue;
+            }
+            let Ok(placement) = ExpertPlacement::rebalanced(&profile, ep, SWEEP_BUDGET) else {
+                continue; // experts don't divide this degree
+            };
+            let static_hot = profile.hot_factor(ep);
+            let rebalanced_hot = placement.hot_factor(&profile);
+            lm.set_load(profile.clone());
+            let static_ms = lm
+                .service_latency(&s, DECODE_BATCH, DECODE_CTX, Phase::Decode, CommMode::FusedAsync)
+                .total()
+                * 1e3;
+            lm.set_load(profile.clone().with_placed_hot(ep, rebalanced_hot));
+            let rebalanced_ms = lm
+                .service_latency(&s, DECODE_BATCH, DECODE_CTX, Phase::Decode, CommMode::FusedAsync)
+                .total()
+                * 1e3;
+            lm.set_load(ExpertLoadProfile::uniform(model.n_experts));
+            rows.push(PlacementRow {
+                cluster: cluster.name.clone(),
+                tp: s.moe.tp,
+                ep,
+                static_hot,
+                rebalanced_hot,
+                extra_copies: placement.extra_copies(),
+                static_ms,
+                rebalanced_ms,
+            });
+        }
+        // the acceptance comparison: the full strategy search under the
+        // skewed profile, placement static vs rebalanced — same grid,
+        // same workload, same objective
+        let serving = ServingConfig::paper_eval(rate);
+        let wl = Workload::sharegpt(rate);
+        let static_best = Analyzer::new(model, cluster, &serving)
+            .with_load(profile.clone())
+            .best(&wl, Objective::MaxThroughput);
+        let rebalanced_best = Analyzer::new(model, cluster, &serving)
+            .with_load(profile.clone())
+            .with_placement(PlacementPolicy::Rebalanced { budget: SWEEP_BUDGET })
+            .best(&wl, Objective::MaxThroughput);
+        if let (Some(s), Some(r)) = (static_best, rebalanced_best) {
+            choices.push(PlannerChoice {
+                cluster: cluster.name.clone(),
+                static_strategy: s.strategy.to_string(),
+                static_ep: s.strategy.moe.ep,
+                static_tok_s: s.indicators.throughput,
+                rebalanced_strategy: r.strategy.to_string(),
+                rebalanced_ep: r.strategy.moe.ep,
+                rebalanced_tok_s: r.indicators.throughput,
+            });
+        }
+    }
+    PlacementSweep { rows, choices }
+}
+
+/// One arm of the router-drift fleet scenario.
+#[derive(Debug, Clone)]
+pub struct DriftArm {
+    /// "static", "lower-ep", or "rebalanced"
+    pub label: &'static str,
+    pub strategy: String,
+    pub completed: usize,
+    pub itl_mean_ms: f64,
+    pub itl_p99_ms: f64,
+    pub tok_s: f64,
+    /// placement swaps the controller landed (0 on the baselines)
+    pub rebalances: usize,
+    /// sim times of the controller's rebalance events
+    pub rebalance_times: Vec<f64>,
+}
+
+impl DriftArm {
+    fn from_report(label: &'static str, duration: f64, rep: &FleetReport) -> Self {
+        let itl = rep.metrics.itl.summary();
+        DriftArm {
+            label,
+            strategy: rep.strategy.to_string(),
+            completed: rep.metrics.completed,
+            itl_mean_ms: itl.mean * 1e3,
+            itl_p99_ms: itl.p99 * 1e3,
+            tok_s: rep.metrics.tokens_out as f64 / duration.max(1e-9),
+            rebalances: rep.controller.as_ref().map_or(0, |c| c.rebalances),
+            rebalance_times: rep.controller.as_ref().map_or_else(Vec::new, |c| {
+                c.events
+                    .iter()
+                    .filter(|e| e.action == crate::cluster::ControlAction::Rebalance)
+                    .map(|e| e.t)
+                    .collect()
+            }),
+        }
+    }
+}
+
+/// The router-drift scenario: same trace, same skew, hot expert
+/// migrating mid-run; three fleets race it.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    pub requests: usize,
+    pub duration: f64,
+    /// when the hot expert migrates (seconds into the run)
+    pub drift_at: f64,
+    pub arms: Vec<DriftArm>,
+}
+
+impl DriftReport {
+    pub fn arm(&self, label: &str) -> Option<&DriftArm> {
+        self.arms.iter().find(|a| a.label == label)
+    }
+}
+
+/// Run the drift scenario on one pod grid: two replicas at the highest
+/// grid-covering EP degree serve a ShareGPT trace at `rate`; a third of
+/// the way in, the router's popularity ranking rotates by half the
+/// expert count.  Arms: the static contiguous layout, the static layout
+/// one EP degree lower (the "just use less EP" fallback), and the
+/// placement-rebalancing controller on the high-EP shape.  None when no
+/// EP shape fits the grid.
+pub fn drift_scenario(
+    model: &MoEModelConfig,
+    pod: &ClusterConfig,
+    requests: usize,
+    rate: f64,
+    seed: u64,
+) -> Option<DriftReport> {
+    let high_ep = ep_candidates(pod, model)
+        .into_iter()
+        .filter(|&ep| model.n_experts % ep == 0 && strategy_for(pod, ep).is_valid())
+        .max()?;
+    let high = strategy_for(pod, high_ep);
+    let lower = (high_ep > 2)
+        .then(|| strategy_for(pod, high_ep / 2))
+        .filter(|s| s.is_valid() && model.n_experts % s.moe.ep == 0);
+
+    let duration = requests as f64 / rate.max(1e-9);
+    let drift_at = duration / 3.0;
+    let serving = ServingConfig::paper_eval(rate);
+    let trace = TraceGen::sharegpt(rate, serving.max_seq, seed).generate(duration);
+    let tuning = ReplicaTuning {
+        skew: SWEEP_SKEW,
+        drift: Some((drift_at, model.n_experts / 2)),
+        ..Default::default()
+    };
+    let cfg_for = |strategy: ParallelStrategy, ctl: Option<ControllerConfig>| FleetConfig {
+        replicas: 2,
+        strategy,
+        policy: RoutingPolicy::JoinShortestQueue,
+        mode: CommMode::FusedAsync,
+        slo: None,
+        disagg: None,
+        sched: SchedPolicy::Fcfs,
+        obs: crate::obs::ObsConfig::default(),
+        controller: ctl,
+        tuning,
+    };
+    let interval = duration / 12.0;
+    let ctl = ControllerConfig {
+        reactive: false,
+        rebalance: Some(RebalanceCfg {
+            threshold: 1.1,
+            budget: SWEEP_BUDGET,
+            copy_secs_per_move: 0.0, // fleet builder prices it from the model
+        }),
+        ..ControllerConfig::new(interval)
+    };
+
+    let mut arms = Vec::with_capacity(3);
+    let rep = simulate_fleet(model, pod, &cfg_for(high, None), &serving, &trace, seed);
+    arms.push(DriftArm::from_report("static", duration, &rep));
+    if let Some(lo) = lower {
+        let rep = simulate_fleet(model, pod, &cfg_for(lo, None), &serving, &trace, seed);
+        arms.push(DriftArm::from_report("lower-ep", duration, &rep));
+    }
+    let rep = simulate_fleet(model, pod, &cfg_for(high, Some(ctl)), &serving, &trace, seed);
+    arms.push(DriftArm::from_report("rebalanced", duration, &rep));
+
+    Some(DriftReport { requests: trace.len(), duration, drift_at, arms })
+}
+
+/// Render both halves: the per-EP flattening tables, the
+/// `planner-choice` lines, and one `drift` block per pod grid.  Every
+/// arm is one grep-able row; the CI smoke requires both a `static` and
+/// a `rebalanced` row.
+pub fn render(model: &MoEModelConfig, sweep: &PlacementSweep, drifts: &[(String, Option<DriftReport>)]) -> String {
+    let mut out = format!(
+        "Expert-placement sweep — {} (zipf skew {}, replication budget {})\n",
+        model.name, SWEEP_SKEW, SWEEP_BUDGET
+    );
+    let mut clusters: Vec<&str> = Vec::new();
+    for r in &sweep.rows {
+        if !clusters.contains(&r.cluster.as_str()) {
+            clusters.push(&r.cluster);
+        }
+    }
+    for cluster in &clusters {
+        out.push_str(&format!(
+            "\n{}\n{:>4} {:>4} | {:>11} {:>15} {:>7} | {:>10} {:>14}\n",
+            cluster, "tp", "ep", "hot(static)", "hot(rebalanced)", "copies", "static ms", "rebalanced ms"
+        ));
+        for r in sweep.rows.iter().filter(|r| &r.cluster == cluster) {
+            out.push_str(&format!(
+                "{:>4} {:>4} | {:>11.3} {:>15.3} {:>7} | {:>10.3} {:>14.3}\n",
+                r.tp, r.ep, r.static_hot, r.rebalanced_hot, r.extra_copies, r.static_ms,
+                r.rebalanced_ms
+            ));
+        }
+    }
+    out.push('\n');
+    for c in &sweep.choices {
+        let verdict = if c.rebalanced_wins() {
+            format!("rebalanced wins @EP{} vs EP{}", c.rebalanced_ep, c.static_ep)
+        } else {
+            "static holds".to_string()
+        };
+        out.push_str(&format!(
+            "planner-choice {}: static {:.0} tok/s ({}) -> rebalanced {:.0} tok/s ({}) [{}]\n",
+            c.cluster, c.static_tok_s, c.static_strategy, c.rebalanced_tok_s,
+            c.rebalanced_strategy, verdict
+        ));
+    }
+    for (pod, drift) in drifts {
+        let Some(d) = drift else {
+            out.push_str(&format!("\ndrift {pod}: no EP shape fits this grid\n"));
+            continue;
+        };
+        out.push_str(&format!(
+            "\ndrift {pod}: {} requests over {:.1}s, hot expert migrates at {:.1}s\n",
+            d.requests, d.duration, d.drift_at
+        ));
+        for a in &d.arms {
+            out.push_str(&format!(
+                "drift-arm {:<11} itl mean {:>8.3} ms p99 {:>8.3} ms | {:>8.0} tok/s \
+                 completed {:>5} | {} rebalances ({})\n",
+                a.label, a.itl_mean_ms, a.itl_p99_ms, a.tok_s, a.completed, a.rebalances,
+                a.strategy
+            ));
+        }
+        if let (Some(s), Some(r)) = (d.arm("static"), d.arm("rebalanced")) {
+            out.push_str(&format!(
+                "recovery {pod}: itl {:+.3} ms, throughput {:+.1}% vs static\n",
+                r.itl_mean_ms - s.itl_mean_ms,
+                if s.tok_s > 0.0 { (r.tok_s / s.tok_s - 1.0) * 100.0 } else { 0.0 }
+            ));
+        }
+    }
+    if sweep.rows.is_empty() {
+        out.push_str("(no EP shape fits these grids)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_runs_on_the_localhost_grid() {
+        // the CI smoke shape: tiny model on the 2-node localhost grid
+        let model = MoEModelConfig::tiny();
+        let grids = [ClusterConfig::localhost(2, 4), ClusterConfig::localhost(1, 4)];
+        let s = sweep(&model, &grids, 4.0);
+        assert!(!s.rows.is_empty());
+        for r in &s.rows {
+            assert!(r.static_hot >= 1.0 && r.rebalanced_hot >= 1.0);
+            assert!(
+                r.rebalanced_hot <= r.static_hot + 1e-12,
+                "rebalancing must never worsen the hot factor: {r:?}"
+            );
+            assert!(
+                r.rebalanced_ms <= r.static_ms + 1e-9,
+                "a flatter λ must never price slower: {r:?}"
+            );
+            assert!(r.static_ms.is_finite() && r.static_ms > 0.0);
+        }
+        assert!(!s.choices.is_empty(), "both grids must report the planner comparison");
+        for c in &s.choices {
+            assert!(
+                c.rebalanced_tok_s >= c.static_tok_s,
+                "{}: the rebalanced search lost throughput",
+                c.cluster
+            );
+        }
+        let drift = drift_scenario(&model, &grids[0], 300, 8.0, 13);
+        let d = drift.as_ref().expect("localhost fits an EP shape");
+        assert!(d.arm("static").is_some() && d.arm("rebalanced").is_some());
+        for a in &d.arms {
+            assert!(a.completed > 0, "every arm serves the trace: {}", a.label);
+            assert!(a.itl_mean_ms.is_finite());
+        }
+        assert!(
+            d.arm("rebalanced").unwrap().rebalances >= 1,
+            "the skewed trace must trip the controller's threshold"
+        );
+        for a in &d.arms {
+            if a.label != "rebalanced" {
+                assert_eq!(a.rebalances, 0, "baselines never rebalance");
+            }
+        }
+        let rendered = render(&model, &s, &[("localhost-2x4".into(), drift)]);
+        assert!(rendered.contains("Expert-placement sweep"));
+        assert!(rendered.contains("planner-choice"));
+        assert!(rendered.contains("drift-arm static"));
+        assert!(rendered.contains("drift-arm rebalanced"));
+        assert!(rendered.contains("recovery"));
+    }
+}

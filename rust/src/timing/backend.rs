@@ -149,13 +149,30 @@ impl std::fmt::Display for DispatchBackend {
 /// `global_bytes` across the `ep`-way communicator, mask locally, and
 /// reduce-scatter the expert outputs back.  Monolithic collectives —
 /// no round structure to overlap, so sync and async price the same.
+///
+/// `group` is the *full* parallel group sharing the NICs during the
+/// exchange (TP×EP): when the EP collective spans nodes, every rank of
+/// the group contends for the node's NICs at once, so the lane derate
+/// must come from the group, not from the EP communicator's own degree.
+/// Analytic costs ignore sharers (the optimistic per-rank view), so
+/// this changes nothing there; `NetSimCost` charges the contended
+/// lanes, closing the gap where `AllGatherMask` understated high-EP
+/// pressure.
 pub fn agmask_exchange_time<C: CommCost>(
     cost: &C,
     global_bytes: f64,
     ep: usize,
+    group: usize,
     ep_domain: CommDomain,
 ) -> f64 {
-    cost.all_gather(global_bytes, ep, ep_domain) + cost.reduce_scatter(global_bytes, ep, ep_domain)
+    if ep <= 1 {
+        return 0.0;
+    }
+    // Same (d-1)/d ring volume as all_gather/reduce_scatter, one pass
+    // per direction.
+    let vol = global_bytes * (ep as f64 - 1.0) / ep as f64;
+    let sharers = cost.nic_sharers(group.max(ep), ep_domain);
+    2.0 * cost.round_shared(vol, sharers, ep_domain)
 }
 
 /// How the analyzer/planner treats the backend dimension: pin one shape
@@ -282,12 +299,44 @@ mod tests {
     #[test]
     fn agmask_exchange_is_symmetric_and_monotone_in_degree() {
         let c = CollectiveCost::new(&ClusterConfig::h20());
-        let t4 = agmask_exchange_time(&c, 8e6, 4, CommDomain::IntraNode);
-        let t8 = agmask_exchange_time(&c, 8e6, 8, CommDomain::IntraNode);
+        let t4 = agmask_exchange_time(&c, 8e6, 4, 4, CommDomain::IntraNode);
+        let t8 = agmask_exchange_time(&c, 8e6, 8, 8, CommDomain::IntraNode);
         assert!(t4 > 0.0);
         // AG/RS volume scales with (d-1)/d — larger groups move more
         assert!(t8 > t4);
-        // degree 1 collapses to nothing (reduce_scatter guards d<=1)
-        assert_eq!(agmask_exchange_time(&c, 8e6, 1, CommDomain::IntraNode), 0.0);
+        // degree 1 collapses to nothing
+        assert_eq!(agmask_exchange_time(&c, 8e6, 1, 1, CommDomain::IntraNode), 0.0);
+    }
+
+    #[test]
+    fn agmask_analytic_cost_ignores_the_group_and_matches_the_collectives() {
+        // the analytic backend prices the optimistic per-rank view:
+        // widening the sharing group must not move it, and the closed
+        // form must equal the AG+RS pair it replaced, bit for bit
+        let c = CollectiveCost::new(&ClusterConfig::h20());
+        for ep in [2usize, 4, 8, 16] {
+            for dom in [CommDomain::IntraNode, CommDomain::InterNode] {
+                let old = c.all_gather(8e6, ep, dom) + c.reduce_scatter(8e6, ep, dom);
+                let narrow = agmask_exchange_time(&c, 8e6, ep, ep, dom);
+                let wide = agmask_exchange_time(&c, 8e6, ep, 8 * ep, dom);
+                assert_eq!(old.to_bits(), narrow.to_bits(), "ep={ep} {dom:?}");
+                assert_eq!(narrow.to_bits(), wide.to_bits(), "ep={ep} {dom:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn agmask_netsim_charges_contended_lanes_for_the_full_group() {
+        use crate::comm::cost::NetSimCost;
+        // inter-node exchange with TP ranks sharing the NICs: the
+        // netsim backend must price the wider group at least as high
+        let c = NetSimCost::new(&ClusterConfig::h20());
+        let narrow = agmask_exchange_time(&c, 8e6, 4, 4, CommDomain::InterNode);
+        let wide = agmask_exchange_time(&c, 8e6, 4, 32, CommDomain::InterNode);
+        assert!(wide > narrow, "contended lanes must cost more: {wide} vs {narrow}");
+        // intra-node lanes are uncontended in both views
+        let ni = agmask_exchange_time(&c, 8e6, 4, 4, CommDomain::IntraNode);
+        let wi = agmask_exchange_time(&c, 8e6, 4, 32, CommDomain::IntraNode);
+        assert_eq!(ni.to_bits(), wi.to_bits());
     }
 }

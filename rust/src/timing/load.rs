@@ -16,6 +16,12 @@ use crate::moe::router::RouterSim;
 pub struct ExpertLoadProfile {
     pub skew: f64,
     shares: Vec<f64>,
+    /// Placed-layout override: `(ep, hot)` pins the hot factor at EP
+    /// degree `ep` to the *optimized placement's* value (set via
+    /// [`ExpertLoadProfile::with_placed_hot`] after running the
+    /// `moe::placement` rebalancer).  Other groupings still price the
+    /// contiguous layout.
+    placed: Option<(usize, f64)>,
 }
 
 /// Tokens routed when measuring a profile from the gate simulator —
@@ -26,7 +32,7 @@ impl ExpertLoadProfile {
     /// Perfectly balanced experts: every hot factor is exactly 1.
     pub fn uniform(n_experts: usize) -> Self {
         let n = n_experts.max(1);
-        Self { skew: 0.0, shares: vec![1.0 / n as f64; n] }
+        Self { skew: 0.0, shares: vec![1.0 / n as f64; n], placed: None }
     }
 
     /// Normalize arbitrary non-negative shares into a profile.
@@ -35,7 +41,7 @@ impl ExpertLoadProfile {
         if total <= 0.0 || shares.is_empty() {
             return Self::uniform(shares.len());
         }
-        Self { skew, shares: shares.iter().map(|s| s / total).collect() }
+        Self { skew, shares: shares.iter().map(|s| s / total).collect(), placed: None }
     }
 
     /// Profile from measured per-expert token counts (e.g. one serving
@@ -67,6 +73,22 @@ impl ExpertLoadProfile {
         self.shares.len()
     }
 
+    /// Per-expert load shares (summing to 1) — what the placement
+    /// optimizer balances across ranks.
+    pub fn shares(&self) -> &[f64] {
+        &self.shares
+    }
+
+    /// Pin the hot factor at EP degree `ep` to `hot` (clamped ≥ 1) —
+    /// the straggler factor of an *optimized* placement, as computed by
+    /// `moe::ExpertPlacement::hot_factor`.  Only the pinned EP degree
+    /// is overridden; every other grouping still prices the contiguous
+    /// layout from the raw shares.
+    pub fn with_placed_hot(mut self, ep: usize, hot: f64) -> Self {
+        self.placed = Some((ep, hot.max(1.0)));
+        self
+    }
+
     /// Straggler factor of the hottest of `groups` contiguous EP groups:
     /// max group share / mean group share (≥ 1; exactly 1 when uniform
     /// and the groups divide evenly).  This is what stretches the EP
@@ -77,6 +99,11 @@ impl ExpertLoadProfile {
     /// residual size imbalance is then genuinely priced — a rank holding
     /// one extra expert really does receive more traffic.
     pub fn hot_factor(&self, groups: usize) -> f64 {
+        if let Some((ep, hot)) = self.placed {
+            if groups == ep {
+                return hot;
+            }
+        }
         let n = self.shares.len();
         if groups <= 1 || groups > n {
             return 1.0;
@@ -143,6 +170,20 @@ mod tests {
                 st.imbalance
             );
         }
+    }
+
+    #[test]
+    fn placed_hot_overrides_only_its_ep_degree() {
+        let p = ExpertLoadProfile::zipf(64, 8, 1.0, 3);
+        let raw16 = p.hot_factor(16);
+        let raw8 = p.hot_factor(8);
+        let pinned = p.clone().with_placed_hot(16, 1.25);
+        assert!((pinned.hot_factor(16) - 1.25).abs() < 1e-12);
+        assert!((pinned.hot_factor(8) - raw8).abs() < 1e-12);
+        assert!(raw16 > 1.25, "zipf 1.0 at 16 groups should be hotter than the pin");
+        // the pin clamps to >= 1 (a hot factor below 1 is meaningless)
+        let clamped = p.with_placed_hot(16, 0.5);
+        assert!((clamped.hot_factor(16) - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -729,7 +729,7 @@ fn prop_chunked_pipeline_schedules_are_sound() {
     // chain, the fast path matches full playback, and no lane/stream
     // double-books
     use mixserve::pipeline::HybridStage;
-    use mixserve::timing::CommDomain;
+    use mixserve::timing::{CommDomain, DispatchBackend};
     forall(
         "chunked pipeline invariants",
         30,
@@ -752,6 +752,7 @@ fn prop_chunked_pipeline_schedules_are_sound() {
                 comb_blk_bytes: blk,
                 comb_ag_bytes: 4.0 * blk,
                 flops,
+                backend: DispatchBackend::AllToAll,
             };
             let c = cost();
             let sched = stage.schedule(chunks);
@@ -857,6 +858,173 @@ fn prop_alltoall_backend_is_a_bitwise_noop_and_every_backend_prices_finite() {
                 }
             }
             Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rebalanced_placement_covers_every_expert_with_unit_weight() {
+    // placement invariants over random shapes and skews: every expert
+    // stays hosted somewhere, its fractional routing weights form a
+    // probability split, and every host is a real EP rank
+    use mixserve::moe::ExpertPlacement;
+    use mixserve::timing::ExpertLoadProfile;
+    forall(
+        "rebalanced: full coverage, weights sum to 1",
+        30,
+        89,
+        |r: &mut Rng| {
+            let a = r.below(6); // n = 8..256, ep a power of two dividing n
+            let n = 1usize << (3 + a);
+            let ep = 1usize << r.below(a + 4);
+            let k = 1 + r.below(8);
+            let skew = 0.2 + r.f64() * 1.6;
+            (n, ep, k, skew, r.below(4), r.next_u64())
+        },
+        |&(n, ep, k, skew, budget, seed)| {
+            let profile = ExpertLoadProfile::zipf(n, k, skew, seed);
+            let p = ExpertPlacement::rebalanced(&profile, ep, budget)
+                .map_err(|e| format!("rebalanced failed: {e}"))?;
+            for e in 0..n {
+                let hosts = p.hosts_of(e);
+                if hosts.is_empty() {
+                    return Err(format!("expert {e} lost all hosts"));
+                }
+                let w: f64 = hosts.iter().map(|&(_, w)| w).sum();
+                if (w - 1.0).abs() > 1e-9 {
+                    return Err(format!("expert {e} weights sum to {w}"));
+                }
+                for &(rank, weight) in hosts {
+                    if rank >= ep {
+                        return Err(format!("expert {e} hosted on rank {rank} >= ep {ep}"));
+                    }
+                    if !(-1e-12..=1.0 + 1e-9).contains(&weight) {
+                        return Err(format!("expert {e} weight {weight} out of range"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rebalanced_hot_factor_never_exceeds_static() {
+    // the optimizer's contract: for any measured profile the rebalanced
+    // layout's effective hot factor never exceeds the contiguous static
+    // layout's, and the contiguous layout agrees with the profile's own
+    // EP grouping
+    use mixserve::moe::ExpertPlacement;
+    use mixserve::timing::ExpertLoadProfile;
+    forall(
+        "rebalanced hot <= contiguous hot, both >= 1",
+        30,
+        97,
+        |r: &mut Rng| {
+            let a = r.below(6);
+            let n = 1usize << (3 + a);
+            let ep = 1usize << r.below(a + 4);
+            let skew = 0.2 + r.f64() * 1.6;
+            (n, ep, 1 + r.below(8), skew, r.below(4), r.next_u64())
+        },
+        |&(n, ep, k, skew, budget, seed)| {
+            let profile = ExpertLoadProfile::zipf(n, k, skew, seed);
+            let contiguous =
+                ExpertPlacement::new(n, ep).map_err(|e| format!("contiguous failed: {e}"))?;
+            let rebalanced = ExpertPlacement::rebalanced(&profile, ep, budget)
+                .map_err(|e| format!("rebalanced failed: {e}"))?;
+            let stat = contiguous.hot_factor(&profile);
+            let reb = rebalanced.hot_factor(&profile);
+            if reb > stat + 1e-12 {
+                return Err(format!("rebalanced hot {reb} > static hot {stat}"));
+            }
+            if reb < 1.0 - 1e-12 || stat < 1.0 - 1e-12 {
+                return Err(format!("hot factor below 1: static {stat}, rebalanced {reb}"));
+            }
+            let direct = profile.hot_factor(ep);
+            if (stat - direct).abs() > 1e-9 * direct.max(1.0) {
+                return Err(format!("contiguous hot {stat} != profile grouping {direct}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_static_policy_never_moves_pricing_and_rebalanced_never_raises_it() {
+    // the placed-profile threading, randomized: `Static` is a bitwise
+    // no-op through the latency model, and a `Rebalanced` pin (hot
+    // factor <= static, λ monotone in hot) never prices above it
+    use mixserve::moe::PlacementPolicy;
+    use mixserve::timing::ExpertLoadProfile;
+    let model = MoEModelConfig::deepseek_r1();
+    let cluster = ClusterConfig::ascend910b();
+    let strategies: Vec<mixserve::config::ParallelStrategy> = enumerate_strategies(&cluster)
+        .into_iter()
+        .filter(|s| s.moe.ep > 1 && model.n_experts % s.moe.ep == 0)
+        .collect();
+    forall(
+        "static placed_profile == profile; rebalanced <= static",
+        20,
+        101,
+        |r: &mut Rng| {
+            let si = r.below(strategies.len());
+            let batch = 1 + r.below(16);
+            let seq = 16 + r.below(2048);
+            let prefill = r.below(2) == 0;
+            let skew = 0.2 + r.f64() * 1.4;
+            (si, batch, seq, prefill, skew, r.next_u64())
+        },
+        |&(si, batch, seq, prefill, skew, seed)| {
+            let s = strategies[si];
+            let phase = if prefill { Phase::Prefill } else { Phase::Decode };
+            let profile = ExpertLoadProfile::zipf(model.n_experts, model.top_k, skew, seed);
+            let price = |p: ExpertLoadProfile| {
+                LatencyModel::new(&model, &cluster)
+                    .with_load(p)
+                    .service_latency(&s, batch, seq, phase, CommMode::FusedAsync)
+                    .total()
+            };
+            let plain = price(profile.clone());
+            let pinned = price(PlacementPolicy::Static.placed_profile(&profile, s.moe.ep));
+            if plain.to_bits() != pinned.to_bits() {
+                return Err(format!("{s}: Static moved the pricing {plain} -> {pinned}"));
+            }
+            let rebalanced = price(
+                PlacementPolicy::Rebalanced { budget: 2 }.placed_profile(&profile, s.moe.ep),
+            );
+            if rebalanced > plain * (1.0 + 1e-9) {
+                return Err(format!("{s}: rebalanced priced above static {rebalanced} > {plain}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_placement_constructor_is_total_over_bad_shapes() {
+    // the fallible-constructor satellite: every (n, ep) shape gets the
+    // right error or a replica-free contiguous layout — never a panic
+    use mixserve::moe::{ExpertPlacement, PlacementError};
+    forall(
+        "new() rejects bad shapes with the right error",
+        40,
+        103,
+        |r: &mut Rng| (r.below(300), r.below(40)),
+        |&(n, ep)| match ExpertPlacement::new(n, ep) {
+            Ok(p) => {
+                if ep == 0 || ep > n || n % ep != 0 {
+                    return Err(format!("accepted bad shape n={n} ep={ep}"));
+                }
+                if p.extra_copies() != 0 {
+                    return Err("contiguous layout has replicas".into());
+                }
+                Ok(())
+            }
+            Err(PlacementError::ZeroDegree) if ep == 0 => Ok(()),
+            Err(PlacementError::TooManyRanks { .. }) if ep > n => Ok(()),
+            Err(PlacementError::Indivisible { .. }) if n % ep != 0 => Ok(()),
+            Err(e) => Err(format!("wrong error '{e}' for n={n} ep={ep}")),
         },
     );
 }
